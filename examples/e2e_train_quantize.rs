@@ -1,0 +1,131 @@
+//! END-TO-END DRIVER (DESIGN.md §validation): proves all three layers
+//! compose on a real small workload.
+//!
+//! 1. L2/L1 → L3: load the AOT-compiled JAX train-step artifact (which
+//!    inlines the Pallas-lowered quantisation graph) and train a small
+//!    transformer on the synthetic corpus for a few hundred steps via
+//!    PJRT, logging the loss curve — python never runs here.
+//! 2. PTQ the trained weights with every Table 3 format using the Rust
+//!    quantisers and print the paper-shaped perplexity/density table.
+//! 3. Cross-check: the PJRT fp32 forward and the Rust-native forward
+//!    agree on held-out logits.
+//!
+//! Requires `make artifacts` first.
+//!
+//!     cargo run --release --example e2e_train_quantize
+
+use bbq::data::corpus::{test_stream, train_stream};
+use bbq::data::lm_eval::perplexity;
+use bbq::data::vocab::Vocab;
+use bbq::model::config::ModelConfig;
+use bbq::model::plan::QuantPlan;
+use bbq::model::{Model, Params, PosEncoding};
+use bbq::quant::config::presets;
+use bbq::runtime::{LmFwdExec, Runtime, TrainStepExec};
+use bbq::util::table::{fnum, Table};
+
+fn main() {
+    let artifacts = bbq::util::artifacts_dir();
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let mut rt = Runtime::open(&artifacts).expect("open runtime");
+    let steps = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300usize);
+
+    // the golden-config model is what the artifact was lowered for
+    let cfg = ModelConfig {
+        name: "golden".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        d_ff: 64,
+        vocab_size: 64,
+        max_seq: 32,
+        pos: PosEncoding::Learned,
+        ln_eps: 1e-5,
+    };
+    let mut params = Params::init(&cfg, 123);
+    let train_exec = TrainStepExec::load(&mut rt, "train_step_golden").expect("train artifact");
+    let seq = train_exec.seq;
+
+    let vocab = Vocab::build();
+    let fold = |t: usize| t % cfg.vocab_size;
+    let train: Vec<usize> = train_stream(&vocab, steps * seq + seq + 1)
+        .into_iter()
+        .map(fold)
+        .collect();
+    let test: Vec<usize> = test_stream(&vocab, 24 * seq).into_iter().map(fold).collect();
+
+    println!("== phase 1: PJRT training ({steps} steps, seq {seq}) ==");
+    let t0 = std::time::Instant::now();
+    let mut curve = Vec::new();
+    for step in 0..steps {
+        let off = step * seq;
+        let loss = train_exec
+            .step(&train[off..off + seq], &train[off + 1..off + seq + 1], 0.5, &mut params)
+            .expect("train step");
+        curve.push(loss);
+        if step % 50 == 0 || step + 1 == steps {
+            println!("  step {step:>4}: loss {loss:.4}");
+        }
+    }
+    let t_train = t0.elapsed();
+    let first10: f64 = curve[..10].iter().sum::<f64>() / 10.0;
+    let last10: f64 = curve[curve.len() - 10..].iter().sum::<f64>() / 10.0;
+    println!(
+        "  loss {first10:.3} → {last10:.3} in {:.1}s ({:.1} steps/s)",
+        t_train.as_secs_f64(),
+        steps as f64 / t_train.as_secs_f64()
+    );
+    assert!(last10 < first10 - 0.3, "training did not converge");
+
+    println!("\n== phase 2: PJRT fwd vs rust-native fwd cross-check ==");
+    let fwd = LmFwdExec::load(&mut rt, "lm_fwd_golden_fp32", cfg.vocab_size).expect("fwd artifact");
+    let toks: Vec<usize> = test[..fwd.seq].to_vec();
+    let pjrt_logits = fwd.run(&toks, &params).expect("pjrt fwd");
+    let native = Model::new(params.clone(), QuantPlan::fp32()).forward(&toks, None);
+    let mut max_err = 0.0f32;
+    for (a, b) in pjrt_logits.data.iter().zip(&native.data) {
+        max_err = max_err.max((a - b).abs());
+    }
+    println!("  max |pjrt - native| = {max_err:.2e}");
+    assert!(max_err < 1e-3);
+
+    println!("\n== phase 3: PTQ sweep of the PJRT-trained weights ==");
+    let mut table = Table::new("e2e PTQ results", &["format", "ppl", "Δppl", "mem", "bits/el"]);
+    let fp32_ppl = perplexity(
+        &Model::new(params.clone(), QuantPlan::fp32()),
+        &test,
+        seq,
+        16,
+    )
+    .perplexity;
+    table.row(vec![
+        "fp32".into(),
+        fnum(fp32_ppl, 3),
+        "-".into(),
+        "1.0x".into(),
+        "32".into(),
+    ]);
+    for (name, fmt) in presets::table3_formats() {
+        let m = Model::new(params.clone(), QuantPlan::uniform(fmt));
+        let ppl = perplexity(&m, &test, seq, 16).perplexity;
+        table.row(vec![
+            name.to_string(),
+            fnum(ppl, 3),
+            format!("{:+.3}", ppl - fp32_ppl),
+            format!("{:.1}x", fmt.memory_density()),
+            format!("{:.1}", fmt.bits_per_element()),
+        ]);
+        }
+    println!("{}", table.render());
+    let _ = bbq::util::write_file(
+        &bbq::util::results_dir().join("e2e_train_quantize.md"),
+        &table.render(),
+    );
+    println!("e2e OK — all three layers compose.");
+}

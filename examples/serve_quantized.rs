@@ -1,0 +1,46 @@
+//! Serving demo: batched decoding through the L3 coordinator with a
+//! quantised model, comparing FP32 vs W6A6 BFP throughput and latency
+//! (the deployment story the paper's ASIC argument targets).
+//!
+//!     cargo run --release --example serve_quantized
+
+use bbq::coordinator::experiment::{default_steps, get_or_train};
+use bbq::coordinator::{run_batched, Request, ServerConfig};
+use bbq::data::vocab::Vocab;
+use bbq::model::plan::QuantPlan;
+use bbq::model::Model;
+use bbq::quant::config::presets;
+
+fn main() {
+    let vocab = Vocab::build();
+    let params = get_or_train("micro", default_steps("micro"), false);
+    let prompts = [
+        "the cat chased the",
+        "alice took the key . the key belongs to",
+        "the movie was wonderful and",
+        "bob was in the",
+    ];
+    let reqs: Vec<Request> = (0..24)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: vocab.encode(prompts[i % prompts.len()]),
+            max_new_tokens: 12,
+            temperature: 0.0,
+        })
+        .collect();
+    let cfg = ServerConfig::default();
+    for (name, plan) in [
+        ("fp32", QuantPlan::fp32()),
+        ("bfp6 (W6A6)", QuantPlan::uniform(presets::bfp_w(6))),
+        ("bfp4 (W4A4)", QuantPlan::uniform(presets::bfp_w(4))),
+    ] {
+        let model = Model::new(params.clone(), plan);
+        let (resps, metrics) = run_batched(&model, reqs.clone(), &cfg);
+        println!("[{name}] {}", metrics.summary());
+        if name == "fp32" {
+            for r in resps.iter().take(2) {
+                println!("  sample: {:?} → {}", prompts[r.id as usize % 4], vocab.decode(&r.tokens));
+            }
+        }
+    }
+}

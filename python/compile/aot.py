@@ -1,0 +1,192 @@
+"""AOT compile path: lower the JAX model (with Pallas kernels inlined,
+interpret=True) to **HLO text** and emit golden vectors for cross-language
+validation.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate binds) rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Outputs (under --out-dir, default ../artifacts):
+  manifest.json                     artifact index: name → file, shapes
+  lm_fwd_<preset>_<fmt>.hlo.txt     tokens i32[s], *params → (logits,)
+  train_step_<preset>.hlo.txt       tokens, targets, lr, *params → (loss, *params')
+  qmatmul_bfp_<m>.hlo.txt           x, w → (y,) via the Pallas kernel
+  golden/quant_cases.json           per-format quantisation vectors
+  golden/model_fwd.json             tiny-model params + tokens + logits
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import pallas_kernels as K
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_lm_fwd(preset: str, fmt: str, seq: int):
+    cfg = M.PRESETS[preset]
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+
+    def fn(tokens, *flat_params):
+        params = dict(zip(names, flat_params))
+        return (M.lm_fwd(params, tokens, cfg, fmt),)
+
+    specs = [jax.ShapeDtypeStruct((seq,), jnp.int32)] + [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def lower_train_step(preset: str, fmt: str, seq: int):
+    cfg = M.PRESETS[preset]
+    names = M.param_names(cfg)
+    shapes = M.param_shapes(cfg)
+
+    def fn(tokens, targets, lr, *flat_params):
+        params = dict(zip(names, flat_params))
+        loss, new_params = M.train_step(params, tokens, targets, lr, cfg, fmt)
+        return (loss,) + tuple(new_params[n] for n in names)
+
+    specs = [
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((seq,), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    ] + [jax.ShapeDtypeStruct(shapes[n], jnp.float32) for n in names]
+    # donate params so XLA reuses their buffers across steps
+    donate = tuple(range(3, 3 + len(names)))
+    return jax.jit(fn, donate_argnums=donate).lower(*specs)
+
+
+def lower_qmatmul(m_bits: int, mm=64, kk=64, nn=64):
+    def fn(x, w):
+        return (K.bfp_qmatmul(x, w, e_bits=8, m_bits=m_bits, n=16),)
+
+    specs = [
+        jax.ShapeDtypeStruct((mm, kk), jnp.float32),
+        jax.ShapeDtypeStruct((kk, nn), jnp.float32),
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def golden_quant_cases(seed=20230617, n=64):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(0, 1, n).astype(np.float32)
+    # inject outliers + exact edge cases
+    base[7] *= 40.0
+    base[23] = 0.0
+    base[31] = 480.0  # minifloat max
+    base[33] = -1e-9
+    cases = {"input": [float(v) for v in base]}
+    for fmt in ref.TABLE3_FORMATS:
+        q = np.asarray(ref.fake_quant(base.reshape(4, 16), fmt)).reshape(-1)
+        cases[fmt] = [float(v) for v in q]
+    return cases
+
+
+def golden_model_fwd(fmt_list, seed=7):
+    cfg = M.PRESETS["golden"]
+    params = M.init_params(cfg, seed)
+    tokens = np.arange(1, 17, dtype=np.int32) % cfg.vocab_size
+    out = {
+        "config": {
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "vocab_size": cfg.vocab_size,
+            "max_seq": cfg.max_seq,
+        },
+        "tokens": [int(t) for t in tokens],
+        "params": {
+            k: [float(x) for x in np.asarray(v).reshape(-1)]
+            for k, v in params.items()
+        },
+        "logits": {},
+    }
+    for fmt in fmt_list:
+        logits = M.lm_fwd(params, jnp.asarray(tokens), cfg, fmt)
+        out["logits"][fmt] = [float(x) for x in np.asarray(logits).reshape(-1)]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--preset", default="golden")
+    ap.add_argument("--seq", type=int, default=16)
+    ap.add_argument("--fast", action="store_true", help="skip the slower variants")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(os.path.join(out, "golden"), exist_ok=True)
+    manifest = {"artifacts": {}}
+
+    def emit(name, lowered, meta):
+        path = os.path.join(out, name + ".hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {"file": name + ".hlo.txt", **meta}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    preset = args.preset
+    cfg = M.PRESETS[preset]
+    nparams = len(M.param_names(cfg))
+    fwd_formats = ["fp32", "bfp_e8m5n16"] if args.fast else [
+        "fp32", "bfp_e8m5n16", "bfp_e8m3n16", "minifloat_e4m3", "fixed8",
+    ]
+    for fmt in fwd_formats:
+        emit(
+            f"lm_fwd_{preset}_{fmt}",
+            lower_lm_fwd(preset, fmt, args.seq),
+            {"kind": "lm_fwd", "preset": preset, "fmt": fmt, "seq": args.seq,
+             "n_params": nparams},
+        )
+    emit(
+        f"train_step_{preset}",
+        lower_train_step(preset, "fp32", args.seq),
+        {"kind": "train_step", "preset": preset, "fmt": "fp32",
+         "seq": args.seq, "n_params": nparams},
+    )
+    if not args.fast:
+        emit(
+            f"train_step_{preset}_bfp_e8m5n16",
+            lower_train_step(preset, "bfp_e8m5n16", args.seq),
+            {"kind": "train_step", "preset": preset, "fmt": "bfp_e8m5n16",
+             "seq": args.seq, "n_params": nparams},
+        )
+        for m_bits in (5, 3):
+            emit(
+                f"qmatmul_bfp_m{m_bits}",
+                lower_qmatmul(m_bits),
+                {"kind": "qmatmul", "m_bits": m_bits, "shape": [64, 64, 64]},
+            )
+
+    with open(os.path.join(out, "golden", "quant_cases.json"), "w") as f:
+        json.dump(golden_quant_cases(), f)
+    print("wrote golden/quant_cases.json")
+    with open(os.path.join(out, "golden", "model_fwd.json"), "w") as f:
+        json.dump(golden_model_fwd(["fp32", "bfp_e8m5n16", "minifloat_e4m3"]), f)
+    print("wrote golden/model_fwd.json")
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Layer-1 Pallas kernels (interpret=True for CPU-PJRT execution).
+
+Two kernels implement the paper's hot path:
+
+* `bfp_quantize` — block-floating-point fake-quantisation of a tile.
+* `bfp_qmatmul`  — the quantised GEMM: per (i, j) output tile, stream K
+  tiles HBM→VMEM via BlockSpec, quantise both operand tiles in VMEM
+  (shared exponent per [1, N] slice along K) and accumulate on the MXU.
+
+HARDWARE ADAPTATION (DESIGN.md §7): the paper targets ASIC/FPGA MAC
+arrays, not GPUs, so there is no CUDA idiom to port. On TPU the natural
+mapping is: BFP blocks of [1, 16] along the contraction dim line up with
+MXU tiles; the BlockSpec index maps below express the HBM→VMEM schedule
+(one (bm × bk) + (bk × bn) tile pair resident per step, double-buffered by
+Pallas); the shared-exponent reduction is a per-lane max + shift, done
+once per tile. interpret=True lowers to plain HLO so the same kernel runs
+on the CPU PJRT plugin; on a real TPU the identical pallas_call lowers to
+Mosaic.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _bfp_quant_tile(x, e_bits, m_bits, n):
+    """In-kernel BFP quantisation of a [rows, cols] tile (cols % n == 0)."""
+    r, c = x.shape
+    xb = x.reshape(r, c // n, n)
+    bias = (1 << (e_bits - 1)) - 1
+    emax_field = (1 << e_bits) - 1
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    _, ef = jnp.frexp(jnp.maximum(absmax, jnp.float32(1e-45)))
+    e = jnp.clip((ef - 1) + bias, 0, emax_field) - bias
+    scale = ref._exp2i(e - m_bits + 1)
+    mmax = jnp.float32((1 << m_bits) - 1)
+    m = jnp.minimum(jnp.round(jnp.abs(xb) / scale), mmax)
+    sign = jnp.where(xb < 0, -1.0, 1.0)
+    qb = jnp.where(absmax == 0, jnp.zeros_like(xb), sign * m * scale)
+    return qb.reshape(r, c)
+
+
+def _quantize_kernel(x_ref, o_ref, *, e_bits, m_bits, n):
+    o_ref[...] = _bfp_quant_tile(x_ref[...], e_bits, m_bits, n)
+
+
+def bfp_quantize(x, e_bits=8, m_bits=5, n=16, tile_rows=128):
+    """Pallas BFP fake-quantise, tiled over rows. x: [R, C], C % n == 0."""
+    rows, cols = x.shape
+    assert cols % n == 0, "pad the last dim to a multiple of the block size"
+    tr = min(tile_rows, rows)
+    assert rows % tr == 0, "rows must divide the row tile"
+    kern = functools.partial(_quantize_kernel, e_bits=e_bits, m_bits=m_bits, n=n)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref, *, e_bits, m_bits, n, k_tiles):
+    """One (i, j, k) grid step: o[i, j] += q(x[i, k]) @ q(w[k, j])."""
+    kidx = pl.program_id(2)
+
+    @pl.when(kidx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = _bfp_quant_tile(x_ref[...], e_bits, m_bits, n)
+    # w tile is [bk, bn]; blocks run along K (contraction), i.e. down the
+    # columns — quantise the transpose so slices align with K.
+    wq = _bfp_quant_tile(w_ref[...].T, e_bits, m_bits, n).T
+    o_ref[...] += jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+    _ = k_tiles
+
+
+def bfp_qmatmul(x, w, e_bits=8, m_bits=5, n=16, bm=64, bn=64, bk=64):
+    """Quantised GEMM via Pallas: fake-quantise per K-tile, accumulate.
+
+    x: [M, K], w: [K, N]. M/K/N must divide the tile sizes (callers pad).
+    Matches `ref.bfp_fake_quant(x) @ ref.bfp_fake_quant(w^T)^T` exactly
+    when bk == K (single K tile); with K tiling the quantisation blocks
+    are the same because block size n divides bk.
+    """
+    m, k = x.shape
+    k2, nn = w.shape
+    assert k == k2
+    bm = min(bm, m)
+    bn = min(bn, nn)
+    bk = min(bk, k)
+    assert m % bm == 0 and nn % bn == 0 and k % bk == 0 and bk % n == 0
+    kern = functools.partial(
+        _qmatmul_kernel, e_bits=e_bits, m_bits=m_bits, n=n, k_tiles=k // bk
+    )
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((m, nn), jnp.float32),
+        grid=(m // bm, nn // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(x, w)
+
+
+def _minifloat_kernel(x_ref, o_ref, *, e_bits, m_bits):
+    bias = (1 << (e_bits - 1)) - 1
+    o_ref[...] = ref.round_minifloat(x_ref[...], e_bits, m_bits, bias)
+
+
+def minifloat_quantize(x, e_bits=4, m_bits=3, tile_rows=128):
+    """Pallas MiniFloat fake-quantise (elementwise, row-tiled)."""
+    rows, cols = x.shape
+    tr = min(tile_rows, rows)
+    assert rows % tr == 0
+    kern = functools.partial(_minifloat_kernel, e_bits=e_bits, m_bits=m_bits)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        interpret=True,
+    )(x)
+
+
+def vmem_footprint_bytes(bm, bn, bk):
+    """Estimated VMEM residency of one qmatmul grid step (f32), for the
+    §Perf roofline notes: x tile + w tile + out tile, double-buffered."""
+    return 4 * (bm * bk + bk * bn + bm * bn) * 2

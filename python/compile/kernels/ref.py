@@ -1,0 +1,253 @@
+"""Pure-jnp quantisation oracles — bit-identical to rust/src/quant.
+
+Every function mirrors the Rust implementation exactly (same rounding mode,
+same saturation, same shared-exponent/bias selection), so golden vectors
+generated here are compared bit-exactly by the Rust integration tests, and
+the Pallas kernels are validated against these references by pytest.
+
+Blocks are `[1, N]` slices along the last dimension (the contraction dim of
+a GEMM operand), matching the paper's configuration.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _ilogb(ax):
+    """floor(log2(ax)) for ax > 0, exact via frexp (ax = m * 2^e, m in [0.5, 1))."""
+    _, e = jnp.frexp(ax)
+    return e - 1
+
+
+def _exp2i(e):
+    """Exact 2^e for integer e (f32 bit construction; jnp.exp2 rounds).
+
+    Matches rust `exp2i`: normals for e in [-126, 127], subnormals down to
+    -149, 0 below, +inf above (clamped to f32 max by _sanitise callers).
+    """
+    import jax
+
+    e = jnp.asarray(e, jnp.int32)
+    normal_bits = ((jnp.clip(e, -126, 127) + 127) << 23).astype(jnp.int32)
+    normal = jax.lax.bitcast_convert_type(normal_bits, jnp.float32)
+    sub_shift = jnp.clip(e + 149, 0, 22)
+    sub_bits = (jnp.int32(1) << sub_shift).astype(jnp.int32)
+    sub = jax.lax.bitcast_convert_type(sub_bits, jnp.float32)
+    out = jnp.where(e < -126, sub, normal)
+    out = jnp.where(e < -149, 0.0, out)
+    out = jnp.where(e > 127, jnp.float32(np.inf), out)
+    return out
+
+
+def _sanitise(x):
+    """NaN → 0, ±inf → ±f32 max (matches the Rust quantiser input handling)."""
+    finite_max = jnp.float32(np.finfo(np.float32).max)
+    x = jnp.where(jnp.isnan(x), 0.0, x)
+    return jnp.clip(x, -finite_max, finite_max)
+
+
+def round_minifloat(x, e_bits, m_bits, bias):
+    """Saturating MiniFloat(E, M) with subnormals, RNE (paper Eq. 2)."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    emax_field = (1 << e_bits) - 1
+    max_val = jnp.asarray(
+        _exp2i(emax_field - bias)
+        * (2.0 - 2.0 ** -m_bits),
+        jnp.float32,
+    )
+    sign = jnp.where(x < 0, -1.0, 1.0).astype(jnp.float32)
+    ax = jnp.abs(x)
+    e_unb = _ilogb(jnp.maximum(ax, jnp.float32(1e-45)))
+    e_field = jnp.clip(e_unb + bias, 0, emax_field)
+    e_eff = jnp.where(e_field == 0, 1 - bias, e_field - bias)
+    step = _exp2i(e_eff - m_bits)
+    q = jnp.round(ax / step) * step  # jnp.round is round-half-even
+    q = jnp.minimum(q, max_val)
+    q = jnp.where(ax >= max_val, max_val, q)
+    return jnp.where(x == 0, 0.0, sign * q).astype(jnp.float32)
+
+
+def round_dmf(x, e_bits, m_bits, bias):
+    """Denormalised MiniFloat: no implicit leading bit (paper Eq. 3)."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    emax_field = (1 << e_bits) - 1
+    m_full = jnp.float32((1 << m_bits) - 1)
+    max_val = jnp.asarray(
+        _exp2i(emax_field - bias)
+        * ((1 << m_bits) - 1)
+        / (1 << m_bits),
+        jnp.float32,
+    )
+    sign = jnp.where(x < 0, -1.0, 1.0).astype(jnp.float32)
+    ax = jnp.abs(x)
+    e_unb = _ilogb(jnp.maximum(ax, jnp.float32(1e-45)))
+    ef = jnp.clip(e_unb + bias + 1, 0, emax_field)
+
+    def cover(e):
+        return m_full * _exp2i(e - bias - m_bits)
+
+    # fix-up passes (each direction moves at most one step; two for safety)
+    for _ in range(2):
+        ef = jnp.where((ef > 0) & (ax <= cover(ef - 1)), ef - 1, ef)
+    for _ in range(2):
+        ef = jnp.where((ef < emax_field) & (ax > cover(ef)), ef + 1, ef)
+    step = _exp2i(ef - bias - m_bits)
+    cand1 = jnp.round(ax / step) * step
+    cand2 = m_full * step * 0.5
+    q = jnp.where(
+        (ef > 0) & (jnp.abs(cand2 - ax) < jnp.abs(cand1 - ax)), cand2, cand1
+    )
+    q = jnp.where(ax >= max_val, max_val, q)
+    return jnp.where(x == 0, 0.0, sign * q).astype(jnp.float32)
+
+
+def fixed_fake_quant(x, w_bits):
+    """Per-tensor symmetric absmax fixed-point (the failing baseline)."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    qmax = jnp.float32((1 << (w_bits - 1)) - 1)
+    absmax = jnp.max(jnp.abs(x))
+    scale = absmax / qmax
+    q = jnp.round(x / jnp.where(scale == 0, 1.0, scale))
+    q = jnp.clip(q, -qmax, qmax) * scale
+    return jnp.where(absmax == 0, jnp.zeros_like(x), q).astype(jnp.float32)
+
+
+def fixedrow_fake_quant(x, w_bits):
+    """Per-row (per-token) symmetric absmax fixed-point (ZeroQuant-style)."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    qmax = jnp.float32((1 << (w_bits - 1)) - 1)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = absmax / qmax
+    q = jnp.round(x / jnp.where(scale == 0, 1.0, scale))
+    q = jnp.clip(q, -qmax, qmax) * scale
+    return jnp.where(absmax == 0, jnp.zeros_like(x), q).astype(jnp.float32)
+
+
+def _to_blocks(x, n):
+    """[..., C] → ([..., nblocks, n], pad), padding the tail block with 0."""
+    c = x.shape[-1]
+    nblocks = -(-c // n)
+    pad = nblocks * n - c
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(x.shape[:-1] + (nblocks, n)), pad
+
+
+def _from_blocks(xb, pad, shape):
+    flat = xb.reshape(xb.shape[:-2] + (-1,))
+    if pad:
+        flat = flat[..., :-pad]
+    return flat.reshape(shape)
+
+
+def bfp_fake_quant(x, e_bits, m_bits, n):
+    """Block Floating-Point, MSFP convention (the paper's winning format)."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    shape = x.shape
+    xb, pad = _to_blocks(x, n)
+    bias = (1 << (e_bits - 1)) - 1
+    emax_field = (1 << e_bits) - 1
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    e_unb = _ilogb(jnp.maximum(absmax, jnp.float32(1e-45)))
+    e = jnp.clip(e_unb + bias, 0, emax_field) - bias
+    scale = _exp2i(e - m_bits + 1)
+    mmax = jnp.float32((1 << m_bits) - 1)
+    m = jnp.minimum(jnp.round(jnp.abs(xb) / scale), mmax)
+    sign = jnp.where(xb < 0, -1.0, 1.0)
+    qb = jnp.where(absmax == 0, jnp.zeros_like(xb), sign * m * scale)
+    return _from_blocks(qb, pad, shape).astype(jnp.float32)
+
+
+def _shared_bias(absmax, e_bits, b_bits):
+    """BM/BL shared per-block bias: top binade at the block max."""
+    emax_field = (1 << e_bits) - 1
+    lo = -(1 << (b_bits - 1))
+    hi = (1 << (b_bits - 1)) - 1
+    e_unb = _ilogb(jnp.maximum(absmax, jnp.float32(1e-45)))
+    bias = jnp.clip(emax_field - e_unb, lo, hi)
+    return jnp.where(absmax == 0, hi, bias)
+
+
+def bm_fake_quant(x, e_bits, m_bits, b_bits, n):
+    """Block MiniFloat (Fox et al. 2021): shared B-bit exponent bias."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    shape = x.shape
+    xb, pad = _to_blocks(x, n)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    bias = _shared_bias(absmax, e_bits, b_bits)
+    qb = round_minifloat(xb, e_bits, m_bits, bias)
+    return _from_blocks(qb, pad, shape).astype(jnp.float32)
+
+
+def bl_fake_quant(x, e_bits, b_bits, n):
+    """Block Logarithm: ±2^(e-bias) with shared bias; code 0 = exact zero."""
+    x = _sanitise(jnp.asarray(x, jnp.float32))
+    shape = x.shape
+    xb, pad = _to_blocks(x, n)
+    absmax = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+    bias = _shared_bias(absmax, e_bits, b_bits)
+    emax_field = (1 << e_bits) - 1
+    sign = jnp.where(xb < 0, -1.0, 1.0)
+    ax = jnp.abs(xb)
+    k = _ilogb(jnp.maximum(ax, jnp.float32(1e-45)))
+    k = jnp.where(ax >= 1.5 * _exp2i(k), k + 1, k)
+    e_field = k + bias
+    smallest = _exp2i(1 - bias)
+    top = _exp2i(emax_field - bias)
+    val = _exp2i(jnp.clip(e_field, 1, emax_field) - bias)
+    val = jnp.where(e_field < 1, jnp.where(ax < smallest * 0.5, 0.0, smallest), val)
+    val = jnp.where(e_field > emax_field, top, val)
+    qb = jnp.where(ax == 0, 0.0, sign * val)
+    return _from_blocks(qb, pad, shape).astype(jnp.float32)
+
+
+# ---- format dispatch (mirrors rust QFormat::name()) ----
+
+def _fields(body, keys):
+    out = []
+    for k in keys:
+        i = body.index(k) + 1
+        j = i
+        while j < len(body) and body[j].isdigit():
+            j += 1
+        out.append(int(body[i:j]))
+    return out
+
+
+def fake_quant(x, fmt: str):
+    """Dispatch on the Rust-side format name, e.g. 'bfp_e8m5n16'."""
+    if fmt == "fp32":
+        return jnp.asarray(x, jnp.float32)
+    if fmt.startswith("fixedrow"):
+        return fixedrow_fake_quant(x, int(fmt[len("fixedrow"):]))
+    if fmt.startswith("fixed"):
+        return fixed_fake_quant(x, int(fmt[len("fixed"):]))
+    if fmt.startswith("minifloat_"):
+        e, m = _fields(fmt[len("minifloat_"):], "em")
+        return round_minifloat(x, e, m, (1 << (e - 1)) - 1)
+    if fmt.startswith("dmf_"):
+        e, m = _fields(fmt[len("dmf_"):], "em")
+        return round_dmf(x, e, m, (1 << (e - 1)) - 1)
+    if fmt.startswith("bfp_"):
+        e, m, n = _fields(fmt[len("bfp_"):], "emn")
+        return bfp_fake_quant(x, e, m, n)
+    if fmt.startswith("bm_"):
+        e, m, b, n = _fields(fmt[len("bm_"):], "embn")
+        return bm_fake_quant(x, e, m, b, n)
+    if fmt.startswith("bl_"):
+        e, b, n = _fields(fmt[len("bl_"):], "ebn")
+        return bl_fake_quant(x, e, b, n)
+    raise ValueError(f"unknown format {fmt!r}")
+
+
+TABLE3_FORMATS = [
+    "fixed8",
+    "fixedrow8",
+    "minifloat_e4m3",
+    "dmf_e4m3",
+    "bfp_e8m7n16",
+    "bfp_e8m5n16",
+    "bfp_e8m3n16",
+    "bm_e4m3b8n16",
+    "bl_e7b8n16",
+]

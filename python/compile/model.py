@@ -1,0 +1,198 @@
+"""Layer-2 JAX model: the OPT-style decoder of Algorithm 2, architecture-
+identical to rust/src/model/transformer.rs (verified bit-close via golden
+vectors), with all eight GEMMs quantisable and an STE train step.
+
+Build-time only: `aot.py` lowers `lm_fwd` and `train_step` to HLO text for
+the Rust runtime; python never runs at inference time.
+"""
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+
+
+class ModelConfig(NamedTuple):
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    vocab_size: int
+    max_seq: int
+    ln_eps: float = 1e-5
+
+
+PRESETS = {
+    # mirrors rust ModelConfig::preset (learned-position family)
+    "nano": ModelConfig(2, 48, 2, 192, 512, 256),
+    "micro": ModelConfig(2, 64, 2, 256, 512, 256),
+    "tiny": ModelConfig(4, 128, 4, 512, 512, 256),
+    "small": ModelConfig(6, 192, 6, 768, 512, 256),
+    "base": ModelConfig(8, 256, 8, 1024, 512, 256),
+    # golden-vector config (small enough for JSON)
+    "golden": ModelConfig(2, 32, 2, 64, 64, 32),
+}
+
+
+def param_names(cfg: ModelConfig):
+    """Flat parameter order — MUST match rust Params::flat_views."""
+    names = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"layer{i}.{n}"
+            for n in [
+                "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv",
+                "wo", "bo", "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+            ]
+        ]
+    names += ["lnf_g", "lnf_b"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    shapes = {"tok_emb": (cfg.vocab_size, d), "pos_emb": (cfg.max_seq, d)}
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        shapes.update({
+            p + "ln1_g": (d,), p + "ln1_b": (d,),
+            p + "wq": (d, d), p + "bq": (d,),
+            p + "wk": (d, d), p + "bk": (d,),
+            p + "wv": (d, d), p + "bv": (d,),
+            p + "wo": (d, d), p + "bo": (d,),
+            p + "ln2_g": (d,), p + "ln2_b": (d,),
+            p + "w1": (d, f), p + "b1": (f,),
+            p + "w2": (f, d), p + "b2": (d,),
+        })
+    shapes.update({"lnf_g": (cfg.d_model,), "lnf_b": (cfg.d_model,)})
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """GPT-2-style init (numpy RNG; does not need to match Rust init)."""
+    rng = np.random.default_rng(seed)
+    shapes = param_shapes(cfg)
+    sigma = 0.02
+    resid_sigma = sigma / np.sqrt(2.0 * cfg.n_layers)
+    params = {}
+    for name in param_names(cfg):
+        shape = shapes[name]
+        if name.endswith(("_g",)):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("_b", "bq", "bk", "bv", "bo", "b1", "b2")) or ".b" in name:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(("wo", "w2")):
+            params[name] = jnp.asarray(
+                rng.normal(0, resid_sigma, shape), jnp.float32
+            )
+        else:
+            params[name] = jnp.asarray(rng.normal(0, sigma, shape), jnp.float32)
+    return params
+
+
+# ---- STE fake-quant (forward quantises, backward passes through) ----
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def ste_quant(x, fmt: str):
+    return ref.fake_quant(x, fmt)
+
+
+def _ste_fwd(x, fmt):
+    return ref.fake_quant(x, fmt), None
+
+
+def _ste_bwd(fmt, _res, g):
+    return (g,)
+
+
+ste_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+def _layer_norm(x, g, b, eps):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * g + b
+
+
+def _gelu(x):
+    c = 0.7978845608028654
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x ** 3)))
+
+
+def lm_fwd(params, tokens, cfg: ModelConfig, fmt: str = "fp32"):
+    """tokens: int32 [s] → logits [s, vocab]. `fmt` quantises all 8 GEMMs
+    (weights and activations, blocks along the contraction dim)."""
+    s = tokens.shape[0]
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+
+    def q(t):
+        return ste_quant(t, fmt) if fmt != "fp32" else t
+
+    def qw(wmat):
+        # weights quantised along their input (contraction) dim = rows of
+        # w^T, matching the rust prep_weight
+        return q(wmat.T).T if fmt != "fp32" else wmat
+
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xn = _layer_norm(x, params[p + "ln1_g"], params[p + "ln1_b"], cfg.ln_eps)
+        qkv = []
+        for wname, bname in (("wq", "bq"), ("wk", "bk"), ("wv", "bv")):
+            y = q(xn) @ qw(params[p + wname]) + params[p + bname]
+            qkv.append(y)
+        qm, km, vm = qkv
+        # [s, d] → [h, s, hd]
+        def heads(t):
+            return t.reshape(s, h, hd).transpose(1, 0, 2)
+        qh, kh, vh = heads(qm), heads(km), heads(vm)
+        scale = 1.0 / np.sqrt(hd)
+        qh_q = q(qh) * scale
+        kh_q = q(kh)
+        scores = jnp.einsum("hqd,hkd->hqk", qh_q, kh_q)
+        scores = jnp.where(mask[None, :, :], scores, -jnp.inf)
+        a = jax.nn.softmax(scores, axis=-1)
+        a_q = q(a)
+        # V quantised along the key dim (blocks along k): transpose so the
+        # last axis is k, quantise, transpose back
+        vh_q = q(vh.transpose(0, 2, 1)).transpose(0, 2, 1)
+        ctx = jnp.einsum("hqk,hkd->hqd", a_q, vh_q)
+        ctx = ctx.transpose(1, 0, 2).reshape(s, d)
+        att = q(ctx) @ qw(params[p + "wo"]) + params[p + "bo"]
+        x = x + att
+        xn2 = _layer_norm(x, params[p + "ln2_g"], params[p + "ln2_b"], cfg.ln_eps)
+        hpre = q(xn2) @ qw(params[p + "w1"]) + params[p + "b1"]
+        hact = _gelu(hpre)
+        mlp = q(hact) @ qw(params[p + "w2"]) + params[p + "b2"]
+        x = x + mlp
+    xn = _layer_norm(x, params["lnf_g"], params["lnf_b"], cfg.ln_eps)
+    return xn @ params["tok_emb"].T
+
+
+def lm_loss(params, tokens, targets, cfg: ModelConfig, fmt: str = "fp32"):
+    logits = lm_fwd(params, tokens, cfg, fmt)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, targets[:, None], axis=-1))
+
+
+def train_step(params, tokens, targets, lr, cfg: ModelConfig, fmt: str = "fp32"):
+    """One SGD step with gradient clipping. Returns (loss, new_params).
+
+    Deliberately simple (plain SGD + global-norm clip): the AOT artifact
+    carries no optimizer state, so the Rust driver's train loop is a pure
+    (params → params) fold. Donated params (see aot.py) avoid copies.
+    """
+    loss, grads = jax.value_and_grad(lm_loss)(params, tokens, targets, cfg, fmt)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree_util.tree_leaves(grads))
+    )
+    clip = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-9))
+    new_params = jax.tree_util.tree_map(lambda pv, g: pv - lr * clip * g, params, grads)
+    return loss, new_params

@@ -1,0 +1,93 @@
+"""L2 model tests: shapes, causality, quantised variants, STE training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+
+
+CFG = M.PRESETS["golden"]
+
+
+def setup_params(seed=0):
+    return M.init_params(CFG, seed)
+
+
+class TestForward:
+    def test_shapes_and_finite(self):
+        p = setup_params()
+        toks = jnp.arange(8, dtype=jnp.int32)
+        logits = M.lm_fwd(p, toks, CFG)
+        assert logits.shape == (8, CFG.vocab_size)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self):
+        p = setup_params()
+        t1 = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        t2 = jnp.asarray([1, 2, 9, 9], jnp.int32)
+        a = M.lm_fwd(p, t1, CFG)
+        b = M.lm_fwd(p, t2, CFG)
+        np.testing.assert_allclose(np.asarray(a)[:2], np.asarray(b)[:2], atol=1e-5)
+
+    def test_quantised_close_at_8bit(self):
+        p = setup_params()
+        toks = jnp.arange(8, dtype=jnp.int32)
+        a = np.asarray(M.lm_fwd(p, toks, CFG, "fp32"))
+        b = np.asarray(M.lm_fwd(p, toks, CFG, "bfp_e8m7n16"))
+        rel = np.sqrt(((a - b) ** 2).mean()) / (a.std() + 1e-9)
+        assert rel < 0.1, rel
+
+    def test_quantisation_hurts_monotonically(self):
+        p = setup_params()
+        toks = jnp.arange(8, dtype=jnp.int32)
+        a = np.asarray(M.lm_fwd(p, toks, CFG, "fp32"))
+
+        def err(fmt):
+            b = np.asarray(M.lm_fwd(p, toks, CFG, fmt))
+            return ((a - b) ** 2).mean()
+
+        assert err("bfp_e8m7n16") < err("bfp_e8m5n16") < err("bfp_e8m3n16")
+
+    def test_param_order_matches_rust_convention(self):
+        names = M.param_names(CFG)
+        assert names[0] == "tok_emb" and names[1] == "pos_emb"
+        assert names[2] == "layer0.ln1_g"
+        assert names[-1] == "lnf_b"
+        # 2 + 16*L + 2
+        assert len(names) == 2 + 16 * CFG.n_layers + 2
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        p = setup_params(3)
+        rng = np.random.default_rng(0)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab_size, 17), jnp.int32)
+        step = jax.jit(
+            lambda pp, t, tg: M.train_step(pp, t, tg, 0.5, CFG, "fp32")
+        )
+        losses = []
+        for _ in range(10):
+            loss, p = step(p, toks[:-1], toks[1:])
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.5, losses
+
+    def test_ste_training_works_quantised(self):
+        p = setup_params(4)
+        rng = np.random.default_rng(1)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab_size, 17), jnp.int32)
+        step = jax.jit(
+            lambda pp, t, tg: M.train_step(pp, t, tg, 0.5, CFG, "bfp_e8m5n16")
+        )
+        losses = []
+        for _ in range(10):
+            loss, p = step(p, toks[:-1], toks[1:])
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] - 0.3, losses
+
+    def test_ste_gradient_passthrough(self):
+        # d/dx ste_quant(x) == 1 everywhere
+        g = jax.grad(lambda x: jnp.sum(M.ste_quant(x, "bfp_e8m3n16")))(
+            jnp.ones((2, 16)) * 1.234
+        )
+        np.testing.assert_array_equal(np.asarray(g), np.ones((2, 16), np.float32))

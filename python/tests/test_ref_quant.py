@@ -1,0 +1,128 @@
+"""Definitional tests for the pure-jnp quantisation oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+FORMATS = ref.TABLE3_FORMATS
+
+
+def arr(xs):
+    return jnp.asarray(np.array(xs, np.float32))
+
+
+class TestMiniFloat:
+    def test_e4m3_known_values(self):
+        # mirrors rust quant::minifloat tests
+        out = ref.round_minifloat(arr([1000.0, -1000.0, 1.0, 1.0625, 1.19, 1.15]), 4, 3, 7)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.float32([480.0, -480.0, 1.0, 1.0, 1.25, 1.125])
+        )
+
+    def test_subnormals(self):
+        step = 2.0 ** -9
+        out = ref.round_minifloat(arr([step, step / 4]), 4, 3, 7)
+        np.testing.assert_array_equal(np.asarray(out), np.float32([step, 0.0]))
+
+    def test_nan_inf(self):
+        out = np.asarray(ref.round_minifloat(arr([np.nan, np.inf, -np.inf]), 4, 3, 7))
+        np.testing.assert_array_equal(out, np.float32([0.0, 480.0, -480.0]))
+
+    @given(st.floats(-600, 600, allow_nan=False, width=32))
+    @settings(max_examples=200, deadline=None)
+    def test_idempotent(self, x):
+        q1 = float(ref.round_minifloat(arr([x]), 4, 3, 7)[0])
+        q2 = float(ref.round_minifloat(arr([q1]), 4, 3, 7)[0])
+        assert q1 == q2
+
+
+class TestDMF:
+    def test_prefers_finer_grid_max(self):
+        # 7.2 must round to 7 (top of e=10 grid), not 8 (e=11 grid)
+        out = float(ref.round_dmf(arr([7.2]), 4, 3, 7)[0])
+        assert out == 7.0
+
+    def test_max_narrower_than_minifloat(self):
+        dmf_max = float(ref.round_dmf(arr([1e9]), 4, 3, 7)[0])
+        mf_max = float(ref.round_minifloat(arr([1e9]), 4, 3, 7)[0])
+        assert dmf_max < mf_max
+
+    @given(st.floats(-450, 450, allow_nan=False, width=32))
+    @settings(max_examples=200, deadline=None)
+    def test_idempotent(self, x):
+        q1 = float(ref.round_dmf(arr([x]), 4, 3, 7)[0])
+        q2 = float(ref.round_dmf(arr([q1]), 4, 3, 7)[0])
+        assert q1 == q2
+
+
+class TestBFP:
+    def test_outlier_localised(self):
+        data = np.full(32, 0.01, np.float32)
+        data[0] = 100.0
+        q = np.asarray(ref.bfp_fake_quant(arr(data.reshape(1, 32)), 8, 3, 16))[0]
+        assert q[1] == 0.0  # crushed inside the outlier block
+        assert q[20] > 0.0  # survives in the clean block
+
+    def test_zero_block(self):
+        q = np.asarray(ref.bfp_fake_quant(arr(np.zeros((1, 16))), 8, 5, 16))
+        assert (q == 0).all()
+
+    @given(
+        st.integers(2, 8),
+        st.lists(st.floats(-100, 100, allow_nan=False, width=32), min_size=16, max_size=16),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_error_bound(self, m_bits, xs):
+        x = arr(np.array(xs, np.float32).reshape(1, 16))
+        q = ref.bfp_fake_quant(x, 8, m_bits, 16)
+        absmax = float(jnp.max(jnp.abs(x)))
+        if absmax == 0:
+            return
+        e = int(np.floor(np.log2(absmax)))
+        scale = 2.0 ** (e - m_bits + 1)
+        err = np.abs(np.asarray(x) - np.asarray(q)).max()
+        assert err <= scale + 1e-6  # ≤ scale/2 except mantissa-ceiling saturation
+
+
+class TestBlockFormats:
+    @given(
+        st.sampled_from(FORMATS),
+        st.integers(1, 40),
+        st.integers(0, 2 ** 31 - 1),
+    )
+    @settings(max_examples=120, deadline=None)
+    def test_idempotent_all_formats_and_shapes(self, fmt, cols, seed):
+        rng = np.random.default_rng(seed)
+        x = arr(rng.normal(0, 2, (3, cols)).astype(np.float32))
+        q1 = ref.fake_quant(x, fmt)
+        q2 = ref.fake_quant(q1, fmt)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2), err_msg=fmt)
+
+    def test_bl_outputs_powers_of_two(self):
+        rng = np.random.default_rng(3)
+        x = arr(rng.normal(0, 5, (2, 32)).astype(np.float32))
+        q = np.asarray(ref.bl_fake_quant(x, 7, 8, 16))
+        nz = q[q != 0]
+        log = np.log2(np.abs(nz))
+        assert np.allclose(log, np.round(log))
+
+    def test_memory_ordering_of_sqnr(self):
+        # block formats beat per-tensor fixed point on outlier-heavy data
+        rng = np.random.default_rng(11)
+        x = rng.normal(0, 1, 4096).astype(np.float32)
+        x[rng.random(4096) < 0.01] *= 30
+        x = arr(x.reshape(4, 1024))
+
+        def sqnr(fmt):
+            q = np.asarray(ref.fake_quant(x, fmt))
+            return 10 * np.log10((np.asarray(x) ** 2).sum() / ((np.asarray(x) - q) ** 2).sum())
+
+        assert sqnr("bfp_e8m7n16") > sqnr("fixed8") + 3
+        assert sqnr("minifloat_e4m3") > sqnr("fixed8")
+
+    def test_dispatch_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            ref.fake_quant(arr([[1.0]]), "int4_magic")

@@ -1,0 +1,116 @@
+//! Quantisation + GEMM micro-benchmarks (custom harness — criterion is
+//! unavailable offline; see DESIGN.md §3). One bench group per paper
+//! artifact whose *cost* we claim: the quantisers behind Table 3, the
+//! quantised GEMM hot path, the end-to-end forward, and the serving loop.
+//!
+//!     cargo bench
+
+use bbq::model::config::ModelConfig;
+use bbq::model::params::Params;
+use bbq::model::plan::QuantPlan;
+use bbq::model::Model;
+use bbq::quant::config::presets;
+use bbq::quant::qmatmul::{bfp_matmul_blocked, qmatmul};
+use bbq::quant::{fake_quant_buffer, GemmQuant};
+use bbq::tensor::matmul::{matmul, matmul_bt};
+use bbq::tensor::Tensor;
+use bbq::util::bench::{black_box, Bench};
+use bbq::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::new(7);
+    println!("== quantiser throughput (1M elements, [1,16] blocks) ==");
+    let n = 1 << 20;
+    let src: Vec<f32> = (0..n).map(|_| rng.normal_with(0.0, 1.0)).collect();
+    for (name, fmt) in [
+        ("fixed8", presets::fixed8()),
+        ("minifloat8", presets::minifloat8()),
+        ("dmf8", presets::dmf8()),
+        ("bfp6", presets::bfp_w(6)),
+        ("bfp4", presets::bfp_w(4)),
+        ("bm8", presets::bm8()),
+        ("bl8", presets::bl8()),
+    ] {
+        let mut buf = src.clone();
+        let r = Bench::new(&format!("quantize/{name}"))
+            .items(n as f64)
+            .budget_ms(300.0)
+            .run(|| {
+                buf.copy_from_slice(&src);
+                fake_quant_buffer(black_box(&mut buf), 1024, fmt);
+            });
+        println!("{}", r.line());
+    }
+
+    println!("\n== GEMM paths (256x256x256) ==");
+    let a = Tensor::randn(&[256, 256], 1.0, &mut rng);
+    let b = Tensor::randn(&[256, 256], 0.3, &mut rng);
+    let bt = b.t();
+    let macs = 256f64 * 256.0 * 256.0;
+    let r = Bench::new("matmul/f32").items(macs).budget_ms(400.0).run(|| {
+        black_box(matmul(black_box(&a), black_box(&b)));
+    });
+    println!("{}", r.line());
+    let r = Bench::new("matmul/f32_bt").items(macs).budget_ms(400.0).run(|| {
+        black_box(matmul_bt(black_box(&a), black_box(&bt)));
+    });
+    println!("{}", r.line());
+    let r = Bench::new("qmatmul/bfp6_fakequant").items(macs).budget_ms(400.0).run(|| {
+        black_box(qmatmul(
+            black_box(&a),
+            black_box(&b),
+            GemmQuant::uniform(presets::bfp_w(6)),
+        ));
+    });
+    println!("{}", r.line());
+    let r = Bench::new("qmatmul/bfp6_eq4_intdomain").items(macs).budget_ms(600.0).run(|| {
+        black_box(bfp_matmul_blocked(black_box(&a), black_box(&bt), 8, 5, 16));
+    });
+    println!("{}", r.line());
+
+    println!("\n== model forward (tiny, seq 64) — Table 3's unit of work ==");
+    let cfg = ModelConfig::preset("tiny");
+    let params = Params::init(&cfg, 3);
+    let toks: Vec<usize> = (0..64).map(|i| (i * 37) % cfg.vocab_size).collect();
+    for (name, plan) in [
+        ("fp32", QuantPlan::fp32()),
+        ("bfp6", QuantPlan::uniform(presets::bfp_w(6))),
+        ("bfp4", QuantPlan::uniform(presets::bfp_w(4))),
+        ("llm_int8", QuantPlan::llm_int8(8)),
+    ] {
+        let model = Model::new(params.clone(), plan);
+        let r = Bench::new(&format!("forward/tiny/{name}"))
+            .items(64.0)
+            .budget_ms(1200.0)
+            .iters(3, 200)
+            .run(|| {
+                black_box(model.forward(black_box(&toks), None));
+            });
+        println!("{}", r.line());
+    }
+
+    println!("\n== serving (micro, batch 8, greedy, 8 new tokens) ==");
+    let cfgm = ModelConfig::preset("micro");
+    let paramsm = Params::init(&cfgm, 3);
+    let model = Model::new(paramsm, QuantPlan::uniform(presets::bfp_w(6)));
+    let reqs: Vec<bbq::coordinator::Request> = (0..8)
+        .map(|i| bbq::coordinator::Request {
+            id: i,
+            prompt: vec![3, 10, 42],
+            max_new_tokens: 8,
+            temperature: 0.0,
+        })
+        .collect();
+    let r = Bench::new("serve/batch8")
+        .items(64.0)
+        .budget_ms(2000.0)
+        .iters(3, 50)
+        .run(|| {
+            black_box(bbq::coordinator::run_batched(
+                &model,
+                reqs.clone(),
+                &bbq::coordinator::ServerConfig::default(),
+            ));
+        });
+    println!("{}", r.line());
+}

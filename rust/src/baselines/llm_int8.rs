@@ -1,0 +1,175 @@
+//! LLM.int8() baseline (Dettmers et al. 2022): mixed-precision GEMM with
+//! runtime outlier decomposition.
+//!
+//! Columns of the activation matrix (features along the contraction dim)
+//! whose absolute maximum exceeds a threshold are computed in full
+//! precision ("fp16" in the paper; f32 here); the rest use vector-wise
+//! int8: per-row scales for the activation, per-output-row scales for the
+//! transposed weight. All tensors are *stored* in fp16 — the reason the
+//! paper credits it only 2× memory density (Appendix B.3).
+
+use crate::tensor::matmul::matmul_bt;
+use crate::tensor::Tensor;
+
+pub const DEFAULT_THRESHOLD: f32 = 6.0;
+
+/// `act [m,k] @ weight_t [n,k]ᵀ` with outlier decomposition.
+/// `bits` = 8 for LLM.int8(), 4 for the LLM.int4() variant of Table 5.
+pub fn llm_int8_matmul(act: &Tensor, weight_t: &Tensor, threshold: f32, bits: u32) -> Tensor {
+    let (m, k) = act.dims2();
+    let (_n, k2) = weight_t.dims2();
+    assert_eq!(k, k2);
+    // find outlier feature columns
+    let mut is_outlier = vec![false; k];
+    let mut n_out = 0usize;
+    for i in 0..m {
+        for (j, &v) in act.row(i).iter().enumerate() {
+            if !is_outlier[j] && v.abs() >= threshold {
+                is_outlier[j] = true;
+                n_out += 1;
+            }
+        }
+    }
+    let qmax = ((1i64 << (bits - 1)) - 1) as f32;
+    // vector-wise int8 on the inlier columns
+    let quant_rows = |t: &Tensor| -> Tensor {
+        let (r, _) = t.dims2();
+        let mut out = t.clone();
+        for i in 0..r {
+            let row = out.row_mut(i);
+            let mut absmax = 0.0f32;
+            for (j, v) in row.iter().enumerate() {
+                if !is_outlier[j] {
+                    absmax = absmax.max(v.abs());
+                }
+            }
+            if absmax == 0.0 {
+                continue;
+            }
+            let scale = absmax / qmax;
+            for (j, v) in row.iter_mut().enumerate() {
+                if is_outlier[j] {
+                    *v = 0.0; // moved to the fp16 path
+                } else {
+                    *v = (*v / scale).round_ties_even().clamp(-qmax, qmax) * scale;
+                }
+            }
+        }
+        out
+    };
+    let act_in = quant_rows(act);
+    let w_in = quant_rows(weight_t);
+    let mut y = matmul_bt(&act_in, &w_in);
+    if n_out > 0 {
+        // fp16/f32 path for outlier columns
+        let cols: Vec<usize> = (0..k).filter(|&j| is_outlier[j]).collect();
+        let gather = |t: &Tensor| -> Tensor {
+            let (r, _) = t.dims2();
+            let mut g = Tensor::zeros(&[r, cols.len()]);
+            for i in 0..r {
+                for (cj, &j) in cols.iter().enumerate() {
+                    g.row_mut(i)[cj] = t.row(i)[j];
+                }
+            }
+            g
+        };
+        let y_out = matmul_bt(&gather(act), &gather(weight_t));
+        y.add_assign(&y_out);
+    }
+    y
+}
+
+/// Fraction of features flagged as outliers for a batch of activations —
+/// useful for validating against the paper's ~0.1% claim at threshold 6.
+pub fn outlier_fraction(act: &Tensor, threshold: f32) -> f64 {
+    let (m, k) = act.dims2();
+    let mut flagged = vec![false; k];
+    for i in 0..m {
+        for (j, &v) in act.row(i).iter().enumerate() {
+            if v.abs() >= threshold {
+                flagged[j] = true;
+            }
+        }
+    }
+    flagged.iter().filter(|&&b| b).count() as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, close_slice, llmish_values};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn no_outliers_equals_plain_int8() {
+        // with a huge threshold, all columns are inliers
+        let mut rng = Pcg32::new(1);
+        let a = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let w = Tensor::randn(&[8, 32], 0.3, &mut rng);
+        let y = llm_int8_matmul(&a, &w, 1e9, 8);
+        let exact = matmul_bt(&a, &w);
+        // int8 vector-wise is accurate on gaussian data
+        let rel = crate::util::stats::mse(&y.data, &exact.data).sqrt()
+            / (crate::util::stats::std_dev(&exact.data) + 1e-12);
+        assert!(rel < 0.02, "rel {rel}");
+    }
+
+    #[test]
+    fn outliers_exact_in_fp_path() {
+        // a single giant feature column must not destroy the result
+        let mut rng = Pcg32::new(2);
+        let mut a = Tensor::randn(&[4, 32], 0.5, &mut rng);
+        for i in 0..4 {
+            a.row_mut(i)[7] = 80.0 + i as f32;
+        }
+        let w = Tensor::randn(&[8, 32], 0.3, &mut rng);
+        let exact = matmul_bt(&a, &w);
+        let y8 = llm_int8_matmul(&a, &w, 6.0, 8);
+        let rel = crate::util::stats::mse(&y8.data, &exact.data).sqrt()
+            / (crate::util::stats::std_dev(&exact.data) + 1e-12);
+        assert!(rel < 0.02, "rel {rel}");
+        // contrast: plain int8 without decomposition is much worse
+        let yplain = llm_int8_matmul(&a, &w, 1e9, 8);
+        let rel_plain = crate::util::stats::mse(&yplain.data, &exact.data).sqrt()
+            / (crate::util::stats::std_dev(&exact.data) + 1e-12);
+        assert!(rel_plain > rel * 3.0, "plain {rel_plain} vs decomposed {rel}");
+    }
+
+    #[test]
+    fn int4_variant_noisier_than_int8() {
+        check("int4 worse", 10, |rng| {
+            let a = Tensor::new(&[4, 64], llmish_values(rng, 256, 1.0, 0.02));
+            let w = Tensor::new(&[8, 64], llmish_values(rng, 512, 0.3, 0.0));
+            let exact = matmul_bt(&a, &w);
+            let e8 = crate::util::stats::mse(
+                &llm_int8_matmul(&a, &w, 6.0, 8).data,
+                &exact.data,
+            );
+            let e4 = crate::util::stats::mse(
+                &llm_int8_matmul(&a, &w, 6.0, 4).data,
+                &exact.data,
+            );
+            if e4 >= e8 {
+                Ok(())
+            } else {
+                Err(format!("e4 {e4} < e8 {e8}"))
+            }
+        });
+    }
+
+    #[test]
+    fn outlier_fraction_small_on_llmish() {
+        let mut rng = Pcg32::new(5);
+        let a = Tensor::new(&[16, 1024], llmish_values(&mut rng, 16 * 1024, 1.0, 0.001));
+        let f = outlier_fraction(&a, 6.0);
+        assert!(f < 0.2, "{f}");
+    }
+
+    #[test]
+    fn zero_matrix_ok() {
+        let a = Tensor::zeros(&[2, 8]);
+        let w = Tensor::zeros(&[3, 8]);
+        let y = llm_int8_matmul(&a, &w, 6.0, 8);
+        close_slice(&y.data, &vec![0.0; 6], 0.0, "zero").unwrap();
+    }
+}

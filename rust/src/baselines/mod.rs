@@ -1,0 +1,8 @@
+//! Re-implemented comparison baselines (paper Table 1/3/5):
+//! LLM.int8()/int4() (runtime outlier decomposition), SmoothQuant and the
+//! amended SmoothQuant-c (scale migration + fixed-point), and GPTQ
+//! (weight-only, Hessian-compensated).
+
+pub mod gptq;
+pub mod llm_int8;
+pub mod smoothquant;

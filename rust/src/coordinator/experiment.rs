@@ -1,0 +1,94 @@
+//! Experiment orchestration: shared model zoo (train once, reuse across
+//! experiments), result persistence (markdown + CSV + JSON), and the
+//! common "evaluate a set of methods over the model ladder" loop.
+
+use crate::data::corpus::train_stream;
+use crate::data::vocab::Vocab;
+use crate::model::config::ModelConfig;
+use crate::model::params::Params;
+use crate::model::plan::QuantPlan;
+use crate::train::{train_lm, TrainConfig};
+use crate::util::json::Json;
+use crate::util::table::Table;
+use std::path::PathBuf;
+
+/// Where trained checkpoints live (gitignored).
+pub fn zoo_dir() -> PathBuf {
+    PathBuf::from(std::env::var("BBQ_ZOO_DIR").unwrap_or_else(|_| "zoo".to_string()))
+}
+
+/// Train (or load a cached) model of `preset` on the synthetic corpus.
+/// Training budgets scale with model size so bigger models are genuinely
+/// better — preserving the paper's "bigger models, lower perplexity" axis.
+pub fn get_or_train(preset: &str, steps: usize, quiet: bool) -> Params {
+    let path = zoo_dir().join(format!("{preset}_s{steps}.bbqw"));
+    if path.exists() {
+        if let Ok(p) = Params::load(&path) {
+            return p;
+        }
+    }
+    let vocab = Vocab::build();
+    let cfg = ModelConfig::preset(preset);
+    let mut params = Params::init(&cfg, 42);
+    let stream = train_stream(&vocab, 60_000);
+    let tc = TrainConfig {
+        steps,
+        seq_len: 64,
+        lr: 3e-3,
+        seed: 42,
+        log_every: if quiet { 0 } else { 50 },
+    };
+    train_lm(&mut params, &QuantPlan::fp32(), &stream, &tc, |step, loss| {
+        if !quiet {
+            eprintln!("[train {preset}] step {step}: loss {loss:.4}");
+        }
+    });
+    let _ = params.save(&path);
+    params
+}
+
+/// Default training budget per preset (bigger model, more steps).
+pub fn default_steps(preset: &str) -> usize {
+    match preset {
+        "nano" => 600,
+        "micro" => 1200,
+        "tiny" => 2000,
+        "small" => 2800,
+        "base" => 3200,
+        "rope-tiny" => 2000,
+        "rope-small" => 2800,
+        _ => 800,
+    }
+}
+
+/// Persist an experiment's table: results/<id>.md, .csv, .json.
+pub fn save_result(id: &str, table: &Table, extra: Option<Json>) {
+    let dir = crate::util::results_dir();
+    let _ = crate::util::write_file(&dir.join(format!("{id}.md")), &table.render());
+    let _ = crate::util::write_file(&dir.join(format!("{id}.csv")), &table.to_csv());
+    if let Some(j) = extra {
+        let _ = crate::util::write_file(&dir.join(format!("{id}.json")), &j.to_string());
+    }
+    println!("{}", table.render());
+    println!("[saved results/{id}.md .csv]");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_roundtrip() {
+        std::env::set_var("BBQ_ZOO_DIR", std::env::temp_dir().join("bbq_zoo_test"));
+        let p1 = get_or_train("nano", 5, true);
+        let p2 = get_or_train("nano", 5, true); // cached
+        assert_eq!(p1.tok_emb.data, p2.tok_emb.data);
+        std::fs::remove_dir_all(zoo_dir()).ok();
+        std::env::remove_var("BBQ_ZOO_DIR");
+    }
+
+    #[test]
+    fn steps_scale_with_size() {
+        assert!(default_steps("base") > default_steps("micro"));
+    }
+}

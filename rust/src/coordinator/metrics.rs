@@ -1,0 +1,72 @@
+//! Serving metrics: latency distribution + token throughput.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub completed: usize,
+    pub generated_tokens: usize,
+    pub latencies_ms: Vec<f64>,
+    pub wall: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record(&mut self, latency: Duration, tokens: usize) {
+        self.completed += 1;
+        self.generated_tokens += tokens;
+        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+    }
+
+    pub fn p(&self, pct: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((pct / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    /// generated tokens per wall-clock second
+    pub fn throughput_tps(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / secs
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "completed={} tokens={} wall={:.2}s tput={:.1} tok/s p50={:.1}ms p99={:.1}ms",
+            self.completed,
+            self.generated_tokens,
+            self.wall.as_secs_f64(),
+            self.throughput_tps(),
+            self.p(50.0),
+            self.p(99.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record(Duration::from_millis(i), 1);
+        }
+        m.wall = Duration::from_secs(1);
+        assert!((m.p(50.0) - 50.0).abs() <= 1.0);
+        assert!((m.p(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(m.throughput_tps(), 100.0);
+        assert!(m.summary().contains("tok/s"));
+    }
+}

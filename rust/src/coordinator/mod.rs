@@ -1,0 +1,10 @@
+//! L3 coordination: batched inference serving (server.rs), metrics, and
+//! experiment orchestration (model zoo, result persistence).
+
+pub mod experiment;
+pub mod metrics;
+pub mod server;
+
+pub use experiment::{default_steps, get_or_train, save_result};
+pub use metrics::Metrics;
+pub use server::{run_batched, serve_one, Request, Response, ServerConfig};

@@ -1,0 +1,208 @@
+//! Batched inference coordinator — the L3 serving path.
+//!
+//! std-thread implementation (no tokio in this environment): a bounded
+//! request queue feeds a dynamic batcher; the batcher groups requests up
+//! to `max_batch` (or `batch_timeout`), fans the batch out to a worker
+//! pool that decodes with per-request KV-cache sessions, and records
+//! latency/throughput metrics.
+
+use super::metrics::Metrics;
+use crate::model::kv_cache::{sample_logits, DecodeSession};
+use crate::model::Model;
+use crate::util::rng::Pcg32;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<usize>,
+    pub max_new_tokens: usize,
+    pub temperature: f32,
+}
+
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<usize>,
+    pub latency: Duration,
+    pub prompt_len: usize,
+}
+
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub batch_timeout: Duration,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            batch_timeout: Duration::from_millis(5),
+            workers: std::thread::available_parallelism()
+                .map(|n| n.get().min(8))
+                .unwrap_or(4),
+        }
+    }
+}
+
+/// Process one request to completion (prefill + decode) on the calling
+/// thread. Used by the worker pool and directly by benchmarks.
+pub fn serve_one(model: &Model, req: &Request, seed: u64) -> Response {
+    let start = Instant::now();
+    let mut session = DecodeSession::new(model);
+    let mut rng = Pcg32::new(seed ^ req.id);
+    let mut logits = Vec::new();
+    for &t in &req.prompt {
+        logits = session.step(t);
+    }
+    let mut out = Vec::with_capacity(req.max_new_tokens);
+    let cap = model.cfg().max_seq;
+    for _ in 0..req.max_new_tokens {
+        if session.pos >= cap {
+            break;
+        }
+        let next = sample_logits(&logits, req.temperature, &mut rng);
+        out.push(next);
+        logits = session.step(next);
+    }
+    Response {
+        id: req.id,
+        tokens: out,
+        latency: start.elapsed(),
+        prompt_len: req.prompt.len(),
+    }
+}
+
+/// Run a closed-loop benchmark: submit all `requests`, process with the
+/// dynamic batcher + worker pool, return responses + metrics.
+pub fn run_batched(model: &Model, requests: Vec<Request>, cfg: &ServerConfig) -> (Vec<Response>, Metrics) {
+    let (tx, rx) = mpsc::channel::<Request>();
+    for r in requests.iter().cloned() {
+        tx.send(r).unwrap();
+    }
+    drop(tx);
+    let rx = Arc::new(Mutex::new(rx));
+    let n_total = requests.len();
+    let done = Arc::new(AtomicUsize::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let responses = Arc::new(Mutex::new(Vec::with_capacity(n_total)));
+    let metrics = Arc::new(Mutex::new(Metrics::new()));
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for wi in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let responses = Arc::clone(&responses);
+            let metrics = Arc::clone(&metrics);
+            let done = Arc::clone(&done);
+            let stop = Arc::clone(&stop);
+            scope.spawn(move || {
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // dynamic batching: grab up to max_batch requests
+                    let mut batch = Vec::new();
+                    {
+                        let guard = rx.lock().unwrap();
+                        let deadline = Instant::now() + cfg.batch_timeout;
+                        while batch.len() < cfg.max_batch {
+                            match guard.try_recv() {
+                                Ok(r) => batch.push(r),
+                                Err(mpsc::TryRecvError::Empty) => {
+                                    if batch.is_empty() && Instant::now() < deadline {
+                                        std::thread::yield_now();
+                                        continue;
+                                    }
+                                    break;
+                                }
+                                Err(mpsc::TryRecvError::Disconnected) => break,
+                            }
+                        }
+                    }
+                    if batch.is_empty() {
+                        if done.load(Ordering::Relaxed) >= n_total {
+                            break;
+                        }
+                        std::thread::yield_now();
+                        continue;
+                    }
+                    for req in batch {
+                        let resp = serve_one(model, &req, 0xC0FFEE + wi as u64);
+                        let gen_toks = resp.tokens.len();
+                        let lat = resp.latency;
+                        responses.lock().unwrap().push(resp);
+                        metrics.lock().unwrap().record(lat, gen_toks);
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let mut m = Arc::try_unwrap(metrics).unwrap().into_inner().unwrap();
+    m.wall = wall;
+    let mut out = Arc::try_unwrap(responses).unwrap().into_inner().unwrap();
+    out.sort_by_key(|r| r.id);
+    (out, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::params::Params;
+    use crate::model::plan::QuantPlan;
+    use crate::quant::config::presets;
+
+    fn model() -> Model {
+        let cfg = ModelConfig::preset("nano");
+        Model::new(Params::init(&cfg, 4), QuantPlan::uniform(presets::bfp_w(6)))
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: vec![3 + i % 5, 10, 42],
+                max_new_tokens: 4,
+                temperature: 0.0,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let m = model();
+        let (resps, metrics) = run_batched(&m, reqs(12), &ServerConfig::default());
+        assert_eq!(resps.len(), 12);
+        assert!(resps.iter().all(|r| r.tokens.len() == 4));
+        assert_eq!(metrics.completed, 12);
+        assert!(metrics.throughput_tps() > 0.0);
+    }
+
+    #[test]
+    fn greedy_decode_is_deterministic_across_workers() {
+        let m = model();
+        let (a, _) = run_batched(&m, reqs(6), &ServerConfig { workers: 1, ..Default::default() });
+        let (b, _) = run_batched(&m, reqs(6), &ServerConfig { workers: 4, ..Default::default() });
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.tokens, rb.tokens, "request {}", ra.id);
+        }
+    }
+
+    #[test]
+    fn respects_context_cap() {
+        let m = model();
+        let long = Request {
+            id: 0,
+            prompt: vec![1; 250],
+            max_new_tokens: 50,
+            temperature: 0.0,
+        };
+        let r = serve_one(&m, &long, 1);
+        assert!(r.prompt_len + r.tokens.len() <= m.cfg().max_seq);
+    }
+}

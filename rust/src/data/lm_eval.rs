@@ -1,0 +1,172 @@
+//! Language-model evaluation: perplexity over a held-out token stream,
+//! following the paper's protocol (Appendix B.1: chop the test set into
+//! fixed-length sequences, feed each to the LM, normalise cross-entropy by
+//! sequence length).
+
+use crate::model::transformer::{cross_entropy, Model};
+
+#[derive(Clone, Debug)]
+pub struct PplResult {
+    pub nats_per_tok: f64,
+    pub perplexity: f64,
+    pub tokens: usize,
+    pub chunks: usize,
+}
+
+/// Perplexity of `model` on `stream`, in chunks of `seq_len` tokens
+/// (the paper uses 2000-token chunks of WikiText2; we scale down).
+pub fn perplexity(model: &Model, stream: &[usize], seq_len: usize, max_chunks: usize) -> PplResult {
+    assert!(seq_len >= 2);
+    let mut total_nats = 0.0f64;
+    let mut total_toks = 0usize;
+    let mut chunks = 0usize;
+    for chunk in stream.chunks(seq_len) {
+        if chunk.len() < 2 || chunks >= max_chunks {
+            break;
+        }
+        let inputs = &chunk[..chunk.len() - 1];
+        let targets = &chunk[1..];
+        let logits = model.forward(inputs, None);
+        total_nats += cross_entropy(&logits, targets) * targets.len() as f64;
+        total_toks += targets.len();
+        chunks += 1;
+    }
+    let nats = if total_toks > 0 {
+        total_nats / total_toks as f64
+    } else {
+        f64::NAN
+    };
+    PplResult {
+        nats_per_tok: nats,
+        perplexity: nats.exp(),
+        tokens: total_toks,
+        chunks,
+    }
+}
+
+/// Parallel variant: evaluates chunks on worker threads (model forward is
+/// immutable, so this is embarrassingly parallel).
+pub fn perplexity_par(
+    model: &Model,
+    stream: &[usize],
+    seq_len: usize,
+    max_chunks: usize,
+    threads: usize,
+) -> PplResult {
+    let chunks: Vec<&[usize]> = stream
+        .chunks(seq_len)
+        .filter(|c| c.len() >= 2)
+        .take(max_chunks)
+        .collect();
+    if chunks.is_empty() {
+        return PplResult {
+            nats_per_tok: f64::NAN,
+            perplexity: f64::NAN,
+            tokens: 0,
+            chunks: 0,
+        };
+    }
+    let nthreads = threads.max(1).min(chunks.len());
+    let results: Vec<(f64, usize)> = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for ti in 0..nthreads {
+            let my_chunks: Vec<&[usize]> = chunks
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % nthreads == ti)
+                .map(|(_, c)| *c)
+                .collect();
+            handles.push(scope.spawn(move || {
+                let mut nats = 0.0;
+                let mut toks = 0;
+                for c in my_chunks {
+                    let logits = model.forward(&c[..c.len() - 1], None);
+                    nats += cross_entropy(&logits, &c[1..]) * (c.len() - 1) as f64;
+                    toks += c.len() - 1;
+                }
+                (nats, toks)
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let total_nats: f64 = results.iter().map(|(n, _)| n).sum();
+    let total_toks: usize = results.iter().map(|(_, t)| t).sum();
+    let nats = total_nats / total_toks as f64;
+    PplResult {
+        nats_per_tok: nats,
+        perplexity: nats.exp(),
+        tokens: total_toks,
+        chunks: chunks.len(),
+    }
+}
+
+/// Log-probability of `completion` tokens given `prompt` tokens — the
+/// zero-shot prompting primitive (lm-eval-harness style continuation
+/// scoring).
+pub fn completion_logprob(model: &Model, prompt: &[usize], completion: &[usize]) -> f64 {
+    assert!(!completion.is_empty());
+    let mut full = prompt.to_vec();
+    full.extend_from_slice(completion);
+    let logits = model.forward(&full[..full.len() - 1], None);
+    let mut lp = 0.0f64;
+    for (ci, &tok) in completion.iter().enumerate() {
+        let row_idx = prompt.len() + ci - 1;
+        let row = logits.row(row_idx);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse =
+            m as f64 + row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln();
+        lp += row[tok] as f64 - lse;
+    }
+    lp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::test_stream;
+    use crate::data::vocab::Vocab;
+    use crate::model::config::ModelConfig;
+    use crate::model::params::Params;
+    use crate::model::plan::QuantPlan;
+    use crate::model::Model;
+
+    fn model() -> Model {
+        let cfg = ModelConfig::preset("nano");
+        Model::new(Params::init(&cfg, 5), QuantPlan::fp32())
+    }
+
+    #[test]
+    fn random_model_near_uniform_ppl() {
+        let v = Vocab::build();
+        let m = model();
+        let s = test_stream(&v, 400);
+        let r = perplexity(&m, &s, 64, 4);
+        assert!(r.perplexity > 200.0 && r.perplexity < 900.0, "{}", r.perplexity);
+    }
+
+    #[test]
+    fn par_matches_serial() {
+        let v = Vocab::build();
+        let m = model();
+        let s = test_stream(&v, 500);
+        let a = perplexity(&m, &s, 64, 8);
+        let b = perplexity_par(&m, &s, 64, 8, 4);
+        assert!((a.nats_per_tok - b.nats_per_tok).abs() < 1e-9);
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn completion_logprob_is_negative_and_finite() {
+        let m = model();
+        let lp = completion_logprob(&m, &[3, 4, 5], &[6, 7]);
+        assert!(lp.is_finite() && lp < 0.0);
+    }
+
+    #[test]
+    fn empty_stream_is_nan() {
+        let m = model();
+        let r = perplexity(&m, &[], 64, 4);
+        assert!(r.nats_per_tok.is_nan());
+        assert_eq!(r.tokens, 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data substrate: lexicon/tokenizer, synthetic corpus (WikiText-2
+//! substitute), LM perplexity evaluation, and the eight downstream tasks.
+
+pub mod corpus;
+pub mod lm_eval;
+pub mod tasks;
+pub mod vocab;
+
+pub use corpus::{test_stream, train_stream};
+pub use lm_eval::{completion_logprob, perplexity, perplexity_par, PplResult};
+pub use tasks::{evaluate, generate, Task, TaskResult};
+pub use vocab::Vocab;

@@ -1,0 +1,186 @@
+//! Synthetic lexicon + word-level tokenizer.
+//!
+//! A WikiText-2 substitute must give the LM *learnable* structure with a
+//! non-trivial long-tail distribution (DESIGN.md §3). We build an
+//! English-like lexicon with part-of-speech and sentiment categories so
+//! that (a) the corpus generator can emit grammatical, predictable
+//! sentences, and (b) downstream tasks can be templated from the same
+//! vocabulary (zero-shot prompting then has signal exactly where the
+//! corpus distribution supports it, mirroring the paper's task split).
+
+use std::collections::HashMap;
+
+pub const VOCAB_SIZE: usize = 512;
+
+#[derive(Clone, Debug)]
+pub struct Vocab {
+    pub words: Vec<String>,
+    pub index: HashMap<String, usize>,
+    pub nouns: Vec<usize>,
+    pub verbs: Vec<usize>,
+    pub adj_pos: Vec<usize>,
+    pub adj_neg: Vec<usize>,
+    pub names: Vec<usize>,
+    pub places: Vec<usize>,
+}
+
+pub const PAD: usize = 0;
+pub const UNK: usize = 1;
+pub const BOS: usize = 2;
+
+impl Vocab {
+    /// The fixed lexicon (deterministic; shared with the python side via
+    /// artifacts/vocab.json).
+    pub fn build() -> Vocab {
+        let mut words: Vec<String> = vec!["<pad>".into(), "<unk>".into(), "<bos>".into()];
+        let push_all = |items: &[&str], words: &mut Vec<String>| -> Vec<usize> {
+            items
+                .iter()
+                .map(|w| {
+                    words.push(w.to_string());
+                    words.len() - 1
+                })
+                .collect()
+        };
+        // structural words (ids stay stable as long as order is unchanged)
+        let _structural = push_all(
+            &[
+                "the", "a", "is", "was", "and", "or", "not", "very", "quite", "it", "this",
+                "that", "then", "because", "but", "of", "in", "on", "to", "by", ".", ",", "?",
+                "review", "sentiment", "question", "answer", "premise", "paraphrase",
+                "positive", "negative", "yes", "no", "good", "bad", "true", "false",
+                "belongs", "said", "story", "ending", "because:", "so",
+            ],
+            &mut words,
+        );
+        let nouns = push_all(
+            &[
+                "cat", "dog", "bird", "fish", "horse", "mouse", "fox", "wolf", "bear", "lion",
+                "book", "ball", "cup", "door", "key", "lamp", "table", "chair", "stone", "tree",
+                "river", "house", "garden", "road", "bridge", "boat", "train", "car", "plane",
+                "clock", "letter", "song", "movie", "game", "meal", "coat", "hat", "shoe",
+                "box", "coin", "map", "tool", "rope", "wheel", "window", "flower", "cloud",
+                "storm", "market", "farm",
+            ],
+            &mut words,
+        );
+        let verbs = push_all(
+            &[
+                "chased", "found", "took", "dropped", "carried", "watched", "opened", "closed",
+                "moved", "broke", "fixed", "made", "sold", "bought", "gave", "kept", "lost",
+                "painted", "cleaned", "built", "pushed", "pulled", "threw", "caught", "hid",
+                "showed", "followed", "helped", "liked", "loved",
+            ],
+            &mut words,
+        );
+        let adj_pos = push_all(
+            &[
+                "great", "wonderful", "excellent", "delightful", "brilliant", "charming",
+                "lovely", "superb", "amazing", "pleasant", "bright", "fresh", "clever",
+                "graceful", "splendid",
+            ],
+            &mut words,
+        );
+        let adj_neg = push_all(
+            &[
+                "terrible", "awful", "dreadful", "boring", "ugly", "broken", "dull", "nasty",
+                "horrid", "gloomy", "dirty", "rotten", "weak", "bitter", "dismal",
+            ],
+            &mut words,
+        );
+        let names = push_all(
+            &[
+                "alice", "bob", "carol", "david", "emma", "frank", "grace", "henry", "iris",
+                "jack", "karen", "liam", "mary", "noah", "olivia", "peter", "quinn", "rose",
+                "sam", "tina",
+            ],
+            &mut words,
+        );
+        let places = push_all(
+            &[
+                "town", "city", "village", "forest", "mountain", "valley", "island", "harbor",
+                "castle", "field",
+            ],
+            &mut words,
+        );
+        // filler tokens up to VOCAB_SIZE (rare tail mass)
+        let mut i = 0;
+        while words.len() < VOCAB_SIZE {
+            words.push(format!("w{i}"));
+            i += 1;
+        }
+        assert_eq!(words.len(), VOCAB_SIZE);
+        let index = words
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i))
+            .collect();
+        Vocab {
+            words,
+            index,
+            nouns,
+            verbs,
+            adj_pos,
+            adj_neg,
+            names,
+            places,
+        }
+    }
+
+    pub fn id(&self, w: &str) -> usize {
+        *self.index.get(w).unwrap_or(&UNK)
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<usize> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+
+    pub fn decode(&self, ids: &[usize]) -> String {
+        ids.iter()
+            .map(|&i| self.words.get(i).map(String::as_str).unwrap_or("<?>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vocab_is_full_and_unique() {
+        let v = Vocab::build();
+        assert_eq!(v.words.len(), VOCAB_SIZE);
+        assert_eq!(v.index.len(), VOCAB_SIZE, "duplicate words");
+    }
+
+    #[test]
+    fn encode_decode() {
+        let v = Vocab::build();
+        let ids = v.encode("the cat chased the ball .");
+        assert_eq!(v.decode(&ids), "the cat chased the ball .");
+        assert!(!ids.contains(&UNK));
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let v = Vocab::build();
+        assert_eq!(v.encode("qwertyuiop"), vec![UNK]);
+    }
+
+    #[test]
+    fn categories_nonempty_and_in_range() {
+        let v = Vocab::build();
+        for cat in [&v.nouns, &v.verbs, &v.adj_pos, &v.adj_neg, &v.names, &v.places] {
+            assert!(!cat.is_empty());
+            assert!(cat.iter().all(|&i| i < VOCAB_SIZE));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Vocab::build();
+        let b = Vocab::build();
+        assert_eq!(a.words, b.words);
+    }
+}

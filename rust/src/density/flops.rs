@@ -1,0 +1,119 @@
+//! FLOP / GEMM-operand profiler (paper Appendix B.4).
+//!
+//! The mixed-precision search needs, per quantisable tensor, its element
+//! count — to turn a per-tensor format assignment into a model-level
+//! memory density. This module enumerates the eight GEMMs of Algorithm 2
+//! for a model configuration and reports operand sizes and MAC counts,
+//! including the share of FLOPs in the two activation-activation GEMMs
+//! (④⑤) that prior work leaves unquantised (~20% of self-attention in the
+//! paper's accounting).
+
+use crate::model::config::ModelConfig;
+
+/// One GEMM site: `act [m,k] @ weight-ish [k,n]`, `per_layer` times.
+#[derive(Clone, Debug)]
+pub struct GemmSite {
+    /// ①..⑧ in Algorithm 2
+    pub index: usize,
+    pub name: &'static str,
+    /// contraction dim
+    pub k: usize,
+    /// act rows per token-sequence of length s (expressed at s=1; scale by seq)
+    pub act_numel_per_tok: usize,
+    pub weight_numel: usize,
+    /// MACs per token
+    pub macs_per_tok: usize,
+    /// true for ④⑤ (both operands are activations)
+    pub act_act: bool,
+}
+
+/// Enumerate the 8 GEMMs of one transformer layer.
+pub fn layer_gemms(cfg: &ModelConfig, seq: usize) -> Vec<GemmSite> {
+    let d = cfg.d_model;
+    let f = cfg.d_ff;
+    let s = seq;
+    vec![
+        GemmSite { index: 1, name: "q_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
+        GemmSite { index: 2, name: "k_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
+        GemmSite { index: 3, name: "v_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
+        // ④ S = Q K^T: per token, dot over head_dim with s keys × heads
+        GemmSite { index: 4, name: "qk_t", k: d / cfg.n_heads, act_numel_per_tok: d, weight_numel: 0, macs_per_tok: s * d, act_act: true },
+        // ⑤ C = A V
+        GemmSite { index: 5, name: "att_v", k: s, act_numel_per_tok: cfg.n_heads * s, weight_numel: 0, macs_per_tok: s * d, act_act: true },
+        GemmSite { index: 6, name: "o_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
+        GemmSite { index: 7, name: "fc1", k: d, act_numel_per_tok: d, weight_numel: d * f, macs_per_tok: d * f, act_act: false },
+        GemmSite { index: 8, name: "fc2", k: f, act_numel_per_tok: f, weight_numel: d * f, macs_per_tok: d * f, act_act: false },
+    ]
+}
+
+/// Whole-model profile at a given sequence length.
+#[derive(Clone, Debug)]
+pub struct FlopProfile {
+    pub total_macs_per_tok: f64,
+    pub attn_macs_per_tok: f64,
+    pub act_act_macs_per_tok: f64,
+    /// fraction of *self-attention* MACs in ④⑤ (paper: ~20.6% for OPT-6.7B)
+    pub act_act_share_of_attn: f64,
+    pub weight_numel: usize,
+}
+
+pub fn profile(cfg: &ModelConfig, seq: usize) -> FlopProfile {
+    let mut total = 0.0;
+    let mut attn = 0.0;
+    let mut aa = 0.0;
+    let mut w = cfg.vocab_size * cfg.d_model; // embedding
+    for _ in 0..cfg.n_layers {
+        for g in layer_gemms(cfg, seq) {
+            total += g.macs_per_tok as f64;
+            if g.index <= 6 {
+                attn += g.macs_per_tok as f64;
+            }
+            if g.act_act {
+                aa += g.macs_per_tok as f64;
+            }
+            w += g.weight_numel;
+        }
+        w += 4 * cfg.d_model + 2 * cfg.d_ff; // LN gains/biases + fc biases (approx)
+    }
+    // final LM head (tied embedding — no extra weights) still costs MACs
+    total += (cfg.vocab_size * cfg.d_model) as f64;
+    FlopProfile {
+        total_macs_per_tok: total,
+        attn_macs_per_tok: attn,
+        act_act_macs_per_tok: aa,
+        act_act_share_of_attn: if attn > 0.0 { aa / attn } else { 0.0 },
+        weight_numel: w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn eight_gemms() {
+        let cfg = ModelConfig::preset("tiny");
+        let g = layer_gemms(&cfg, 64);
+        assert_eq!(g.len(), 8);
+        assert_eq!(g.iter().filter(|s| s.act_act).count(), 2);
+    }
+
+    #[test]
+    fn act_act_share_grows_with_seq() {
+        // at long sequence lengths ④⑤ dominate — the reason the paper
+        // insists on quantising 8/8 GEMMs
+        let cfg = ModelConfig::preset("tiny");
+        let short = profile(&cfg, 32).act_act_share_of_attn;
+        let long = profile(&cfg, 2048).act_act_share_of_attn;
+        assert!(long > short);
+        assert!(long > 0.15, "long-seq share {long}");
+    }
+
+    #[test]
+    fn weight_count_scales_with_layers() {
+        let a = profile(&ModelConfig::preset("micro"), 64).weight_numel;
+        let b = profile(&ModelConfig::preset("small"), 64).weight_numel;
+        assert!(b > a);
+    }
+}

@@ -1,0 +1,66 @@
+//! Memory density (paper §3.2): reciprocal of the size of activation +
+//! weight data relative to float32. Computed from format bit widths
+//! (matches Table 3's Mem column) and, for whole models, from the actual
+//! GEMM operand inventory collected by [`crate::density::flops`].
+
+use crate::quant::config::QFormat;
+
+/// Memory density of a single format (Table 3 column).
+pub fn format_density(fmt: QFormat) -> f64 {
+    fmt.memory_density()
+}
+
+/// Weighted memory density over a set of (numel, format) tensors — the
+/// quantity the search objective `O_f = acc + α·mem` uses.
+pub fn model_memory_density(tensors: &[(usize, QFormat)]) -> f64 {
+    let fp32_bits: f64 = tensors.iter().map(|(n, _)| *n as f64 * 32.0).sum();
+    let q_bits: f64 = tensors
+        .iter()
+        .map(|(n, f)| *n as f64 * f.bits_per_element())
+        .sum();
+    if q_bits == 0.0 {
+        return 1.0;
+    }
+    fp32_bits / q_bits
+}
+
+/// Average effective bit width (the "4.3-bit OPT-2.7B" accounting in §4.4).
+pub fn average_bits(tensors: &[(usize, QFormat)]) -> f64 {
+    let numel: f64 = tensors.iter().map(|(n, _)| *n as f64).sum();
+    let q_bits: f64 = tensors
+        .iter()
+        .map(|(n, f)| *n as f64 * f.bits_per_element())
+        .sum();
+    if numel == 0.0 {
+        0.0
+    } else {
+        q_bits / numel
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::presets;
+
+    #[test]
+    fn uniform_model_density_equals_format_density() {
+        let fmt = presets::bfp_w(6);
+        let ts = vec![(1000, fmt), (2048, fmt)];
+        assert!((model_memory_density(&ts) - fmt.memory_density()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mixed_density_between_parts() {
+        let ts = vec![(1000, presets::bfp_w(4)), (1000, presets::bfp_w(8))];
+        let d = model_memory_density(&ts);
+        assert!(d < presets::bfp_w(4).memory_density());
+        assert!(d > presets::bfp_w(8).memory_density());
+    }
+
+    #[test]
+    fn average_bits_uniform() {
+        let ts = vec![(64, presets::bfp_w(4))];
+        assert!((average_bits(&ts) - 4.5).abs() < 1e-9); // 1+3+8/16
+    }
+}

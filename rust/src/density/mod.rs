@@ -1,0 +1,10 @@
+//! Hardware-efficiency metrics (paper §3.2): memory density, arithmetic
+//! density (LUT-area model substituting Vivado synthesis — DESIGN.md §3),
+//! and the FLOP/operand profiler feeding the mixed-precision search.
+
+pub mod arith;
+pub mod flops;
+pub mod memory;
+
+pub use arith::{calibrate, CostModel};
+pub use memory::{average_bits, format_density, model_memory_density};

@@ -1,0 +1,155 @@
+//! Outlier-stress ablation.
+//!
+//! Our trained-from-scratch micro-models do not develop the extreme
+//! activation outliers of OPT-6.7B (they emerge with scale), so plain
+//! per-tensor fixed-point does not collapse on them the way Table 3
+//! shows. This ablation *induces* the paper's phenomenon with an exact
+//! function-preserving transform — the inverse of SmoothQuant's scale
+//! migration: a few channels of each LayerNorm gain/bias are multiplied
+//! by `s` and the corresponding weight rows divided by `s`. FP32
+//! behaviour is bit-for-bit unchanged (up to rounding), but the
+//! activations entering GEMMs ①②③⑦ now carry genuine outlier channels of
+//! magnitude ~s× typical — exactly the "numerical scaling offsets" regime.
+//!
+//! Expected shape (matches paper Table 3): FP32 unchanged; per-tensor
+//! fixed-point collapses; MiniFloat survives; BFP stays nearly lossless
+//! because each outlier only poisons its own [1,16] block.
+
+use crate::coordinator::experiment::{default_steps, get_or_train, save_result};
+use crate::data::corpus::test_stream;
+use crate::data::lm_eval::perplexity_par;
+use crate::data::vocab::Vocab;
+use crate::model::params::Params;
+use crate::model::plan::QuantPlan;
+use crate::model::Model;
+use crate::quant::config::presets;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
+use crate::util::table::{fnum, Table};
+
+/// Inverse-SmoothQuant transform: amplify `n_chan` channels per LN by `s`.
+pub fn inject_outlier_channels(params: &Params, n_chan: usize, s: f32, seed: u64) -> Params {
+    let mut p = params.clone();
+    let d = p.cfg.d_model;
+    let mut rng = Pcg32::new(seed);
+    for l in p.layers.iter_mut() {
+        for _ in 0..n_chan {
+            // attention input channel
+            let j = rng.below(d);
+            l.ln1_g[j] *= s;
+            l.ln1_b[j] *= s;
+            for w in [&mut l.wq, &mut l.wk, &mut l.wv] {
+                for c in 0..d {
+                    w.data[j * d + c] /= s;
+                }
+            }
+            // MLP input channel
+            let j2 = rng.below(d);
+            let f = p.cfg.d_ff;
+            l.ln2_g[j2] *= s;
+            l.ln2_b[j2] *= s;
+            for c in 0..f {
+                l.w1.data[j2 * f + c] /= s;
+            }
+        }
+    }
+    p
+}
+
+pub fn run(args: &Args) {
+    let preset = args.get_or("model", "tiny");
+    let seq = args.usize_or("seq", 64);
+    let chunks = args.usize_or("chunks", 8);
+    let threads = args.usize_or("threads", 8);
+    let scale = args.f64_or("scale", 80.0) as f32;
+    let n_chan = args.usize_or("channels", 8);
+    let vocab = Vocab::build();
+    let test = test_stream(&vocab, seq * chunks + seq);
+    let base = get_or_train(&preset, default_steps(&preset), true);
+    let stressed = inject_outlier_channels(&base, n_chan, scale, 99);
+
+    let ppl = |p: &Params, plan: QuantPlan| {
+        perplexity_par(&Model::new(p.clone(), plan), &test, seq, chunks, threads).perplexity
+    };
+    let mut t = Table::new(
+        &format!(
+            "Outlier-stress ablation ({preset}, {n_chan} channels x{scale} per LN) — the scaling-offsets mechanism"
+        ),
+        &["Method", "clean ppl", "outlier-stressed ppl"],
+    );
+    let rows: Vec<(&str, QuantPlan)> = vec![
+        ("FP32", QuantPlan::fp32()),
+        ("Fixed-point W8A8", QuantPlan::uniform(presets::fixed8())),
+        ("MiniFloat W8A8", QuantPlan::uniform(presets::minifloat8())),
+        ("LLM.int8()", QuantPlan::llm_int8(8)),
+        ("BFP W8A8", QuantPlan::uniform(presets::bfp_w(8))),
+        ("BFP W6A6", QuantPlan::uniform(presets::bfp_w(6))),
+        ("BFP W4A4", QuantPlan::uniform(presets::bfp_w(4))),
+    ];
+    for (name, plan) in rows {
+        let clean = ppl(&base, plan.clone());
+        let stress = ppl(&stressed, plan.clone());
+        eprintln!("[ablation] {name}: clean {clean:.2} stressed {stress:.2}");
+        t.row(vec![name.to_string(), fnum(clean, 2), fnum(stress, 2)]);
+    }
+    save_result("ablation_outliers", &t, None);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn transform_preserves_fp32_function() {
+        let cfg = ModelConfig::preset("nano");
+        let p = Params::init(&cfg, 5);
+        let q = inject_outlier_channels(&p, 3, 16.0, 1);
+        let toks = [1usize, 9, 42, 7];
+        let a = Model::new(p, QuantPlan::fp32()).forward(&toks, None);
+        let b = Model::new(q, QuantPlan::fp32()).forward(&toks, None);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() < 2e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn transform_creates_outliers_that_break_fixed_point() {
+        // under induced scaling offsets, a per-element exponent format
+        // (MiniFloat) must beat the single per-tensor scale by a wide
+        // margin — the paper's core signature. (BFP's behaviour at this
+        // tiny d_model depends on how many blocks catch an outlier, so the
+        // block-format comparison lives in the driver, not this unit test.)
+        // brief training gives the residual stream real structure (a
+        // random-init model's logits are too degenerate to discriminate)
+        let cfg = ModelConfig::preset("nano");
+        let mut p = Params::init(&cfg, 5);
+        let vocab = crate::data::vocab::Vocab::build();
+        let stream = crate::data::corpus::train_stream(&vocab, 3000);
+        crate::train::train_lm(
+            &mut p,
+            &QuantPlan::fp32(),
+            &stream,
+            &crate::train::TrainConfig {
+                steps: 40,
+                seq_len: 32,
+                lr: 3e-3,
+                seed: 1,
+                log_every: 0,
+            },
+            |_, _| {},
+        );
+        let q = inject_outlier_channels(&p, 4, 64.0, 1);
+        let toks: Vec<usize> = (0..24).map(|i| (i * 19) % 512).collect();
+        let fp = Model::new(q.clone(), QuantPlan::fp32()).forward(&toks, None);
+        let fx = Model::new(q.clone(), QuantPlan::uniform(presets::fixed8())).forward(&toks, None);
+        let mf = Model::new(q, QuantPlan::uniform(presets::minifloat8()))
+            .forward(&toks, None);
+        let err_fx = crate::util::stats::mse(&fp.data, &fx.data);
+        let err_mf = crate::util::stats::mse(&fp.data, &mf.data);
+        assert!(
+            err_fx > err_mf * 2.0,
+            "fixed-point err {err_fx} vs minifloat err {err_mf}"
+        );
+    }
+}

@@ -1,0 +1,136 @@
+//! Variation-aware block size (paper §4.4 + Appendix A).
+//!
+//! The paper observes that weight variance is small and stable while
+//! activation variance is large and grows, and proposes *larger* weight
+//! blocks with *smaller* activation blocks to gain memory density at
+//! equal accuracy. This driver sweeps the weight and activation block
+//! sizes independently for W4A4 BFP and reports perplexity + memory
+//! density for each combination, plus the uniform diagonal.
+
+use crate::coordinator::experiment::{default_steps, get_or_train, save_result};
+use crate::data::corpus::test_stream;
+use crate::data::lm_eval::perplexity_par;
+use crate::data::vocab::Vocab;
+use crate::model::plan::QuantPlan;
+use crate::model::Model;
+use crate::quant::config::QFormat;
+use crate::search::objective::plan_memory_density;
+use crate::util::cli::Args;
+use crate::util::table::{fnum, Table};
+
+fn bfp_n(m_bits: u32, n: u32) -> QFormat {
+    QFormat::Bfp { e: 8, m: m_bits, n }
+}
+
+pub fn run(args: &Args) {
+    let preset = args.get_or("model", "tiny");
+    let bits = args.usize_or("bits", 4) as u32;
+    let m = bits - 1;
+    let seq = args.usize_or("seq", 64);
+    let chunks = args.usize_or("chunks", 6);
+    let threads = args.usize_or("threads", 8);
+    let blocks: Vec<u32> = args
+        .get_or("blocks", "4,16,64")
+        .split(',')
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let vocab = Vocab::build();
+    let test = test_stream(&vocab, seq * chunks + seq);
+    let params = get_or_train(&preset, default_steps(&preset), true);
+    let cfg = params.cfg.clone();
+
+    let mut t = Table::new(
+        &format!("Variation-aware block size — W{bits}A{bits} BFP on {preset} (ppl / mem density)"),
+        &["weight N \\ act N", "ppl", "mem", "note"],
+    );
+    let fp32 = {
+        let model = Model::new(params.clone(), QuantPlan::fp32());
+        perplexity_par(&model, &test, seq, chunks, threads).perplexity
+    };
+    t.row(vec!["fp32".into(), fnum(fp32, 3), "1.0x".into(), "reference".into()]);
+    let mut best: Option<(u32, u32, f64, f64)> = None;
+    for &wn in &blocks {
+        for &an in &blocks {
+            let plan = QuantPlan::wa(bfp_n(m, wn), bfp_n(m, an));
+            let model = Model::new(params.clone(), plan.clone());
+            let ppl = perplexity_par(&model, &test, seq, chunks, threads).perplexity;
+            let mem = plan_memory_density(&cfg, &plan, seq);
+            let note = if wn == an {
+                "uniform"
+            } else if wn > an {
+                "variation-aware (paper's direction)"
+            } else {
+                ""
+            };
+            eprintln!("[blocksize] W n={wn} A n={an}: ppl {ppl:.3} mem {mem:.2}x");
+            t.row(vec![
+                format!("w{wn} / a{an}"),
+                fnum(ppl, 3),
+                format!("{mem:.2}x"),
+                note.into(),
+            ]);
+            let better = match best {
+                None => true,
+                Some((_, _, bppl, bmem)) => {
+                    // prefer configs dominating on both axes, else best ppl
+                    ppl < bppl && mem >= bmem * 0.98
+                }
+            };
+            if better {
+                best = Some((wn, an, ppl, mem));
+            }
+        }
+    }
+    if let Some((wn, an, ppl, mem)) = best {
+        println!(
+            "best block config: weight N={wn}, act N={an} → ppl {ppl:.3} at {mem:.2}x \
+             (paper predicts large-weight/small-activation blocks win)"
+        );
+    }
+    save_result("blocksize", &t, None);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::fake_quant;
+    use crate::util::check::llmish_values;
+    use crate::util::rng::Pcg32;
+    use crate::Tensor;
+
+    #[test]
+    fn bigger_blocks_cheaper_but_noisier_on_outliers() {
+        let mut rng = Pcg32::new(1);
+        let x = Tensor::new(&[8, 256], llmish_values(&mut rng, 2048, 1.0, 0.02));
+        let err = |n: u32| {
+            let q = fake_quant(&x, bfp_n(3, n));
+            crate::util::stats::mse(&x.data, &q.data)
+        };
+        // memory density rises with N…
+        assert!(bfp_n(3, 64).memory_density() > bfp_n(3, 16).memory_density());
+        // …while error rises too on outlier-bearing data
+        assert!(err(64) >= err(16), "{} vs {}", err(64), err(16));
+        assert!(err(16) >= err(4) * 0.99);
+    }
+
+    #[test]
+    fn weights_tolerate_big_blocks_better_than_activations() {
+        // weights ~ N(0, 0.02) without outliers: enlarging the block
+        // barely hurts. activations with outliers: enlarging hurts a lot.
+        let mut rng = Pcg32::new(2);
+        let w = Tensor::randn(&[16, 256], 0.02, &mut rng);
+        let a = Tensor::new(&[16, 256], llmish_values(&mut rng, 4096, 1.0, 0.03));
+        let rel_growth = |t: &Tensor| {
+            let e = |n: u32| {
+                crate::util::stats::mse(&t.data, &fake_quant(t, bfp_n(3, n)).data)
+            };
+            e(64) / e(4).max(1e-18)
+        };
+        assert!(
+            rel_growth(&a) > rel_growth(&w) * 1.2,
+            "act growth {} vs weight growth {}",
+            rel_growth(&a),
+            rel_growth(&w)
+        );
+    }
+}

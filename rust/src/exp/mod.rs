@@ -1,0 +1,46 @@
+//! Experiment drivers — one per paper table/figure (DESIGN.md §6 index).
+//! Run with `bbq exp <id>`; each prints the paper-shaped table and writes
+//! results/<id>.{md,csv,json}.
+
+pub mod ablation;
+pub mod blocksize;
+pub mod figs;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table8;
+
+use crate::util::cli::Args;
+
+pub const EXPERIMENTS: [&str; 14] = [
+    "table1", "table3", "table4", "table5", "table6", "table8",
+    "fig1", "fig3", "fig4", "fig5", "fig7", "fig10", "ablation", "blocksize",
+];
+
+pub fn run(id: &str, args: &Args) -> bool {
+    match id {
+        "table1" => figs::table1(args),
+        "table3" => table3::run(args),
+        "table4" => table4::run(args),
+        "table5" | "table7" | "fig6" => table5::run(args),
+        "table6" => table6::run(args),
+        "table8" => table8::run(args),
+        "fig1" => figs::fig1(args, false),
+        "fig4" => figs::fig1(args, true),
+        "fig5" => figs::fig5(args),
+        "fig3" | "fig8" | "fig9" => figs::fig3(args),
+        "fig7" => figs::fig7(args),
+        "fig10" => figs::fig10(args),
+        "ablation" => ablation::run(args),
+        "blocksize" => blocksize::run(args),
+        "all" => {
+            for e in EXPERIMENTS {
+                eprintln!("=== running {e} ===");
+                run(e, args);
+            }
+        }
+        _ => return false,
+    }
+    true
+}

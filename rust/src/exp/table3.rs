@@ -1,0 +1,103 @@
+//! Table 3: zero-shot PTQ perplexity on the WikiText2-substitute, across
+//! the format sweep and the re-implemented baselines, with memory and
+//! arithmetic densities.
+
+use crate::baselines::{gptq, smoothquant};
+use crate::coordinator::experiment::{default_steps, get_or_train, save_result};
+use crate::data::corpus::{test_stream, train_stream};
+use crate::data::lm_eval::perplexity_par;
+use crate::data::vocab::Vocab;
+use crate::density::arith::calibrate;
+use crate::model::plan::QuantPlan;
+use crate::model::Model;
+use crate::quant::config::{presets, QFormat};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::{fnum, Table};
+
+pub fn run(args: &Args) {
+    let sizes: Vec<String> = args
+        .get_or("sizes", "micro,tiny,small,base")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let seq = args.usize_or("seq", 64);
+    let chunks = args.usize_or("chunks", 8);
+    let threads = args.usize_or("threads", 8);
+    let vocab = Vocab::build();
+    let test = test_stream(&vocab, seq * chunks + seq);
+    let cal: Vec<Vec<usize>> = train_stream(&vocab, 8 * 48)
+        .chunks(48)
+        .take(8)
+        .map(|c| c.to_vec())
+        .collect();
+    let cost = calibrate();
+
+    let mut header = vec!["Method".to_string(), "Config".to_string()];
+    header.extend(sizes.iter().cloned());
+    header.push("Mem↑".into());
+    header.push("Arith↑".into());
+    let mut table = Table::new(
+        "Table 3 — PTQ perplexity (synthetic WikiText substitute)",
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    // evaluate one (method name, config, model builder, mem, arith) row
+    let mut eval_row = |method: &str,
+                        config: &str,
+                        mem: String,
+                        arith: String,
+                        build: &dyn Fn(&crate::model::Params) -> Model| {
+        let mut row = vec![method.to_string(), config.to_string()];
+        for size in &sizes {
+            let params = get_or_train(size, default_steps(size), true);
+            let model = build(&params);
+            let ppl = perplexity_par(&model, &test, seq, chunks, threads).perplexity;
+            row.push(fnum(ppl, 2));
+            eprintln!("[table3] {method} {size}: ppl {ppl:.2}");
+        }
+        row.push(mem);
+        row.push(arith);
+        table.row(row);
+    };
+
+    let ad = |f: QFormat| format!("{:.1}x", cost.arithmetic_density(f));
+    let md = |f: QFormat| format!("{:.1}x", f.memory_density());
+
+    eval_row("FP32", "-", "1x".into(), "1x".into(), &|p| {
+        Model::new(p.clone(), QuantPlan::fp32())
+    });
+    eval_row("LLM.int8()", "W8A8", "2x".into(), format!("<{}", ad(presets::fixed8())), &|p| {
+        Model::new(p.clone(), QuantPlan::llm_int8(8))
+    });
+    eval_row("ZeroQuant", "W4A8", "6.4x".into(), format!("<{}", ad(presets::fixed8())), &|p| {
+        Model::new(
+            p.clone(),
+            QuantPlan::wa(presets::zeroquant_w(), presets::zeroquant_a()),
+        )
+    });
+    eval_row("GPTQ", "W4", "<1.6x".into(), "-".into(), &|p| {
+        gptq::build(p, &cal, 4, 0.01)
+    });
+    eval_row("SmoothQuant", "W8A8", format!("<{}", md(presets::fixed8())), format!("<{}", ad(presets::fixed8())), &|p| {
+        smoothquant::build(p, &cal, 0.5).0
+    });
+    eval_row("SmoothQuant-c", "W8A8", md(presets::fixed8()), ad(presets::fixed8()), &|p| {
+        smoothquant::build(p, &cal, 0.5).1
+    });
+    for (name, fmt) in presets::table3_formats() {
+        let (method, config) = name.rsplit_once(' ').map(|(a, b)| (a, b)).unwrap_or((name, ""));
+        eval_row(method, config, md(fmt), ad(fmt), &|p| {
+            Model::new(p.clone(), QuantPlan::uniform(fmt))
+        });
+    }
+
+    save_result(
+        "table3",
+        &table,
+        Some(Json::obj(vec![
+            ("seq", Json::Num(seq as f64)),
+            ("chunks", Json::Num(chunks as f64)),
+        ])),
+    );
+}

@@ -1,0 +1,117 @@
+//! Table 5 / Table 7 / Figure 6: zero-shot downstream accuracy across the
+//! model ladder for FP32, LLM.int8()/int4(), SmoothQuant-c, MiniFloat and
+//! the BFP family; the Figure 6 rendition plots mean accuracy vs scale.
+
+use crate::baselines::smoothquant;
+use crate::coordinator::experiment::{default_steps, get_or_train, save_result};
+use crate::data::corpus::train_stream;
+use crate::data::tasks::{evaluate, generate, Task};
+use crate::data::vocab::Vocab;
+use crate::model::plan::QuantPlan;
+use crate::model::Model;
+use crate::quant::config::presets;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::table::{ascii_plot, Table};
+
+pub fn methods() -> Vec<&'static str> {
+    vec![
+        "fp32",
+        "llm_int8",
+        "llm_int4",
+        "smoothquant_c",
+        "minifloat8",
+        "bfp4",
+        "bfp5",
+        "bfp6",
+        "bfp8",
+    ]
+}
+
+pub fn build_model(method: &str, params: &crate::model::Params, cal: &[Vec<usize>]) -> Model {
+    match method {
+        "fp32" => Model::new(params.clone(), QuantPlan::fp32()),
+        "llm_int8" => Model::new(params.clone(), QuantPlan::llm_int8(8)),
+        "llm_int4" => Model::new(params.clone(), QuantPlan::llm_int8(4)),
+        "smoothquant_c" => smoothquant::build(params, cal, 0.5).1,
+        "minifloat8" => Model::new(params.clone(), QuantPlan::uniform(presets::minifloat8())),
+        "bfp4" => Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(4))),
+        "bfp5" => Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(5))),
+        "bfp6" => Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(6))),
+        "bfp8" => Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(8))),
+        other => panic!("unknown method {other}"),
+    }
+}
+
+pub fn run(args: &Args) {
+    let sizes: Vec<String> = args
+        .get_or("sizes", "micro,tiny,small,base")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let n_examples = args.usize_or("examples", 60);
+    let threads = args.usize_or("threads", 8);
+    let vocab = Vocab::build();
+    let tasks = Task::zero_shot_suite();
+    let cal: Vec<Vec<usize>> = train_stream(&vocab, 8 * 48)
+        .chunks(48)
+        .take(8)
+        .map(|c| c.to_vec())
+        .collect();
+
+    // full per-task table (Table 7) + mean table (Table 5)
+    let mut header7 = vec!["Method".to_string(), "Model".to_string()];
+    header7.extend(tasks.iter().map(|t| t.name().to_string()));
+    header7.push("Mean".into());
+    let mut t7 = Table::new(
+        "Table 7 — per-task zero-shot accuracy",
+        &header7.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+    let mut header5 = vec!["Method".to_string()];
+    header5.extend(sizes.iter().cloned());
+    let mut t5 = Table::new(
+        "Table 5 — mean zero-shot accuracy (%)",
+        &header5.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    let mut fig6_series: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut results_json = Vec::new();
+    for method in methods() {
+        let mut means = Vec::new();
+        for size in &sizes {
+            let params = get_or_train(size, default_steps(size), true);
+            let model = build_model(method, &params, &cal);
+            let mut accs = Vec::new();
+            for &task in &tasks {
+                let exs = generate(task, &vocab, 1000, n_examples);
+                let r = evaluate(&model, task, &exs, threads);
+                accs.push(r.accuracy);
+            }
+            let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+            eprintln!("[table5] {method} {size}: mean {:.3}", mean);
+            let mut row = vec![method.to_string(), size.clone()];
+            row.extend(accs.iter().map(|a| format!("{:.1}%", a * 100.0)));
+            row.push(format!("{:.1}%", mean * 100.0));
+            t7.row(row);
+            means.push(mean);
+            results_json.push(Json::obj(vec![
+                ("method", Json::Str(method.to_string())),
+                ("size", Json::Str(size.clone())),
+                ("mean_acc", Json::Num(mean)),
+            ]));
+        }
+        let mut row5 = vec![method.to_string()];
+        row5.extend(means.iter().map(|m| format!("{:.1}%", m * 100.0)));
+        t5.row(row5);
+        fig6_series.push((method.to_string(), means));
+    }
+    save_result("table7", &t7, None);
+    save_result("table5", &t5, Some(Json::Arr(results_json)));
+    let plot = ascii_plot(
+        "Figure 6 — mean zero-shot accuracy vs model scale",
+        &fig6_series,
+        16,
+    );
+    let _ = crate::util::write_file(&crate::util::results_dir().join("fig6.md"), &plot);
+    println!("{plot}");
+}

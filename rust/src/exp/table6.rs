@@ -1,0 +1,45 @@
+//! Table 6: arithmetic density via the calibrated LUT-area model
+//! (Vivado substitute — DESIGN.md §3). Anchor rows are fitted; the BFP
+//! rows are *held-out predictions*, reported against the paper's values.
+
+use crate::coordinator::experiment::save_result;
+use crate::density::arith::{calibrate, paper_anchor_rows, paper_validation_rows};
+use crate::quant::config::QFormat;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn run(_args: &Args) {
+    let model = calibrate();
+    let mut t = Table::new(
+        "Table 6 — MAC area (LUT-equivalent) and arithmetic density",
+        &[
+            "Method", "Config", "Block", "Area (model)", "Area (paper)", "Arith density (model)",
+            "Arith density (paper)", "Row kind",
+        ],
+    );
+    let fp32_area = model.area(QFormat::Fp32);
+    let mut add = |fmt: QFormat, paper_area: f64, kind: &str| {
+        let area = model.area(fmt);
+        t.row(vec![
+            fmt.name(),
+            format!("W{0}A{0}", fmt.word_bits()),
+            format!("{}", fmt.block_size()),
+            format!("{:.1}", area),
+            format!("{:.1}", paper_area),
+            format!("{:.1}x", fp32_area / area),
+            format!("{:.1}x", 835.0 / paper_area),
+            kind.to_string(),
+        ]);
+    };
+    for (fmt, paper) in paper_anchor_rows() {
+        add(fmt, paper, "calibration anchor");
+    }
+    for (fmt, paper) in paper_validation_rows() {
+        add(fmt, paper, "held-out prediction");
+    }
+    save_result("table6", &t, None);
+    println!(
+        "model coefficients: c_mult={:.3} c_acc={:.3} c_shift={:.3} c_exp={:.3}",
+        model.c_mult, model.c_acc, model.c_shift, model.c_exp
+    );
+}

@@ -1,0 +1,105 @@
+//! Table 8: 4/5-bit LLMs via fine-tuning — *PTQ on fine-tuned FP32* vs
+//! *TAQ on downstream* across the four tasks zero-shot prompting cannot
+//! handle (SST2, QNLI, MRPC, COLA), tracked per epoch.
+
+use crate::coordinator::experiment::{default_steps, get_or_train, save_result};
+use crate::data::tasks::{evaluate, generate, Task};
+use crate::data::vocab::Vocab;
+use crate::model::plan::QuantPlan;
+use crate::model::Model;
+use crate::quant::config::presets;
+use crate::train::finetune_task;
+use crate::util::cli::Args;
+use crate::util::table::Table;
+
+pub fn run(args: &Args) {
+    let sizes: Vec<String> = args
+        .get_or("sizes", "micro,tiny")
+        .split(',')
+        .map(String::from)
+        .collect();
+    let epochs = args.usize_or("epochs", 3);
+    let bits = args.usize_or("bits", 5) as u32;
+    let n_train = args.usize_or("train-examples", 192);
+    let n_test = args.usize_or("test-examples", 64);
+    let lr = args.f64_or("lr", 4e-3) as f32;
+    let threads = args.usize_or("threads", 8);
+    let vocab = Vocab::build();
+    let fmt = presets::bfp_w(bits);
+
+    let mut header = vec![
+        "Task".to_string(),
+        "Style".to_string(),
+        "Config".to_string(),
+        "Size".to_string(),
+        "zero-shot".to_string(),
+    ];
+    for e in 0..epochs {
+        header.push(format!("epoch {e}"));
+    }
+    let mut t = Table::new(
+        &format!("Table 8 — PTQ-on-finetuned vs TAQ (W{bits}A{bits} BFP)"),
+        &header.iter().map(String::as_str).collect::<Vec<_>>(),
+    );
+
+    for task in Task::finetune_suite() {
+        let train_exs = generate(task, &vocab, 3000, n_train);
+        let test_exs = generate(task, &vocab, 4000, n_test);
+        for size in &sizes {
+            let base = get_or_train(size, default_steps(size), true);
+            let metric = |m: &Model| evaluate(m, task, &test_exs, threads).metric;
+            let zs = metric(&Model::new(base.clone(), QuantPlan::fp32()));
+
+            // --- FP32 reference fine-tuning ---
+            let mut p_fp = base.clone();
+            let mut fp_epochs = Vec::new();
+            for e in 0..epochs {
+                finetune_task(&mut p_fp, &QuantPlan::fp32(), &train_exs, 2, lr, 100 + e as u64);
+                fp_epochs.push(metric(&Model::new(p_fp.clone(), QuantPlan::fp32())));
+            }
+            // --- PTQ on fine-tuned FP32: quantise the FP32 checkpoints ---
+            let mut ptq_epochs = Vec::new();
+            {
+                let mut p = base.clone();
+                for e in 0..epochs {
+                    finetune_task(&mut p, &QuantPlan::fp32(), &train_exs, 2, lr, 100 + e as u64);
+                    ptq_epochs
+                        .push(metric(&Model::new(p.clone(), QuantPlan::uniform(fmt))));
+                }
+            }
+            // --- TAQ: fine-tune the quantised model through the STE ---
+            let mut taq_epochs = Vec::new();
+            {
+                let mut p = base.clone();
+                let plan = QuantPlan::uniform(fmt);
+                for e in 0..epochs {
+                    finetune_task(&mut p, &plan, &train_exs, 2, lr, 200 + e as u64);
+                    taq_epochs.push(metric(&Model::new(p.clone(), plan.clone())));
+                }
+            }
+            eprintln!(
+                "[table8] {} {size}: zs {zs:.3} fp32 {:?} ptq {:?} taq {:?}",
+                task.name(),
+                fp_epochs.last(),
+                ptq_epochs.last(),
+                taq_epochs.last()
+            );
+            let pct = |v: f64| format!("{:.1}%", v * 100.0);
+            let mut mkrow = |style: &str, cfgname: String, vals: &[f64]| {
+                let mut row = vec![
+                    task.name().to_string(),
+                    style.to_string(),
+                    cfgname,
+                    size.clone(),
+                    pct(zs),
+                ];
+                row.extend(vals.iter().map(|&v| pct(v)));
+                t.row(row);
+            };
+            mkrow("FP32", "W32A32".into(), &fp_epochs);
+            mkrow("PTQ on downstream", format!("W{bits}A{bits}"), &ptq_epochs);
+            mkrow("TAQ on downstream", format!("W{bits}A{bits}"), &taq_epochs);
+        }
+    }
+    save_result("table8", &t, None);
+}

@@ -1,0 +1,33 @@
+//! # bbq — Block-Based Quantisation for sub-8-bit LLM inference
+//!
+//! A Rust + JAX/Pallas reproduction of *"Revisiting Block-based
+//! Quantisation: What is Important for Sub-8-bit LLM Inference?"*
+//! (Zhang et al., EMNLP 2023).
+//!
+//! Layer map (see DESIGN.md):
+//! - [`quant`] / [`density`]: the paper's numeric formats and hardware
+//!   efficiency metrics (§3).
+//! - [`model`] / [`data`] / [`train`]: the LLM substrate the formats are
+//!   evaluated on (Algorithm 2, WikiText-style LM eval, downstream tasks,
+//!   fine-tuning for Table 8).
+//! - [`baselines`]: LLM.int8(), SmoothQuant(-c), GPTQ re-implementations.
+//! - [`search`]: the TPE mixed-precision search (§3.3, §4.4).
+//! - [`runtime`] / [`coordinator`]: PJRT execution of AOT-compiled JAX
+//!   artifacts and the batched serving/experiment orchestration.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod density;
+pub mod model;
+pub mod profile;
+pub mod quant;
+pub mod runtime;
+pub mod search;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub use quant::config::{GemmQuant, QFormat};
+pub use tensor::Tensor;

@@ -1,0 +1,290 @@
+//! `bbq` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   exp <id>         run a paper experiment (table1/3/4/5/6/8, fig1/3/4/5/7/10, all)
+//!   train            train a model on the synthetic corpus (rust-native)
+//!   train-pjrt       train via the AOT jax train-step artifact (PJRT)
+//!   eval-ppl         perplexity of a model under a format
+//!   eval-tasks       zero-shot downstream accuracy
+//!   quantize         quantise a demo tensor, show formats + densities
+//!   density          print memory/arithmetic density for every preset format
+//!   profile-variance Figure-1-style variance profile
+//!   search           mixed-precision TPE search
+//!   serve            batched-inference demo with latency/throughput metrics
+//!   artifacts        list AOT artifacts visible to the runtime
+//!
+//! Common options: --model <preset> --format <name> --seq N --threads N
+
+use bbq::coordinator::experiment::{default_steps, get_or_train};
+use bbq::coordinator::{run_batched, Request, ServerConfig};
+use bbq::data::corpus::test_stream;
+use bbq::data::lm_eval::perplexity_par;
+use bbq::data::tasks::{evaluate, generate, Task};
+use bbq::data::vocab::Vocab;
+use bbq::model::plan::QuantPlan;
+use bbq::model::Model;
+use bbq::quant::config::{presets, QFormat};
+use bbq::util::cli::Args;
+
+fn plan_from_args(args: &Args, n_layers: usize) -> QuantPlan {
+    let fmt_name = args.get_or("format", "fp32");
+    match fmt_name.as_str() {
+        "llm_int8" => QuantPlan::llm_int8(8),
+        "llm_int4" => QuantPlan::llm_int8(4),
+        name => {
+            let fmt = QFormat::parse(name)
+                .unwrap_or_else(|| panic!("unknown format '{name}' (try bfp_e8m5n16)"));
+            if args.has_flag("six-of-eight") {
+                QuantPlan::six_of_eight(fmt, n_layers)
+            } else {
+                QuantPlan::uniform(fmt)
+            }
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_str() {
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .map(String::as_str)
+                .unwrap_or("table3");
+            if !bbq::exp::run(id, &args) {
+                eprintln!(
+                    "unknown experiment '{id}'. available: {:?}",
+                    bbq::exp::EXPERIMENTS
+                );
+                std::process::exit(2);
+            }
+        }
+        "train" => {
+            let preset = args.get_or("model", "tiny");
+            let steps = args.usize_or("steps", default_steps(&preset));
+            let p = get_or_train(&preset, steps, args.has_flag("quiet"));
+            println!("trained/loaded {preset}: {} params", p.param_count());
+        }
+        "train-pjrt" => cmd_train_pjrt(&args),
+        "eval-ppl" => {
+            let preset = args.get_or("model", "tiny");
+            let seq = args.usize_or("seq", 64);
+            let chunks = args.usize_or("chunks", 8);
+            let threads = args.usize_or("threads", 8);
+            let params = get_or_train(&preset, default_steps(&preset), true);
+            let plan = plan_from_args(&args, params.cfg.n_layers);
+            let model = Model::new(params, plan);
+            let vocab = Vocab::build();
+            let test = test_stream(&vocab, seq * chunks + seq);
+            let r = perplexity_par(&model, &test, seq, chunks, threads);
+            println!(
+                "model={preset} format={} ppl={:.3} ({} tokens, {} chunks)",
+                args.get_or("format", "fp32"),
+                r.perplexity,
+                r.tokens,
+                r.chunks
+            );
+        }
+        "eval-tasks" => {
+            let preset = args.get_or("model", "tiny");
+            let n = args.usize_or("examples", 60);
+            let threads = args.usize_or("threads", 8);
+            let params = get_or_train(&preset, default_steps(&preset), true);
+            let plan = plan_from_args(&args, params.cfg.n_layers);
+            let model = Model::new(params, plan);
+            let vocab = Vocab::build();
+            let mut mean = 0.0;
+            let tasks = Task::zero_shot_suite();
+            for &task in &tasks {
+                let exs = generate(task, &vocab, 1000, n);
+                let r = evaluate(&model, task, &exs, threads);
+                println!("{:>10}: acc {:.1}%", task.name(), r.accuracy * 100.0);
+                mean += r.accuracy;
+            }
+            println!("{:>10}: {:.1}%", "mean", mean / tasks.len() as f64 * 100.0);
+        }
+        "quantize" => cmd_quantize(&args),
+        "density" => {
+            let cost = bbq::density::arith::calibrate();
+            println!("{:<18} {:>8} {:>8} {:>10}", "format", "bits/el", "mem", "arith");
+            let mut fmts = vec![QFormat::Fp32];
+            fmts.extend(presets::table3_formats().into_iter().map(|(_, f)| f));
+            fmts.push(presets::bfp_w(5));
+            for f in fmts {
+                println!(
+                    "{:<18} {:>8.2} {:>7.2}x {:>9.2}x",
+                    f.name(),
+                    f.bits_per_element(),
+                    f.memory_density(),
+                    cost.arithmetic_density(f)
+                );
+            }
+        }
+        "profile-variance" => {
+            let preset = args.get_or("model", "tiny");
+            let params = get_or_train(&preset, default_steps(&preset), true);
+            let prof = bbq::profile::profile_variance(
+                &params,
+                args.usize_or("samples", 16),
+                args.usize_or("seq", 64),
+            );
+            println!(
+                "{}",
+                prof.to_table(&format!("variance profile: {preset}")).render()
+            );
+        }
+        "search" => cmd_search(&args),
+        "serve" => cmd_serve(&args),
+        "artifacts" => {
+            let rt = bbq::runtime::Runtime::open(&bbq::util::artifacts_dir())
+                .expect("open artifacts dir");
+            for name in rt.artifact_names() {
+                let m = rt.meta(&name).unwrap();
+                println!("{name}: kind={} fmt={} seq={}", m.kind, m.fmt, m.seq);
+            }
+        }
+        "" | "help" | "--help" => {
+            println!("{HELP}");
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "bbq — block-based quantisation lab (EMNLP 2023 reproduction)
+usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|serve|artifacts> [--opts]
+see rust/src/main.rs header for the option list";
+
+fn cmd_quantize(args: &Args) {
+    use bbq::quant::fake_quant;
+    use bbq::util::rng::Pcg32;
+    let fmt_name = args.get_or("format", "bfp_e8m5n16");
+    let fmt = QFormat::parse(&fmt_name).expect("unknown format");
+    let mut rng = Pcg32::new(args.u64_or("seed", 1));
+    let t = bbq::Tensor::new(
+        &[2, 16],
+        bbq::util::check::llmish_values(&mut rng, 32, 1.0, 0.05),
+    );
+    let q = fake_quant(&t, fmt);
+    println!(
+        "format: {} ({:.2} bits/element, {:.2}x memory density)",
+        fmt.name(),
+        fmt.bits_per_element(),
+        fmt.memory_density()
+    );
+    for r in 0..2 {
+        println!("in : {:?}", &t.row(r)[..8]);
+        println!("out: {:?}", &q.row(r)[..8]);
+    }
+    println!("sqnr: {:.1} dB", bbq::util::stats::sqnr_db(&t.data, &q.data));
+}
+
+fn cmd_search(args: &Args) {
+    use bbq::search::objective::Objective;
+    use bbq::search::runner::{run_search, SearchConfig};
+    use bbq::search::space::SearchSpace;
+    let preset = args.get_or("model", "micro");
+    let params = get_or_train(&preset, default_steps(&preset), true);
+    let cfg = params.cfg.clone();
+    let vocab = Vocab::build();
+    let task = Task::parse(&args.get_or("task", "lambada")).expect("unknown task");
+    let exs = generate(task, &vocab, 555, args.usize_or("examples", 40));
+    let threads = args.usize_or("threads", 8);
+    let fp32_acc = evaluate(
+        &Model::new(params.clone(), QuantPlan::fp32()),
+        task,
+        &exs,
+        threads,
+    )
+    .accuracy;
+    let space = SearchSpace::bfp_bits(&cfg, &[3, 4, 5, 6, 8]);
+    let sc = SearchConfig {
+        trials: args.usize_or("trials", 40),
+        threads,
+        seed: args.u64_or("seed", 7),
+        objective: Objective::software(args.f64_or("alpha", 0.02)),
+        ..Default::default()
+    };
+    let res = run_search(&params, space, task, &exs, fp32_acc, &sc);
+    let b = res.best.as_ref().expect("no trials");
+    println!(
+        "fp32 acc {:.3}; best searched: acc {:.3} mem {:.2}x obj {:.3} ({} trials)",
+        fp32_acc,
+        b.accuracy,
+        b.mem_density,
+        b.objective,
+        res.history.len()
+    );
+    for (name, bits) in res.bitwidth_profile().iter().take(16) {
+        println!("  {name:<20} {bits:.2} bits");
+    }
+}
+
+fn cmd_serve(args: &Args) {
+    let preset = args.get_or("model", "tiny");
+    let params = get_or_train(&preset, default_steps(&preset), true);
+    let plan = plan_from_args(args, params.cfg.n_layers);
+    let model = Model::new(params, plan);
+    let vocab = Vocab::build();
+    let n_req = args.usize_or("requests", 32);
+    let new_toks = args.usize_or("new-tokens", 16);
+    let reqs: Vec<Request> = (0..n_req)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: vocab.encode("the cat chased the"),
+            max_new_tokens: new_toks,
+            temperature: 0.0,
+        })
+        .collect();
+    let cfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        workers: args.usize_or("workers", 8),
+        ..Default::default()
+    };
+    let (resps, metrics) = run_batched(&model, reqs, &cfg);
+    println!("{}", metrics.summary());
+    if let Some(r) = resps.first() {
+        println!("sample completion: {}", vocab.decode(&r.tokens));
+    }
+}
+
+fn cmd_train_pjrt(args: &Args) {
+    use bbq::runtime::{Runtime, TrainStepExec};
+    let artifact = args.get_or("artifact", "train_step_golden");
+    let steps = args.usize_or("steps", 50);
+    let lr = args.f64_or("lr", 0.5) as f32;
+    let mut rt = Runtime::open(&bbq::util::artifacts_dir()).expect("open artifacts");
+    let meta = rt.meta(&artifact).expect("artifact not in manifest").clone();
+    let exec = TrainStepExec::load(&mut rt, &artifact).expect("compile artifact");
+    // golden-config params; tokens from the synthetic corpus mod vocab
+    let cfg = bbq::model::config::ModelConfig {
+        name: "golden".into(),
+        n_layers: 2,
+        d_model: 32,
+        n_heads: 2,
+        d_ff: 64,
+        vocab_size: 64,
+        max_seq: 32,
+        pos: bbq::model::PosEncoding::Learned,
+        ln_eps: 1e-5,
+    };
+    let mut params = bbq::model::Params::init(&cfg, 7);
+    let vocab = Vocab::build();
+    let stream: Vec<usize> = test_stream(&vocab, steps * meta.seq + meta.seq)
+        .into_iter()
+        .map(|t| t % cfg.vocab_size)
+        .collect();
+    println!("training via PJRT artifact '{artifact}' (seq {})", meta.seq);
+    for step in 0..steps {
+        let off = step * meta.seq;
+        let toks = &stream[off..off + meta.seq];
+        let tgts = &stream[off + 1..off + meta.seq + 1];
+        let loss = exec.step(toks, tgts, lr, &mut params).expect("train step");
+        if step % 10 == 0 || step + 1 == steps {
+            println!("step {step:>4}: loss {loss:.4}");
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Model configurations — the OPT-style scaling ladder standing in for
+//! OPT-125M…6.7B (DESIGN.md §3), plus a RoPE family standing in for
+//! LLaMA/Vicuna/Alpaca (Table 4, Figure 4).
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PosEncoding {
+    /// Learned absolute position embeddings (OPT style).
+    Learned,
+    /// Rotary position embeddings (LLaMA style).
+    Rope,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab_size: usize,
+    pub max_seq: usize,
+    pub pos: PosEncoding,
+    pub ln_eps: f32,
+}
+
+impl ModelConfig {
+    /// The scaling ladder. Sizes chosen so the paper's trends (variance
+    /// growth with depth, quantisation tolerance vs scale) are measurable
+    /// on CPU: micro≈0.2M, tiny≈0.9M, small≈2.8M, base≈6.4M params.
+    pub fn preset(name: &str) -> ModelConfig {
+        let (n_layers, d_model, n_heads, d_ff) = match name {
+            "nano" => (2, 48, 2, 192),
+            "micro" => (2, 64, 2, 256),
+            "tiny" => (4, 128, 4, 512),
+            "small" => (6, 192, 6, 768),
+            "base" => (8, 256, 8, 1024),
+            "rope-tiny" => (4, 128, 4, 512),
+            "rope-small" => (6, 192, 6, 768),
+            other => panic!("unknown model preset '{other}'"),
+        };
+        let pos = if name.starts_with("rope") {
+            PosEncoding::Rope
+        } else {
+            PosEncoding::Learned
+        };
+        ModelConfig {
+            name: name.to_string(),
+            n_layers,
+            d_model,
+            n_heads,
+            d_ff,
+            vocab_size: 512,
+            max_seq: 256,
+            pos,
+            ln_eps: 1e-5,
+        }
+    }
+
+    /// The OPT-family ladder used in Table 3/5 style sweeps.
+    pub fn ladder() -> Vec<&'static str> {
+        vec!["micro", "tiny", "small", "base"]
+    }
+
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        let d = self.d_model;
+        let f = self.d_ff;
+        let per_layer = 4 * d * d + 4 * d          // attn weights + biases
+            + 2 * d * f + f + d                    // mlp weights + biases
+            + 4 * d; // two LayerNorms
+        let emb = self.vocab_size * d
+            + if self.pos == PosEncoding::Learned {
+                self.max_seq * d
+            } else {
+                0
+            };
+        emb + self.n_layers * per_layer + 2 * d // final LN
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("d_model", Json::Num(self.d_model as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("d_ff", Json::Num(self.d_ff as f64)),
+            ("vocab_size", Json::Num(self.vocab_size as f64)),
+            ("max_seq", Json::Num(self.max_seq as f64)),
+            (
+                "pos",
+                Json::Str(
+                    match self.pos {
+                        PosEncoding::Learned => "learned",
+                        PosEncoding::Rope => "rope",
+                    }
+                    .to_string(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ModelConfig> {
+        Some(ModelConfig {
+            name: j.get("name")?.as_str()?.to_string(),
+            n_layers: j.get("n_layers")?.as_f64()? as usize,
+            d_model: j.get("d_model")?.as_f64()? as usize,
+            n_heads: j.get("n_heads")?.as_f64()? as usize,
+            d_ff: j.get("d_ff")?.as_f64()? as usize,
+            vocab_size: j.get("vocab_size")?.as_f64()? as usize,
+            max_seq: j.get("max_seq")?.as_f64()? as usize,
+            pos: match j.get("pos")?.as_str()? {
+                "rope" => PosEncoding::Rope,
+                _ => PosEncoding::Learned,
+            },
+            ln_eps: 1e-5,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_grows() {
+        let counts: Vec<usize> = ModelConfig::ladder()
+            .iter()
+            .map(|n| ModelConfig::preset(n).param_count())
+            .collect();
+        for w in counts.windows(2) {
+            assert!(w[1] > w[0], "{counts:?}");
+        }
+        assert!(counts[0] > 50_000);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ModelConfig::preset("tiny");
+        let j = c.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(back.d_model, c.d_model);
+        assert_eq!(back.pos, c.pos);
+    }
+
+    #[test]
+    fn rope_preset() {
+        assert_eq!(ModelConfig::preset("rope-tiny").pos, PosEncoding::Rope);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_preset_panics() {
+        ModelConfig::preset("opt-6.7b");
+    }
+}

@@ -1,0 +1,15 @@
+//! OPT-style decoder substrate: configuration ladder, parameters,
+//! quantisation plans, full-sequence forward (Algorithm 2's eight GEMMs),
+//! RoPE variant, and KV-cache incremental decoding.
+
+pub mod config;
+pub mod kv_cache;
+pub mod params;
+pub mod plan;
+pub mod rope;
+pub mod transformer;
+
+pub use config::{ModelConfig, PosEncoding};
+pub use params::Params;
+pub use plan::{QuantPlan, SiteId, GEMM_NAMES};
+pub use transformer::{cross_entropy, ActStats, Model};

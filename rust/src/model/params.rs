@@ -1,0 +1,254 @@
+//! Parameter store: initialisation, flat named access (for the optimizer
+//! and the PJRT train-step bridge), and a simple binary checkpoint format.
+
+use super::config::{ModelConfig, PosEncoding};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+use std::io::{Read, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub bq: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub w1: Tensor,
+    pub w2: Tensor,
+    pub b1: Vec<f32>,
+    pub b2: Vec<f32>,
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub cfg: ModelConfig,
+    pub tok_emb: Tensor,
+    /// empty for RoPE models
+    pub pos_emb: Tensor,
+    pub layers: Vec<LayerParams>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+}
+
+impl Params {
+    /// GPT-2-style init: N(0, 0.02), residual projections scaled by depth.
+    pub fn init(cfg: &ModelConfig, seed: u64) -> Params {
+        let rng = Pcg32::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let sigma = 0.02f32;
+        let resid_sigma = sigma / (2.0 * cfg.n_layers as f32).sqrt();
+        let layers = (0..cfg.n_layers)
+            .map(|li| {
+                let mut r = rng.split(1000 + li as u64);
+                LayerParams {
+                    wq: Tensor::randn(&[d, d], sigma, &mut r),
+                    wk: Tensor::randn(&[d, d], sigma, &mut r),
+                    wv: Tensor::randn(&[d, d], sigma, &mut r),
+                    wo: Tensor::randn(&[d, d], resid_sigma, &mut r),
+                    bq: vec![0.0; d],
+                    bk: vec![0.0; d],
+                    bv: vec![0.0; d],
+                    bo: vec![0.0; d],
+                    w1: Tensor::randn(&[d, f], sigma, &mut r),
+                    w2: Tensor::randn(&[f, d], resid_sigma, &mut r),
+                    b1: vec![0.0; f],
+                    b2: vec![0.0; d],
+                    ln1_g: vec![1.0; d],
+                    ln1_b: vec![0.0; d],
+                    ln2_g: vec![1.0; d],
+                    ln2_b: vec![0.0; d],
+                }
+            })
+            .collect();
+        Params {
+            cfg: cfg.clone(),
+            tok_emb: Tensor::randn(&[cfg.vocab_size, d], sigma, &mut rng.split(1)),
+            pos_emb: if cfg.pos == PosEncoding::Learned {
+                Tensor::randn(&[cfg.max_seq, d], sigma, &mut rng.split(2))
+            } else {
+                Tensor::zeros(&[0, d])
+            },
+            layers,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.flat_views().iter().map(|(_, v)| v.len()).sum()
+    }
+
+    /// Named views over every parameter buffer, in a fixed order shared
+    /// with the python model (python/compile/model.py PARAM_ORDER).
+    pub fn flat_views(&self) -> Vec<(String, &[f32])> {
+        let mut out: Vec<(String, &[f32])> = vec![
+            ("tok_emb".into(), &self.tok_emb.data[..]),
+            ("pos_emb".into(), &self.pos_emb.data[..]),
+        ];
+        for (i, l) in self.layers.iter().enumerate() {
+            let p = |n: &str| format!("layer{i}.{n}");
+            out.push((p("ln1_g"), &l.ln1_g));
+            out.push((p("ln1_b"), &l.ln1_b));
+            out.push((p("wq"), &l.wq.data));
+            out.push((p("bq"), &l.bq));
+            out.push((p("wk"), &l.wk.data));
+            out.push((p("bk"), &l.bk));
+            out.push((p("wv"), &l.wv.data));
+            out.push((p("bv"), &l.bv));
+            out.push((p("wo"), &l.wo.data));
+            out.push((p("bo"), &l.bo));
+            out.push((p("ln2_g"), &l.ln2_g));
+            out.push((p("ln2_b"), &l.ln2_b));
+            out.push((p("w1"), &l.w1.data));
+            out.push((p("b1"), &l.b1));
+            out.push((p("w2"), &l.w2.data));
+            out.push((p("b2"), &l.b2));
+        }
+        out.push(("lnf_g".into(), &self.lnf_g));
+        out.push(("lnf_b".into(), &self.lnf_b));
+        out
+    }
+
+    /// Mutable counterpart of [`flat_views`] (same order).
+    pub fn flat_views_mut(&mut self) -> Vec<(String, &mut [f32])> {
+        let mut out: Vec<(String, &mut [f32])> = Vec::new();
+        out.push(("tok_emb".into(), &mut self.tok_emb.data[..]));
+        out.push(("pos_emb".into(), &mut self.pos_emb.data[..]));
+        for (i, l) in self.layers.iter_mut().enumerate() {
+            let p = |n: &str| format!("layer{i}.{n}");
+            out.push((p("ln1_g"), &mut l.ln1_g[..]));
+            out.push((p("ln1_b"), &mut l.ln1_b[..]));
+            out.push((p("wq"), &mut l.wq.data[..]));
+            out.push((p("bq"), &mut l.bq[..]));
+            out.push((p("wk"), &mut l.wk.data[..]));
+            out.push((p("bk"), &mut l.bk[..]));
+            out.push((p("wv"), &mut l.wv.data[..]));
+            out.push((p("bv"), &mut l.bv[..]));
+            out.push((p("wo"), &mut l.wo.data[..]));
+            out.push((p("bo"), &mut l.bo[..]));
+            out.push((p("ln2_g"), &mut l.ln2_g[..]));
+            out.push((p("ln2_b"), &mut l.ln2_b[..]));
+            out.push((p("w1"), &mut l.w1.data[..]));
+            out.push((p("b1"), &mut l.b1[..]));
+            out.push((p("w2"), &mut l.w2.data[..]));
+            out.push((p("b2"), &mut l.b2[..]));
+        }
+        out.push(("lnf_g".into(), &mut self.lnf_g[..]));
+        out.push(("lnf_b".into(), &mut self.lnf_b[..]));
+        out
+    }
+
+    /// Save as a simple binary checkpoint: magic, config-json, then each
+    /// buffer as little-endian f32 in flat order.
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(b"BBQW0001")?;
+        let cfg = self.cfg.to_json().to_string();
+        f.write_all(&(cfg.len() as u64).to_le_bytes())?;
+        f.write_all(cfg.as_bytes())?;
+        for (_, v) in self.flat_views() {
+            f.write_all(&(v.len() as u64).to_le_bytes())?;
+            for &x in v {
+                f.write_all(&x.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Params> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != b"BBQW0001" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad checkpoint magic",
+            ));
+        }
+        let mut len8 = [0u8; 8];
+        f.read_exact(&mut len8)?;
+        let cfg_len = u64::from_le_bytes(len8) as usize;
+        let mut cfg_buf = vec![0u8; cfg_len];
+        f.read_exact(&mut cfg_buf)?;
+        let cfg_json = crate::util::json::Json::parse(
+            std::str::from_utf8(&cfg_buf)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?,
+        )
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let cfg = ModelConfig::from_json(&cfg_json).ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "bad config json")
+        })?;
+        let mut params = Params::init(&cfg, 0);
+        for (name, v) in params.flat_views_mut() {
+            f.read_exact(&mut len8)?;
+            let n = u64::from_le_bytes(len8) as usize;
+            if n != v.len() {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("buffer '{name}' length {n} != expected {}", v.len()),
+                ));
+            }
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            for (i, x) in v.iter_mut().enumerate() {
+                *x = f32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+            }
+        }
+        Ok(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_matches_config_count() {
+        let cfg = ModelConfig::preset("micro");
+        let p = Params::init(&cfg, 1);
+        assert_eq!(p.param_count(), cfg.param_count());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::preset("nano");
+        let p = Params::init(&cfg, 7);
+        let dir = std::env::temp_dir().join("bbq_test_ckpt");
+        let path = dir.join("nano.bbqw");
+        p.save(&path).unwrap();
+        let q = Params::load(&path).unwrap();
+        assert_eq!(p.tok_emb.data, q.tok_emb.data);
+        assert_eq!(p.layers[1].w2.data, q.layers[1].w2.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("bbq_test_badckpt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bbqw");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Params::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn deterministic_init() {
+        let cfg = ModelConfig::preset("nano");
+        let a = Params::init(&cfg, 3);
+        let b = Params::init(&cfg, 3);
+        assert_eq!(a.layers[0].wq.data, b.layers[0].wq.data);
+    }
+}

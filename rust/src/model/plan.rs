@@ -1,0 +1,139 @@
+//! Quantisation plans: which format each GEMM operand uses.
+//!
+//! A plan maps every GEMM site (layer × ①..⑧ × {weight, activation}) to a
+//! format. Uniform plans (Table 3/5) use one format everywhere; mixed-
+//! precision plans (§4.4, Fig. 3) assign per-tensor formats found by the
+//! TPE search.
+
+use crate::quant::config::{GemmQuant, QFormat};
+use std::collections::HashMap;
+
+/// How GEMMs execute. `FakeQuant` is the paper's evaluation semantics;
+/// `LlmInt8` routes the six weight GEMMs through the runtime outlier
+/// decomposition of Dettmers et al. (④⑤ stay FP16/FP32, as released).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum GemmMode {
+    FakeQuant,
+    LlmInt8 { threshold: f32, bits: u32 },
+}
+
+/// A GEMM site: (layer index, GEMM index ①..⑧).
+pub type SiteId = (usize, u8);
+
+pub const GEMM_NAMES: [&str; 8] = [
+    "q_proj", "k_proj", "v_proj", "qk_t", "att_v", "o_proj", "fc1", "fc2",
+];
+
+#[derive(Clone, Debug)]
+pub struct QuantPlan {
+    pub default: GemmQuant,
+    pub per_site: HashMap<SiteId, GemmQuant>,
+    pub mode: GemmMode,
+}
+
+impl QuantPlan {
+    pub fn fp32() -> Self {
+        QuantPlan {
+            default: GemmQuant::fp32(),
+            per_site: HashMap::new(),
+            mode: GemmMode::FakeQuant,
+        }
+    }
+
+    /// LLM.int8()/int4() plan: fake-quant disabled, runtime outlier
+    /// decomposition on the six weight GEMMs.
+    pub fn llm_int8(bits: u32) -> Self {
+        QuantPlan {
+            default: GemmQuant::fp32(),
+            per_site: HashMap::new(),
+            mode: GemmMode::LlmInt8 {
+                threshold: crate::baselines::llm_int8::DEFAULT_THRESHOLD,
+                bits,
+            },
+        }
+    }
+
+    /// Uniform WxAx plan (all eight GEMMs — "8/8" in Table 1).
+    pub fn uniform(fmt: QFormat) -> Self {
+        QuantPlan {
+            default: GemmQuant::uniform(fmt),
+            per_site: HashMap::new(),
+            mode: GemmMode::FakeQuant,
+        }
+    }
+
+    /// Uniform with distinct weight/activation formats (e.g. W4A8).
+    pub fn wa(weight: QFormat, act: QFormat) -> Self {
+        QuantPlan {
+            default: GemmQuant { weight, act },
+            per_site: HashMap::new(),
+            mode: GemmMode::FakeQuant,
+        }
+    }
+
+    /// Leave ④⑤ (the activation-activation GEMMs) in FP32 — the "6/8"
+    /// behaviour of LLM.int8()/GPTQ/SmoothQuant in Table 1.
+    pub fn six_of_eight(fmt: QFormat, n_layers: usize) -> Self {
+        let mut plan = QuantPlan::uniform(fmt);
+        for layer in 0..n_layers {
+            plan.per_site.insert((layer, 4), GemmQuant::fp32());
+            plan.per_site.insert((layer, 5), GemmQuant::fp32());
+        }
+        plan
+    }
+
+    #[inline]
+    pub fn site(&self, layer: usize, gemm: u8) -> GemmQuant {
+        *self.per_site.get(&(layer, gemm)).unwrap_or(&self.default)
+    }
+
+    pub fn set(&mut self, layer: usize, gemm: u8, q: GemmQuant) {
+        self.per_site.insert((layer, gemm), q);
+    }
+
+    /// Count of quantised GEMMs out of 8 per layer (Table 1 column).
+    pub fn quantised_gemms(&self, n_layers: usize) -> (usize, usize) {
+        let mut q = 0;
+        let total = 8;
+        for g in 1..=8u8 {
+            let all_q = (0..n_layers).all(|l| {
+                let s = self.site(l, g);
+                s.weight != QFormat::Fp32 || s.act != QFormat::Fp32
+            });
+            if all_q {
+                q += 1;
+            }
+        }
+        (q, total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::presets;
+
+    #[test]
+    fn uniform_covers_all_sites() {
+        let p = QuantPlan::uniform(presets::bfp_w(6));
+        assert_eq!(p.site(3, 7).act, presets::bfp_w(6));
+        assert_eq!(p.quantised_gemms(4), (8, 8));
+    }
+
+    #[test]
+    fn six_of_eight_leaves_attention_fp32() {
+        let p = QuantPlan::six_of_eight(presets::fixed8(), 4);
+        assert_eq!(p.site(2, 4), GemmQuant::fp32());
+        assert_eq!(p.site(2, 5), GemmQuant::fp32());
+        assert_ne!(p.site(2, 1), GemmQuant::fp32());
+        assert_eq!(p.quantised_gemms(4), (6, 8));
+    }
+
+    #[test]
+    fn per_site_override() {
+        let mut p = QuantPlan::uniform(presets::bfp_w(4));
+        p.set(1, 2, GemmQuant::uniform(presets::bfp_w(8)));
+        assert_eq!(p.site(1, 2).act, presets::bfp_w(8));
+        assert_eq!(p.site(0, 2).act, presets::bfp_w(4));
+    }
+}

@@ -1,0 +1,73 @@
+//! Rotary position embeddings (Su et al. 2021) — the LLaMA-family variant
+//! used for Table 4 / Figure 4. The paper observes RoPE keeps Q'/K'
+//! variance high from the very first layer, which our profiler reproduces.
+
+use crate::tensor::Tensor;
+
+/// Apply RoPE to a [s, d] tensor of h heads (rotates pairs within each
+/// head's dimensions). `pos0` is the absolute position of row 0.
+pub fn apply_rope(x: &Tensor, n_heads: usize, pos0: usize) -> Tensor {
+    let (s, d) = x.dims2();
+    let hd = d / n_heads;
+    assert_eq!(hd % 2, 0, "head_dim must be even for RoPE");
+    let mut out = x.clone();
+    let half = hd / 2;
+    for i in 0..s {
+        let pos = (pos0 + i) as f32;
+        let row = out.row_mut(i);
+        for h in 0..n_heads {
+            let base = h * hd;
+            for j in 0..half {
+                let theta = pos * (10000f32).powf(-2.0 * j as f32 / hd as f32);
+                let (sin, cos) = theta.sin_cos();
+                let a = row[base + j];
+                let b = row[base + half + j];
+                row[base + j] = a * cos - b * sin;
+                row[base + half + j] = a * sin + b * cos;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut rng = Pcg32::new(1);
+        let x = Tensor::randn(&[1, 16], 1.0, &mut rng);
+        let y = apply_rope(&x, 2, 0);
+        assert_eq!(x.data, y.data);
+    }
+
+    #[test]
+    fn norm_preserved() {
+        // rotation preserves the L2 norm of each pair
+        let mut rng = Pcg32::new(2);
+        let x = Tensor::randn(&[4, 32], 1.0, &mut rng);
+        let y = apply_rope(&x, 4, 3);
+        for i in 0..4 {
+            let nx: f32 = x.row(i).iter().map(|v| v * v).sum();
+            let ny: f32 = y.row(i).iter().map(|v| v * v).sum();
+            assert!((nx - ny).abs() / nx < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relative_property() {
+        // dot(rope(q, m), rope(k, n)) depends only on m - n: shifting both
+        // positions by the same offset keeps the dot product.
+        let mut rng = Pcg32::new(3);
+        let q = Tensor::randn(&[1, 8], 1.0, &mut rng);
+        let k = Tensor::randn(&[1, 8], 1.0, &mut rng);
+        let dot = |a: &Tensor, b: &Tensor| -> f32 {
+            a.data.iter().zip(&b.data).map(|(x, y)| x * y).sum()
+        };
+        let d1 = dot(&apply_rope(&q, 1, 5), &apply_rope(&k, 1, 2));
+        let d2 = dot(&apply_rope(&q, 1, 15), &apply_rope(&k, 1, 12));
+        assert!((d1 - d2).abs() < 1e-3, "{d1} vs {d2}");
+    }
+}

@@ -1,0 +1,443 @@
+//! OPT-style decoder forward pass with all eight GEMMs quantisable
+//! (Algorithm 2 of the paper). Pre-LN residual blocks, multi-head causal
+//! attention, GELU MLP, tied-embedding LM head (kept FP32, as the paper
+//! quantises the per-layer GEMMs).
+
+use super::config::{ModelConfig, PosEncoding};
+use super::params::Params;
+use super::plan::{GemmMode, QuantPlan};
+use super::rope::apply_rope;
+use crate::quant::config::QFormat;
+use crate::quant::{fake_quant, fake_quant_in_place};
+use crate::tensor::matmul::matmul_bt;
+use crate::tensor::Tensor;
+use crate::util::stats::Welford;
+
+/// Activation/weight statistics collector (Figure 1/4/5).
+#[derive(Clone, Debug, Default)]
+pub struct ActStats {
+    /// (tensor name, layer) → online variance
+    pub acc: std::collections::BTreeMap<(String, usize), Welford>,
+    /// (tensor name, layer) → per-channel |x| max (SmoothQuant calibration)
+    pub chan_absmax: std::collections::BTreeMap<(String, usize), Vec<f32>>,
+}
+
+impl ActStats {
+    pub fn record(&mut self, name: &str, layer: usize, data: &[f32]) {
+        self.acc
+            .entry((name.to_string(), layer))
+            .or_default()
+            .push_slice(data);
+    }
+
+    /// Per-layer variance series for one tensor name.
+    pub fn series(&self, name: &str, n_layers: usize) -> Vec<f64> {
+        (0..n_layers)
+            .map(|l| {
+                self.acc
+                    .get(&(name.to_string(), l))
+                    .map(|w| w.variance())
+                    .unwrap_or(f64::NAN)
+            })
+            .collect()
+    }
+
+    /// Track per-channel absmax of a [rows, cols] tensor.
+    pub fn record_channels(&mut self, name: &str, layer: usize, t: &Tensor) {
+        let cols = *t.shape.last().unwrap();
+        let e = self
+            .chan_absmax
+            .entry((name.to_string(), layer))
+            .or_insert_with(|| vec![0.0; cols]);
+        for row in t.data.chunks(cols) {
+            for (m, &x) in e.iter_mut().zip(row) {
+                let a = x.abs();
+                if a > *m {
+                    *m = a;
+                }
+            }
+        }
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.acc.keys().map(|(n, _)| n.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// Weights pre-transposed and pre-quantised for a fixed plan — the serving
+/// hot path never re-quantises weights.
+pub struct PreparedLayer {
+    pub wq_t: Tensor,
+    pub wk_t: Tensor,
+    pub wv_t: Tensor,
+    pub wo_t: Tensor,
+    pub w1_t: Tensor,
+    pub w2_t: Tensor,
+}
+
+pub struct Model {
+    pub params: Params,
+    pub plan: QuantPlan,
+    prepared: Vec<PreparedLayer>,
+}
+
+fn prep_weight(w: &Tensor, fmt: QFormat) -> Tensor {
+    // transpose to [out, in] so blocks run along the contraction dim, then
+    // fake-quantise rows
+    let wt = w.t();
+    if fmt == QFormat::Fp32 {
+        wt
+    } else {
+        fake_quant(&wt, fmt)
+    }
+}
+
+impl Model {
+    fn prepare(params: &Params, plan: &QuantPlan) -> Vec<PreparedLayer> {
+        params
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, l)| PreparedLayer {
+                wq_t: prep_weight(&l.wq, plan.site(li, 1).weight),
+                wk_t: prep_weight(&l.wk, plan.site(li, 2).weight),
+                wv_t: prep_weight(&l.wv, plan.site(li, 3).weight),
+                wo_t: prep_weight(&l.wo, plan.site(li, 6).weight),
+                w1_t: prep_weight(&l.w1, plan.site(li, 7).weight),
+                w2_t: prep_weight(&l.w2, plan.site(li, 8).weight),
+            })
+            .collect()
+    }
+
+    pub fn new(params: Params, plan: QuantPlan) -> Model {
+        let prepared = Self::prepare(&params, &plan);
+        Model {
+            params,
+            plan,
+            prepared,
+        }
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.params.cfg
+    }
+
+    /// Prepared (transposed + weight-quantised) tensors for one layer.
+    pub fn prepared(&self, li: usize) -> &PreparedLayer {
+        &self.prepared[li]
+    }
+
+    /// Re-plan without copying parameters (mixed-precision search loop).
+    pub fn set_plan(&mut self, plan: QuantPlan) {
+        self.prepared = Self::prepare(&self.params, &plan);
+        self.plan = plan;
+    }
+
+    /// Full-sequence forward: tokens → logits [s, vocab].
+    pub fn forward(&self, tokens: &[usize], stats: Option<&mut ActStats>) -> Tensor {
+        self.forward_from(tokens, 0, stats)
+    }
+
+    /// Forward with an explicit start position (for KV-cache decode the
+    /// position offsets matter; here used by the full-context path).
+    pub fn forward_from(
+        &self,
+        tokens: &[usize],
+        pos0: usize,
+        mut stats: Option<&mut ActStats>,
+    ) -> Tensor {
+        let cfg = &self.params.cfg;
+        let (s, d) = (tokens.len(), cfg.d_model);
+        assert!(pos0 + s <= cfg.max_seq, "sequence too long");
+        // embeddings
+        let mut x = Tensor::zeros(&[s, d]);
+        for (i, &t) in tokens.iter().enumerate() {
+            assert!(t < cfg.vocab_size, "token {t} out of vocab");
+            let e = self.params.tok_emb.row(t);
+            let xr = x.row_mut(i);
+            xr.copy_from_slice(e);
+            if cfg.pos == PosEncoding::Learned {
+                let p = self.params.pos_emb.row(pos0 + i);
+                for (a, &b) in xr.iter_mut().zip(p) {
+                    *a += b;
+                }
+            }
+        }
+        for li in 0..cfg.n_layers {
+            x = self.layer_forward(li, &x, pos0, &mut stats);
+        }
+        // final LN + tied-embedding head (FP32)
+        let xn = x.layer_norm(&self.params.lnf_g, &self.params.lnf_b, cfg.ln_eps);
+        matmul_bt(&xn, &self.params.tok_emb)
+    }
+
+    fn layer_forward(
+        &self,
+        li: usize,
+        x: &Tensor,
+        pos0: usize,
+        stats: &mut Option<&mut ActStats>,
+    ) -> Tensor {
+        let cfg = &self.params.cfg;
+        let l = &self.params.layers[li];
+        let pl = &self.prepared[li];
+        let (s, d) = x.dims2();
+        let h = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let plan = &self.plan;
+
+        // --- attention block ---
+        let xn = x.layer_norm(&l.ln1_g, &l.ln1_b, cfg.ln_eps);
+        if let Some(st) = stats.as_deref_mut() {
+            st.record("X1", li, &xn.data);
+            st.record_channels("X1", li, &xn);
+        }
+        // ①②③: projections with quantised act + weight
+        let q_act = |fmt: QFormat, t: &Tensor| -> Tensor {
+            if fmt == QFormat::Fp32 {
+                t.clone()
+            } else {
+                fake_quant(t, fmt)
+            }
+        };
+        let proj = |idx: u8, w_t: &Tensor| -> Tensor {
+            match plan.mode {
+                GemmMode::FakeQuant => matmul_bt(&q_act(plan.site(li, idx).act, &xn), w_t),
+                GemmMode::LlmInt8 { threshold, bits } => {
+                    crate::baselines::llm_int8::llm_int8_matmul(&xn, w_t, threshold, bits)
+                }
+            }
+        };
+        let q = proj(1, &pl.wq_t).add_bias(&l.bq);
+        let k = proj(2, &pl.wk_t).add_bias(&l.bk);
+        let v = proj(3, &pl.wv_t).add_bias(&l.bv);
+        let (q, k) = if cfg.pos == PosEncoding::Rope {
+            (apply_rope(&q, h, pos0), apply_rope(&k, h, pos0))
+        } else {
+            (q, k)
+        };
+        if let Some(st) = stats.as_deref_mut() {
+            st.record("Q", li, &q.data);
+            st.record("K", li, &k.data);
+            st.record("V", li, &v.data);
+        }
+        let scale = 1.0 / (hd as f32).sqrt();
+        let mut ctx = Tensor::zeros(&[s, d]);
+        // per-head attention: ④ S = QKᵀ, ⑤ C = softmax(S)·V, both quantised
+        let q45 = (plan.site(li, 4), plan.site(li, 5));
+        for hi in 0..h {
+            let slice_head = |t: &Tensor| -> Tensor {
+                let mut out = Tensor::zeros(&[s, hd]);
+                for i in 0..s {
+                    out.row_mut(i)
+                        .copy_from_slice(&t.row(i)[hi * hd..(hi + 1) * hd]);
+                }
+                out
+            };
+            let (qh, kh, vh) = (slice_head(&q), slice_head(&k), slice_head(&v));
+            // ④: blocks along head_dim on both operands
+            let mut qh_q = q_act(q45.0.act, &qh);
+            let kh_q = q_act(q45.0.weight, &kh);
+            for r in qh_q.data.iter_mut() {
+                *r *= scale; // scale after quantisation: ASIC applies it in the accumulator
+            }
+            let mut scores = matmul_bt(&qh_q, &kh_q);
+            // causal mask (queries at pos0+i attend keys ≤ pos0+i; full
+            // context path has pos0 = key offset 0)
+            for i in 0..s {
+                let row = scores.row_mut(i);
+                for (j, val) in row.iter_mut().enumerate() {
+                    if j > i {
+                        *val = f32::NEG_INFINITY;
+                    }
+                }
+            }
+            scores.softmax_rows();
+            if let Some(st) = stats.as_deref_mut() {
+                if hi == 0 {
+                    st.record("A", li, &scores.data);
+                }
+            }
+            // ⑤: blocks along the key dim: quantise A rows and Vᵀ rows
+            let a_q = q_act(q45.1.act, &scores);
+            let vht_q = q_act(q45.1.weight, &vh.t());
+            let ctx_h = matmul_bt(&a_q, &vht_q);
+            for i in 0..s {
+                ctx.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(i));
+            }
+        }
+        if let Some(st) = stats.as_deref_mut() {
+            st.record("B_c", li, &ctx.data);
+        }
+        // ⑥ output projection
+        let att_out = match plan.mode {
+            GemmMode::FakeQuant => {
+                fake_quant_in_place(&mut ctx, plan.site(li, 6).act);
+                matmul_bt(&ctx, &pl.wo_t)
+            }
+            GemmMode::LlmInt8 { threshold, bits } => {
+                crate::baselines::llm_int8::llm_int8_matmul(&ctx, &pl.wo_t, threshold, bits)
+            }
+        }
+        .add_bias(&l.bo);
+        let x = x.add(&att_out);
+
+        // --- MLP block ---
+        let xn2 = x.layer_norm(&l.ln2_g, &l.ln2_b, cfg.ln_eps);
+        if let Some(st) = stats.as_deref_mut() {
+            st.record("X2", li, &xn2.data);
+            st.record_channels("X2", li, &xn2);
+        }
+        // ⑦ fc1
+        let hpre = match plan.mode {
+            GemmMode::FakeQuant => {
+                matmul_bt(&q_act(plan.site(li, 7).act, &xn2), &pl.w1_t)
+            }
+            GemmMode::LlmInt8 { threshold, bits } => {
+                crate::baselines::llm_int8::llm_int8_matmul(&xn2, &pl.w1_t, threshold, bits)
+            }
+        }
+        .add_bias(&l.b1);
+        let mut hact = hpre.gelu();
+        if let Some(st) = stats.as_deref_mut() {
+            st.record("H", li, &hact.data);
+        }
+        // ⑧ fc2
+        let mlp_out = match plan.mode {
+            GemmMode::FakeQuant => {
+                fake_quant_in_place(&mut hact, plan.site(li, 8).act);
+                matmul_bt(&hact, &pl.w2_t)
+            }
+            GemmMode::LlmInt8 { threshold, bits } => {
+                crate::baselines::llm_int8::llm_int8_matmul(&hact, &pl.w2_t, threshold, bits)
+            }
+        }
+        .add_bias(&l.b2);
+        x.add(&mlp_out)
+    }
+
+    /// Record weight variances (Figure 1 lower-right panel).
+    pub fn weight_stats(&self) -> ActStats {
+        let mut st = ActStats::default();
+        for (li, l) in self.params.layers.iter().enumerate() {
+            st.record("Wq", li, &l.wq.data);
+            st.record("Wk", li, &l.wk.data);
+            st.record("Wv", li, &l.wv.data);
+            st.record("Wo", li, &l.wo.data);
+            st.record("W1", li, &l.w1.data);
+            st.record("W2", li, &l.w2.data);
+        }
+        st
+    }
+
+    /// Per-tensor (numel, format) inventory for memory-density accounting.
+    /// `seq` sets activation sizes.
+    pub fn quant_inventory(&self, seq: usize) -> Vec<(usize, QFormat)> {
+        let cfg = &self.params.cfg;
+        let mut out = Vec::new();
+        for li in 0..cfg.n_layers {
+            for g in crate::density::flops::layer_gemms(cfg, seq) {
+                let q = self.plan.site(li, g.index as u8);
+                out.push((g.act_numel_per_tok * seq, q.act));
+                if g.weight_numel > 0 {
+                    out.push((g.weight_numel, q.weight));
+                } else {
+                    // ④⑤ second operand is an activation (K / V)
+                    out.push((g.act_numel_per_tok * seq, q.weight));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Greedy cross-entropy loss of logits vs next-token targets (nats/token).
+pub fn cross_entropy(logits: &Tensor, targets: &[usize]) -> f64 {
+    let (s, v) = logits.dims2();
+    assert_eq!(s, targets.len());
+    let mut total = 0.0f64;
+    for i in 0..s {
+        let row = logits.row(i);
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = m as f64 + row.iter().map(|&x| ((x - m) as f64).exp()).sum::<f64>().ln();
+        debug_assert!(targets[i] < v);
+        total += lse - row[targets[i]] as f64;
+    }
+    total / s as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::quant::config::presets;
+
+    fn tiny_model(plan: QuantPlan) -> Model {
+        let cfg = ModelConfig::preset("nano");
+        Model::new(Params::init(&cfg, 42), plan)
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let m = tiny_model(QuantPlan::fp32());
+        let logits = m.forward(&[1, 2, 3, 4, 5], None);
+        assert_eq!(logits.shape, vec![5, 512]);
+        assert!(logits.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causal_mask_prefix_invariance() {
+        // logits at position i must not depend on tokens after i
+        let m = tiny_model(QuantPlan::fp32());
+        let full = m.forward(&[5, 6, 7, 8], None);
+        let prefix = m.forward(&[5, 6], None);
+        for j in 0..512 {
+            assert!(
+                (full.row(1)[j] - prefix.row(1)[j]).abs() < 1e-4,
+                "position 1 logit {j} differs"
+            );
+        }
+    }
+
+    #[test]
+    fn quantised_forward_close_to_fp32_at_8bit() {
+        let m32 = tiny_model(QuantPlan::fp32());
+        let m8 = tiny_model(QuantPlan::uniform(presets::bfp_w(8)));
+        let toks = [3usize, 100, 7, 250, 9, 12];
+        let a = m32.forward(&toks, None);
+        let b = m8.forward(&toks, None);
+        let rel = crate::util::stats::mse(&a.data, &b.data).sqrt()
+            / (crate::util::stats::std_dev(&a.data) + 1e-9);
+        assert!(rel < 0.1, "rel err {rel}");
+    }
+
+    #[test]
+    fn stats_collects_all_tensors() {
+        let m = tiny_model(QuantPlan::fp32());
+        let mut st = ActStats::default();
+        m.forward(&[1, 2, 3], Some(&mut st));
+        for name in ["X1", "Q", "K", "V", "A", "B_c", "X2", "H"] {
+            let series = st.series(name, 2);
+            assert!(series.iter().all(|v| v.is_finite()), "{name}: {series:?}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_sane() {
+        // uniform logits → ln(vocab)
+        let logits = Tensor::zeros(&[3, 512]);
+        let ce = cross_entropy(&logits, &[0, 1, 2]);
+        assert!((ce - (512f64).ln()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn inventory_counts_both_operands() {
+        let m = tiny_model(QuantPlan::uniform(presets::bfp_w(6)));
+        let inv = m.quant_inventory(16);
+        // 8 GEMMs × 2 operands × 2 layers
+        assert_eq!(inv.len(), 32);
+    }
+}

@@ -1,0 +1,140 @@
+//! Variance profiler (paper Figure 1 / 4 / 5): run calibration samples
+//! through a model and report per-tensor, per-layer variances for the
+//! activations entering the eight GEMMs, plus weight variances.
+
+use crate::data::corpus::test_stream;
+use crate::data::vocab::Vocab;
+use crate::model::plan::QuantPlan;
+use crate::model::transformer::{ActStats, Model};
+use crate::model::Params;
+use crate::util::table::Table;
+
+/// Activation tensors plotted in Figure 1 (unbounded-range GEMM operands).
+pub const ACT_TENSORS: [&str; 8] = ["X1", "Q", "K", "V", "A", "B_c", "X2", "H"];
+pub const WEIGHT_TENSORS: [&str; 6] = ["Wq", "Wk", "Wv", "Wo", "W1", "W2"];
+
+#[derive(Debug)]
+pub struct VarianceProfile {
+    pub n_layers: usize,
+    pub act: Vec<(String, Vec<f64>)>,
+    pub weight: Vec<(String, Vec<f64>)>,
+}
+
+/// Feed `n_samples` held-out sequences of length `seq` (the paper uses 128
+/// WikiText2 samples) and collect variances.
+pub fn profile_variance(params: &Params, n_samples: usize, seq: usize) -> VarianceProfile {
+    let vocab = Vocab::build();
+    let stream = test_stream(&vocab, n_samples * seq + seq);
+    let model = Model::new(params.clone(), QuantPlan::fp32());
+    let mut stats = ActStats::default();
+    for chunk in stream.chunks(seq).take(n_samples) {
+        if chunk.len() < 2 {
+            break;
+        }
+        model.forward(chunk, Some(&mut stats));
+    }
+    let n_layers = params.cfg.n_layers;
+    let act = ACT_TENSORS
+        .iter()
+        .map(|name| (name.to_string(), stats.series(name, n_layers)))
+        .collect();
+    let wstats = model.weight_stats();
+    let weight = WEIGHT_TENSORS
+        .iter()
+        .map(|name| (name.to_string(), wstats.series(name, n_layers)))
+        .collect();
+    VarianceProfile {
+        n_layers,
+        act,
+        weight,
+    }
+}
+
+impl VarianceProfile {
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut header = vec!["tensor".to_string()];
+        for l in 0..self.n_layers {
+            header.push(format!("L{l}"));
+        }
+        let mut t = Table::new(title, &header.iter().map(String::as_str).collect::<Vec<_>>());
+        for (name, series) in self.act.iter().chain(&self.weight) {
+            let mut row = vec![name.clone()];
+            row.extend(series.iter().map(|v| format!("{v:.4}")));
+            t.row(row);
+        }
+        t
+    }
+
+    /// Paper observation 1: activation variance grows with depth.
+    pub fn activation_depth_trend(&self, name: &str) -> f64 {
+        let series = self
+            .act
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.clone())
+            .unwrap_or_default();
+        trend_slope(&series)
+    }
+
+    /// Paper observation 3: weight variance ≪ activation variance.
+    pub fn weight_act_ratio(&self) -> f64 {
+        let mean = |vs: &Vec<(String, Vec<f64>)>| {
+            let all: Vec<f64> = vs
+                .iter()
+                .flat_map(|(_, s)| s.iter().copied())
+                .filter(|v| v.is_finite())
+                .collect();
+            all.iter().sum::<f64>() / all.len().max(1) as f64
+        };
+        mean(&self.weight) / mean(&self.act).max(1e-12)
+    }
+}
+
+/// Least-squares slope of a series vs its index.
+pub fn trend_slope(ys: &[f64]) -> f64 {
+    let n = ys.len() as f64;
+    if ys.len() < 2 {
+        return 0.0;
+    }
+    let xm = (n - 1.0) / 2.0;
+    let ym = ys.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &y) in ys.iter().enumerate() {
+        num += (i as f64 - xm) * (y - ym);
+        den += (i as f64 - xm) * (i as f64 - xm);
+    }
+    num / den.max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn profile_shapes() {
+        let cfg = ModelConfig::preset("nano");
+        let p = Params::init(&cfg, 3);
+        let prof = profile_variance(&p, 2, 24);
+        assert_eq!(prof.act.len(), 8);
+        assert_eq!(prof.weight.len(), 6);
+        assert!(prof.act[0].1.iter().all(|v| v.is_finite()));
+        let t = prof.to_table("fig1");
+        assert!(t.render().contains("X1"));
+    }
+
+    #[test]
+    fn trend_slope_signs() {
+        assert!(trend_slope(&[1.0, 2.0, 3.0]) > 0.9);
+        assert!(trend_slope(&[3.0, 2.0, 1.0]) < -0.9);
+    }
+
+    #[test]
+    fn weight_variance_much_smaller_for_init_model() {
+        let cfg = ModelConfig::preset("nano");
+        let p = Params::init(&cfg, 3);
+        let prof = profile_variance(&p, 2, 24);
+        assert!(prof.weight_act_ratio() < 0.5, "{}", prof.weight_act_ratio());
+    }
+}

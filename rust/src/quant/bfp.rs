@@ -1,0 +1,223 @@
+//! Block Floating-Point (BFP) — the paper's winning format (Table 3-5).
+//!
+//! MSFP convention (Darvish Rouhani et al. 2020): each block of N values
+//! shares an E-bit exponent set by the block max; elements carry sign +
+//! M-bit mantissa. `scale = 2^(emax - M + 1)`, `m = clamp(round(|x|/scale),
+//! 0, 2^M - 1)`, value `= ±m·scale`. Bits/element = 1 + M + E/N.
+
+use super::block::{block_absmax, for_each_block_mut};
+use super::minifloat::{exp2i, ilogb};
+
+/// Shared-exponent field for a block, clamped to the biased E-bit range.
+/// Returns the *unbiased* effective exponent.
+#[inline]
+pub fn shared_exponent(absmax: f32, e_bits: u32) -> i32 {
+    let bias = (1i32 << (e_bits - 1)) - 1;
+    let emax_field = (1i32 << e_bits) - 1;
+    if absmax == 0.0 {
+        return -bias; // e_field = 0
+    }
+    let e_unb = ilogb(absmax);
+    (e_unb + bias).clamp(0, emax_field) - bias
+}
+
+/// Quantise one block in place. Returns the shared exponent used.
+#[inline]
+pub fn bfp_quant_block(block: &mut [f32], e_bits: u32, m_bits: u32) -> i32 {
+    let absmax = block_absmax(block);
+    let e = shared_exponent(absmax, e_bits);
+    if absmax == 0.0 {
+        for x in block.iter_mut() {
+            *x = 0.0;
+        }
+        return e;
+    }
+    let scale = exp2i(e - m_bits as i32 + 1);
+    let inv = 1.0 / scale;
+    let mmax = ((1u64 << m_bits) - 1) as f32;
+    for x in block.iter_mut() {
+        if x.is_nan() {
+            *x = 0.0;
+            continue;
+        }
+        let sign = if *x < 0.0 { -1.0 } else { 1.0 };
+        let m = (x.abs() * inv).round_ties_even().min(mmax);
+        *x = sign * m * scale;
+    }
+    e
+}
+
+/// Fake-quantise a row-major [rows, cols] buffer with [1, N] blocks.
+pub fn bfp_fake_quant(data: &mut [f32], cols: usize, block: usize, e_bits: u32, m_bits: u32) {
+    // Hot path (EXPERIMENTS.md §Perf): when rows are block-aligned, take a
+    // branch-light lane — `f32::max` ignores NaN so the absmax reduction
+    // vectorises, and NaN handling collapses into one select per element.
+    if cols % block == 0 && block >= 4 {
+        let mmax = ((1u64 << m_bits) - 1) as f32;
+        for blk in data.chunks_mut(block) {
+            let mut mx = 0.0f32;
+            for &x in blk.iter() {
+                mx = mx.max(x.abs()); // max(a, NaN) == a
+            }
+            if mx == 0.0 {
+                for x in blk.iter_mut() {
+                    *x = 0.0;
+                }
+                continue;
+            }
+            if !mx.is_finite() {
+                mx = f32::MAX;
+            }
+            let e = shared_exponent(mx, e_bits);
+            let scale = exp2i(e - m_bits as i32 + 1);
+            let inv = 1.0 / scale;
+            for x in blk.iter_mut() {
+                let ax = x.abs() * inv;
+                // NaN → 0 (matches the slow path and the python oracle)
+                let m = if ax.is_nan() {
+                    0.0
+                } else {
+                    ax.round_ties_even().min(mmax)
+                };
+                *x = if *x < 0.0 { -m * scale } else { m * scale };
+            }
+        }
+        return;
+    }
+    for_each_block_mut(data, cols, block, |b| {
+        bfp_quant_block(b, e_bits, m_bits);
+    });
+}
+
+/// Integer-domain encoding of one block: (shared exponent, signed mantissas).
+/// `value = m * 2^(e - M + 1)`. This is the ASIC datapath representation
+/// used by [`crate::quant::qmatmul::bfp_dot_blocked`] (paper Eq. 4).
+pub fn bfp_encode_block(block: &[f32], e_bits: u32, m_bits: u32) -> (i32, Vec<i32>) {
+    let absmax = block_absmax(block);
+    let e = shared_exponent(absmax, e_bits);
+    let mmax = ((1u64 << m_bits) - 1) as f32;
+    if absmax == 0.0 {
+        return (e, vec![0; block.len()]);
+    }
+    let inv = 1.0 / exp2i(e - m_bits as i32 + 1);
+    let ms = block
+        .iter()
+        .map(|&x| {
+            if x.is_nan() {
+                return 0;
+            }
+            let m = (x.abs() * inv).round_ties_even().min(mmax) as i32;
+            if x < 0.0 {
+                -m
+            } else {
+                m
+            }
+        })
+        .collect();
+    (e, ms)
+}
+
+pub fn bfp_decode_block(e: i32, ms: &[i32], m_bits: u32) -> Vec<f32> {
+    let scale = exp2i(e - m_bits as i32 + 1);
+    ms.iter().map(|&m| m as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, close_slice, llmish_values};
+
+    #[test]
+    fn block_max_nearly_preserved() {
+        // max element error bounded by scale/2
+        let mut b = vec![1.9, 0.1, -0.5, 0.0];
+        bfp_quant_block(&mut b, 8, 5);
+        // emax = 0, scale = 2^-4 = 0.0625
+        assert!((b[0] - 1.9).abs() <= 0.0625 / 2.0 + 1e-7, "{b:?}");
+        assert_eq!(b[3], 0.0);
+    }
+
+    #[test]
+    fn error_bound_half_step() {
+        check("bfp err <= scale/2 in range", 200, |rng| {
+            let xs = llmish_values(rng, 16, 1.0, 0.1);
+            let mut q = xs.clone();
+            let e = bfp_quant_block(&mut q, 8, 5);
+            let scale = exp2i(e - 5 + 1);
+            let mmax = 31.0f32; // 2^5 - 1
+            for (i, (&x, &y)) in xs.iter().zip(&q).enumerate() {
+                // elements within the top half-step of the mantissa ceiling
+                // saturate to (2^M-1)*scale: error there can reach one step
+                let bound = if x.abs() > (mmax - 0.5) * scale {
+                    scale
+                } else {
+                    scale / 2.0
+                };
+                let err = (x - y).abs();
+                if err > bound + 1e-6 {
+                    return Err(format!("i={i} x={x} q={y} err={err} scale={scale}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn encode_decode_matches_fake_quant() {
+        check("bfp enc/dec == fake", 200, |rng| {
+            let n = 1 + rng.below(32);
+            let xs = llmish_values(rng, n, 2.0, 0.1);
+            let mut fake = xs.clone();
+            bfp_quant_block(&mut fake, 8, 3);
+            let (e, ms) = bfp_encode_block(&xs, 8, 3);
+            let dec = bfp_decode_block(e, &ms, 3);
+            close_slice(&fake, &dec, 0.0, "bfp")
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        check("bfp idempotent", 200, |rng| {
+            let xs = llmish_values(rng, 16, 1.0, 0.05);
+            let mut q1 = xs.clone();
+            bfp_quant_block(&mut q1, 8, 5);
+            let mut q2 = q1.clone();
+            bfp_quant_block(&mut q2, 8, 5);
+            close_slice(&q1, &q2, 0.0, "idem")
+        });
+    }
+
+    #[test]
+    fn outlier_crushes_block_but_not_neighbours() {
+        // scaling offsets are *local* under BFP: an outlier only affects its
+        // own block of 16 — the paper's whole point.
+        let mut data: Vec<f32> = vec![0.01; 32];
+        data[0] = 100.0;
+        bfp_fake_quant(&mut data, 32, 16, 8, 3);
+        // block 0: scale = 2^(6-3+1)=16 → 0.01 → 0
+        assert_eq!(data[1], 0.0);
+        // block 1: small values survive
+        assert!(data[20] > 0.0, "{}", data[20]);
+    }
+
+    #[test]
+    fn mantissa_width_improves_error() {
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        let xs = llmish_values(&mut rng, 1024, 1.0, 0.02);
+        let err = |m_bits| {
+            let mut q = xs.clone();
+            bfp_fake_quant(&mut q, 1024, 16, 8, m_bits);
+            crate::util::stats::mse(&xs, &q)
+        };
+        let (e3, e5, e7) = (err(3), err(5), err(7));
+        assert!(e7 < e5 && e5 < e3, "{e3} {e5} {e7}");
+    }
+
+    #[test]
+    fn shared_exponent_clamps() {
+        // E=4 → bias 7, field range [0,15] → effective [-7, 8]
+        assert_eq!(shared_exponent(exp2i(20), 4), 8);
+        assert_eq!(shared_exponent(exp2i(-20), 4), -7);
+        assert_eq!(shared_exponent(0.0, 4), -7);
+    }
+}

@@ -1,0 +1,128 @@
+//! Block Logarithm (BL): power-of-two values with a shared B-bit exponent
+//! bias per block (Miyashita et al. 2016; baseline in Fox et al. 2021).
+//! Element = sign + E-bit exponent; mantissa is implicitly 1. The exponent
+//! field value 0 is reserved for exact zero. Amenable to large dynamic
+//! range, terrible mid-range precision under PTQ (paper Table 3).
+
+use super::block::{block_absmax, for_each_block_mut};
+use super::bm::shared_bias;
+use super::minifloat::{exp2i, ilogb};
+
+/// Quantise one value to ±2^(e - bias) with e in [1, 2^E - 1]; 0 → 0.
+/// Nearest-in-linear-domain: threshold at 1.5·2^k.
+#[inline]
+pub fn bl_round(x: f32, e_bits: u32, bias: i32) -> f32 {
+    if x == 0.0 || x.is_nan() {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let ax = if x.is_infinite() { f32::MAX } else { x.abs() };
+    let emax_field = (1i32 << e_bits) - 1;
+    let mut k = ilogb(ax);
+    // linear-domain nearest power of two: [1.5*2^k, 2^(k+1)) rounds up
+    if ax >= 1.5 * exp2i(k) {
+        k += 1;
+    }
+    let e_field = k + bias;
+    if e_field < 1 {
+        // below the smallest representable binade: flush to zero if nearer
+        // to zero than to 2^(1-bias) (linear midpoint), else clamp up.
+        let smallest = exp2i(1 - bias);
+        if ax < smallest * 0.5 {
+            return 0.0;
+        }
+        return sign * smallest;
+    }
+    if e_field > emax_field {
+        return sign * exp2i(emax_field - bias);
+    }
+    sign * exp2i(e_field - bias)
+}
+
+/// Quantise one block in place; returns the shared bias.
+pub fn bl_quant_block(block: &mut [f32], e_bits: u32, b_bits: u32) -> i32 {
+    let absmax = block_absmax(block);
+    let bias = shared_bias(absmax, e_bits, b_bits);
+    for x in block.iter_mut() {
+        *x = bl_round(*x, e_bits, bias);
+    }
+    bias
+}
+
+/// Fake-quantise a [rows, cols] buffer with [1, N] blocks.
+pub fn bl_fake_quant(data: &mut [f32], cols: usize, block: usize, e_bits: u32, b_bits: u32) {
+    for_each_block_mut(data, cols, block, |b| {
+        bl_quant_block(b, e_bits, b_bits);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, close_slice, llmish_values};
+
+    #[test]
+    fn rounds_to_powers_of_two() {
+        // bias=64 centres the representable range: 2^(e-64), e ∈ [1, 127]
+        assert_eq!(bl_round(1.0, 7, 64), 1.0);
+        assert_eq!(bl_round(1.4, 7, 64), 1.0);
+        assert_eq!(bl_round(1.6, 7, 64), 2.0);
+        assert_eq!(bl_round(-3.0, 7, 64), -4.0); // 3.0 ≥ 1.5·2 → rounds up
+        assert_eq!(bl_round(2.9, 7, 64), 2.0);
+    }
+
+    #[test]
+    fn zero_reserved() {
+        assert_eq!(bl_round(0.0, 7, 64), 0.0);
+        // far below smallest binade flushes to zero
+        assert_eq!(bl_round(1e-30, 7, 64), 0.0);
+    }
+
+    #[test]
+    fn block_outputs_are_pow2_multiples() {
+        check("bl outputs pow2", 100, |rng| {
+            let xs = llmish_values(rng, 16, 1.0, 0.1);
+            let mut q = xs.clone();
+            bl_quant_block(&mut q, 7, 8);
+            for &v in &q {
+                if v != 0.0 {
+                    let l = v.abs().log2();
+                    if (l - l.round()).abs() > 1e-5 {
+                        return Err(format!("{v} not a power of two"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn relative_error_le_third() {
+        // nearest power of two in linear domain → rel error ≤ 1/3
+        check("bl rel err <= 1/3", 200, |rng| {
+            let x = rng.normal_with(0.0, 4.0);
+            if x == 0.0 {
+                return Ok(());
+            }
+            let q = bl_round(x, 7, 64);
+            let rel = ((x - q) / x).abs();
+            if rel <= 1.0 / 3.0 + 1e-5 {
+                Ok(())
+            } else {
+                Err(format!("x={x} q={q} rel={rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        check("bl idempotent", 100, |rng| {
+            let xs = llmish_values(rng, 16, 1.0, 0.05);
+            let mut q1 = xs.clone();
+            bl_quant_block(&mut q1, 7, 8);
+            let mut q2 = q1.clone();
+            bl_quant_block(&mut q2, 7, 8);
+            close_slice(&q1, &q2, 0.0, "idem")
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Block partitioning along the contraction dimension.
+//!
+//! The paper's block shape is `[1, N]` — a slice along a matrix row (the
+//! token/channel vector), i.e. contiguous runs of N values in the last
+//! dimension. Blocks never straddle rows; a short tail block is allowed.
+
+/// Iterate (start, end) block ranges over one row of length `cols`.
+#[inline]
+pub fn block_ranges(cols: usize, block: usize) -> impl Iterator<Item = (usize, usize)> {
+    let block = block.max(1);
+    (0..cols.div_ceil(block)).map(move |b| (b * block, ((b + 1) * block).min(cols)))
+}
+
+/// Number of blocks per row.
+#[inline]
+pub fn blocks_per_row(cols: usize, block: usize) -> usize {
+    cols.div_ceil(block.max(1))
+}
+
+/// Max |x| over a slice (0.0 for empty / all-NaN; NaN are skipped).
+#[inline]
+pub fn block_absmax(xs: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &x in xs {
+        let a = x.abs();
+        if a.is_finite() && a > m {
+            m = a;
+        } else if a.is_infinite() {
+            return f32::MAX;
+        }
+    }
+    m
+}
+
+/// Apply `f(block_slice)` to every [1, N] block of a row-major [rows, cols]
+/// buffer, mutating in place.
+pub fn for_each_block_mut(data: &mut [f32], cols: usize, block: usize, mut f: impl FnMut(&mut [f32])) {
+    assert_eq!(data.len() % cols.max(1), 0);
+    for row in data.chunks_mut(cols) {
+        for (s, e) in block_ranges(cols, block) {
+            f(&mut row[s..e]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_row() {
+        let rs: Vec<_> = block_ranges(10, 4).collect();
+        assert_eq!(rs, vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(blocks_per_row(10, 4), 3);
+        assert_eq!(blocks_per_row(16, 16), 1);
+    }
+
+    #[test]
+    fn absmax_skips_nan() {
+        assert_eq!(block_absmax(&[1.0, -3.0, f32::NAN, 2.0]), 3.0);
+        assert_eq!(block_absmax(&[]), 0.0);
+        assert_eq!(block_absmax(&[f32::INFINITY]), f32::MAX);
+    }
+
+    #[test]
+    fn for_each_visits_all() {
+        let mut data = vec![1.0f32; 12]; // 2 rows x 6 cols
+        let mut count = 0;
+        for_each_block_mut(&mut data, 6, 4, |b| {
+            count += 1;
+            for x in b.iter_mut() {
+                *x = 2.0;
+            }
+        });
+        assert_eq!(count, 4); // 2 blocks per row (4 + 2)
+        assert!(data.iter().all(|&x| x == 2.0));
+    }
+}

@@ -1,0 +1,110 @@
+//! Block MiniFloat (BM, Fox et al. 2021): a block of N MiniFloat(E, M)
+//! elements sharing a B-bit exponent *bias*, chosen so the block max lands
+//! in the top binade. High range + high precision near the block peak, at
+//! the cost of larger mid-range error — which is why it needs QAT and does
+//! poorly under PTQ in the paper's Table 3.
+
+use super::block::{block_absmax, for_each_block_mut};
+use super::minifloat::{ilogb, round_minifloat};
+
+/// Shared bias for a block: put `emax` in the top exponent field, clamped to
+/// the signed B-bit range.
+#[inline]
+pub fn shared_bias(absmax: f32, e_bits: u32, b_bits: u32) -> i32 {
+    let emax_field = (1i32 << e_bits) - 1;
+    let lo = -(1i32 << (b_bits - 1));
+    let hi = (1i32 << (b_bits - 1)) - 1;
+    if absmax == 0.0 {
+        return hi; // push everything to the tiniest range; block is all zero anyway
+    }
+    (emax_field - ilogb(absmax)).clamp(lo, hi)
+}
+
+/// Quantise one block in place; returns the shared bias.
+pub fn bm_quant_block(block: &mut [f32], e_bits: u32, m_bits: u32, b_bits: u32) -> i32 {
+    let absmax = block_absmax(block);
+    let bias = shared_bias(absmax, e_bits, b_bits);
+    for x in block.iter_mut() {
+        *x = round_minifloat(*x, e_bits, m_bits, bias);
+    }
+    bias
+}
+
+/// Fake-quantise a [rows, cols] buffer with [1, N] blocks.
+pub fn bm_fake_quant(
+    data: &mut [f32],
+    cols: usize,
+    block: usize,
+    e_bits: u32,
+    m_bits: u32,
+    b_bits: u32,
+) {
+    for_each_block_mut(data, cols, block, |b| {
+        bm_quant_block(b, e_bits, m_bits, b_bits);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::minifloat::{exp2i, minifloat_max};
+    use crate::util::check::{check, close_slice, llmish_values};
+
+    #[test]
+    fn block_max_in_top_binade() {
+        let mut b = vec![6.0f32, 0.5, -0.25];
+        let bias = bm_quant_block(&mut b, 4, 3, 8);
+        // absmax 6.0 → ilogb 2 → bias = 15 - 2 = 13; max representable
+        assert_eq!(bias, 13);
+        let max = minifloat_max(4, 3, bias);
+        assert!(max >= 6.0 && max < 16.0, "max={max}");
+        assert!((b[0] - 6.0).abs() < 0.51, "{b:?}");
+    }
+
+    #[test]
+    fn tiny_blocks_keep_precision() {
+        // the whole point of a shared bias: a block of small values is
+        // represented with full minifloat precision around its own scale.
+        let mut b = vec![1e-4f32, -2e-4, 3e-4];
+        bm_quant_block(&mut b, 4, 3, 8);
+        assert!((b[2] - 3e-4).abs() / 3e-4 < 0.07, "{b:?}");
+    }
+
+    #[test]
+    fn bias_clamps_to_b_bits() {
+        assert_eq!(shared_bias(exp2i(30), 4, 4), -8); // wants 15-30=-15, clamps to -8
+        assert_eq!(shared_bias(exp2i(-30), 4, 4), 7); // wants 45, clamps to 7
+    }
+
+    #[test]
+    fn idempotent() {
+        check("bm idempotent", 200, |rng| {
+            let xs = llmish_values(rng, 16, 1.0, 0.05);
+            let mut q1 = xs.clone();
+            bm_quant_block(&mut q1, 4, 3, 8);
+            let mut q2 = q1.clone();
+            bm_quant_block(&mut q2, 4, 3, 8);
+            close_slice(&q1, &q2, 0.0, "idem")
+        });
+    }
+
+    #[test]
+    fn relative_error_bounded_in_block_range(){
+        check("bm rel err", 200, |rng| {
+            let xs = llmish_values(rng, 16, 1.0, 0.0);
+            let mut q = xs.clone();
+            bm_quant_block(&mut q, 4, 3, 8);
+            let absmax = crate::quant::block::block_absmax(&xs);
+            for (&x, &y) in xs.iter().zip(&q) {
+                // normal-range elements: relative error <= 2^-(M+1)
+                if x.abs() > absmax / 128.0 && x != 0.0 {
+                    let rel = ((x - y) / x).abs();
+                    if rel > 1.0 / 16.0 + 1e-6 {
+                        return Err(format!("x={x} q={y} rel={rel}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,266 @@
+//! Quantisation configuration: formats, presets (paper Table 2), and the
+//! per-GEMM plans used for uniform and mixed-precision quantisation.
+
+use crate::util::json::Json;
+
+/// A single-tensor quantisation spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QFormat {
+    /// No quantisation (float32 pass-through).
+    Fp32,
+    /// Plain fixed-point, `w` total bits incl. sign (per-tensor absmax scale).
+    Fixed { w: u32 },
+    /// Per-row (per-token) fixed-point — ZeroQuant's dynamic activation
+    /// quantisation (one absmax scale per row of the operand).
+    FixedRow { w: u32 },
+    /// MiniFloat(E, M), IEEE-style bias.
+    MiniFloat { e: u32, m: u32 },
+    /// Denormalised MiniFloat(E, M).
+    Dmf { e: u32, m: u32 },
+    /// Block Floating-Point: shared E-bit exponent over blocks of N.
+    Bfp { e: u32, m: u32, n: u32 },
+    /// Block MiniFloat: MiniFloat(E, M) with shared B-bit bias over N.
+    Bm { e: u32, m: u32, b: u32, n: u32 },
+    /// Block Logarithm: ±2^k with shared B-bit bias over N.
+    Bl { e: u32, b: u32, n: u32 },
+}
+
+impl QFormat {
+    /// Average storage bits per element, amortising shared fields over the
+    /// block (paper §3.2; reproduces Table 3's memory-density column).
+    pub fn bits_per_element(&self) -> f64 {
+        match *self {
+            QFormat::Fp32 => 32.0,
+            QFormat::Fixed { w } | QFormat::FixedRow { w } => w as f64,
+            QFormat::MiniFloat { e, m } | QFormat::Dmf { e, m } => 1.0 + e as f64 + m as f64,
+            QFormat::Bfp { e, m, n } => 1.0 + m as f64 + e as f64 / n as f64,
+            QFormat::Bm { e, m, b, n } => 1.0 + e as f64 + m as f64 + b as f64 / n as f64,
+            QFormat::Bl { e, b, n } => 1.0 + e as f64 + b as f64 / n as f64,
+        }
+    }
+
+    /// Memory density relative to float32 (Table 3 column "Mem").
+    pub fn memory_density(&self) -> f64 {
+        32.0 / self.bits_per_element()
+    }
+
+    /// Nominal "word length" used in WxAy naming (sign+mantissa+exponent of
+    /// the per-element payload).
+    pub fn word_bits(&self) -> u32 {
+        match *self {
+            QFormat::Fp32 => 32,
+            QFormat::Fixed { w } | QFormat::FixedRow { w } => w,
+            QFormat::MiniFloat { e, m } | QFormat::Dmf { e, m } => 1 + e + m,
+            QFormat::Bfp { m, .. } => 1 + m,
+            QFormat::Bm { e, m, .. } => 1 + e + m,
+            QFormat::Bl { e, .. } => 1 + e,
+        }
+    }
+
+    pub fn block_size(&self) -> u32 {
+        match *self {
+            QFormat::Bfp { n, .. } | QFormat::Bm { n, .. } | QFormat::Bl { n, .. } => n,
+            _ => 1,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match *self {
+            QFormat::Fp32 => "fp32".into(),
+            QFormat::Fixed { w } => format!("fixed{w}"),
+            QFormat::FixedRow { w } => format!("fixedrow{w}"),
+            QFormat::MiniFloat { e, m } => format!("minifloat_e{e}m{m}"),
+            QFormat::Dmf { e, m } => format!("dmf_e{e}m{m}"),
+            QFormat::Bfp { e, m, n } => format!("bfp_e{e}m{m}n{n}"),
+            QFormat::Bm { e, m, b, n } => format!("bm_e{e}m{m}b{b}n{n}"),
+            QFormat::Bl { e, b, n } => format!("bl_e{e}b{b}n{n}"),
+        }
+    }
+
+    /// Parse the `name()` form back (used by CLI / manifests).
+    pub fn parse(s: &str) -> Option<QFormat> {
+        fn field(s: &str, k: char) -> Option<u32> {
+            let idx = s.find(k)?;
+            let rest = &s[idx + 1..];
+            let end = rest
+                .find(|c: char| !c.is_ascii_digit())
+                .unwrap_or(rest.len());
+            rest[..end].parse().ok()
+        }
+        if s == "fp32" {
+            return Some(QFormat::Fp32);
+        }
+        if let Some(w) = s.strip_prefix("fixedrow") {
+            return Some(QFormat::FixedRow { w: w.parse().ok()? });
+        }
+        if let Some(w) = s.strip_prefix("fixed") {
+            return Some(QFormat::Fixed { w: w.parse().ok()? });
+        }
+        if let Some(r) = s.strip_prefix("minifloat_") {
+            return Some(QFormat::MiniFloat {
+                e: field(r, 'e')?,
+                m: field(r, 'm')?,
+            });
+        }
+        if let Some(r) = s.strip_prefix("dmf_") {
+            return Some(QFormat::Dmf {
+                e: field(r, 'e')?,
+                m: field(r, 'm')?,
+            });
+        }
+        if let Some(r) = s.strip_prefix("bfp_") {
+            return Some(QFormat::Bfp {
+                e: field(r, 'e')?,
+                m: field(r, 'm')?,
+                n: field(r, 'n')?,
+            });
+        }
+        if let Some(r) = s.strip_prefix("bm_") {
+            return Some(QFormat::Bm {
+                e: field(r, 'e')?,
+                m: field(r, 'm')?,
+                b: field(r, 'b')?,
+                n: field(r, 'n')?,
+            });
+        }
+        if let Some(r) = s.strip_prefix("bl_") {
+            return Some(QFormat::Bl {
+                e: field(r, 'e')?,
+                b: field(r, 'b')?,
+                n: field(r, 'n')?,
+            });
+        }
+        None
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Str(self.name())
+    }
+}
+
+/// Weight + activation format pair for one GEMM (the paper's WxAy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GemmQuant {
+    pub weight: QFormat,
+    pub act: QFormat,
+}
+
+impl GemmQuant {
+    pub fn fp32() -> Self {
+        GemmQuant {
+            weight: QFormat::Fp32,
+            act: QFormat::Fp32,
+        }
+    }
+
+    pub fn uniform(f: QFormat) -> Self {
+        GemmQuant { weight: f, act: f }
+    }
+}
+
+/// Paper Table 2 presets. `bfp_w(bits)` gives BFP with E=8, M=bits-1, N=16.
+pub mod presets {
+    use super::QFormat;
+
+    pub const BLOCK: u32 = 16;
+
+    pub fn fixed8() -> QFormat {
+        QFormat::Fixed { w: 8 }
+    }
+
+    pub fn minifloat8() -> QFormat {
+        QFormat::MiniFloat { e: 4, m: 3 }
+    }
+
+    pub fn dmf8() -> QFormat {
+        QFormat::Dmf { e: 4, m: 3 }
+    }
+
+    /// BFP WxAx: E=8, M=x-1, block [1,16].
+    pub fn bfp_w(bits: u32) -> QFormat {
+        assert!(bits >= 2);
+        QFormat::Bfp {
+            e: 8,
+            m: bits - 1,
+            n: BLOCK,
+        }
+    }
+
+    pub fn bm8() -> QFormat {
+        QFormat::Bm {
+            e: 4,
+            m: 3,
+            b: 8,
+            n: BLOCK,
+        }
+    }
+
+    pub fn bl8() -> QFormat {
+        QFormat::Bl {
+            e: 7,
+            b: 8,
+            n: BLOCK,
+        }
+    }
+
+    /// ZeroQuant (Yao et al. 2022): W4 group-wise weights (per output
+    /// channel) + dynamic per-token A8 — both expressed as per-row
+    /// fixed-point on the operand layouts our GEMMs use. 8/8 GEMMs.
+    pub fn zeroquant_w() -> QFormat {
+        QFormat::FixedRow { w: 4 }
+    }
+
+    pub fn zeroquant_a() -> QFormat {
+        QFormat::FixedRow { w: 8 }
+    }
+
+    /// The Table 3 PTQ sweep, in paper order (name, format).
+    pub fn table3_formats() -> Vec<(&'static str, QFormat)> {
+        vec![
+            ("Fixed-point W8A8", fixed8()),
+            ("MiniFloat W8A8", minifloat8()),
+            ("DMF W8A8", dmf8()),
+            ("BFP W8A8", bfp_w(8)),
+            ("BFP W6A6", bfp_w(6)),
+            ("BFP W4A4", bfp_w(4)),
+            ("BM W8A8", bm8()),
+            ("BL W8A8", bl8()),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets::*;
+    use super::*;
+
+    #[test]
+    fn memory_densities_match_table3() {
+        // paper Table 3 Mem column
+        assert!((fixed8().memory_density() - 4.0).abs() < 1e-9);
+        assert!((minifloat8().memory_density() - 4.0).abs() < 1e-9);
+        assert!((dmf8().memory_density() - 4.0).abs() < 1e-9);
+        assert!((bfp_w(6).memory_density() - 4.92).abs() < 0.01); // "4.9×"
+        assert!((bfp_w(4).memory_density() - 7.11).abs() < 0.01); // "7.1×"
+        assert!((bm8().memory_density() - 3.76).abs() < 0.01); // "3.8×"
+        assert!((bl8().memory_density() - 3.76).abs() < 0.01); // "3.8×"
+        assert!((QFormat::Fp32.memory_density() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn word_bits_naming() {
+        assert_eq!(bfp_w(6).word_bits(), 6);
+        assert_eq!(bfp_w(4).word_bits(), 4);
+        assert_eq!(minifloat8().word_bits(), 8);
+        assert_eq!(bl8().word_bits(), 8);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for (_, f) in table3_formats() {
+            assert_eq!(QFormat::parse(&f.name()), Some(f), "{}", f.name());
+        }
+        assert_eq!(QFormat::parse("fp32"), Some(QFormat::Fp32));
+        assert_eq!(QFormat::parse("nonsense"), None);
+    }
+}

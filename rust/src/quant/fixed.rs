@@ -1,0 +1,149 @@
+//! Plain fixed-point quantisation (the paper's failing baseline, Table 3).
+//!
+//! Per-tensor symmetric absmax scaling: `scale = absmax / (2^(W-1) - 1)`,
+//! `q = clamp(round(x / scale))`. W8A8 corresponds to M=7 (+ sign) in the
+//! paper's Table 2. This is *linear* quantisation — a single scaling factor
+//! for the whole tensor — and is exactly what scaling offsets break.
+
+/// Quantise a buffer in place with a given word length W (including sign).
+/// Returns the scale used (for inspection / packed storage).
+pub fn fixed_fake_quant(data: &mut [f32], w_bits: u32) -> f32 {
+    assert!(w_bits >= 2 && w_bits <= 24);
+    let qmax = ((1i64 << (w_bits - 1)) - 1) as f32;
+    let absmax = crate::quant::block::block_absmax(data);
+    if absmax == 0.0 {
+        return 0.0;
+    }
+    let scale = absmax / qmax;
+    let inv = 1.0 / scale;
+    for x in data.iter_mut() {
+        if x.is_nan() {
+            *x = 0.0;
+            continue;
+        }
+        let q = (*x * inv).round_ties_even().clamp(-qmax, qmax);
+        *x = q * scale;
+    }
+    scale
+}
+
+/// Integer codes + scale (for packed storage / integer-domain kernels).
+pub fn fixed_encode(data: &[f32], w_bits: u32) -> (Vec<i32>, f32) {
+    let qmax = ((1i64 << (w_bits - 1)) - 1) as f32;
+    let absmax = crate::quant::block::block_absmax(data);
+    if absmax == 0.0 {
+        return (vec![0; data.len()], 0.0);
+    }
+    let scale = absmax / qmax;
+    let inv = 1.0 / scale;
+    let codes = data
+        .iter()
+        .map(|&x| {
+            if x.is_nan() {
+                0
+            } else {
+                (x * inv).round_ties_even().clamp(-qmax, qmax) as i32
+            }
+        })
+        .collect();
+    (codes, scale)
+}
+
+pub fn fixed_decode(codes: &[i32], scale: f32) -> Vec<f32> {
+    codes.iter().map(|&c| c as f32 * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, llmish_values};
+
+    #[test]
+    fn preserves_absmax() {
+        let mut xs = vec![0.5, -2.0, 1.0];
+        fixed_fake_quant(&mut xs, 8);
+        assert_eq!(xs[1], -2.0); // absmax maps exactly
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let mut xs = vec![0.0; 4];
+        assert_eq!(fixed_fake_quant(&mut xs, 8), 0.0);
+        assert!(xs.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        check("fixed enc/dec == fake", 100, |rng| {
+            let xs = llmish_values(rng, 64, 1.0, 0.05);
+            let mut fake = xs.clone();
+            fixed_fake_quant(&mut fake, 8);
+            let (codes, scale) = fixed_encode(&xs, 8);
+            let dec = fixed_decode(&codes, scale);
+            crate::util::check::close_slice(&fake, &dec, 1e-6, "fixed")
+        });
+    }
+
+    #[test]
+    fn outliers_crush_inliers() {
+        // the paper's core failure mode: one outlier destroys resolution
+        let mut xs = vec![0.01, -0.02, 0.015, 100.0];
+        fixed_fake_quant(&mut xs, 8);
+        // inliers collapse to 0 because step = 100/127 ≈ 0.79
+        assert_eq!(xs[0], 0.0);
+        assert_eq!(xs[1], 0.0);
+        assert_eq!(xs[3], 100.0);
+    }
+
+    #[test]
+    fn idempotent() {
+        check("fixed idempotent-ish", 50, |rng| {
+            let xs = llmish_values(rng, 32, 1.0, 0.0);
+            let mut q1 = xs.clone();
+            fixed_fake_quant(&mut q1, 8);
+            let mut q2 = q1.clone();
+            fixed_fake_quant(&mut q2, 8);
+            crate::util::check::close_slice(&q1, &q2, 1e-5, "idem")
+        });
+    }
+}
+
+#[cfg(test)]
+mod fixedrow_tests {
+    use crate::quant::config::QFormat;
+    use crate::quant::fake_quant;
+    use crate::util::check::{check, close_slice, llmish_values};
+    use crate::Tensor;
+
+    #[test]
+    fn per_row_scales_are_independent() {
+        // an outlier in row 0 must not affect row 1 (unlike per-tensor Fixed)
+        let mut data = vec![0.01f32; 16];
+        data[0] = 100.0;
+        let mut t = Tensor::new(&[2, 8], data);
+        t.row_mut(1).copy_from_slice(&[0.01; 8]);
+        let q_row = fake_quant(&t, QFormat::FixedRow { w: 8 });
+        let q_tensor = fake_quant(&t, QFormat::Fixed { w: 8 });
+        assert!(q_row.row(1)[3] > 0.0, "row 1 survived under per-row scales");
+        assert_eq!(q_tensor.row(1)[3], 0.0, "row 1 crushed under per-tensor");
+    }
+
+    #[test]
+    fn fixedrow_idempotent_and_packs() {
+        check("fixedrow idempotent+pack", 40, |rng| {
+            let t = Tensor::new(&[3, 16], llmish_values(rng, 48, 1.0, 0.05));
+            let fmt = QFormat::FixedRow { w: 8 };
+            let q1 = fake_quant(&t, fmt);
+            let q2 = fake_quant(&q1, fmt);
+            close_slice(&q1.data, &q2.data, 1e-6, "idem")?;
+            let dec = crate::quant::qtensor::decode(&crate::quant::qtensor::encode(&t, fmt));
+            close_slice(&q1.data, &dec.data, 1e-6, "pack")
+        });
+    }
+
+    #[test]
+    fn parse_roundtrip_fixedrow() {
+        let f = QFormat::FixedRow { w: 4 };
+        assert_eq!(QFormat::parse(&f.name()), Some(f));
+    }
+}

@@ -1,0 +1,282 @@
+//! Scalar MiniFloat / Denormalised-MiniFloat rounding (paper §3.1, Appx. C).
+//!
+//! `round_minifloat(x, E, M, bias)` rounds to the nearest representable
+//! IEEE-style minifloat with subnormals and a *saturating* top exponent
+//! (no ±inf — `e = 2^E - 1` is an ordinary binade, Eq. 2 of the paper).
+//! `round_dmf(x, E, M, bias)` is the denormalised variant with no implicit
+//! leading bit (Eq. 3). Both use round-to-nearest-even, clamp NaN→0 and
+//! ±inf→±max, and are the shared element primitive for BM (shared-bias
+//! blocks reuse `round_minifloat` with the block bias).
+
+/// floor(log2(x)) for finite positive x, exact via bit manipulation.
+#[inline]
+pub fn ilogb(x: f32) -> i32 {
+    debug_assert!(x > 0.0 && x.is_finite());
+    let bits = x.to_bits();
+    let e = ((bits >> 23) & 0xff) as i32;
+    if e == 0 {
+        // f32 subnormal: normalise mantissa
+        // value = m * 2^-149, highest set bit of m gives the exponent
+        let m = bits & 0x7f_ffff;
+        (31 - m.leading_zeros() as i32) - 149
+    } else {
+        e - 127
+    }
+}
+
+/// Largest finite MiniFloat(E, M, bias) value: 2^(2^E-1-bias) * (2 - 2^-M).
+#[inline]
+pub fn minifloat_max(e_bits: u32, m_bits: u32, bias: i32) -> f32 {
+    let emax = (1i64 << e_bits) - 1;
+    exp2i((emax as i32) - bias) * (2.0 - exp2i(-(m_bits as i32)))
+}
+
+/// Largest finite DMF(E, M, bias) value: 2^(2^E-1-bias) * (2^M-1)/2^M.
+#[inline]
+pub fn dmf_max(e_bits: u32, m_bits: u32, bias: i32) -> f32 {
+    let emax = (1i64 << e_bits) - 1;
+    exp2i((emax as i32) - bias) * (((1u64 << m_bits) - 1) as f32) * exp2i(-(m_bits as i32))
+}
+
+/// 2^k as f32, exact for the huge k range we need (including subnormal results).
+#[inline]
+pub fn exp2i(k: i32) -> f32 {
+    if k >= -126 && k <= 127 {
+        f32::from_bits(((k + 127) as u32) << 23)
+    } else if k < -126 && k >= -149 {
+        f32::from_bits(1u32 << (k + 149) as u32)
+    } else if k < -149 {
+        0.0
+    } else {
+        f32::INFINITY
+    }
+}
+
+/// Round to nearest MiniFloat(E, M, bias); saturating, RNE.
+pub fn round_minifloat(x: f32, e_bits: u32, m_bits: u32, bias: i32) -> f32 {
+    if x.is_nan() {
+        return 0.0;
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let ax = x.abs();
+    let max_val = minifloat_max(e_bits, m_bits, bias);
+    if ax >= max_val {
+        return sign * max_val;
+    }
+    let emax_field = ((1i64 << e_bits) - 1) as i32;
+    let e_unb = ilogb(ax);
+    // exponent field the value lands in (0 = subnormal binade)
+    let e_field = (e_unb + bias).clamp(0, emax_field);
+    // effective exponent of the binade: subnormals share 2^(1-bias)
+    let e_eff = if e_field == 0 { 1 - bias } else { e_field - bias };
+    // quantisation step in this binade
+    let step = exp2i(e_eff - m_bits as i32);
+    let q = (ax / step).round_ties_even() * step;
+    // carry into the next binade is fine: lands exactly on a power of two,
+    // and ax < max_val guarantees q <= max_val.
+    sign * q.min(max_val)
+}
+
+/// Round to nearest DMF(E, M, bias): x = ±2^(e-bias) * m/2^M, no implicit bit.
+pub fn round_dmf(x: f32, e_bits: u32, m_bits: u32, bias: i32) -> f32 {
+    if x.is_nan() {
+        return 0.0;
+    }
+    if x == 0.0 {
+        return 0.0;
+    }
+    let sign = if x < 0.0 { -1.0f32 } else { 1.0 };
+    let ax = x.abs();
+    let max_val = dmf_max(e_bits, m_bits, bias);
+    if ax >= max_val {
+        return sign * max_val;
+    }
+    let emax_field = ((1i64 << e_bits) - 1) as i32;
+    // smallest exponent e such that (2^M - 1) * 2^(e - bias - M) >= ax,
+    // i.e. e >= log2(ax / (2^M - 1)) + bias + M. Derive from ilogb and fix up.
+    let m_full = ((1u64 << m_bits) - 1) as f32;
+    let mut e_field = (ilogb(ax) + bias + 1).clamp(0, emax_field);
+    // fix-up: ensure coverage (at most a couple of steps)
+    while e_field > 0 && ax <= m_full * exp2i(e_field - 1 - bias - m_bits as i32) {
+        e_field -= 1;
+    }
+    while e_field < emax_field && ax > m_full * exp2i(e_field - bias - m_bits as i32) {
+        e_field += 1;
+    }
+    let step = exp2i(e_field - bias - m_bits as i32);
+    let cand1 = (ax / step).round_ties_even() * step;
+    // the next-finer grid's maximum ((2^M-1)·step/2) lies between this
+    // grid's points and can be nearer (e.g. E4M3: 7.2 → 7, not 8)
+    if e_field > 0 {
+        let cand2 = m_full * step * 0.5;
+        if (cand2 - ax).abs() < (cand1 - ax).abs() {
+            return sign * cand2;
+        }
+    }
+    sign * cand1
+}
+
+/// Enumerate all non-negative representable MiniFloat values (test oracle).
+pub fn enumerate_minifloat(e_bits: u32, m_bits: u32, bias: i32) -> Vec<f32> {
+    let mut vals = vec![0.0f32];
+    let emax = ((1i64 << e_bits) - 1) as i32;
+    for e in 0..=emax {
+        for m in 0..(1i64 << m_bits) {
+            let frac = m as f32 * exp2i(-(m_bits as i32));
+            let v = if e == 0 {
+                exp2i(1 - bias) * frac
+            } else {
+                exp2i(e - bias) * (1.0 + frac)
+            };
+            vals.push(v);
+        }
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    vals
+}
+
+/// Enumerate all non-negative representable DMF values (test oracle).
+pub fn enumerate_dmf(e_bits: u32, m_bits: u32, bias: i32) -> Vec<f32> {
+    let mut vals = Vec::new();
+    let emax = ((1i64 << e_bits) - 1) as i32;
+    for e in 0..=emax {
+        for m in 0..(1i64 << m_bits) {
+            vals.push(exp2i(e - bias) * m as f32 * exp2i(-(m_bits as i32)));
+        }
+    }
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    vals
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::check;
+
+    fn nearest_in(vals: &[f32], ax: f32) -> f32 {
+        // nearest with ties-to-even on the value grid: emulate by taking the
+        // two neighbours and preferring the one the RNE mantissa picks;
+        // for testing we accept either on exact ties.
+        let mut best = vals[0];
+        let mut bd = f32::INFINITY;
+        for &v in vals {
+            let d = (v - ax).abs();
+            if d < bd {
+                bd = d;
+                best = v;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn ilogb_matches_log2() {
+        for &x in &[1.0f32, 1.5, 2.0, 0.75, 3.9999, 1e-20, 1e20, 1.1754944e-38] {
+            assert_eq!(ilogb(x), x.log2().floor() as i32, "x={x}");
+        }
+        // exact powers of two
+        for k in -40..40 {
+            assert_eq!(ilogb(exp2i(k)), k);
+        }
+    }
+
+    #[test]
+    fn e4m3_known_values() {
+        // E=4, M=3, bias=7: classic MiniFloat. max = 2^8 * (2 - 1/8) = 480
+        let max = minifloat_max(4, 3, 7);
+        assert_eq!(max, 480.0);
+        assert_eq!(round_minifloat(1000.0, 4, 3, 7), 480.0);
+        assert_eq!(round_minifloat(-1000.0, 4, 3, 7), -480.0);
+        assert_eq!(round_minifloat(1.0, 4, 3, 7), 1.0);
+        assert_eq!(round_minifloat(1.0625, 4, 3, 7), 1.0); // RNE tie: m=0.5 → even (0)
+        assert_eq!(round_minifloat(1.19, 4, 3, 7), 1.25); // 9.52 steps → 10
+        assert_eq!(round_minifloat(1.15, 4, 3, 7), 1.125); // 9.2 steps → 9
+        // subnormal region: step = 2^(1-7-3) = 2^-9
+        assert_eq!(round_minifloat(exp2i(-9), 4, 3, 7), exp2i(-9));
+        assert_eq!(round_minifloat(exp2i(-11), 4, 3, 7), 0.0); // below half-step → 0? 2^-11 = step/4 < step/2
+    }
+
+    #[test]
+    fn matches_enumeration_minifloat() {
+        let vals = enumerate_minifloat(4, 3, 7);
+        check("minifloat nearest", 400, |rng| {
+            let x = rng.normal_with(0.0, 50.0);
+            let got = round_minifloat(x, 4, 3, 7).abs();
+            let want = nearest_in(&vals, x.abs());
+            // allow exact ties to go either way
+            let d_got = (got - x.abs()).abs();
+            let d_want = (want - x.abs()).abs();
+            if (d_got - d_want).abs() <= f32::EPSILON * x.abs().max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("x={x} got={got} want={want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn matches_enumeration_dmf() {
+        let vals = enumerate_dmf(4, 3, 7);
+        check("dmf nearest", 400, |rng| {
+            let x = rng.normal_with(0.0, 5.0);
+            let got = round_dmf(x, 4, 3, 7).abs();
+            let want = nearest_in(&vals, x.abs());
+            let d_got = (got - x.abs()).abs();
+            let d_want = (want - x.abs()).abs();
+            if (d_got - d_want).abs() <= f32::EPSILON * x.abs().max(1.0) {
+                Ok(())
+            } else {
+                Err(format!("x={x} got={got} want={want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn idempotent() {
+        check("minifloat idempotent", 300, |rng| {
+            let x = rng.normal_with(0.0, 10.0);
+            let q = round_minifloat(x, 4, 3, 7);
+            let qq = round_minifloat(q, 4, 3, 7);
+            if q == qq {
+                Ok(())
+            } else {
+                Err(format!("x={x} q={q} qq={qq}"))
+            }
+        });
+    }
+
+    #[test]
+    fn dmf_range_narrower_than_minifloat() {
+        // paper: DMF trades range for small-value precision
+        assert!(dmf_max(4, 3, 7) < minifloat_max(4, 3, 7));
+        // DMF represents 2^(0-7)*1/8 = 2^-10 exactly; MiniFloat's smallest
+        // subnormal is 2^(1-7)*1/8 = 2^-9.
+        assert_eq!(round_dmf(exp2i(-10), 4, 3, 7), exp2i(-10));
+    }
+
+    #[test]
+    fn handles_nan_inf() {
+        assert_eq!(round_minifloat(f32::NAN, 4, 3, 7), 0.0);
+        assert_eq!(round_minifloat(f32::INFINITY, 4, 3, 7), 480.0);
+        assert_eq!(round_dmf(f32::NEG_INFINITY, 4, 3, 7), -dmf_max(4, 3, 7));
+    }
+
+    #[test]
+    fn monotone() {
+        check("minifloat monotone", 200, |rng| {
+            let a = rng.normal_with(0.0, 20.0);
+            let b = a + rng.f32() * 5.0;
+            let (qa, qb) = (round_minifloat(a, 4, 3, 7), round_minifloat(b, 4, 3, 7));
+            if qa <= qb {
+                Ok(())
+            } else {
+                Err(format!("a={a} b={b} qa={qa} qb={qb}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,173 @@
+//! Quantised GEMM.
+//!
+//! Two execution paths that must agree (tested):
+//!
+//! 1. **Fake-quant path** (`qmatmul`): round both operands to the format's
+//!    representable set, then run the optimized f32 GEMM. This is the
+//!    paper's evaluation semantics and our model hot path.
+//! 2. **Block-domain path** (`bfp_matmul_blocked`): the ASIC datapath of
+//!    Eq. 4 — integer mantissa multiply-accumulate within each block pair
+//!    plus a single shared-exponent add, no per-element shifting. Exact
+//!    agreement with path 1 (up to f32 summation order) justifies the
+//!    arithmetic-density numbers of Table 6.
+
+use super::block::block_ranges;
+use super::config::{GemmQuant, QFormat};
+use crate::tensor::matmul::{matmul, matmul_bt};
+use crate::tensor::Tensor;
+
+/// `act [m,k] @ weight [k,n]` with both operands fake-quantised.
+/// Blocks run along the contraction dim: rows of `act`, columns of `weight`
+/// (i.e. rows of `weight`ᵀ) — the paper's "slice along matrix row".
+pub fn qmatmul(act: &Tensor, weight: &Tensor, q: GemmQuant) -> Tensor {
+    let qa = super::fake_quant(act, q.act);
+    // quantise weight along its k dimension: transpose, quantise rows, use B^T GEMM
+    match q.weight {
+        QFormat::Fp32 => matmul(&qa, weight),
+        _ => {
+            let wt = weight.t();
+            let qwt = super::fake_quant(&wt, q.weight);
+            matmul_bt(&qa, &qwt)
+        }
+    }
+}
+
+/// Same as [`qmatmul`] but the weight is already transposed ([n, k]) and
+/// possibly pre-quantised — the layout the model's weight cache uses so the
+/// per-token hot path never re-transposes or re-quantises weights.
+pub fn qmatmul_pret(act: &Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat) -> Tensor {
+    let qa = super::fake_quant(act, act_fmt);
+    matmul_bt(&qa, weight_t_quantised)
+}
+
+/// Activation-side in-place variant to avoid the clone in the hot loop.
+pub fn qmatmul_pret_inplace(act: &mut Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat) -> Tensor {
+    super::fake_quant_in_place(act, act_fmt);
+    matmul_bt(act, weight_t_quantised)
+}
+
+/// Integer-domain BFP GEMM (Eq. 4): `act [m,k] @ weight_t [n,k]`.
+/// Both operands are BFP-encoded per block of `n_blk` along k; each block
+/// pair contributes `2^(ea+eb) * Σ ma·mb` with a single exponent add.
+pub fn bfp_matmul_blocked(
+    act: &Tensor,
+    weight_t: &Tensor,
+    e_bits: u32,
+    m_bits: u32,
+    n_blk: usize,
+) -> Tensor {
+    let (m, k) = act.dims2();
+    let (n, k2) = weight_t.dims2();
+    assert_eq!(k, k2);
+    // encode rows once
+    let enc_rows = |t: &Tensor| -> Vec<(Vec<i32>, Vec<i32>)> {
+        // per row: (block exponents, mantissas)
+        (0..t.shape[0])
+            .map(|i| {
+                let row = t.row(i);
+                let mut es = Vec::new();
+                let mut ms = Vec::with_capacity(k);
+                for (s, e) in block_ranges(k, n_blk) {
+                    let (be, bm) = super::bfp::bfp_encode_block(&row[s..e], e_bits, m_bits);
+                    es.push(be);
+                    ms.extend(bm);
+                }
+                (es, ms)
+            })
+            .collect()
+    };
+    let a_enc = enc_rows(act);
+    let w_enc = enc_rows(weight_t);
+    let mut out = vec![0.0f32; m * n];
+    let blocks: Vec<(usize, usize)> = block_ranges(k, n_blk).collect();
+    for i in 0..m {
+        let (ae, am) = &a_enc[i];
+        for j in 0..n {
+            let (we, wm) = &w_enc[j];
+            let mut acc = 0.0f64;
+            for (bi, &(s, e)) in blocks.iter().enumerate() {
+                // integer MAC within the block — the cheap ASIC inner loop
+                let mut isum: i64 = 0;
+                for t in s..e {
+                    isum += am[t] as i64 * wm[t] as i64;
+                }
+                // one shared-exponent scale per block pair
+                let shift = (ae[bi] + we[bi]) - 2 * (m_bits as i32 - 1);
+                acc += isum as f64 * exp2i_f64(shift);
+            }
+            out[i * n + j] = acc as f32;
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+#[inline]
+fn exp2i_f64(k: i32) -> f64 {
+    (2.0f64).powi(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::presets;
+    use crate::util::check::{check, close_slice, llmish_values};
+
+    #[test]
+    fn fp32_qmatmul_is_plain_matmul() {
+        let mut rng = crate::util::rng::Pcg32::new(1);
+        let a = Tensor::randn(&[3, 8], 1.0, &mut rng);
+        let b = Tensor::randn(&[8, 5], 1.0, &mut rng);
+        let q = qmatmul(&a, &b, GemmQuant::fp32());
+        let p = matmul(&a, &b);
+        close_slice(&q.data, &p.data, 1e-6, "fp32").unwrap();
+    }
+
+    #[test]
+    fn block_domain_matches_fake_quant_path() {
+        check("bfp eq4 == fake-quant", 20, |rng| {
+            let (m, k, n) = (2 + rng.below(4), 32, 2 + rng.below(4));
+            let a = Tensor::new(&[m, k], llmish_values(rng, m * k, 1.0, 0.05));
+            let w = Tensor::new(&[n, k], llmish_values(rng, n * k, 0.3, 0.0));
+            let fmt = presets::bfp_w(6);
+            let (e, mb, nb) = match fmt {
+                QFormat::Bfp { e, m, n } => (e, m, n as usize),
+                _ => unreachable!(),
+            };
+            let fake = {
+                let qa = crate::quant::fake_quant(&a, fmt);
+                let qw = crate::quant::fake_quant(&w, fmt);
+                matmul_bt(&qa, &qw)
+            };
+            let blocked = bfp_matmul_blocked(&a, &w, e, mb, nb);
+            close_slice(&fake.data, &blocked.data, 1e-5, "eq4")
+        });
+    }
+
+    #[test]
+    fn pret_matches_direct() {
+        check("pret == direct", 20, |rng| {
+            let (m, k, n) = (3, 16, 4);
+            let a = Tensor::new(&[m, k], llmish_values(rng, m * k, 1.0, 0.05));
+            let w = Tensor::new(&[k, n], llmish_values(rng, k * n, 0.3, 0.0));
+            let fmt = presets::bfp_w(6);
+            let direct = qmatmul(&a, &w, GemmQuant::uniform(fmt));
+            let wt_q = crate::quant::fake_quant(&w.t(), fmt);
+            let pret = qmatmul_pret(&a, &wt_q, fmt);
+            close_slice(&direct.data, &pret.data, 1e-6, "pret")
+        });
+    }
+
+    #[test]
+    fn quantised_gemm_error_shrinks_with_bits() {
+        let mut rng = crate::util::rng::Pcg32::new(9);
+        let a = Tensor::new(&[8, 64], llmish_values(&mut rng, 512, 1.0, 0.02));
+        let w = Tensor::new(&[64, 8], llmish_values(&mut rng, 512, 0.3, 0.0));
+        let exact = matmul(&a, &w);
+        let err = |bits| {
+            let q = qmatmul(&a, &w, GemmQuant::uniform(presets::bfp_w(bits)));
+            crate::util::stats::mse(&exact.data, &q.data)
+        };
+        let (e4, e6, e8) = (err(4), err(6), err(8));
+        assert!(e8 < e6 && e6 < e4, "{e4} {e6} {e8}");
+    }
+}

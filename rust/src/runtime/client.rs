@@ -1,0 +1,206 @@
+//! PJRT client wrapper + artifact registry.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns them (see /opt/xla-example/README.md).
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact '{0}' not found in manifest")]
+    MissingArtifact(String),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(format!("{e}"))
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub fmt: String,
+    pub seq: usize,
+    pub n_params: usize,
+}
+
+/// PJRT CPU client + artifact registry. Compiled executables are owned by
+/// the typed wrappers in [`super::exec`]; compilation happens once per
+/// wrapper construction (the PJRT executable type is not cloneable).
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads manifest.json).
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let mut manifest = HashMap::new();
+        if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)?;
+            let j = Json::parse(&text).map_err(RuntimeError::Manifest)?;
+            let arts = j
+                .get("artifacts")
+                .ok_or_else(|| RuntimeError::Manifest("no 'artifacts' key".into()))?;
+            if let Json::Obj(m) = arts {
+                for (name, meta) in m {
+                    let file = meta
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .unwrap_or_default()
+                        .to_string();
+                    manifest.insert(
+                        name.clone(),
+                        ArtifactMeta {
+                            name: name.clone(),
+                            file: artifacts_dir.join(file),
+                            kind: meta
+                                .get("kind")
+                                .and_then(|k| k.as_str())
+                                .unwrap_or("")
+                                .to_string(),
+                            fmt: meta
+                                .get("fmt")
+                                .and_then(|k| k.as_str())
+                                .unwrap_or("fp32")
+                                .to_string(),
+                            seq: meta.get("seq").and_then(|k| k.as_f64()).unwrap_or(0.0)
+                                as usize,
+                            n_params: meta
+                                .get("n_params")
+                                .and_then(|k| k.as_f64())
+                                .unwrap_or(0.0) as usize,
+                        },
+                    );
+                }
+            }
+        }
+        Ok(Runtime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Load + compile an artifact by manifest name.
+    pub fn compile(&mut self, name: &str) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.to_string()))?;
+        if !meta.file.exists() {
+            return Err(RuntimeError::MissingArtifact(format!(
+                "{name} (file {} missing — run `make artifacts`)",
+                meta.file.display()
+            )));
+        }
+        let file = meta.file.clone();
+        self.compile_file(&file)
+    }
+
+    /// Compile a bare .hlo.txt file (no manifest entry).
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable, RuntimeError> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| RuntimeError::Manifest("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+// ---- literal conversion helpers ----
+
+pub fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal, RuntimeError> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+pub fn vec_to_literal(v: &[f32], shape: &[usize]) -> Result<xla::Literal, RuntimeError> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(v).reshape(&dims)?)
+}
+
+pub fn tokens_to_literal(tokens: &[usize]) -> Result<xla::Literal, RuntimeError> {
+    let v: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    let dims = [tokens.len() as i64];
+    Ok(xla::Literal::vec1(&v).reshape(&dims)?)
+}
+
+pub fn scalar_literal(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn literal_to_vec(l: &xla::Literal) -> Result<Vec<f32>, RuntimeError> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> PathBuf {
+        crate::util::artifacts_dir()
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn open_missing_dir_is_ok_but_empty() {
+        let rt = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap();
+        assert!(rt.artifact_names().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_error() {
+        let mut rt = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap();
+        match rt.compile("nope") {
+            Err(RuntimeError::MissingArtifact(_)) => {}
+            Err(other) => panic!("expected MissingArtifact, got {other}"),
+            Ok(_) => panic!("expected MissingArtifact, got Ok"),
+        }
+    }
+
+    #[test]
+    fn manifest_parses_when_present() {
+        if !have_artifacts() {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open(&artifacts()).unwrap();
+        assert!(rt.artifact_names().iter().any(|n| n.starts_with("lm_fwd")));
+        let meta = rt.meta("train_step_golden").unwrap();
+        assert_eq!(meta.kind, "train_step");
+        assert!(meta.n_params > 0);
+    }
+}

@@ -1,0 +1,175 @@
+//! Typed executable wrappers over the PJRT runtime.
+//!
+//! Each wrapper owns the compiled executable plus the signature metadata
+//! (sequence length, parameter count) and converts between `Tensor`/token
+//! slices and XLA literals. Parameters ride as a flat literal list in the
+//! canonical order shared with `python/compile/model.py::param_names` and
+//! `rust Params::flat_views`.
+
+use super::client::{
+    scalar_literal, tensor_to_literal, tokens_to_literal, Runtime, RuntimeError,
+};
+use crate::model::params::Params;
+use crate::tensor::Tensor;
+
+fn params_to_literals(params: &Params) -> Result<Vec<xla::Literal>, RuntimeError> {
+    let mut lits = Vec::new();
+    let d = params.cfg.d_model;
+    for (name, buf) in params.flat_views() {
+        // shapes: embeddings/weights are 2-D, the rest 1-D
+        let lit = if name == "tok_emb" {
+            super::client::vec_to_literal(buf, &[params.cfg.vocab_size, d])?
+        } else if name == "pos_emb" {
+            super::client::vec_to_literal(buf, &[params.cfg.max_seq, d])?
+        } else if name.ends_with(".w1") {
+            super::client::vec_to_literal(buf, &[d, params.cfg.d_ff])?
+        } else if name.ends_with(".w2") {
+            super::client::vec_to_literal(buf, &[params.cfg.d_ff, d])?
+        } else if name.ends_with(".wq")
+            || name.ends_with(".wk")
+            || name.ends_with(".wv")
+            || name.ends_with(".wo")
+        {
+            super::client::vec_to_literal(buf, &[d, d])?
+        } else {
+            super::client::vec_to_literal(buf, &[buf.len()])?
+        };
+        lits.push(lit);
+    }
+    Ok(lits)
+}
+
+fn literals_into_params(lits: Vec<xla::Literal>, params: &mut Params) -> Result<(), RuntimeError> {
+    let views = params.flat_views_mut();
+    if lits.len() != views.len() {
+        return Err(RuntimeError::Shape(format!(
+            "expected {} param outputs, got {}",
+            views.len(),
+            lits.len()
+        )));
+    }
+    for ((name, buf), lit) in views.into_iter().zip(lits) {
+        let v = lit.to_vec::<f32>()?;
+        if v.len() != buf.len() {
+            return Err(RuntimeError::Shape(format!(
+                "param '{name}': {} vs {}",
+                v.len(),
+                buf.len()
+            )));
+        }
+        buf.copy_from_slice(&v);
+    }
+    Ok(())
+}
+
+/// Forward-pass executable: tokens → logits.
+pub struct LmFwdExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl LmFwdExec {
+    pub fn load(rt: &mut Runtime, name: &str, vocab: usize) -> Result<LmFwdExec, RuntimeError> {
+        let seq = rt
+            .meta(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))?
+            .seq;
+        let exe = rt.compile(name)?;
+        Ok(LmFwdExec { exe, seq, vocab })
+    }
+
+    /// Run: tokens (len == seq) + params → logits [seq, vocab].
+    pub fn run(&self, tokens: &[usize], params: &Params) -> Result<Tensor, RuntimeError> {
+        if tokens.len() != self.seq {
+            return Err(RuntimeError::Shape(format!(
+                "tokens len {} != artifact seq {}",
+                tokens.len(),
+                self.seq
+            )));
+        }
+        let mut args = vec![tokens_to_literal(tokens)?];
+        args.extend(params_to_literals(params)?);
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        let data = logits.to_vec::<f32>()?;
+        Ok(Tensor::new(&[self.seq, self.vocab], data))
+    }
+}
+
+/// Train-step executable: (tokens, targets, lr, params) → (loss, params').
+pub struct TrainStepExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub seq: usize,
+}
+
+impl TrainStepExec {
+    pub fn load(rt: &mut Runtime, name: &str) -> Result<TrainStepExec, RuntimeError> {
+        let seq = rt
+            .meta(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))?
+            .seq;
+        let exe = rt.compile(name)?;
+        Ok(TrainStepExec { exe, seq })
+    }
+
+    /// One step; updates `params` in place, returns the loss.
+    pub fn step(
+        &self,
+        tokens: &[usize],
+        targets: &[usize],
+        lr: f32,
+        params: &mut Params,
+    ) -> Result<f64, RuntimeError> {
+        if tokens.len() != self.seq || targets.len() != self.seq {
+            return Err(RuntimeError::Shape(format!(
+                "tokens/targets len {}/{} != artifact seq {}",
+                tokens.len(),
+                targets.len(),
+                self.seq
+            )));
+        }
+        let mut args = vec![
+            tokens_to_literal(tokens)?,
+            tokens_to_literal(targets)?,
+            scalar_literal(lr),
+        ];
+        args.extend(params_to_literals(params)?);
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let mut outs = result.to_tuple()?;
+        if outs.is_empty() {
+            return Err(RuntimeError::Shape("empty train_step output".into()));
+        }
+        let loss = outs.remove(0).to_vec::<f32>()?[0] as f64;
+        literals_into_params(outs, params)?;
+        Ok(loss)
+    }
+}
+
+/// Pallas quantised-GEMM executable: (x, w) → y.
+pub struct QmatmulExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl QmatmulExec {
+    pub fn load(rt: &mut Runtime, name: &str, m: usize, k: usize, n: usize) -> Result<Self, RuntimeError> {
+        let exe = rt.compile(name)?;
+        Ok(QmatmulExec { exe, m, k, n })
+    }
+
+    pub fn run(&self, x: &Tensor, w: &Tensor) -> Result<Tensor, RuntimeError> {
+        if x.shape != vec![self.m, self.k] || w.shape != vec![self.k, self.n] {
+            return Err(RuntimeError::Shape(format!(
+                "qmatmul expects [{},{}]x[{},{}], got {:?}x{:?}",
+                self.m, self.k, self.k, self.n, x.shape, w.shape
+            )));
+        }
+        let args = [tensor_to_literal(x)?, tensor_to_literal(w)?];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let y = result.to_tuple1()?;
+        Ok(Tensor::new(&[self.m, self.n], y.to_vec::<f32>()?))
+    }
+}

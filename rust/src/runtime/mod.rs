@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them on
+//! the CPU PJRT client (the `xla` crate). This is the bridge between the
+//! Rust coordinator and the JAX/Pallas compute graphs — python never runs
+//! at request time.
+
+pub mod client;
+pub mod exec;
+
+pub use client::{Runtime, RuntimeError};
+pub use exec::{LmFwdExec, QmatmulExec, TrainStepExec};

@@ -1,0 +1,14 @@
+//! Mixed-precision quantisation search (paper §3.3 / §4.4): a TPE engine
+//! (Optuna substitute), the per-tensor search space, the `acc + α·mem`
+//! objective with its hardware-aware extension (Appendix H), and the
+//! search runner producing Figure 3/8/9 bit-width profiles.
+
+pub mod objective;
+pub mod runner;
+pub mod space;
+pub mod tpe;
+
+pub use objective::Objective;
+pub use runner::{run_search, SearchConfig, SearchResult};
+pub use space::SearchSpace;
+pub use tpe::{Tpe, TpeConfig};

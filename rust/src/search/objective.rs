@@ -1,0 +1,152 @@
+//! Search objectives.
+//!
+//! Software objective (§3.3):   `O_f = acc + α·mem`
+//! Hardware-aware (Appendix H): `O_f = acc + α₁·mem + α₂·tps + α₃·tpl`
+//!
+//! α is auto-calibrated: run with α=1 until convergence, then set
+//! `α = acc_c / mem_c` so the two terms are balanced at the converged
+//! point (paper §3.3).
+
+use crate::density::arith::CostModel;
+use crate::density::flops::layer_gemms;
+use crate::density::memory::model_memory_density;
+use crate::model::config::ModelConfig;
+use crate::model::plan::QuantPlan;
+use crate::quant::config::QFormat;
+
+/// Memory density of a plan over the model's GEMM operand inventory.
+pub fn plan_memory_density(cfg: &ModelConfig, plan: &QuantPlan, seq: usize) -> f64 {
+    let mut tensors: Vec<(usize, QFormat)> = Vec::new();
+    for li in 0..cfg.n_layers {
+        for g in layer_gemms(cfg, seq) {
+            let q = plan.site(li, g.index as u8);
+            tensors.push((g.act_numel_per_tok * seq, q.act));
+            let wn = if g.weight_numel > 0 {
+                g.weight_numel
+            } else {
+                g.act_numel_per_tok * seq
+            };
+            tensors.push((wn, q.weight));
+        }
+    }
+    model_memory_density(&tensors)
+}
+
+/// Simple throughput model: tokens/s ∝ 1 / Σ (MACs · area·time-weight).
+/// We take per-MAC latency-area product proportional to the LUT area of
+/// the chosen format's MAC (a unit-pipelined array: more LUTs per MAC =
+/// fewer MACs per mm² per cycle). TPS is normalised to the FP32 model.
+pub fn plan_tps(cfg: &ModelConfig, plan: &QuantPlan, seq: usize, cost: &CostModel) -> f64 {
+    let mut weighted = 0.0f64;
+    let mut fp32_weighted = 0.0f64;
+    let fp32_area = cost.area(QFormat::Fp32);
+    for li in 0..cfg.n_layers {
+        for g in layer_gemms(cfg, seq) {
+            let q = plan.site(li, g.index as u8);
+            // MAC area dominated by the wider of the two operand formats
+            let area = cost.area(q.act).max(cost.area(q.weight));
+            weighted += g.macs_per_tok as f64 * area;
+            fp32_weighted += g.macs_per_tok as f64 * fp32_area;
+        }
+    }
+    fp32_weighted / weighted.max(1e-9)
+}
+
+/// TPS per LUT (area efficiency): tps / total plan area, normalised.
+pub fn plan_tpl(cfg: &ModelConfig, plan: &QuantPlan, seq: usize, cost: &CostModel) -> f64 {
+    let tps = plan_tps(cfg, plan, seq, cost);
+    let mut area = 0.0;
+    let mut fp32_area = 0.0;
+    for li in 0..cfg.n_layers {
+        for g in layer_gemms(cfg, seq) {
+            let q = plan.site(li, g.index as u8);
+            area += cost.area(q.act).max(cost.area(q.weight));
+            fp32_area += cost.area(QFormat::Fp32);
+        }
+    }
+    tps * fp32_area / area.max(1e-9)
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Objective {
+    pub alpha_mem: f64,
+    /// hardware-aware extension (0 = software-only)
+    pub alpha_tps: f64,
+    pub alpha_tpl: f64,
+}
+
+impl Objective {
+    pub fn software(alpha: f64) -> Objective {
+        Objective {
+            alpha_mem: alpha,
+            alpha_tps: 0.0,
+            alpha_tpl: 0.0,
+        }
+    }
+
+    pub fn hardware_aware(a1: f64, a2: f64, a3: f64) -> Objective {
+        Objective {
+            alpha_mem: a1,
+            alpha_tps: a2,
+            alpha_tpl: a3,
+        }
+    }
+
+    pub fn value(
+        &self,
+        acc: f64,
+        cfg: &ModelConfig,
+        plan: &QuantPlan,
+        seq: usize,
+        cost: &CostModel,
+    ) -> f64 {
+        let mut v = acc + self.alpha_mem * plan_memory_density(cfg, plan, seq);
+        if self.alpha_tps != 0.0 {
+            v += self.alpha_tps * plan_tps(cfg, plan, seq, cost);
+        }
+        if self.alpha_tpl != 0.0 {
+            v += self.alpha_tpl * plan_tpl(cfg, plan, seq, cost);
+        }
+        v
+    }
+
+    /// The paper's α calibration: α = acc_c / mem_c at the converged point.
+    pub fn calibrate_alpha(acc_c: f64, mem_c: f64) -> f64 {
+        acc_c / mem_c.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::presets;
+
+    #[test]
+    fn uniform_plan_density_matches_format() {
+        let cfg = ModelConfig::preset("nano");
+        let plan = QuantPlan::uniform(presets::bfp_w(4));
+        let d = plan_memory_density(&cfg, &plan, 64);
+        assert!((d - presets::bfp_w(4).memory_density()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lower_bits_higher_tps() {
+        let cfg = ModelConfig::preset("nano");
+        let cost = crate::density::arith::calibrate();
+        let t4 = plan_tps(&cfg, &QuantPlan::uniform(presets::bfp_w(4)), 64, &cost);
+        let t8 = plan_tps(&cfg, &QuantPlan::uniform(presets::bfp_w(8)), 64, &cost);
+        assert!(t4 > t8, "{t4} vs {t8}");
+        assert!(t8 > 1.0); // both beat fp32
+    }
+
+    #[test]
+    fn objective_combines_terms() {
+        let cfg = ModelConfig::preset("nano");
+        let cost = crate::density::arith::calibrate();
+        let plan = QuantPlan::uniform(presets::bfp_w(6));
+        let sw = Objective::software(0.1).value(0.7, &cfg, &plan, 64, &cost);
+        let hw = Objective::hardware_aware(0.1, 0.01, 0.01).value(0.7, &cfg, &plan, 64, &cost);
+        assert!(hw > sw);
+        assert!((Objective::calibrate_alpha(0.8, 4.0) - 0.2).abs() < 1e-12);
+    }
+}

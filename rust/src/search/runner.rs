@@ -1,0 +1,181 @@
+//! Mixed-precision search runner (§4.4): TPE over per-tensor BFP bit
+//! widths, objective `acc + α·mem`, with the bit-width-distribution
+//! statistics of Figures 3/8/9 (which layers keep high precision across
+//! repeated searches) and the accuracy/memory threshold filter.
+
+use super::objective::{plan_memory_density, Objective};
+use super::space::SearchSpace;
+use super::tpe::{Tpe, TpeConfig};
+use crate::data::tasks::{evaluate, Example, Task};
+use crate::model::params::Params;
+use crate::model::plan::QuantPlan;
+use crate::model::Model;
+
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub trials: usize,
+    pub seq: usize,
+    pub seed: u64,
+    pub threads: usize,
+    /// accept configs within this many accuracy points of FP32
+    pub acc_threshold: f64,
+    /// and with at least this memory density
+    pub mem_threshold: f64,
+    pub objective: Objective,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            trials: 60,
+            seq: 64,
+            seed: 7,
+            threads: 4,
+            acc_threshold: 0.02,
+            mem_threshold: 7.1,
+            objective: Objective::software(0.05),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrialRecord {
+    pub assignment: Vec<usize>,
+    pub accuracy: f64,
+    pub mem_density: f64,
+    pub objective: f64,
+}
+
+#[derive(Debug)]
+pub struct SearchResult {
+    pub history: Vec<TrialRecord>,
+    pub best: Option<TrialRecord>,
+    /// trials passing the accuracy + memory thresholds
+    pub accepted: Vec<TrialRecord>,
+    pub space: SearchSpace,
+}
+
+impl SearchResult {
+    /// Mean assigned bit width per dimension across accepted configs —
+    /// the Figure 3/8/9 histogram. Falls back to the best-half of history
+    /// when the thresholds accept nothing.
+    pub fn bitwidth_profile(&self) -> Vec<(String, f64)> {
+        let pool: Vec<&TrialRecord> = if !self.accepted.is_empty() {
+            self.accepted.iter().collect()
+        } else {
+            let mut sorted: Vec<&TrialRecord> = self.history.iter().collect();
+            sorted.sort_by(|a, b| b.objective.partial_cmp(&a.objective).unwrap());
+            sorted.into_iter().take(self.history.len() / 2 + 1).collect()
+        };
+        self.space
+            .dims
+            .iter()
+            .enumerate()
+            .map(|(d, dim)| {
+                let mean = pool
+                    .iter()
+                    .map(|t| self.space.choices[t.assignment[d]].word_bits() as f64)
+                    .sum::<f64>()
+                    / pool.len() as f64;
+                (dim.name.clone(), mean)
+            })
+            .collect()
+    }
+
+    /// Aggregate the profile per layer (mean over the layer's dims).
+    pub fn layer_bit_profile(&self, n_layers: usize) -> Vec<f64> {
+        let profile = self.bitwidth_profile();
+        let mut sums = vec![0.0; n_layers];
+        let mut counts = vec![0usize; n_layers];
+        for (dim, (_, bits)) in self.space.dims.iter().zip(&profile) {
+            sums[dim.layer] += bits;
+            counts[dim.layer] += 1;
+        }
+        sums.iter()
+            .zip(&counts)
+            .map(|(s, &c)| if c > 0 { s / c as f64 } else { f64::NAN })
+            .collect()
+    }
+}
+
+/// Run a TPE mixed-precision search against a zero-shot task.
+pub fn run_search(
+    params: &Params,
+    space: SearchSpace,
+    task: Task,
+    examples: &[Example],
+    fp32_acc: f64,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    let model_cfg = params.cfg.clone();
+    let cost = crate::density::arith::calibrate();
+    let mut tpe = Tpe::new(space.cards(), cfg.seed, TpeConfig::default());
+    let mut history = Vec::with_capacity(cfg.trials);
+    let mut model = Model::new(params.clone(), QuantPlan::fp32());
+    for _ in 0..cfg.trials {
+        let assignment = tpe.suggest();
+        let plan = space.plan_of(&assignment);
+        model.set_plan(plan.clone());
+        let acc = evaluate(&model, task, examples, cfg.threads).accuracy;
+        let mem = plan_memory_density(&model_cfg, &plan, cfg.seq);
+        let obj = cfg
+            .objective
+            .value(acc, &model_cfg, &plan, cfg.seq, &cost);
+        tpe.observe(assignment.clone(), obj);
+        history.push(TrialRecord {
+            assignment,
+            accuracy: acc,
+            mem_density: mem,
+            objective: obj,
+        });
+    }
+    let accepted: Vec<TrialRecord> = history
+        .iter()
+        .filter(|t| {
+            t.accuracy >= fp32_acc - cfg.acc_threshold && t.mem_density >= cfg.mem_threshold
+        })
+        .cloned()
+        .collect();
+    let best = history
+        .iter()
+        .max_by(|a, b| a.objective.partial_cmp(&b.objective).unwrap())
+        .cloned();
+    SearchResult {
+        history,
+        best,
+        accepted,
+        space,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::generate;
+    use crate::data::vocab::Vocab;
+    use crate::model::config::ModelConfig;
+
+    #[test]
+    fn search_smoke_improves_over_first_trials() {
+        let v = Vocab::build();
+        let cfgm = ModelConfig::preset("nano");
+        let params = Params::init(&cfgm, 3);
+        let exs = generate(Task::Sst2, &v, 77, 24);
+        let space = SearchSpace::bfp_bits(&cfgm, &[4, 6, 8]);
+        let sc = SearchConfig {
+            trials: 18,
+            threads: 4,
+            ..Default::default()
+        };
+        let res = run_search(&params, space, Task::Sst2, &exs, 0.5, &sc);
+        assert_eq!(res.history.len(), 18);
+        let best = res.best.as_ref().unwrap().objective;
+        let first = res.history[0].objective;
+        assert!(best >= first);
+        let profile = res.bitwidth_profile();
+        assert_eq!(profile.len(), 2 * 8 * 2);
+        assert!(profile.iter().all(|(_, b)| (3.0..=8.5).contains(b)));
+        let lp = res.layer_bit_profile(cfgm.n_layers);
+        assert_eq!(lp.len(), 2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Mixed-precision search space: one categorical dimension per quantisable
+//! tensor (each GEMM's weight and activation operand, per layer —
+//! Appendix B.4's "per-tensor basis").
+
+use crate::model::config::ModelConfig;
+use crate::model::plan::{QuantPlan, GEMM_NAMES};
+use crate::quant::config::{presets, GemmQuant, QFormat};
+
+#[derive(Clone, Debug)]
+pub struct Dim {
+    pub layer: usize,
+    pub gemm: u8,
+    /// true = weight operand, false = activation operand
+    pub is_weight: bool,
+    pub name: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct SearchSpace {
+    pub dims: Vec<Dim>,
+    /// the candidate formats each dimension may take
+    pub choices: Vec<QFormat>,
+}
+
+impl SearchSpace {
+    /// Per-tensor BFP bit-width search (the paper's §4.4 setting): every
+    /// operand chooses a BFP word length from `bit_choices`.
+    pub fn bfp_bits(cfg: &ModelConfig, bit_choices: &[u32]) -> SearchSpace {
+        let choices: Vec<QFormat> = bit_choices.iter().map(|&b| presets::bfp_w(b)).collect();
+        let mut dims = Vec::new();
+        for layer in 0..cfg.n_layers {
+            for g in 1..=8u8 {
+                for is_weight in [true, false] {
+                    dims.push(Dim {
+                        layer,
+                        gemm: g,
+                        is_weight,
+                        name: format!(
+                            "L{layer}.{}.{}",
+                            GEMM_NAMES[(g - 1) as usize],
+                            if is_weight { "w" } else { "a" }
+                        ),
+                    });
+                }
+            }
+        }
+        SearchSpace { dims, choices }
+    }
+
+    pub fn cards(&self) -> Vec<usize> {
+        vec![self.choices.len(); self.dims.len()]
+    }
+
+    /// Materialise a TPE assignment into a QuantPlan.
+    pub fn plan_of(&self, assignment: &[usize]) -> QuantPlan {
+        assert_eq!(assignment.len(), self.dims.len());
+        let mut plan = QuantPlan::uniform(self.choices[0]);
+        // group per site: find weight + act choices
+        for (d, &choice) in self.dims.iter().zip(assignment) {
+            let site = (d.layer, d.gemm);
+            let mut q = plan
+                .per_site
+                .get(&site)
+                .copied()
+                .unwrap_or(GemmQuant::uniform(self.choices[0]));
+            if d.is_weight {
+                q.weight = self.choices[choice];
+            } else {
+                q.act = self.choices[choice];
+            }
+            plan.per_site.insert(site, q);
+        }
+        plan
+    }
+
+    /// Average word bits of an assignment (the "4.3-bit model" accounting).
+    pub fn mean_bits(&self, assignment: &[usize]) -> f64 {
+        assignment
+            .iter()
+            .map(|&c| self.choices[c].word_bits() as f64)
+            .sum::<f64>()
+            / assignment.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn space_size() {
+        let cfg = ModelConfig::preset("nano");
+        let sp = SearchSpace::bfp_bits(&cfg, &[3, 4, 5, 6, 8]);
+        assert_eq!(sp.dims.len(), 2 * 8 * 2); // layers × gemms × operands
+        assert!(sp.cards().iter().all(|&c| c == 5));
+    }
+
+    #[test]
+    fn plan_materialisation() {
+        let cfg = ModelConfig::preset("nano");
+        let sp = SearchSpace::bfp_bits(&cfg, &[4, 8]);
+        let assignment: Vec<usize> = (0..sp.dims.len()).map(|i| i % 2).collect();
+        let plan = sp.plan_of(&assignment);
+        // first dim is layer0 gemm1 weight → choice 0 (4 bit)
+        assert_eq!(plan.site(0, 1).weight.word_bits(), 4);
+        assert_eq!(plan.site(0, 1).act.word_bits(), 8);
+        assert!((sp.mean_bits(&assignment) - 6.0).abs() < 1e-9);
+    }
+}

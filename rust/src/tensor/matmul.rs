@@ -1,0 +1,257 @@
+//! Blocked GEMM — the f32 hot path under every quantised GEMM.
+//!
+//! `matmul(a, b)` computes `a @ b` for 2-D tensors with an i-k-j loop order
+//! (unit-stride inner loop over B's rows), 4-wide k unrolling and cache
+//! blocking. Multi-threaded via std::thread row partitioning for large
+//! problems (no rayon in this environment).
+
+use super::Tensor;
+
+/// Threshold (in MACs) above which we spawn threads.
+const PAR_THRESHOLD: usize = 1 << 21;
+
+/// C = A @ B, A: [m,k], B: [k,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let threads = available_threads();
+    if m * n * k >= PAR_THRESHOLD && threads > 1 && m >= 2 {
+        par_rows(&mut out, m, threads, |rows, out_chunk| {
+            gemm_rows(&a.data, &b.data, out_chunk, rows, k, n);
+        });
+    } else {
+        gemm_rows(&a.data, &b.data, &mut out, 0..m, k, n);
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// C = A @ B^T, A: [m,k], B: [n,k] (used for QK^T and weight-transposed GEMMs).
+///
+/// For multi-row A this transposes B once (O(nk)) and reuses the fast
+/// broadcast kernel — ~3× faster than dot-product accumulation, which is
+/// loop-carried-dependency bound (§Perf log in EXPERIMENTS.md). Single-row
+/// A (incremental decode) keeps the dot path: the transpose would not be
+/// amortised.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (n, k2) = b.dims2();
+    assert_eq!(k, k2, "matmul_bt inner dims: {k} vs {k2}");
+    if m >= 4 {
+        return matmul(a, &b.t());
+    }
+    let mut out = vec![0.0f32; m * n];
+    let threads = available_threads();
+    if m * n * k >= PAR_THRESHOLD && threads > 1 && m >= 2 {
+        par_rows(&mut out, m, threads, |rows, out_chunk| {
+            gemm_bt_rows(&a.data, &b.data, out_chunk, rows, k, n);
+        });
+    } else {
+        gemm_bt_rows(&a.data, &b.data, &mut out, 0..m, k, n);
+    }
+    Tensor::new(&[m, n], out)
+}
+
+fn available_threads() -> usize {
+    std::env::var("BBQ_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// Partition output rows across threads; each closure call gets a row range
+/// and the matching &mut chunk of the output buffer.
+fn par_rows<F>(out: &mut [f32], m: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
+{
+    let n = out.len() / m;
+    let nt = threads.min(m);
+    let rows_per = (m + nt - 1) / nt;
+    std::thread::scope(|scope| {
+        let mut rest = out;
+        let mut start = 0usize;
+        let fref = &f;
+        while start < m {
+            let end = (start + rows_per).min(m);
+            let (chunk, tail) = rest.split_at_mut((end - start) * n);
+            rest = tail;
+            let range = start..end;
+            scope.spawn(move || fref(range, chunk));
+            start = end;
+        }
+    });
+}
+
+/// Row-major inner GEMM over a row range. `out` addresses rows relative to
+/// `rows.start`.
+fn gemm_rows(a: &[f32], b: &[f32], out: &mut [f32], rows: std::ops::Range<usize>, k: usize, n: usize) {
+    let row0 = rows.start;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        // k unrolled by 4: accumulate b rows scaled by a[i][k..k+4]
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            for j in 0..n {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// out[i][j] = dot(a_row_i, b_row_j); both rows contiguous.
+/// 1×4 panel micro-kernel: four B rows share each A load, which roughly
+/// triples throughput over a scalar dot loop (§Perf, EXPERIMENTS.md).
+fn gemm_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+            for (idx, &av) in arow.iter().enumerate() {
+                s0 += av * b0[idx];
+                s1 += av * b1[idx];
+                s2 += av * b2[idx];
+                s3 += av * b3[idx];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            orow[j] = dot(arow, &b[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+}
+
+/// 4-accumulator dot product (auto-vectorises well).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = x.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += x[i] * y[i];
+        acc[1] += x[i + 1] * y[i + 1];
+        acc[2] += x[i + 2] * y[i + 2];
+        acc[3] += x[i + 3] * y[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// Naive reference for testing the optimized paths.
+pub fn matmul_naive(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (_, n) = b.dims2();
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                s += a.data[i * k + kk] as f64 * b.data[kk * n + j] as f64;
+            }
+            out[i * n + j] = s as f32;
+        }
+    }
+    Tensor::new(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::check::{check, close_slice};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn small_known() {
+        let a = Tensor::new(&[2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(&[2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matches_naive_random() {
+        check("matmul==naive", 25, |rng| {
+            let m = 1 + rng.below(17);
+            let k = 1 + rng.below(33);
+            let n = 1 + rng.below(17);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[k, n], 1.0, rng);
+            let fast = matmul(&a, &b);
+            let slow = matmul_naive(&a, &b);
+            close_slice(&fast.data, &slow.data, 1e-4, "matmul")
+        });
+    }
+
+    #[test]
+    fn bt_matches_transpose() {
+        check("matmul_bt==matmul(t)", 25, |rng| {
+            let m = 1 + rng.below(9);
+            let k = 1 + rng.below(33);
+            let n = 1 + rng.below(9);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[n, k], 1.0, rng);
+            let direct = matmul_bt(&a, &b);
+            let via_t = matmul(&a, &b.t());
+            close_slice(&direct.data, &via_t.data, 1e-4, "matmul_bt")
+        });
+    }
+
+    #[test]
+    fn parallel_path_matches() {
+        // force the parallel path with a big-enough problem
+        let mut rng = Pcg32::new(4);
+        let a = Tensor::randn(&[96, 256], 1.0, &mut rng);
+        let b = Tensor::randn(&[256, 128], 1.0, &mut rng);
+        let fast = matmul(&a, &b);
+        let slow = matmul_naive(&a, &b);
+        close_slice(&fast.data, &slow.data, 1e-3, "parallel").unwrap();
+    }
+
+    #[test]
+    fn dot_basic() {
+        assert_eq!(dot(&[1., 2., 3., 4., 5.], &[1., 1., 1., 1., 1.]), 15.0);
+    }
+}

@@ -1,0 +1,261 @@
+//! Dense f32 tensor substrate.
+//!
+//! Deliberately minimal: row-major, owned storage, the op set the OPT-style
+//! decoder and the quantisers need. Heavy lifting (GEMM) lives in
+//! [`matmul`]; everything here is correctness-first.
+
+pub mod matmul;
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data len {}",
+            shape,
+            data.len()
+        );
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![v; shape.iter().product()],
+        }
+    }
+
+    /// N(0, sigma) init.
+    pub fn randn(shape: &[usize], sigma: f32, rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal_with(0.0, sigma)).collect(),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected 2-D tensor, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.dims2();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.shape[self.rank() - 1];
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// 2-D transpose.
+    pub fn t(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut out = vec![0.0f32; r * c];
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for i0 in (0..r).step_by(B) {
+            for j0 in (0..c).step_by(B) {
+                for i in i0..(i0 + B).min(r) {
+                    for j in j0..(j0 + B).min(c) {
+                        out[j * r + i] = self.data[i * c + j];
+                    }
+                }
+            }
+        }
+        Tensor::new(&[c, r], out)
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a + b)
+            .collect();
+        Tensor {
+            shape: self.shape.clone(),
+            data,
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// Broadcast-add a vector over the last dimension (bias add).
+    pub fn add_bias(&self, bias: &[f32]) -> Tensor {
+        let c = *self.shape.last().unwrap();
+        assert_eq!(bias.len(), c);
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(c) {
+            for (x, &b) in chunk.iter_mut().zip(bias) {
+                *x += b;
+            }
+        }
+        out
+    }
+
+    /// Row-wise softmax over the last dim, in place.
+    pub fn softmax_rows(&mut self) {
+        let c = *self.shape.last().unwrap();
+        for chunk in self.data.chunks_mut(c) {
+            let m = chunk.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0f32;
+            for x in chunk.iter_mut() {
+                *x = (*x - m).exp();
+                sum += *x;
+            }
+            let inv = 1.0 / sum.max(1e-30);
+            for x in chunk.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// LayerNorm over last dim with gain/bias.
+    pub fn layer_norm(&self, gain: &[f32], bias: &[f32], eps: f32) -> Tensor {
+        let c = *self.shape.last().unwrap();
+        assert_eq!(gain.len(), c);
+        assert_eq!(bias.len(), c);
+        let mut out = self.clone();
+        for chunk in out.data.chunks_mut(c) {
+            let mean: f32 = chunk.iter().sum::<f32>() / c as f32;
+            let var: f32 = chunk.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / c as f32;
+            let inv = 1.0 / (var + eps).sqrt();
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = (*x - mean) * inv * gain[j] + bias[j];
+            }
+        }
+        out
+    }
+
+    /// GELU (tanh approximation, matches jax.nn.gelu default).
+    pub fn gelu(&self) -> Tensor {
+        self.map(gelu_scalar)
+    }
+
+    pub fn relu(&self) -> Tensor {
+        self.map(|x| x.max(0.0))
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+
+    /// Max |x|.
+    pub fn abs_max(&self) -> f32 {
+        crate::util::stats::abs_max(&self.data)
+    }
+}
+
+#[inline]
+pub fn gelu_scalar(x: f32) -> f32 {
+    const C: f32 = 0.7978845608028654; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::new(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let tt = t.t().t();
+        assert_eq!(t, tt);
+        assert_eq!(t.t().row(0), &[1., 4.]);
+    }
+
+    #[test]
+    fn softmax_rows_normalises() {
+        let mut t = Tensor::new(&[2, 3], vec![0., 1., 2., -1., 0., 1.]);
+        t.softmax_rows();
+        for i in 0..2 {
+            let s: f32 = t.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(t.row(0)[2] > t.row(0)[0]);
+    }
+
+    #[test]
+    fn layernorm_standardises() {
+        let t = Tensor::new(&[1, 4], vec![1., 2., 3., 4.]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let n = t.layer_norm(&g, &b, 1e-5);
+        let mean: f32 = n.data.iter().sum::<f32>() / 4.0;
+        let var: f32 = n.data.iter().map(|&x| (x - mean) * (x - mean)).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_known_points() {
+        assert!(gelu_scalar(0.0).abs() < 1e-7);
+        assert!((gelu_scalar(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu_scalar(-10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn bias_add_broadcasts() {
+        let t = Tensor::zeros(&[2, 3]).add_bias(&[1., 2., 3.]);
+        assert_eq!(t.row(1), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let _ = Tensor::new(&[2, 2], vec![1.0]);
+    }
+}

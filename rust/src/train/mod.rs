@@ -1,0 +1,188 @@
+//! Training substrate: manual backprop with STE (backward.rs), AdamW
+//! (adamw.rs), and the two fine-tuning recipes compared in the paper's
+//! §4.3 / Table 8:
+//!
+//! * **PTQ on fine-tuned FP32** — fine-tune in FP32, quantise afterwards;
+//! * **TAQ on downstream** — quantise first, fine-tune the quantised model
+//!   through the STE.
+
+pub mod adamw;
+pub mod backward;
+
+pub use adamw::{AdamW, AdamWConfig};
+pub use backward::{backward, backward_weighted, forward_train, Grads};
+
+use crate::data::tasks::{finetune_sequences, Example};
+use crate::model::params::Params;
+use crate::model::plan::QuantPlan;
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub seq_len: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            seq_len: 64,
+            lr: 3e-3,
+            seed: 7,
+            log_every: 50,
+        }
+    }
+}
+
+/// Language-model training on a token stream. Returns the loss curve.
+pub fn train_lm(
+    params: &mut Params,
+    plan: &QuantPlan,
+    stream: &[usize],
+    cfg: &TrainConfig,
+    mut on_log: impl FnMut(usize, f64),
+) -> Vec<f64> {
+    let mut opt = AdamW::new(
+        params,
+        AdamWConfig {
+            lr: cfg.lr,
+            ..Default::default()
+        },
+    );
+    let mut rng = Pcg32::new(cfg.seed);
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let span = cfg.seq_len + 1;
+    assert!(stream.len() > span, "stream too short");
+    for step in 0..cfg.steps {
+        // cosine decay to 10% of the base LR (stabilises the longer runs)
+        let prog = step as f32 / cfg.steps.max(1) as f32;
+        opt.cfg.lr = cfg.lr * (0.1 + 0.9 * 0.5 * (1.0 + (std::f32::consts::PI * prog).cos()));
+        let start = rng.below(stream.len() - span);
+        let chunk = &stream[start..start + span];
+        let cache = forward_train(params, plan, &chunk[..cfg.seq_len]);
+        let (loss, mut grads) = backward(params, plan, &cache, &chunk[1..]);
+        opt.step(params, &mut grads);
+        losses.push(loss);
+        if cfg.log_every > 0 && (step % cfg.log_every == 0 || step + 1 == cfg.steps) {
+            on_log(step, loss);
+        }
+    }
+    losses
+}
+
+/// Fine-tune on task examples (prompt+answer sequences) for `epochs`
+/// passes. Loss is computed over the whole sequence (LM-style), which is
+/// what makes label words more likely (paper fine-tunes OPT the same way
+/// modulo a classification head).
+pub fn finetune_task(
+    params: &mut Params,
+    plan: &QuantPlan,
+    examples: &[Example],
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> Vec<f64> {
+    let seqs = finetune_sequences(examples);
+    let answer_lens: Vec<usize> = examples
+        .iter()
+        .map(|e| e.choices[e.label].len())
+        .collect();
+    let mut rng = Pcg32::new(seed);
+    let mut epoch_losses = Vec::new();
+    let mut order: Vec<usize> = (0..seqs.len()).collect();
+    for _ in 0..epochs {
+        // warm-restart the optimizer each epoch: with few examples the
+        // accumulated second moments otherwise shrink the effective step
+        // and fine-tuning stalls on a plateau (empirically verified)
+        let mut opt = AdamW::new(
+            params,
+            AdamWConfig {
+                lr,
+                weight_decay: 0.0,
+                ..Default::default()
+            },
+        );
+        rng.shuffle(&mut order);
+        let mut total = 0.0;
+        for &i in &order {
+            let s = &seqs[i];
+            if s.len() < 2 {
+                continue;
+            }
+            let cache = forward_train(params, plan, &s[..s.len() - 1]);
+            // emphasise the answer token(s): the classification signal —
+            // prompts are high-entropy templates we don't need to model
+            let n = s.len() - 1;
+            let mut w = vec![0.1f32; n];
+            let answer_len = answer_lens[i].min(n);
+            for x in w[n - answer_len..].iter_mut() {
+                *x = 1.0;
+            }
+            let (loss, mut grads) =
+                backward_weighted(params, plan, &cache, &s[1..], Some(&w));
+            opt.step(params, &mut grads);
+            total += loss;
+        }
+        epoch_losses.push(total / seqs.len() as f64);
+    }
+    epoch_losses
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::train_stream;
+    use crate::data::tasks::{evaluate, generate, Task};
+    use crate::data::vocab::Vocab;
+    use crate::model::config::ModelConfig;
+    use crate::model::Model;
+
+    #[test]
+    fn lm_training_reduces_loss() {
+        let v = Vocab::build();
+        let stream = train_stream(&v, 4000);
+        let cfg = ModelConfig::preset("nano");
+        let mut p = Params::init(&cfg, 3);
+        let losses = train_lm(
+            &mut p,
+            &QuantPlan::fp32(),
+            &stream,
+            &TrainConfig {
+                steps: 60,
+                seq_len: 32,
+                lr: 3e-3,
+                seed: 1,
+                log_every: 0,
+            },
+            |_, _| {},
+        );
+        let head: f64 = losses[..10].iter().sum::<f64>() / 10.0;
+        let tail: f64 = losses[losses.len() - 10..].iter().sum::<f64>() / 10.0;
+        assert!(tail < head - 0.8, "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn finetune_improves_task_accuracy() {
+        // a tiny randomly-initialised model can still learn the SST2
+        // template mapping from a few hundred examples
+        let v = Vocab::build();
+        let cfg = ModelConfig::preset("nano");
+        let mut p = Params::init(&cfg, 5);
+        let train = generate(Task::Sst2, &v, 100, 240);
+        let test = generate(Task::Sst2, &v, 200, 60);
+        let before = {
+            let m = Model::new(p.clone(), QuantPlan::fp32());
+            evaluate(&m, Task::Sst2, &test, 2).accuracy
+        };
+        finetune_task(&mut p, &QuantPlan::fp32(), &train, 6, 4e-3, 9);
+        let after = {
+            let m = Model::new(p, QuantPlan::fp32());
+            evaluate(&m, Task::Sst2, &test, 2).accuracy
+        };
+        assert!(after > 0.85, "before {before} after {after}");
+    }
+}

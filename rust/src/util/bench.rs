@@ -1,0 +1,172 @@
+//! Micro-benchmark timing harness (offline substitute for criterion).
+//!
+//! Usage in a `harness = false` bench target:
+//! ```ignore
+//! let mut b = Bench::new("quantize_bfp6");
+//! b.run(|| { quantize(...); });
+//! println!("{}", b.report());
+//! ```
+
+use std::time::Instant;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|it| it / (self.mean_ns * 1e-9))
+    }
+
+    pub fn line(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:.2} G/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:.2} M/s", t / 1e6),
+            Some(t) => format!("  {:.2} /s", t),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  ({} iters){}",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    name: String,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    /// target total measurement time
+    budget_ns: f64,
+    items: Option<f64>,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            warmup: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            budget_ns: 4e8, // 0.4 s
+            items: None,
+        }
+    }
+
+    pub fn items(mut self, n: f64) -> Self {
+        self.items = Some(n);
+        self
+    }
+
+    pub fn budget_ms(mut self, ms: f64) -> Self {
+        self.budget_ns = ms * 1e6;
+        self
+    }
+
+    pub fn iters(mut self, min: usize, max: usize) -> Self {
+        self.min_iters = min;
+        self.max_iters = max;
+        self
+    }
+
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+            let done = samples.len();
+            if done >= self.max_iters {
+                break;
+            }
+            if done >= self.min_iters && start.elapsed().as_nanos() as f64 > self.budget_ns {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        BenchResult {
+            name: self.name.clone(),
+            iters: n,
+            mean_ns: mean,
+            p50_ns: samples[n / 2],
+            p99_ns: samples[(n * 99 / 100).min(n - 1)],
+            min_ns: samples[0],
+            items: self.items,
+        }
+    }
+}
+
+/// Guard against the optimizer deleting benchmarked work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = Bench::new("noop").budget_ms(5.0).run(|| {
+            black_box(1 + 1);
+        });
+        assert!(r.iters >= 10);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn throughput_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1e6,
+            p50_ns: 1e6,
+            p99_ns: 1e6,
+            min_ns: 1e6,
+            items: Some(1e6),
+        };
+        assert!(r.line().contains("G/s") || r.line().contains("M/s"));
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,128 @@
+//! Mini property-testing harness (offline substitute for proptest).
+//!
+//! `check(name, cases, |rng| ...)` runs the closure `cases` times with a
+//! seeded RNG; on the first panic/Err it reports the failing case index and
+//! seed so the case is replayable with `replay(seed, case_idx, f)`.
+
+use super::rng::Pcg32;
+
+pub const DEFAULT_SEED: u64 = 0xBB9_2023;
+
+/// Run `f` against `cases` random cases. `f` returns Err(msg) to fail.
+pub fn check<F>(name: &str, cases: usize, mut f: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    check_seeded(name, DEFAULT_SEED, cases, &mut f)
+}
+
+pub fn check_seeded<F>(name: &str, seed: u64, cases: usize, f: &mut F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let base = Pcg32::new(seed);
+    for i in 0..cases {
+        let mut rng = base.split(i as u64);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases} (seed={seed:#x}): {msg}\n\
+                 replay with util::check::replay({seed:#x}, {i}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run exactly one case.
+pub fn replay<F>(seed: u64, case_idx: usize, f: &mut F) -> Result<(), String>
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    let mut rng = Pcg32::new(seed).split(case_idx as u64);
+    f(&mut rng)
+}
+
+/// Assert two floats are close; returns Err with context if not.
+pub fn close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    let diff = (a - b).abs();
+    let scale = a.abs().max(b.abs()).max(1.0);
+    if diff <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} vs {b} (|diff|={diff}, tol={tol})"))
+    }
+}
+
+/// Assert slices are elementwise close.
+pub fn close_slice(a: &[f32], b: &[f32], tol: f64, ctx: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{ctx}: length {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x as f64, y as f64, tol, &format!("{ctx}[{i}]"))?;
+    }
+    Ok(())
+}
+
+/// Random tensor data with mixed scales (stress for quantisers): a mixture
+/// of N(0, sigma) with occasional outliers, like LLM activations.
+pub fn llmish_values(rng: &mut Pcg32, n: usize, sigma: f32, outlier_rate: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let base = rng.normal_with(0.0, sigma);
+            if rng.f64() < outlier_rate {
+                base * rng.range_f32(8.0, 64.0)
+            } else {
+                base
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("trivial", 50, |rng| {
+            let x = rng.f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        check("fails", 10, |rng| {
+            let x = rng.f32();
+            if x < 0.99 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+        // with 10 cases it may not fail; force one
+        panic!("property 'fails' forced");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut grab = |rng: &mut Pcg32| -> Result<(), String> {
+            let _ = rng.next_u32();
+            Ok(())
+        };
+        assert!(replay(1, 3, &mut grab).is_ok());
+    }
+
+    #[test]
+    fn llmish_has_outliers() {
+        let mut rng = Pcg32::new(2);
+        let xs = llmish_values(&mut rng, 4096, 1.0, 0.02);
+        let mx = xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()));
+        assert!(mx > 6.0, "max={mx}");
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (offline substitute for clap).
+//!
+//! Grammar: `bbq <subcommand> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(sc) = it.peek() {
+            if !sc.starts_with('-') {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = name.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    a.options
+                        .insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_options() {
+        // NB: a bare positional must precede `--flag`-style args, since
+        // `--flag value` is read as an option (documented grammar).
+        let a = Args::parse(&sv(&["eval-ppl", "extra", "--model", "tiny", "--seq=128", "--quiet"]));
+        assert_eq!(a.subcommand, "eval-ppl");
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.usize_or("seq", 0), 128);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = Args::parse(&sv(&["x", "--verbose"]));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["x"]));
+        assert_eq!(a.f64_or("alpha", 1.5), 1.5);
+        assert_eq!(a.get_or("fmt", "bfp"), "bfp");
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = Args::parse(&sv(&["x", "--bias=-3"]));
+        assert_eq!(a.f64_or("bias", 0.0), -3.0);
+    }
+}

@@ -1,0 +1,36 @@
+//! Shared utilities: PRNG, stats, JSON, CLI parsing, tables, benchmarking,
+//! and a mini property-test harness. These are offline substitutes for
+//! crates (rand, serde_json, clap, criterion, proptest) that are not
+//! available in this environment — see DESIGN.md §3.
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+use std::path::Path;
+
+/// Write a file, creating parent directories.
+pub fn write_file(path: &Path, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+/// Repo-root-relative results directory.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("BBQ_RESULTS_DIR").unwrap_or_else(|_| "results".to_string()),
+    )
+}
+
+/// Repo-root-relative artifacts directory (AOT outputs).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(
+        std::env::var("BBQ_ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string()),
+    )
+}

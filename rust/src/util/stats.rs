@@ -1,0 +1,166 @@
+//! Small statistics helpers shared by the profiler, evaluator and benches.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|&x| (x as f64 - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+pub fn abs_max(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &b| a.max(b.abs()))
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a copy.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+    v[idx.min(v.len() - 1)]
+}
+
+/// Mean squared error between two equal-length slices.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+/// Signal-to-quantisation-noise ratio in dB (higher = better).
+pub fn sqnr_db(signal: &[f32], quantised: &[f32]) -> f64 {
+    let sig_pow: f64 = signal.iter().map(|&x| (x as f64).powi(2)).sum();
+    let err_pow: f64 = signal
+        .iter()
+        .zip(quantised)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum();
+    if err_pow == 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (sig_pow / err_pow).log10()
+}
+
+/// Matthews correlation coefficient for binary predictions (COLA metric).
+pub fn mcc(preds: &[bool], labels: &[bool]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let (mut tp, mut tn, mut fp, mut fnn) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p, l) {
+            (true, true) => tp += 1.0,
+            (false, false) => tn += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fnn += 1.0,
+        }
+    }
+    let denom = ((tp + fp) * (tp + fnn) * (tn + fp) * (tn + fnn)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fnn) / denom
+    }
+}
+
+/// Online mean/variance accumulator (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn push_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.push(x as f64);
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-9);
+        assert!((variance(&xs) - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs: Vec<f32> = (0..100).map(|i| (i as f32) * 0.37 - 5.0).collect();
+        let mut w = Welford::new();
+        w.push_slice(&xs);
+        assert!((w.mean() - mean(&xs)).abs() < 1e-6);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_ends() {
+        let xs = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn mcc_perfect_and_random() {
+        let l = [true, false, true, false];
+        assert!((mcc(&l, &l) - 1.0).abs() < 1e-9);
+        let p = [true, true, false, false];
+        assert!(mcc(&p, &l).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sqnr_exact_is_inf() {
+        let xs = [1.0f32, 2.0];
+        assert!(sqnr_db(&xs, &xs).is_infinite());
+    }
+}

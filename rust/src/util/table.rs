@@ -1,0 +1,184 @@
+//! Aligned markdown-ish table printer for experiment output.
+
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for i in 0..ncol {
+                let c = cells.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i] - c.chars().count();
+                s.push(' ');
+                s.push_str(c);
+                s.push_str(&" ".repeat(pad + 1));
+                s.push('|');
+            }
+            s
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV for downstream plotting.
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .header
+            .iter()
+            .map(|c| esc(c))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a float with `d` decimals; large/pathological values in scientific
+/// notation like the paper's tables ("1.78E4").
+pub fn fnum(x: f64, d: usize) -> String {
+    if !x.is_finite() {
+        return format!("{x}");
+    }
+    if x.abs() >= 1e4 {
+        let exp = x.abs().log10().floor() as i32;
+        let mant = x / 10f64.powi(exp);
+        format!("{:.2}E{}", mant, exp)
+    } else {
+        format!("{:.*}", d, x)
+    }
+}
+
+/// Simple ASCII line/series plot for figures (terminal rendition).
+pub fn ascii_plot(title: &str, series: &[(String, Vec<f64>)], height: usize) -> String {
+    let mut out = format!("### {title}\n");
+    let maxlen = series.iter().map(|(_, v)| v.len()).max().unwrap_or(0);
+    if maxlen == 0 {
+        return out;
+    }
+    let all: Vec<f64> = series
+        .iter()
+        .flat_map(|(_, v)| v.iter().copied())
+        .filter(|x| x.is_finite())
+        .collect();
+    let (lo, hi) = all
+        .iter()
+        .fold((f64::INFINITY, f64::NEG_INFINITY), |(l, h), &x| {
+            (l.min(x), h.max(x))
+        });
+    let span = (hi - lo).max(1e-12);
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&', '$', '~'];
+    let width = maxlen.min(100);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, v)) in series.iter().enumerate() {
+        for (i, &y) in v.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = i * width / maxlen.max(1);
+            let rowf = (y - lo) / span * (height - 1) as f64;
+            let row = height - 1 - rowf.round() as usize;
+            grid[row][col.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    out.push_str(&format!("  max={:.4}\n", hi));
+    for r in grid {
+        out.push_str("  |");
+        out.push_str(&r.into_iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("  min={:.4}\n  legend: ", lo));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", marks[si % marks.len()], name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns() {
+        let mut t = Table::new("t", &["a", "longer"]);
+        t.row(vec!["xxxx".into(), "1".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().filter(|l| l.starts_with('|')).collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].len(), lines[2].len());
+    }
+
+    #[test]
+    fn fnum_scientific() {
+        assert_eq!(fnum(17800.0, 2), "1.78E4");
+        assert_eq!(fnum(27.653, 2), "27.65");
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let mut t = Table::new("", &["a"]);
+        t.row(vec!["x,y".into()]);
+        assert!(t.to_csv().contains("\"x,y\""));
+    }
+
+    #[test]
+    fn plot_runs() {
+        let s = ascii_plot(
+            "p",
+            &[("a".into(), vec![1.0, 2.0, 3.0]), ("b".into(), vec![3.0, 1.0])],
+            6,
+        );
+        assert!(s.contains("legend"));
+    }
+}

@@ -1,0 +1,195 @@
+//! Cross-language integration tests: Rust quantisers vs the python golden
+//! vectors (bit-exact), the Rust native model vs the JAX model, and the
+//! PJRT runtime executing the AOT artifacts.
+//!
+//! These tests skip gracefully when `artifacts/` has not been built
+//! (`make artifacts`); CI runs them after the AOT step.
+
+use bbq::model::config::ModelConfig;
+use bbq::model::params::Params;
+use bbq::model::plan::QuantPlan;
+use bbq::model::Model;
+use bbq::quant::{fake_quant, QFormat};
+use bbq::runtime::{LmFwdExec, Runtime, TrainStepExec};
+use bbq::tensor::Tensor;
+use bbq::util::json::Json;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    // tests run from the crate root
+    PathBuf::from("artifacts")
+}
+
+fn load_json(rel: &str) -> Option<Json> {
+    let p = artifacts_dir().join(rel);
+    let text = std::fs::read_to_string(p).ok()?;
+    Json::parse(&text).ok()
+}
+
+#[test]
+fn quant_golden_vectors_bit_exact() {
+    let Some(golden) = load_json("golden/quant_cases.json") else {
+        eprintln!("skipping: artifacts/golden/quant_cases.json missing");
+        return;
+    };
+    let input = golden.get("input").unwrap().f32_vec().unwrap();
+    let t = Tensor::new(&[4, 16], input);
+    let formats = [
+        "fixed8",
+        "fixedrow8",
+        "minifloat_e4m3",
+        "dmf_e4m3",
+        "bfp_e8m7n16",
+        "bfp_e8m5n16",
+        "bfp_e8m3n16",
+        "bm_e4m3b8n16",
+        "bl_e7b8n16",
+    ];
+    for name in formats {
+        let fmt = QFormat::parse(name).unwrap_or_else(|| panic!("parse {name}"));
+        let want = golden.get(name).unwrap_or_else(|| panic!("golden {name}")).f32_vec().unwrap();
+        let got = fake_quant(&t, fmt);
+        for (i, (&g, &w)) in got.data.iter().zip(&want).enumerate() {
+            assert!(
+                g == w || (g.is_nan() && w.is_nan()),
+                "{name}[{i}]: rust {g} vs python {w} (input {})",
+                t.data[i]
+            );
+        }
+    }
+}
+
+fn golden_params() -> Option<(ModelConfig, Params, Vec<usize>, Json)> {
+    let golden = load_json("golden/model_fwd.json")?;
+    let cj = golden.get("config")?;
+    let cfg = ModelConfig {
+        name: "golden".into(),
+        n_layers: cj.get("n_layers")?.as_f64()? as usize,
+        d_model: cj.get("d_model")?.as_f64()? as usize,
+        n_heads: cj.get("n_heads")?.as_f64()? as usize,
+        d_ff: cj.get("d_ff")?.as_f64()? as usize,
+        vocab_size: cj.get("vocab_size")?.as_f64()? as usize,
+        max_seq: cj.get("max_seq")?.as_f64()? as usize,
+        pos: bbq::model::PosEncoding::Learned,
+        ln_eps: 1e-5,
+    };
+    let mut params = Params::init(&cfg, 0);
+    let pj = golden.get("params")?;
+    for (name, buf) in params.flat_views_mut() {
+        let v = pj.get(&name)?.f32_vec()?;
+        assert_eq!(v.len(), buf.len(), "{name}");
+        buf.copy_from_slice(&v);
+    }
+    let tokens: Vec<usize> = golden.get("tokens")?.usize_vec()?;
+    Some((cfg, params, tokens, golden))
+}
+
+#[test]
+fn rust_model_matches_jax_model() {
+    let Some((_cfg, params, tokens, golden)) = golden_params() else {
+        eprintln!("skipping: artifacts/golden/model_fwd.json missing");
+        return;
+    };
+    for (fmt_name, fmt, tol) in [
+        ("fp32", QFormat::Fp32, 2e-4f32),
+        ("bfp_e8m5n16", QFormat::parse("bfp_e8m5n16").unwrap(), 2e-3),
+        ("minifloat_e4m3", QFormat::parse("minifloat_e4m3").unwrap(), 2e-3),
+    ] {
+        let want = golden
+            .get("logits")
+            .and_then(|l| l.get(fmt_name))
+            .unwrap()
+            .f32_vec()
+            .unwrap();
+        let model = Model::new(params.clone(), QuantPlan::uniform(fmt));
+        let got = model.forward(&tokens, None);
+        assert_eq!(got.data.len(), want.len());
+        let mut max_err = 0.0f32;
+        for (&g, &w) in got.data.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(
+            max_err < tol,
+            "{fmt_name}: max |rust - jax| = {max_err} (tol {tol})"
+        );
+    }
+}
+
+#[test]
+fn pjrt_runtime_matches_golden_logits() {
+    let Some((_cfg, params, tokens, golden)) = golden_params() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    if !artifacts_dir().join("lm_fwd_golden_fp32.hlo.txt").exists() {
+        eprintln!("skipping: lm_fwd artifact missing");
+        return;
+    }
+    let mut rt = Runtime::open(&artifacts_dir()).expect("open runtime");
+    for (art, fmt_name) in [
+        ("lm_fwd_golden_fp32", "fp32"),
+        ("lm_fwd_golden_bfp_e8m5n16", "bfp_e8m5n16"),
+    ] {
+        let exec = LmFwdExec::load(&mut rt, art, params.cfg.vocab_size).expect("load");
+        let got = exec.run(&tokens, &params).expect("run");
+        let want = golden
+            .get("logits")
+            .and_then(|l| l.get(fmt_name))
+            .unwrap()
+            .f32_vec()
+            .unwrap();
+        let mut max_err = 0.0f32;
+        for (&g, &w) in got.data.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(max_err < 1e-4, "{art}: max err {max_err}");
+    }
+}
+
+#[test]
+fn pjrt_train_step_reduces_loss() {
+    let Some((_cfg, mut params, tokens, _)) = golden_params() else {
+        eprintln!("skipping: artifacts missing");
+        return;
+    };
+    if !artifacts_dir().join("train_step_golden.hlo.txt").exists() {
+        eprintln!("skipping: train_step artifact missing");
+        return;
+    }
+    let mut rt = Runtime::open(&artifacts_dir()).expect("open runtime");
+    let step = TrainStepExec::load(&mut rt, "train_step_golden").expect("load");
+    let targets: Vec<usize> = tokens[1..].iter().chain([&tokens[0]]).copied().collect();
+    let mut losses = Vec::new();
+    for _ in 0..8 {
+        let loss = step.step(&tokens, &targets, 0.5, &mut params).expect("step");
+        losses.push(loss);
+    }
+    assert!(
+        losses[7] < losses[0] - 0.2,
+        "PJRT training did not reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn pjrt_executes_pallas_qmatmul() {
+    if !artifacts_dir().join("qmatmul_bfp_m5.hlo.txt").exists() {
+        eprintln!("skipping: qmatmul artifact missing");
+        return;
+    }
+    let mut rt = Runtime::open(&artifacts_dir()).expect("open runtime");
+    let exec = bbq::runtime::QmatmulExec::load(&mut rt, "qmatmul_bfp_m5", 64, 64, 64).unwrap();
+    let mut rng = bbq::util::rng::Pcg32::new(42);
+    let x = Tensor::randn(&[64, 64], 1.0, &mut rng);
+    let w = Tensor::randn(&[64, 64], 0.3, &mut rng);
+    let got = exec.run(&x, &w).expect("run qmatmul");
+    // reference: rust-native fake-quant path
+    let fmt = QFormat::parse("bfp_e8m5n16").unwrap();
+    let xq = fake_quant(&x, fmt);
+    let wq = fake_quant(&w.t(), fmt);
+    let want = bbq::tensor::matmul::matmul_bt(&xq, &wq);
+    let mut max_err = 0.0f32;
+    for (&g, &w_) in got.data.iter().zip(&want.data) {
+        max_err = max_err.max((g - w_).abs());
+    }
+    assert!(max_err < 1e-4, "pallas qmatmul vs rust: max err {max_err}");
+}
