@@ -25,6 +25,10 @@ use bbq::runtime::{LmFwdExec, Runtime, TrainStepExec};
 use bbq::util::table::{fnum, Table};
 
 fn main() {
+    if !bbq::runtime::PJRT_AVAILABLE {
+        eprintln!("this example needs the PJRT runtime — rebuild with `--features xla`");
+        std::process::exit(1);
+    }
     let artifacts = bbq::util::artifacts_dir();
     if !artifacts.join("manifest.json").exists() {
         eprintln!("artifacts missing — run `make artifacts` first");

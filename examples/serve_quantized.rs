@@ -1,6 +1,8 @@
 //! Serving demo: batched decoding through the L3 coordinator with a
-//! quantised model, comparing FP32 vs W6A6 BFP throughput and latency
-//! (the deployment story the paper's ASIC argument targets).
+//! quantised model, comparing FP32 vs W6A6/W4A4 BFP throughput, latency
+//! and — via the packed-weight serving path — *measured* resident weight
+//! memory (the deployment story the paper's ASIC argument targets: block
+//! formats shrink the bytes a decoder must keep hot by ~5×).
 //!
 //!     cargo run --release --example serve_quantized
 
@@ -35,6 +37,13 @@ fn main() {
         ("bfp4 (W4A4)", QuantPlan::uniform(presets::bfp_w(4))),
     ] {
         let model = Model::new(params.clone(), plan);
+        let wm = model.weight_memory();
+        println!(
+            "[{name}] weight cache: {} B dense-f32 → {} B resident ({:.2}x)",
+            wm.dense_f32_bytes,
+            wm.resident_bytes,
+            wm.ratio()
+        );
         let (resps, metrics) = run_batched(&model, reqs.clone(), &cfg);
         println!("[{name}] {}", metrics.summary());
         if name == "fp32" {

@@ -10,7 +10,9 @@ use bbq::model::params::Params;
 use bbq::model::plan::QuantPlan;
 use bbq::model::Model;
 use bbq::quant::config::presets;
-use bbq::quant::qmatmul::{bfp_matmul_blocked, qmatmul};
+use bbq::quant::fake_quant;
+use bbq::quant::qmatmul::{bfp_matmul_blocked, qmatmul, qmatmul_packed, qmatmul_pret};
+use bbq::quant::qtensor::encode;
 use bbq::quant::{fake_quant_buffer, GemmQuant};
 use bbq::tensor::matmul::{matmul, matmul_bt};
 use bbq::tensor::Tensor;
@@ -67,6 +69,39 @@ fn main() {
         black_box(bfp_matmul_blocked(black_box(&a), black_box(&bt), 8, 5, 16));
     });
     println!("{}", r.line());
+
+    println!("\n== packed vs fake-quant decode GEMM ([1,k]×[n,k], per-token decode shape) ==");
+    // the serving trade: the dense cache holds dequantised f32 weights,
+    // the packed cache holds the bit-packed payload (~4.9× smaller for
+    // BFP6) and dequantises block-wise inside the GEMM
+    for (k, n) in [(512usize, 512usize), (1024, 1024)] {
+        let a1 = Tensor::randn(&[1, k], 1.0, &mut rng);
+        let wt = Tensor::randn(&[n, k], 0.3, &mut rng);
+        let fmt = presets::bfp_w(6);
+        let wt_dense = fake_quant(&wt, fmt);
+        let wt_packed = encode(&wt, fmt);
+        println!(
+            "  k={k} n={n}: dense cache {} B, packed cache {} B ({:.2}x)",
+            n * k * 4,
+            wt_packed.packed_bytes(),
+            (n * k * 4) as f64 / wt_packed.packed_bytes() as f64
+        );
+        let macs = (k * n) as f64;
+        let r = Bench::new(&format!("qmatmul_pret/bfp6_dense_{k}x{n}"))
+            .items(macs)
+            .budget_ms(400.0)
+            .run(|| {
+                black_box(qmatmul_pret(black_box(&a1), black_box(&wt_dense), fmt));
+            });
+        println!("{}", r.line());
+        let r = Bench::new(&format!("qmatmul_packed/bfp6_{k}x{n}"))
+            .items(macs)
+            .budget_ms(400.0)
+            .run(|| {
+                black_box(qmatmul_packed(black_box(&a1), black_box(&wt_packed), fmt));
+            });
+        println!("{}", r.line());
+    }
 
     println!("\n== model forward (tiny, seq 64) — Table 3's unit of work ==");
     let cfg = ModelConfig::preset("tiny");

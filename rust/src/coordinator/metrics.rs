@@ -1,5 +1,7 @@
-//! Serving metrics: latency distribution + token throughput.
+//! Serving metrics: latency distribution, token throughput, and the
+//! served model's resident weight memory.
 
+use crate::model::WeightMemory;
 use std::time::Duration;
 
 #[derive(Clone, Debug, Default)]
@@ -8,6 +10,9 @@ pub struct Metrics {
     pub generated_tokens: usize,
     pub latencies_ms: Vec<f64>,
     pub wall: Duration,
+    /// Dense-f32 vs actually-resident bytes of the served model's weight
+    /// cache (packed payloads under block formats).
+    pub weight_memory: WeightMemory,
 }
 
 impl Metrics {
@@ -41,7 +46,7 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "completed={} tokens={} wall={:.2}s tput={:.1} tok/s p50={:.1}ms p99={:.1}ms",
             self.completed,
             self.generated_tokens,
@@ -49,7 +54,16 @@ impl Metrics {
             self.throughput_tps(),
             self.p(50.0),
             self.p(99.0),
-        )
+        );
+        if self.weight_memory.dense_f32_bytes > 0 {
+            s.push_str(&format!(
+                " weights={}B resident={}B ({:.2}x)",
+                self.weight_memory.dense_f32_bytes,
+                self.weight_memory.resident_bytes,
+                self.weight_memory.ratio(),
+            ));
+        }
+        s
     }
 }
 

@@ -15,6 +15,8 @@
 //!
 //! Common options: --model <preset> --format <name> --seq N --threads N
 
+#![allow(clippy::needless_range_loop, clippy::collapsible_if)]
+
 use bbq::coordinator::experiment::{default_steps, get_or_train};
 use bbq::coordinator::{run_batched, Request, ServerConfig};
 use bbq::data::corpus::test_stream;

@@ -60,9 +60,12 @@ impl<'m> DecodeSession<'m> {
             let pl = m.prepared(li);
             let plan = &m.plan;
             let xn = x.layer_norm(&l.ln1_g, &l.ln1_b, cfg.ln_eps);
-            let q = matmul_bt(&q_act(plan.site(li, 1).act, &xn), &pl.wq_t).add_bias(&l.bq);
-            let k = matmul_bt(&q_act(plan.site(li, 2).act, &xn), &pl.wk_t).add_bias(&l.bk);
-            let v = matmul_bt(&q_act(plan.site(li, 3).act, &xn), &pl.wv_t).add_bias(&l.bv);
+            // ①②③ decode straight from the packed weight cache: for block
+            // formats the [1, d] activation streams against bit-packed
+            // rows, so the bytes touched per token are the packed payload
+            let q = pl.wq_t.matmul_bt(&q_act(plan.site(li, 1).act, &xn)).add_bias(&l.bq);
+            let k = pl.wk_t.matmul_bt(&q_act(plan.site(li, 2).act, &xn)).add_bias(&l.bk);
+            let v = pl.wv_t.matmul_bt(&q_act(plan.site(li, 3).act, &xn)).add_bias(&l.bv);
             let (q, k) = if cfg.pos == PosEncoding::Rope {
                 (apply_rope(&q, h, self.pos), apply_rope(&k, h, self.pos))
             } else {
@@ -99,13 +102,13 @@ impl<'m> DecodeSession<'m> {
                 ctx.row_mut(0)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
             }
             let ctx_q = q_act(plan.site(li, 6).act, &ctx);
-            let att_out = matmul_bt(&ctx_q, &pl.wo_t).add_bias(&l.bo);
+            let att_out = pl.wo_t.matmul_bt(&ctx_q).add_bias(&l.bo);
             let x1 = x.add(&att_out);
             let xn2 = x1.layer_norm(&l.ln2_g, &l.ln2_b, cfg.ln_eps);
-            let hpre = matmul_bt(&q_act(plan.site(li, 7).act, &xn2), &pl.w1_t).add_bias(&l.b1);
+            let hpre = pl.w1_t.matmul_bt(&q_act(plan.site(li, 7).act, &xn2)).add_bias(&l.b1);
             let hact = hpre.gelu();
             let h_q = q_act(plan.site(li, 8).act, &hact);
-            let mlp_out = matmul_bt(&h_q, &pl.w2_t).add_bias(&l.b2);
+            let mlp_out = pl.w2_t.matmul_bt(&h_q).add_bias(&l.b2);
             x = x1.add(&mlp_out);
         }
         self.pos += 1;

@@ -10,6 +10,6 @@ pub mod rope;
 pub mod transformer;
 
 pub use config::{ModelConfig, PosEncoding};
-pub use params::Params;
-pub use plan::{QuantPlan, SiteId, GEMM_NAMES};
+pub use params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
+pub use plan::{QuantPlan, SiteId, WeightStore, GEMM_NAMES};
 pub use transformer::{cross_entropy, ActStats, Model};

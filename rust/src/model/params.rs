@@ -1,11 +1,112 @@
 //! Parameter store: initialisation, flat named access (for the optimizer
-//! and the PJRT train-step bridge), and a simple binary checkpoint format.
+//! and the PJRT train-step bridge), a simple binary checkpoint format, and
+//! the packed-weight serving cache ([`PackedLayerParams`]).
 
 use super::config::{ModelConfig, PosEncoding};
+use crate::quant::qmatmul::matmul_packed_bt;
+use crate::quant::qtensor::QTensor;
+use crate::tensor::matmul::matmul_bt;
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 use std::io::{Read, Write};
 use std::path::Path;
+
+/// One prepared (transposed, [out, in]) weight of the serving cache —
+/// either a dequantised f32 copy or the bit-packed payload itself. The two
+/// representations produce bit-identical GEMM results (tested); they only
+/// differ in resident bytes.
+#[derive(Clone, Debug)]
+pub enum PackedWeight {
+    /// Dense f32 (fp32 weights, non-FakeQuant modes, or `WeightStore::DenseF32`).
+    Dense(Tensor),
+    /// Bit-packed block layout, blocks along the contraction dim.
+    Packed(QTensor),
+}
+
+impl PackedWeight {
+    /// `act_q [m,k] @ selfᵀ` — `act_q` is already activation-quantised.
+    pub fn matmul_bt(&self, act_q: &Tensor) -> Tensor {
+        match self {
+            PackedWeight::Dense(t) => matmul_bt(act_q, t),
+            PackedWeight::Packed(q) => matmul_packed_bt(act_q, q),
+        }
+    }
+
+    /// Dense view — only valid for weights prepared densely (e.g. the
+    /// LLM.int8() mode, which never packs). Panics on packed storage.
+    pub fn dense(&self) -> &Tensor {
+        match self {
+            PackedWeight::Dense(t) => t,
+            PackedWeight::Packed(q) => panic!(
+                "dense view requested for packed weight {:?} — this GEMM mode must \
+                 prepare weights with WeightStore::DenseF32",
+                q.shape
+            ),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            PackedWeight::Dense(t) => t.numel(),
+            PackedWeight::Packed(q) => q.numel(),
+        }
+    }
+
+    /// Bytes actually resident for this weight (payload for packed, 4·numel
+    /// for dense — the unit the server's memory metrics report).
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            PackedWeight::Dense(t) => t.numel() * 4,
+            PackedWeight::Packed(q) => q.packed_bytes(),
+        }
+    }
+
+    pub fn is_packed(&self) -> bool {
+        matches!(self, PackedWeight::Packed(_))
+    }
+}
+
+/// Per-layer weight cache for serving: the six weight-GEMM operands of
+/// Algorithm 2, transposed to [out, in] so blocks run along the
+/// contraction dim, quantised once per plan, and stored per
+/// [`super::plan::WeightStore`].
+pub struct PackedLayerParams {
+    pub wq_t: PackedWeight,
+    pub wk_t: PackedWeight,
+    pub wv_t: PackedWeight,
+    pub wo_t: PackedWeight,
+    pub w1_t: PackedWeight,
+    pub w2_t: PackedWeight,
+}
+
+impl PackedLayerParams {
+    pub fn weights(&self) -> [&PackedWeight; 6] {
+        [
+            &self.wq_t, &self.wk_t, &self.wv_t, &self.wo_t, &self.w1_t, &self.w2_t,
+        ]
+    }
+}
+
+/// Resident vs dense-f32 accounting for a prepared weight cache.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WeightMemory {
+    /// What the same cache would occupy fully dequantised (4 bytes/weight).
+    pub dense_f32_bytes: usize,
+    /// What is actually resident (packed payloads + dense copies).
+    pub resident_bytes: usize,
+}
+
+impl WeightMemory {
+    /// Memory-density factor (≥ 1 when packing helps; Table 3's Mem column,
+    /// measured on live serving state rather than computed from formulas).
+    pub fn ratio(&self) -> f64 {
+        if self.resident_bytes == 0 {
+            1.0
+        } else {
+            self.dense_f32_bytes as f64 / self.resident_bytes as f64
+        }
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct LayerParams {

@@ -17,6 +17,23 @@ pub enum GemmMode {
     LlmInt8 { threshold: f32, bits: u32 },
 }
 
+/// How prepared weights are *stored* by the model's weight cache
+/// ([`crate::model::params::PackedLayerParams`]). Orthogonal to the GEMM
+/// mode: it changes resident bytes, never results — the packed path is
+/// bit-exact with the dense fake-quant path (tested).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum WeightStore {
+    /// Serve quantised weights from their bit-packed payload (BFP/BM/BL/…
+    /// block layouts along k), dequantising block-wise inside the GEMM.
+    /// This is the deployment story of the paper's §3.2 memory-density
+    /// numbers: resident weight bytes shrink ~5× under BFP6.
+    #[default]
+    PackedAuto,
+    /// Keep dequantised f32 copies of every prepared weight (the legacy
+    /// behaviour; useful for debugging and as the fake-quant reference).
+    DenseF32,
+}
+
 /// A GEMM site: (layer index, GEMM index ①..⑧).
 pub type SiteId = (usize, u8);
 
@@ -29,6 +46,8 @@ pub struct QuantPlan {
     pub default: GemmQuant,
     pub per_site: HashMap<SiteId, GemmQuant>,
     pub mode: GemmMode,
+    /// Storage policy for the prepared weight cache.
+    pub store: WeightStore,
 }
 
 impl QuantPlan {
@@ -37,6 +56,7 @@ impl QuantPlan {
             default: GemmQuant::fp32(),
             per_site: HashMap::new(),
             mode: GemmMode::FakeQuant,
+            store: WeightStore::default(),
         }
     }
 
@@ -50,6 +70,7 @@ impl QuantPlan {
                 threshold: crate::baselines::llm_int8::DEFAULT_THRESHOLD,
                 bits,
             },
+            store: WeightStore::default(),
         }
     }
 
@@ -59,6 +80,7 @@ impl QuantPlan {
             default: GemmQuant::uniform(fmt),
             per_site: HashMap::new(),
             mode: GemmMode::FakeQuant,
+            store: WeightStore::default(),
         }
     }
 
@@ -68,7 +90,14 @@ impl QuantPlan {
             default: GemmQuant { weight, act },
             per_site: HashMap::new(),
             mode: GemmMode::FakeQuant,
+            store: WeightStore::default(),
         }
+    }
+
+    /// Override the weight-cache storage policy (builder style).
+    pub fn with_store(mut self, store: WeightStore) -> Self {
+        self.store = store;
+        self
     }
 
     /// Leave ④⑤ (the activation-activation GEMMs) in FP32 — the "6/8"
@@ -127,6 +156,14 @@ mod tests {
         assert_eq!(p.site(2, 5), GemmQuant::fp32());
         assert_ne!(p.site(2, 1), GemmQuant::fp32());
         assert_eq!(p.quantised_gemms(4), (6, 8));
+    }
+
+    #[test]
+    fn store_defaults_to_packed_and_overrides() {
+        let p = QuantPlan::uniform(presets::bfp_w(6));
+        assert_eq!(p.store, WeightStore::PackedAuto);
+        let p = p.with_store(WeightStore::DenseF32);
+        assert_eq!(p.store, WeightStore::DenseF32);
     }
 
     #[test]

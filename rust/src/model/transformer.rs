@@ -4,10 +4,11 @@
 //! quantises the per-layer GEMMs).
 
 use super::config::{ModelConfig, PosEncoding};
-use super::params::Params;
-use super::plan::{GemmMode, QuantPlan};
+use super::params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
+use super::plan::{GemmMode, QuantPlan, WeightStore};
 use super::rope::apply_rope;
 use crate::quant::config::QFormat;
+use crate::quant::qtensor::encode;
 use crate::quant::{fake_quant, fake_quant_in_place};
 use crate::tensor::matmul::matmul_bt;
 use crate::tensor::Tensor;
@@ -67,47 +68,44 @@ impl ActStats {
     }
 }
 
-/// Weights pre-transposed and pre-quantised for a fixed plan — the serving
-/// hot path never re-quantises weights.
-pub struct PreparedLayer {
-    pub wq_t: Tensor,
-    pub wk_t: Tensor,
-    pub wv_t: Tensor,
-    pub wo_t: Tensor,
-    pub w1_t: Tensor,
-    pub w2_t: Tensor,
-}
-
 pub struct Model {
     pub params: Params,
     pub plan: QuantPlan,
-    prepared: Vec<PreparedLayer>,
+    prepared: Vec<PackedLayerParams>,
 }
 
-fn prep_weight(w: &Tensor, fmt: QFormat) -> Tensor {
-    // transpose to [out, in] so blocks run along the contraction dim, then
-    // fake-quantise rows
+/// Prepare one weight for serving: transpose to [out, in] so blocks run
+/// along the contraction dim, then either bit-pack it (the serving
+/// default for quantised fake-quant plans — resident memory becomes the
+/// packed payload) or keep a dequantised f32 copy. Both storages yield
+/// bit-identical GEMMs (tested in `tests/packed_serving.rs`).
+fn prep_weight(w: &Tensor, fmt: QFormat, mode: GemmMode, store: WeightStore) -> PackedWeight {
     let wt = w.t();
     if fmt == QFormat::Fp32 {
-        wt
-    } else {
-        fake_quant(&wt, fmt)
+        return PackedWeight::Dense(wt);
+    }
+    match (store, mode) {
+        (WeightStore::PackedAuto, GemmMode::FakeQuant) => PackedWeight::Packed(encode(&wt, fmt)),
+        _ => PackedWeight::Dense(fake_quant(&wt, fmt)),
     }
 }
 
 impl Model {
-    fn prepare(params: &Params, plan: &QuantPlan) -> Vec<PreparedLayer> {
+    fn prepare(params: &Params, plan: &QuantPlan) -> Vec<PackedLayerParams> {
+        let p = |w: &Tensor, li: usize, g: u8| -> PackedWeight {
+            prep_weight(w, plan.site(li, g).weight, plan.mode, plan.store)
+        };
         params
             .layers
             .iter()
             .enumerate()
-            .map(|(li, l)| PreparedLayer {
-                wq_t: prep_weight(&l.wq, plan.site(li, 1).weight),
-                wk_t: prep_weight(&l.wk, plan.site(li, 2).weight),
-                wv_t: prep_weight(&l.wv, plan.site(li, 3).weight),
-                wo_t: prep_weight(&l.wo, plan.site(li, 6).weight),
-                w1_t: prep_weight(&l.w1, plan.site(li, 7).weight),
-                w2_t: prep_weight(&l.w2, plan.site(li, 8).weight),
+            .map(|(li, l)| PackedLayerParams {
+                wq_t: p(&l.wq, li, 1),
+                wk_t: p(&l.wk, li, 2),
+                wv_t: p(&l.wv, li, 3),
+                wo_t: p(&l.wo, li, 6),
+                w1_t: p(&l.w1, li, 7),
+                w2_t: p(&l.w2, li, 8),
             })
             .collect()
     }
@@ -125,9 +123,24 @@ impl Model {
         &self.params.cfg
     }
 
-    /// Prepared (transposed + weight-quantised) tensors for one layer.
-    pub fn prepared(&self, li: usize) -> &PreparedLayer {
+    /// Prepared (transposed + weight-quantised, possibly packed) weight
+    /// cache for one layer.
+    pub fn prepared(&self, li: usize) -> &PackedLayerParams {
         &self.prepared[li]
+    }
+
+    /// Measured resident vs dense-f32 bytes of the prepared weight cache —
+    /// the serving-side counterpart of Table 3's memory-density column,
+    /// reported by the batched server's metrics.
+    pub fn weight_memory(&self) -> WeightMemory {
+        let mut m = WeightMemory::default();
+        for pl in &self.prepared {
+            for w in pl.weights() {
+                m.dense_f32_bytes += w.numel() * 4;
+                m.resident_bytes += w.resident_bytes();
+            }
+        }
+        m
     }
 
     /// Re-plan without copying parameters (mixed-precision search loop).
@@ -203,11 +216,11 @@ impl Model {
                 fake_quant(t, fmt)
             }
         };
-        let proj = |idx: u8, w_t: &Tensor| -> Tensor {
+        let proj = |idx: u8, w_t: &PackedWeight| -> Tensor {
             match plan.mode {
-                GemmMode::FakeQuant => matmul_bt(&q_act(plan.site(li, idx).act, &xn), w_t),
+                GemmMode::FakeQuant => w_t.matmul_bt(&q_act(plan.site(li, idx).act, &xn)),
                 GemmMode::LlmInt8 { threshold, bits } => {
-                    crate::baselines::llm_int8::llm_int8_matmul(&xn, w_t, threshold, bits)
+                    crate::baselines::llm_int8::llm_int8_matmul(&xn, w_t.dense(), threshold, bits)
                 }
             }
         };
@@ -276,10 +289,10 @@ impl Model {
         let att_out = match plan.mode {
             GemmMode::FakeQuant => {
                 fake_quant_in_place(&mut ctx, plan.site(li, 6).act);
-                matmul_bt(&ctx, &pl.wo_t)
+                pl.wo_t.matmul_bt(&ctx)
             }
             GemmMode::LlmInt8 { threshold, bits } => {
-                crate::baselines::llm_int8::llm_int8_matmul(&ctx, &pl.wo_t, threshold, bits)
+                crate::baselines::llm_int8::llm_int8_matmul(&ctx, pl.wo_t.dense(), threshold, bits)
             }
         }
         .add_bias(&l.bo);
@@ -294,10 +307,10 @@ impl Model {
         // ⑦ fc1
         let hpre = match plan.mode {
             GemmMode::FakeQuant => {
-                matmul_bt(&q_act(plan.site(li, 7).act, &xn2), &pl.w1_t)
+                pl.w1_t.matmul_bt(&q_act(plan.site(li, 7).act, &xn2))
             }
             GemmMode::LlmInt8 { threshold, bits } => {
-                crate::baselines::llm_int8::llm_int8_matmul(&xn2, &pl.w1_t, threshold, bits)
+                crate::baselines::llm_int8::llm_int8_matmul(&xn2, pl.w1_t.dense(), threshold, bits)
             }
         }
         .add_bias(&l.b1);
@@ -309,10 +322,10 @@ impl Model {
         let mlp_out = match plan.mode {
             GemmMode::FakeQuant => {
                 fake_quant_in_place(&mut hact, plan.site(li, 8).act);
-                matmul_bt(&hact, &pl.w2_t)
+                pl.w2_t.matmul_bt(&hact)
             }
             GemmMode::LlmInt8 { threshold, bits } => {
-                crate::baselines::llm_int8::llm_int8_matmul(&hact, &pl.w2_t, threshold, bits)
+                crate::baselines::llm_int8::llm_int8_matmul(&hact, pl.w2_t.dense(), threshold, bits)
             }
         }
         .add_bias(&l.b2);
@@ -412,6 +425,46 @@ mod tests {
         let rel = crate::util::stats::mse(&a.data, &b.data).sqrt()
             / (crate::util::stats::std_dev(&a.data) + 1e-9);
         assert!(rel < 0.1, "rel err {rel}");
+    }
+
+    #[test]
+    fn packed_store_is_bit_identical_to_dense_store() {
+        // the tentpole guarantee: serving from packed payloads changes
+        // nothing — all paper tables measured on the dense path stay valid
+        let cfg = ModelConfig::preset("nano");
+        let params = Params::init(&cfg, 42);
+        let toks = [3usize, 100, 7, 250, 9, 12];
+        for fmt in [presets::bfp_w(6), presets::bfp_w(4), presets::bm8(), presets::bl8()] {
+            let packed = Model::new(
+                params.clone(),
+                QuantPlan::uniform(fmt).with_store(WeightStore::PackedAuto),
+            );
+            let dense = Model::new(
+                params.clone(),
+                QuantPlan::uniform(fmt).with_store(WeightStore::DenseF32),
+            );
+            assert!(packed.prepared(0).wq_t.is_packed());
+            assert!(!dense.prepared(0).wq_t.is_packed());
+            let a = packed.forward(&toks, None);
+            let b = dense.forward(&toks, None);
+            assert_eq!(a.data, b.data, "{}", fmt.name());
+        }
+    }
+
+    #[test]
+    fn packed_store_shrinks_resident_weights() {
+        let m = tiny_model(QuantPlan::uniform(presets::bfp_w(6)));
+        let wm = m.weight_memory();
+        // BFP6 = 6.5 bits/element → ≥ 4× below f32 (Table 3's "4.9×")
+        assert!(
+            wm.resident_bytes * 4 <= wm.dense_f32_bytes,
+            "resident {} vs f32 {}",
+            wm.resident_bytes,
+            wm.dense_f32_bytes
+        );
+        assert!(wm.ratio() > 4.0 && wm.ratio() < 6.0, "{}", wm.ratio());
+        let m32 = tiny_model(QuantPlan::fp32());
+        assert_eq!(m32.weight_memory().ratio(), 1.0);
     }
 
     #[test]

@@ -1,11 +1,18 @@
 //! Quantised GEMM.
 //!
-//! Two execution paths that must agree (tested):
+//! Three execution paths that must agree (tested):
 //!
 //! 1. **Fake-quant path** (`qmatmul`): round both operands to the format's
 //!    representable set, then run the optimized f32 GEMM. This is the
-//!    paper's evaluation semantics and our model hot path.
-//! 2. **Block-domain path** (`bfp_matmul_blocked`): the ASIC datapath of
+//!    paper's evaluation semantics.
+//! 2. **Packed-weight path** (`qmatmul_packed`): the serving hot path —
+//!    the weight lives as a bit-packed [`QTensor`] (blocks along the
+//!    contraction dim, MSFP-style) and is dequantised block-row by
+//!    block-row *inside* the GEMM, so resident weight memory is the packed
+//!    payload (~5× smaller for BFP6) instead of dequantised f32. Bit-exact
+//!    with path 1 because the streamed panels run through the very same
+//!    `gemm_bt_rows`/`dot` kernels.
+//! 3. **Block-domain path** (`bfp_matmul_blocked`): the ASIC datapath of
 //!    Eq. 4 — integer mantissa multiply-accumulate within each block pair
 //!    plus a single shared-exponent add, no per-element shifting. Exact
 //!    agreement with path 1 (up to f32 summation order) justifies the
@@ -13,7 +20,10 @@
 
 use super::block::block_ranges;
 use super::config::{GemmQuant, QFormat};
-use crate::tensor::matmul::{matmul, matmul_bt};
+use super::qtensor::{decode, QTensor};
+use crate::tensor::matmul::{
+    available_threads, dot, gemm_bt_rows, matmul, matmul_bt, PAR_THRESHOLD,
+};
 use crate::tensor::Tensor;
 
 /// `act [m,k] @ weight [k,n]` with both operands fake-quantised.
@@ -44,6 +54,105 @@ pub fn qmatmul_pret(act: &Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat)
 pub fn qmatmul_pret_inplace(act: &mut Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat) -> Tensor {
     super::fake_quant_in_place(act, act_fmt);
     matmul_bt(act, weight_t_quantised)
+}
+
+/// `act [m,k] @ packed weight [n,k]ᵀ` — the packed-weight serving path.
+/// The activation is fake-quantised as usual; the weight is dequantised
+/// block-row by block-row from its packed payload inside the GEMM.
+/// Bit-identical to `qmatmul_pret(act, &decode(weight), act_fmt)` (tested).
+pub fn qmatmul_packed(act: &Tensor, weight: &QTensor, act_fmt: QFormat) -> Tensor {
+    let qa = super::fake_quant(act, act_fmt);
+    matmul_packed_bt(&qa, weight)
+}
+
+/// Activation-side in-place variant (mirrors [`qmatmul_pret_inplace`]).
+pub fn qmatmul_packed_inplace(act: &mut Tensor, weight: &QTensor, act_fmt: QFormat) -> Tensor {
+    super::fake_quant_in_place(act, act_fmt);
+    matmul_packed_bt(act, weight)
+}
+
+/// `a [m,k] @ dequant(qw) [n,k]ᵀ` with block dequantisation fused into the
+/// GEMM; `a` is used as-is (the caller quantises it). Two regimes:
+///
+/// * **decode (m < 4)** — the memory-bound per-token path: 4-row dequant
+///   panels stream through the same `gemm_bt_rows` kernel the dense path
+///   uses, so only one small scratch panel is ever resident. For m == 1
+///   the columns are threaded like the f32 path threads rows.
+/// * **prefill (m ≥ 4)** — compute-bound: dequantise once into a transient
+///   dense buffer and reuse the threaded broadcast GEMM; peak extra memory
+///   is one weight matrix, not one per layer.
+///
+/// Both regimes are bit-identical to `matmul_bt(a, &decode(qw))` because
+/// every output element accumulates the identical value sequence.
+pub fn matmul_packed_bt(a: &Tensor, qw: &QTensor) -> Tensor {
+    let (m, k) = a.dims2();
+    assert_eq!(qw.shape.len(), 2, "packed weight must be 2-D, got {:?}", qw.shape);
+    let (n, k2) = (qw.shape[0], qw.shape[1]);
+    assert_eq!(k, k2, "matmul_packed_bt inner dims: {k} vs {k2}");
+    if m >= 4 {
+        return matmul_bt(a, &decode(qw));
+    }
+    let mut out = vec![0.0f32; m * n];
+    let threads = available_threads();
+    if m == 1 && n * k >= PAR_THRESHOLD && threads > 1 {
+        let nt = threads.min(n.div_ceil(4));
+        // 4-aligned chunks keep the panel grouping — and the f32 summation
+        // order — identical to a single full-width kernel call
+        let per = n.div_ceil(nt).div_ceil(4) * 4;
+        std::thread::scope(|scope| {
+            let mut rest = out.as_mut_slice();
+            let mut j0 = 0usize;
+            while j0 < n {
+                let j1 = (j0 + per).min(n);
+                let (chunk, tail) = rest.split_at_mut(j1 - j0);
+                rest = tail;
+                scope.spawn(move || packed_bt_panel(&a.data, 1, k, qw, j0, j1, chunk));
+                j0 = j1;
+            }
+        });
+    } else {
+        packed_bt_panel(&a.data, m, k, qw, 0, n, &mut out);
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// `out[i][j - j0] = dot(a_i, dequant(qw row j))` for `j ∈ [j0, j1)`,
+/// dequantising one 4-row panel at a time into a reusable scratch buffer.
+/// `j0` must be 4-aligned so the panel grouping matches `gemm_bt_rows`
+/// over the full column range (tail columns use the same `dot`).
+fn packed_bt_panel(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    qw: &QTensor,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(j0 % 4, 0);
+    let w = j1 - j0;
+    debug_assert_eq!(out.len(), m * w);
+    let mut panel = vec![0.0f32; 4 * k];
+    let mut tmp = vec![0.0f32; m * 4];
+    let mut j = j0;
+    while j + 4 <= j1 {
+        for r in 0..4 {
+            qw.decode_row_into(j + r, &mut panel[r * k..(r + 1) * k]);
+        }
+        gemm_bt_rows(a, &panel, &mut tmp, 0..m, k, 4);
+        for i in 0..m {
+            let o = i * w + (j - j0);
+            out[o..o + 4].copy_from_slice(&tmp[i * 4..(i + 1) * 4]);
+        }
+        j += 4;
+    }
+    while j < j1 {
+        qw.decode_row_into(j, &mut panel[..k]);
+        for i in 0..m {
+            out[i * w + (j - j0)] = dot(&a[i * k..(i + 1) * k], &panel[..k]);
+        }
+        j += 1;
+    }
 }
 
 /// Integer-domain BFP GEMM (Eq. 4): `act [m,k] @ weight_t [n,k]`.
@@ -155,6 +264,57 @@ mod tests {
             let pret = qmatmul_pret(&a, &wt_q, fmt);
             close_slice(&direct.data, &pret.data, 1e-6, "pret")
         });
+    }
+
+    #[test]
+    fn packed_matches_pret_bitwise() {
+        // the serving guarantee: decoding from packed payloads inside the
+        // GEMM changes nothing, bit for bit, for any preset format
+        let mut formats = presets::table3_formats();
+        formats.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+        for (name, fmt) in formats {
+            check(&format!("packed == pret {name}"), 12, |rng| {
+                let m = 1 + rng.below(6); // covers decode (m<4) + prefill (m>=4)
+                let k = 5 + rng.below(60); // includes ragged tail blocks
+                let n = 1 + rng.below(10); // includes tail columns (n % 4 != 0)
+                let a = Tensor::new(&[m, k], llmish_values(rng, m * k, 1.0, 0.05));
+                let w = Tensor::new(&[n, k], llmish_values(rng, n * k, 0.3, 0.02));
+                let wt_q = crate::quant::fake_quant(&w, fmt);
+                let packed = crate::quant::qtensor::encode(&w, fmt);
+                let want = qmatmul_pret(&a, &wt_q, fmt);
+                let got = qmatmul_packed(&a, &packed, fmt);
+                close_slice(&want.data, &got.data, 0.0, name)
+            });
+        }
+    }
+
+    #[test]
+    fn packed_threaded_decode_path_bitwise() {
+        // m == 1 with n·k above PAR_THRESHOLD takes the column-threaded
+        // lane; it must still be bit-identical to the dense kernel
+        let mut rng = crate::util::rng::Pcg32::new(21);
+        let (k, n) = (2048, 1024); // n·k == PAR_THRESHOLD
+        let fmt = presets::bfp_w(6);
+        let a = Tensor::new(&[1, k], llmish_values(&mut rng, k, 1.0, 0.02));
+        let w = Tensor::new(&[n, k], llmish_values(&mut rng, n * k, 0.3, 0.0));
+        let wt_q = crate::quant::fake_quant(&w, fmt);
+        let packed = crate::quant::qtensor::encode(&w, fmt);
+        let want = qmatmul_pret(&a, &wt_q, fmt);
+        let got = qmatmul_packed(&a, &packed, fmt);
+        assert_eq!(want.data, got.data);
+    }
+
+    #[test]
+    fn packed_inplace_matches_packed() {
+        let mut rng = crate::util::rng::Pcg32::new(5);
+        let fmt = presets::bfp_w(6);
+        let a = Tensor::new(&[2, 33], llmish_values(&mut rng, 66, 1.0, 0.05));
+        let w = Tensor::new(&[7, 33], llmish_values(&mut rng, 231, 0.3, 0.0));
+        let packed = crate::quant::qtensor::encode(&w, fmt);
+        let want = qmatmul_packed(&a, &packed, fmt);
+        let mut a2 = a.clone();
+        let got = qmatmul_packed_inplace(&mut a2, &packed, fmt);
+        assert_eq!(want.data, got.data);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! computed from the formula. Decode reproduces the fake-quant values
 //! exactly; this is asserted by tests and used by the weight cache.
 
-use super::block::{block_absmax, block_ranges};
+use super::block::{block_absmax, block_ranges, blocks_per_row};
 use super::config::QFormat;
 use super::minifloat::{exp2i, ilogb, round_dmf, round_minifloat};
 use crate::tensor::Tensor;
@@ -38,7 +38,10 @@ impl BitWriter {
     }
 }
 
-/// Bit-level reader.
+/// Bit-level reader. Fields are LSB-first within each byte (matching
+/// [`BitWriter::push`]); `read` pulls a whole field from a 64-bit window
+/// in one shot, which keeps the packed GEMM's dequant loop from being
+/// bit-serial on the decode hot path.
 struct BitReader<'a> {
     buf: &'a [u8],
     bitpos: usize,
@@ -46,14 +49,17 @@ struct BitReader<'a> {
 
 impl<'a> BitReader<'a> {
     fn read(&mut self, bits: u32) -> u32 {
-        let mut v = 0u32;
-        for i in 0..bits {
-            let byte = self.bitpos / 8;
-            let bit = (self.buf[byte] >> (self.bitpos % 8)) & 1;
-            v |= (bit as u32) << i;
-            self.bitpos += 1;
-        }
-        v
+        debug_assert!(bits <= 32);
+        let byte = self.bitpos / 8;
+        let off = (self.bitpos % 8) as u32;
+        // off ≤ 7 and bits ≤ 32, so the field spans at most 5 bytes — an
+        // 8-byte little-endian window always covers it
+        let mut tmp = [0u8; 8];
+        let end = (byte + 8).min(self.buf.len());
+        tmp[..end - byte].copy_from_slice(&self.buf[byte..end]);
+        let window = u64::from_le_bytes(tmp);
+        self.bitpos += bits as usize;
+        ((window >> off) & ((1u64 << bits) - 1)) as u32
     }
 }
 
@@ -80,6 +86,55 @@ impl QTensor {
     /// Measured bits per element.
     pub fn bits_per_element(&self) -> f64 {
         self.packed_bytes() as f64 * 8.0 / self.numel() as f64
+    }
+
+    /// Columns of the packed layout (the last dim; blocks run along it).
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    /// Rows of the packed layout (all leading dims collapsed).
+    pub fn rows(&self) -> usize {
+        self.numel() / self.cols().max(1)
+    }
+
+    /// Exact packed bits per row. Every format packs rows independently at
+    /// a fixed width (shared fields included), which is what makes O(1)
+    /// row seeks — and therefore the fused packed GEMM — possible.
+    pub fn row_bits(&self) -> usize {
+        let cols = self.cols();
+        match self.fmt {
+            QFormat::Fp32 => 32 * cols,
+            QFormat::Fixed { w } => w as usize * cols,
+            QFormat::FixedRow { w } => 32 + w as usize * cols,
+            QFormat::MiniFloat { e, m } | QFormat::Dmf { e, m } => {
+                (1 + e + m) as usize * cols
+            }
+            QFormat::Bfp { e, m, n } => {
+                blocks_per_row(cols, n as usize) * e as usize + cols * (1 + m as usize)
+            }
+            QFormat::Bm { e, m, b, n } => {
+                blocks_per_row(cols, n as usize) * b as usize
+                    + cols * (1 + e as usize + m as usize)
+            }
+            QFormat::Bl { e, b, n } => {
+                blocks_per_row(cols, n as usize) * b as usize + cols * (1 + e as usize)
+            }
+        }
+    }
+
+    /// Decode one row into `out` (`out.len() == cols`), one block at a
+    /// time from the packed payload — the primitive under
+    /// [`crate::quant::qmatmul::qmatmul_packed`]. Bit-identical to the
+    /// corresponding slice of [`decode`].
+    pub fn decode_row_into(&self, row: usize, out: &mut [f32]) {
+        debug_assert!(row < self.rows());
+        debug_assert_eq!(out.len(), self.cols());
+        let mut r = BitReader {
+            buf: &self.payload,
+            bitpos: row * self.row_bits(),
+        };
+        decode_row(&mut r, self.fmt, self.scale, out);
     }
 }
 
@@ -214,96 +269,90 @@ fn float_fields(q: f32, e_bits: u32, m_bits: u32, bias: i32, dmf: bool) -> (u32,
 
 /// Decode back to f32 (must equal the fake-quant values exactly).
 pub fn decode(q: &QTensor) -> Tensor {
-    let cols = *q.shape.last().unwrap_or(&1);
-    let numel = q.numel();
-    let mut r = BitReader {
-        buf: &q.payload,
-        bitpos: 0,
-    };
-    let mut out = Vec::with_capacity(numel);
-    match q.fmt {
+    let cols = q.cols();
+    let rows = q.rows();
+    let mut out = vec![0.0f32; q.numel()];
+    for row in 0..rows {
+        q.decode_row_into(row, &mut out[row * cols..(row + 1) * cols]);
+    }
+    Tensor::new(&q.shape, out)
+}
+
+/// Decode one packed row; `r` must be positioned at the row start. Shared
+/// by [`decode`] and [`QTensor::decode_row_into`] so the streamed and
+/// whole-tensor paths cannot diverge.
+fn decode_row(r: &mut BitReader, fmt: QFormat, scale: f32, out: &mut [f32]) {
+    let cols = out.len();
+    match fmt {
         QFormat::Fp32 => {
-            for _ in 0..numel {
-                out.push(f32::from_bits(r.read(32)));
+            for x in out.iter_mut() {
+                *x = f32::from_bits(r.read(32));
             }
         }
         QFormat::Fixed { w } => {
-            for _ in 0..numel {
+            for x in out.iter_mut() {
                 let raw = r.read(w);
                 // sign-extend
                 let shift = 32 - w;
                 let c = ((raw << shift) as i32) >> shift;
-                out.push(c as f32 * q.scale);
+                *x = c as f32 * scale;
             }
         }
         QFormat::FixedRow { w } => {
-            let rows = numel / cols.max(1);
-            for _ in 0..rows {
-                let s = f32::from_bits(r.read(32));
-                for _ in 0..cols {
-                    let raw = r.read(w);
-                    let shift = 32 - w;
-                    let c = ((raw << shift) as i32) >> shift;
-                    out.push(c as f32 * s);
-                }
+            let s = f32::from_bits(r.read(32));
+            for x in out.iter_mut() {
+                let raw = r.read(w);
+                let shift = 32 - w;
+                let c = ((raw << shift) as i32) >> shift;
+                *x = c as f32 * s;
             }
         }
         QFormat::MiniFloat { e, m } | QFormat::Dmf { e, m } => {
             let bias = (1i32 << (e - 1)) - 1;
-            let dmf = matches!(q.fmt, QFormat::Dmf { .. });
-            for _ in 0..numel {
+            let dmf = matches!(fmt, QFormat::Dmf { .. });
+            for x in out.iter_mut() {
                 let s = r.read(1);
                 let ef = r.read(e) as i32;
                 let mf = r.read(m);
-                out.push(decode_float(s, ef, mf, m, bias, dmf));
+                *x = decode_float(s, ef, mf, m, bias, dmf);
             }
         }
         QFormat::Bfp { e, m, n } => {
-            let rows = numel / cols.max(1);
             let bias = (1i32 << (e - 1)) - 1;
-            for _ in 0..rows {
-                for (s0, e0) in block_ranges(cols, n as usize) {
-                    let sh_e = r.read(e) as i32 - bias;
-                    let scale = exp2i(sh_e - m as i32 + 1);
-                    for _ in s0..e0 {
-                        let s = r.read(1);
-                        let mm = r.read(m);
-                        let v = mm as f32 * scale;
-                        out.push(if s == 1 { -v } else { v });
-                    }
+            for (s0, e0) in block_ranges(cols, n as usize) {
+                let sh_e = r.read(e) as i32 - bias;
+                let blk_scale = exp2i(sh_e - m as i32 + 1);
+                for x in out[s0..e0].iter_mut() {
+                    let s = r.read(1);
+                    let mm = r.read(m);
+                    let v = mm as f32 * blk_scale;
+                    *x = if s == 1 { -v } else { v };
                 }
             }
         }
         QFormat::Bm { e, m, b, n } => {
-            let rows = numel / cols.max(1);
-            for _ in 0..rows {
-                for (s0, e0) in block_ranges(cols, n as usize) {
-                    let bias = r.read(b) as i32 - (1i32 << (b - 1));
-                    for _ in s0..e0 {
-                        let s = r.read(1);
-                        let ef = r.read(e) as i32;
-                        let mf = r.read(m);
-                        out.push(decode_float(s, ef, mf, m, bias, false));
-                    }
+            for (s0, e0) in block_ranges(cols, n as usize) {
+                let bias = r.read(b) as i32 - (1i32 << (b - 1));
+                for x in out[s0..e0].iter_mut() {
+                    let s = r.read(1);
+                    let ef = r.read(e) as i32;
+                    let mf = r.read(m);
+                    *x = decode_float(s, ef, mf, m, bias, false);
                 }
             }
         }
         QFormat::Bl { e, b, n } => {
-            let rows = numel / cols.max(1);
-            for _ in 0..rows {
-                for (s0, e0) in block_ranges(cols, n as usize) {
-                    let bias = r.read(b) as i32 - (1i32 << (b - 1));
-                    for _ in s0..e0 {
-                        let s = r.read(1);
-                        let ef = r.read(e) as i32;
-                        let v = if ef == 0 { 0.0 } else { exp2i(ef - bias) };
-                        out.push(if s == 1 { -v } else { v });
-                    }
+            for (s0, e0) in block_ranges(cols, n as usize) {
+                let bias = r.read(b) as i32 - (1i32 << (b - 1));
+                for x in out[s0..e0].iter_mut() {
+                    let s = r.read(1);
+                    let ef = r.read(e) as i32;
+                    let v = if ef == 0 { 0.0 } else { exp2i(ef - bias) };
+                    *x = if s == 1 { -v } else { v };
                 }
             }
         }
     }
-    Tensor::new(&q.shape, out)
 }
 
 fn decode_float(s: u32, ef: i32, mf: u32, m_bits: u32, bias: i32, dmf: bool) -> f32 {
@@ -372,6 +421,49 @@ mod tests {
                 "{name}: measured {measured} vs formula {formula}"
             );
         }
+    }
+
+    #[test]
+    fn row_seek_matches_full_decode() {
+        // decode_row_into must land on exact bit offsets for every format,
+        // including ragged tail blocks — seek rows out of order on purpose.
+        let mut formats = presets::table3_formats();
+        formats.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+        formats.push(("Fp32", QFormat::Fp32));
+        for (name, fmt) in formats {
+            check(&format!("row seek {name}"), 20, |rng| {
+                let cols = 5 + rng.below(40);
+                let rows = 1 + rng.below(5);
+                let t = Tensor::new(&[rows, cols], llmish_values(rng, rows * cols, 1.0, 0.05));
+                let q = encode(&t, fmt);
+                let bits = q.row_bits() * rows;
+                if q.payload.len() != bits.div_ceil(8) {
+                    return Err(format!(
+                        "{name}: payload {} bytes vs computed {} bits",
+                        q.payload.len(),
+                        bits
+                    ));
+                }
+                let full = decode(&q);
+                let mut buf = vec![0.0f32; cols];
+                for row in (0..rows).rev() {
+                    q.decode_row_into(row, &mut buf);
+                    close_slice(&buf, full.row(row), 0.0, name)?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn fixedrow_pack_roundtrip_exact() {
+        check("pack/unpack fixedrow", 30, |rng| {
+            let t = Tensor::new(&[4, 24], llmish_values(rng, 96, 1.0, 0.05));
+            let fmt = QFormat::FixedRow { w: 8 };
+            let fake = fake_quant(&t, fmt);
+            let dec = decode(&encode(&t, fmt));
+            close_slice(&fake.data, &dec.data, 0.0, "fixedrow")
+        });
     }
 
     #[test]

@@ -2,9 +2,32 @@
 //! the CPU PJRT client (the `xla` crate). This is the bridge between the
 //! Rust coordinator and the JAX/Pallas compute graphs — python never runs
 //! at request time.
+//!
+//! The real client needs the `xla` bindings, which are not available in
+//! every build environment, so it sits behind the `xla` cargo feature.
+//! Default builds get the API-compatible stub in [`stub`]: manifests still
+//! parse (so `bbq artifacts` works), but compiling/executing an artifact
+//! returns a clear [`RuntimeError`]. PJRT-backed tests and examples probe
+//! for artifact files first and skip when they are absent, so the stub
+//! keeps `cargo test` green everywhere.
 
+/// True when this build carries the real PJRT client. Callers that need
+/// execution (integration tests, examples) should skip gracefully when
+/// false instead of tripping over [`stub`]'s `Disabled` errors.
+pub const PJRT_AVAILABLE: bool = cfg!(feature = "xla");
+
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod exec;
 
+#[cfg(feature = "xla")]
 pub use client::{Runtime, RuntimeError};
+#[cfg(feature = "xla")]
 pub use exec::{LmFwdExec, QmatmulExec, TrainStepExec};
+
+#[cfg(not(feature = "xla"))]
+pub mod stub;
+
+#[cfg(not(feature = "xla"))]
+pub use stub::{LmFwdExec, QmatmulExec, Runtime, RuntimeError, TrainStepExec};

@@ -1,0 +1,240 @@
+//! Dependency-free stand-in for the PJRT runtime (compiled when the `xla`
+//! feature is off — the default in this offline environment).
+//!
+//! Mirrors the public surface of `client.rs`/`exec.rs` exactly: the
+//! artifact manifest parses (so `bbq artifacts` and density accounting
+//! work), but anything that would need a compiled executable returns
+//! [`RuntimeError::Disabled`]. Callers that guard on artifact files being
+//! present (the integration tests, `examples/e2e_train_quantize.rs`) skip
+//! cleanly; callers that insist get an actionable error message.
+
+use crate::model::params::Params;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+#[derive(Debug)]
+pub enum RuntimeError {
+    MissingArtifact(String),
+    Manifest(String),
+    Io(std::io::Error),
+    /// Built without the `xla` feature: no PJRT client is available.
+    Disabled(String),
+    Shape(String),
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::MissingArtifact(a) => {
+                write!(f, "artifact '{a}' not found in manifest")
+            }
+            RuntimeError::Manifest(m) => write!(f, "manifest error: {m}"),
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+            RuntimeError::Disabled(what) => write!(
+                f,
+                "{what} requires the PJRT runtime — rebuild with `--features xla` \
+                 (needs the local `xla` bindings)"
+            ),
+            RuntimeError::Shape(s) => write!(f, "shape mismatch: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+fn disabled(what: &str) -> RuntimeError {
+    RuntimeError::Disabled(what.to_string())
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub fmt: String,
+    pub seq: usize,
+    pub n_params: usize,
+}
+
+/// Artifact registry without a PJRT client behind it.
+pub struct Runtime {
+    pub artifacts_dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (reads manifest.json; an absent
+    /// directory yields an empty registry, matching the real client).
+    pub fn open(artifacts_dir: &Path) -> Result<Runtime, RuntimeError> {
+        let manifest_path = artifacts_dir.join("manifest.json");
+        let mut manifest = HashMap::new();
+        if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)?;
+            let j = Json::parse(&text).map_err(RuntimeError::Manifest)?;
+            let arts = j
+                .get("artifacts")
+                .ok_or_else(|| RuntimeError::Manifest("no 'artifacts' key".into()))?;
+            if let Json::Obj(m) = arts {
+                for (name, meta) in m {
+                    let file = meta
+                        .get("file")
+                        .and_then(|f| f.as_str())
+                        .unwrap_or_default()
+                        .to_string();
+                    manifest.insert(
+                        name.clone(),
+                        ArtifactMeta {
+                            name: name.clone(),
+                            file: artifacts_dir.join(file),
+                            kind: meta
+                                .get("kind")
+                                .and_then(|k| k.as_str())
+                                .unwrap_or("")
+                                .to_string(),
+                            fmt: meta
+                                .get("fmt")
+                                .and_then(|k| k.as_str())
+                                .unwrap_or("fp32")
+                                .to_string(),
+                            seq: meta.get("seq").and_then(|k| k.as_f64()).unwrap_or(0.0)
+                                as usize,
+                            n_params: meta
+                                .get("n_params")
+                                .and_then(|k| k.as_f64())
+                                .unwrap_or(0.0) as usize,
+                        },
+                    );
+                }
+            }
+        }
+        Ok(Runtime {
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            manifest,
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.manifest.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+}
+
+/// Forward-pass executable: tokens → logits.
+pub struct LmFwdExec {
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl LmFwdExec {
+    pub fn load(rt: &mut Runtime, name: &str, _vocab: usize) -> Result<LmFwdExec, RuntimeError> {
+        rt.meta(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))?;
+        Err(disabled("lm_fwd execution"))
+    }
+
+    pub fn run(&self, _tokens: &[usize], _params: &Params) -> Result<Tensor, RuntimeError> {
+        Err(disabled("lm_fwd execution"))
+    }
+}
+
+/// Train-step executable: (tokens, targets, lr, params) → (loss, params').
+pub struct TrainStepExec {
+    pub seq: usize,
+}
+
+impl TrainStepExec {
+    pub fn load(rt: &mut Runtime, name: &str) -> Result<TrainStepExec, RuntimeError> {
+        rt.meta(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))?;
+        Err(disabled("train_step execution"))
+    }
+
+    pub fn step(
+        &self,
+        _tokens: &[usize],
+        _targets: &[usize],
+        _lr: f32,
+        _params: &mut Params,
+    ) -> Result<f64, RuntimeError> {
+        Err(disabled("train_step execution"))
+    }
+}
+
+/// Pallas quantised-GEMM executable: (x, w) → y.
+pub struct QmatmulExec {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl QmatmulExec {
+    pub fn load(
+        rt: &mut Runtime,
+        name: &str,
+        _m: usize,
+        _k: usize,
+        _n: usize,
+    ) -> Result<Self, RuntimeError> {
+        rt.meta(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))?;
+        Err(disabled("qmatmul execution"))
+    }
+
+    pub fn run(&self, _x: &Tensor, _w: &Tensor) -> Result<Tensor, RuntimeError> {
+        Err(disabled("qmatmul execution"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_missing_dir_is_ok_but_empty() {
+        let rt = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap();
+        assert!(rt.artifact_names().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_reported_before_disabled() {
+        let mut rt = Runtime::open(Path::new("/nonexistent/artifacts")).unwrap();
+        match TrainStepExec::load(&mut rt, "nope") {
+            Err(RuntimeError::MissingArtifact(a)) => assert_eq!(a, "nope"),
+            other => panic!("expected MissingArtifact, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn manifest_parses_and_load_reports_disabled() {
+        let dir = std::env::temp_dir().join("bbq_stub_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"train_step_golden": {"file": "t.hlo.txt", "kind": "train_step", "fmt": "fp32", "seq": 32, "n_params": 10}}}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime::open(&dir).unwrap();
+        assert_eq!(rt.artifact_names(), vec!["train_step_golden".to_string()]);
+        let meta = rt.meta("train_step_golden").unwrap();
+        assert_eq!(meta.kind, "train_step");
+        assert_eq!(meta.seq, 32);
+        match TrainStepExec::load(&mut rt, "train_step_golden") {
+            Err(RuntimeError::Disabled(_)) => {}
+            other => panic!("expected Disabled, got {other:?}"),
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -8,7 +8,7 @@
 use super::Tensor;
 
 /// Threshold (in MACs) above which we spawn threads.
-const PAR_THRESHOLD: usize = 1 << 21;
+pub(crate) const PAR_THRESHOLD: usize = 1 << 21;
 
 /// C = A @ B, A: [m,k], B: [k,n].
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -53,7 +53,7 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(&[m, n], out)
 }
 
-fn available_threads() -> usize {
+pub(crate) fn available_threads() -> usize {
     std::env::var("BBQ_THREADS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -123,7 +123,10 @@ fn gemm_rows(a: &[f32], b: &[f32], out: &mut [f32], rows: std::ops::Range<usize>
 /// out[i][j] = dot(a_row_i, b_row_j); both rows contiguous.
 /// 1×4 panel micro-kernel: four B rows share each A load, which roughly
 /// triples throughput over a scalar dot loop (§Perf, EXPERIMENTS.md).
-fn gemm_bt_rows(
+/// pub(crate): the fused packed-weight GEMM in `quant::qmatmul` streams
+/// dequantised row panels through this exact kernel so its summation
+/// order — and therefore its bits — match the dense path.
+pub(crate) fn gemm_bt_rows(
     a: &[f32],
     b: &[f32],
     out: &mut [f32],

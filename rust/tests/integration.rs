@@ -117,6 +117,10 @@ fn rust_model_matches_jax_model() {
 
 #[test]
 fn pjrt_runtime_matches_golden_logits() {
+    if !bbq::runtime::PJRT_AVAILABLE {
+        eprintln!("skipping: built without the `xla` feature");
+        return;
+    }
     let Some((_cfg, params, tokens, golden)) = golden_params() else {
         eprintln!("skipping: artifacts missing");
         return;
@@ -148,6 +152,10 @@ fn pjrt_runtime_matches_golden_logits() {
 
 #[test]
 fn pjrt_train_step_reduces_loss() {
+    if !bbq::runtime::PJRT_AVAILABLE {
+        eprintln!("skipping: built without the `xla` feature");
+        return;
+    }
     let Some((_cfg, mut params, tokens, _)) = golden_params() else {
         eprintln!("skipping: artifacts missing");
         return;
@@ -172,6 +180,10 @@ fn pjrt_train_step_reduces_loss() {
 
 #[test]
 fn pjrt_executes_pallas_qmatmul() {
+    if !bbq::runtime::PJRT_AVAILABLE {
+        eprintln!("skipping: built without the `xla` feature");
+        return;
+    }
     if !artifacts_dir().join("qmatmul_bfp_m5.hlo.txt").exists() {
         eprintln!("skipping: qmatmul artifact missing");
         return;

@@ -1,0 +1,141 @@
+//! End-to-end tests for the packed-weight serving path: QTensor
+//! round-trips, fused packed GEMM vs the fake-quant reference, and the
+//! model/server layers serving bit-identically from packed payloads.
+
+use bbq::coordinator::{run_batched, serve_one, Request, ServerConfig};
+use bbq::model::config::ModelConfig;
+use bbq::model::kv_cache::DecodeSession;
+use bbq::model::params::Params;
+use bbq::model::plan::{QuantPlan, WeightStore};
+use bbq::model::Model;
+use bbq::quant::config::{presets, QFormat};
+use bbq::quant::fake_quant;
+use bbq::quant::qmatmul::{qmatmul_packed, qmatmul_pret};
+use bbq::quant::qtensor::{decode, encode};
+use bbq::tensor::Tensor;
+use bbq::util::check::{check, close_slice, llmish_values};
+
+/// Every preset the paper sweeps, plus the ZeroQuant-style per-row fixed
+/// point and plain fp32 pass-through.
+fn all_formats() -> Vec<(&'static str, QFormat)> {
+    let mut f = presets::table3_formats();
+    f.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+    f.push(("FixedRow W4", QFormat::FixedRow { w: 4 }));
+    f
+}
+
+#[test]
+fn pack_decode_equals_fake_quant_exactly() {
+    for (name, fmt) in all_formats() {
+        check(&format!("roundtrip {name}"), 25, |rng| {
+            let cols = 3 + rng.below(50); // ragged tails included
+            let rows = 1 + rng.below(6);
+            let t = Tensor::new(&[rows, cols], llmish_values(rng, rows * cols, 1.0, 0.05));
+            let fake = fake_quant(&t, fmt);
+            let dec = decode(&encode(&t, fmt));
+            close_slice(&fake.data, &dec.data, 0.0, name)
+        });
+    }
+}
+
+#[test]
+fn qmatmul_packed_equals_qmatmul_pret_exactly() {
+    for (name, fmt) in all_formats() {
+        check(&format!("packed gemm {name}"), 15, |rng| {
+            let m = 1 + rng.below(6);
+            let k = 4 + rng.below(70);
+            let n = 1 + rng.below(12);
+            let a = Tensor::new(&[m, k], llmish_values(rng, m * k, 1.0, 0.05));
+            let w = Tensor::new(&[n, k], llmish_values(rng, n * k, 0.3, 0.02));
+            let want = qmatmul_pret(&a, &fake_quant(&w, fmt), fmt);
+            let got = qmatmul_packed(&a, &encode(&w, fmt), fmt);
+            close_slice(&want.data, &got.data, 0.0, name)
+        });
+    }
+}
+
+fn nano_params() -> Params {
+    Params::init(&ModelConfig::preset("nano"), 42)
+}
+
+#[test]
+fn full_forward_identical_across_weight_stores() {
+    let params = nano_params();
+    let toks = [3usize, 100, 7, 250, 9, 12, 300, 41];
+    for (name, fmt) in all_formats() {
+        let packed = Model::new(
+            params.clone(),
+            QuantPlan::uniform(fmt).with_store(WeightStore::PackedAuto),
+        );
+        let dense = Model::new(
+            params.clone(),
+            QuantPlan::uniform(fmt).with_store(WeightStore::DenseF32),
+        );
+        let a = packed.forward(&toks, None);
+        let b = dense.forward(&toks, None);
+        assert_eq!(a.data, b.data, "forward mismatch under {name}");
+    }
+}
+
+#[test]
+fn kv_decode_identical_across_weight_stores() {
+    let params = nano_params();
+    let toks = [5usize, 9, 200, 17, 63];
+    let fmt = presets::bfp_w(6);
+    let packed = Model::new(
+        params.clone(),
+        QuantPlan::uniform(fmt).with_store(WeightStore::PackedAuto),
+    );
+    let dense = Model::new(
+        params,
+        QuantPlan::uniform(fmt).with_store(WeightStore::DenseF32),
+    );
+    let mut sp = DecodeSession::new(&packed);
+    let mut sd = DecodeSession::new(&dense);
+    for &t in &toks {
+        let lp = sp.step(t);
+        let ld = sd.step(t);
+        assert_eq!(lp, ld, "decode logits diverged at token {t}");
+    }
+}
+
+#[test]
+fn batched_server_serves_from_packed_weights() {
+    let params = nano_params();
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: vec![3 + i % 5, 10, 42],
+            max_new_tokens: 5,
+            temperature: 0.0,
+        })
+        .collect();
+    let fmt = presets::bfp_w(6);
+    let packed = Model::new(
+        params.clone(),
+        QuantPlan::uniform(fmt).with_store(WeightStore::PackedAuto),
+    );
+    let dense = Model::new(
+        params,
+        QuantPlan::uniform(fmt).with_store(WeightStore::DenseF32),
+    );
+    let (rp, mp) = run_batched(&packed, reqs.clone(), &ServerConfig::default());
+    let (rd, md) = run_batched(&dense, reqs.clone(), &ServerConfig::default());
+    // identical generations, ~5× less resident weight memory
+    for (a, b) in rp.iter().zip(&rd) {
+        assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+    }
+    assert!(
+        mp.weight_memory.resident_bytes * 4 <= mp.weight_memory.dense_f32_bytes,
+        "packed server resident {} vs f32 {}",
+        mp.weight_memory.resident_bytes,
+        mp.weight_memory.dense_f32_bytes
+    );
+    assert_eq!(
+        md.weight_memory.resident_bytes,
+        md.weight_memory.dense_f32_bytes
+    );
+    // single-request path too
+    let r = serve_one(&packed, &reqs[0], 7);
+    assert_eq!(r.tokens, rp[0].tokens);
+}
