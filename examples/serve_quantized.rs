@@ -1,8 +1,10 @@
-//! Serving demo: batched decoding through the L3 coordinator with a
-//! quantised model, comparing FP32 vs W6A6/W4A4 BFP throughput, latency
-//! and — via the packed-weight serving path — *measured* resident weight
-//! memory (the deployment story the paper's ASIC argument targets: block
-//! formats shrink the bytes a decoder must keep hot by ~5×).
+//! Serving demo: the continuous-batching decode engine with a quantised
+//! model, comparing FP32 vs W6A6/W4A4 BFP throughput, latency, batch
+//! occupancy / decode amortisation (every engine step dequantises each
+//! packed weight once for the whole batch), and — via the packed-weight
+//! serving path — *measured* resident weight memory (the deployment story
+//! the paper's ASIC argument targets: block formats shrink the bytes a
+//! decoder must keep hot by ~5×).
 //!
 //!     cargo run --release --example serve_quantized
 
@@ -48,7 +50,8 @@ fn main() {
         println!("[{name}] {}", metrics.summary());
         if name == "fp32" {
             for r in resps.iter().take(2) {
-                println!("  sample: {:?} → {}", prompts[r.id as usize % 4], vocab.decode(&r.tokens));
+                let prompt = prompts[r.id as usize % 4];
+                println!("  sample: {:?} → {}", prompt, vocab.decode(&r.tokens));
             }
         }
     }

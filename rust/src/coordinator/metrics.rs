@@ -13,6 +13,13 @@ pub struct Metrics {
     /// Dense-f32 vs actually-resident bytes of the served model's weight
     /// cache (packed payloads under block formats).
     pub weight_memory: WeightMemory,
+    /// Fused engine steps executed by the continuous-batching scheduler;
+    /// each one decodes every packed weight exactly once.
+    pub engine_steps: usize,
+    /// Token-steps processed across all slots (Σ active slots per engine
+    /// step) — what a sequential decoder would have paid one weight-decode
+    /// pass each for.
+    pub slot_steps: usize,
 }
 
 impl Metrics {
@@ -36,6 +43,23 @@ impl Metrics {
         v[idx.min(v.len() - 1)]
     }
 
+    /// Mean active slots per engine step — continuous-batching occupancy.
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.engine_steps == 0 {
+            0.0
+        } else {
+            self.slot_steps as f64 / self.engine_steps as f64
+        }
+    }
+
+    /// Packed-weight decode amortisation: token-steps served per weight
+    /// decode pass. Sequential decode pays one pass per token-step; the
+    /// batched engine pays one per engine step, so each fused GEMM's decode
+    /// work is shared by this many sequences on average.
+    pub fn decode_amortisation(&self) -> f64 {
+        self.batch_occupancy()
+    }
+
     /// generated tokens per wall-clock second
     pub fn throughput_tps(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -55,6 +79,14 @@ impl Metrics {
             self.p(50.0),
             self.p(99.0),
         );
+        if self.engine_steps > 0 {
+            s.push_str(&format!(
+                " steps={} occ={:.2} decode_amort={:.2}x",
+                self.engine_steps,
+                self.batch_occupancy(),
+                self.decode_amortisation(),
+            ));
+        }
         if self.weight_memory.dense_f32_bytes > 0 {
             s.push_str(&format!(
                 " weights={}B resident={}B ({:.2}x)",
@@ -82,5 +114,16 @@ mod tests {
         assert!((m.p(99.0) - 99.0).abs() <= 1.0);
         assert_eq!(m.throughput_tps(), 100.0);
         assert!(m.summary().contains("tok/s"));
+    }
+
+    #[test]
+    fn occupancy_and_amortisation() {
+        let mut m = Metrics::new();
+        assert_eq!(m.batch_occupancy(), 0.0);
+        m.engine_steps = 10;
+        m.slot_steps = 25;
+        assert!((m.batch_occupancy() - 2.5).abs() < 1e-12);
+        assert_eq!(m.decode_amortisation(), m.batch_occupancy());
+        assert!(m.summary().contains("decode_amort=2.50x"));
     }
 }

@@ -7,4 +7,4 @@ pub mod server;
 
 pub use experiment::{default_steps, get_or_train, save_result};
 pub use metrics::Metrics;
-pub use server::{run_batched, serve_one, Request, Response, ServerConfig};
+pub use server::{run_batched, serve_one, Request, Response, ServerConfig, ENGINE_SEED};

@@ -1,18 +1,25 @@
-//! Batched inference coordinator — the L3 serving path.
+//! Continuous-batching inference coordinator — the L3 serving path.
 //!
-//! std-thread implementation (no tokio in this environment): a bounded
-//! request queue feeds a dynamic batcher; the batcher groups requests up
-//! to `max_batch` (or `batch_timeout`), fans the batch out to a worker
-//! pool that decodes with per-request KV-cache sessions, and records
-//! latency/throughput metrics.
+//! A single scheduler loop owns a [`BatchedDecodeSession`] slot pool of
+//! `max_batch` slots. Queued requests are admitted into free slots, every
+//! active slot advances one token per fused engine step — the packed
+//! weights are decoded **once per layer per step regardless of how many
+//! sequences are in flight** — and slots are recycled the moment a
+//! sequence finishes, so short requests drain out and queued ones join
+//! mid-flight without batch barriers. Greedy decode is bit-identical to
+//! running each request alone through [`DecodeSession`] (tested here and
+//! in tests/continuous_batching.rs).
 
 use super::metrics::Metrics;
-use crate::model::kv_cache::{sample_logits, DecodeSession};
+use crate::model::kv_cache::{sample_logits, BatchedDecodeSession, DecodeSession};
 use crate::model::Model;
 use crate::util::rng::Pcg32;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+/// Seed for the engine's per-request sampling RNGs (`seed ^ request id`),
+/// so temperature > 0 decodes are reproducible for a given schedule.
+pub const ENGINE_SEED: u64 = 0xC0FFEE;
 
 #[derive(Clone, Debug)]
 pub struct Request {
@@ -31,25 +38,23 @@ pub struct Response {
 }
 
 pub struct ServerConfig {
+    /// Slot-pool size: the maximum number of sequences decoded together in
+    /// one fused engine step. (The worker-pool-era `workers`/`batch_timeout`
+    /// knobs are gone: the scheduler loop admits work the moment a slot
+    /// frees, and the fused GEMMs thread internally.)
     pub max_batch: usize,
-    pub batch_timeout: Duration,
-    pub workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig {
-            max_batch: 8,
-            batch_timeout: Duration::from_millis(5),
-            workers: std::thread::available_parallelism()
-                .map(|n| n.get().min(8))
-                .unwrap_or(4),
-        }
+        ServerConfig { max_batch: 8 }
     }
 }
 
 /// Process one request to completion (prefill + decode) on the calling
-/// thread. Used by the worker pool and directly by benchmarks.
+/// thread with its own [`DecodeSession`] — the sequential reference the
+/// batched engine must match bit for bit under greedy decoding, and the
+/// single-stream baseline the decode bench compares against.
 pub fn serve_one(model: &Model, req: &Request, seed: u64) -> Response {
     let start = Instant::now();
     let mut session = DecodeSession::new(model);
@@ -76,81 +81,144 @@ pub fn serve_one(model: &Model, req: &Request, seed: u64) -> Response {
     }
 }
 
-/// Run a closed-loop benchmark: submit all `requests`, process with the
-/// dynamic batcher + worker pool, return responses + metrics.
-pub fn run_batched(model: &Model, requests: Vec<Request>, cfg: &ServerConfig) -> (Vec<Response>, Metrics) {
-    let (tx, rx) = mpsc::channel::<Request>();
-    for r in requests.iter().cloned() {
-        tx.send(r).unwrap();
+/// One in-flight sequence occupying an engine slot.
+struct ActiveSeq {
+    req: Request,
+    start: Instant,
+    rng: Pcg32,
+    /// tokens already fed to the model
+    fed: usize,
+    out: Vec<usize>,
+    /// token to feed on the next engine step
+    next_input: usize,
+}
+
+impl ActiveSeq {
+    fn into_response(self) -> Response {
+        Response {
+            id: self.req.id,
+            tokens: self.out,
+            latency: self.start.elapsed(),
+            prompt_len: self.req.prompt.len(),
+        }
     }
-    drop(tx);
-    let rx = Arc::new(Mutex::new(rx));
-    let n_total = requests.len();
-    let done = Arc::new(AtomicUsize::new(0));
-    let stop = Arc::new(AtomicBool::new(false));
-    let responses = Arc::new(Mutex::new(Vec::with_capacity(n_total)));
-    let metrics = Arc::new(Mutex::new(Metrics::new()));
+}
+
+/// Admission result: most requests become active; degenerate ones (no
+/// prompt and nothing to generate) complete immediately.
+enum Admission {
+    Active(ActiveSeq),
+    Done(Response),
+}
+
+fn admit(req: Request, submitted: Instant) -> Admission {
+    let mut seq = ActiveSeq {
+        rng: Pcg32::new(ENGINE_SEED ^ req.id),
+        start: submitted,
+        fed: 0,
+        out: Vec::new(),
+        next_input: 0,
+        req,
+    };
+    if seq.req.prompt.is_empty() {
+        // mirror `serve_one`: with no prompt there are no logits yet, and
+        // sampling from an empty logit vector yields token 0
+        if seq.req.max_new_tokens == 0 {
+            return Admission::Done(seq.into_response());
+        }
+        let next = sample_logits(&[], seq.req.temperature, &mut seq.rng);
+        seq.out.push(next);
+        seq.next_input = next;
+        if seq.out.len() >= seq.req.max_new_tokens {
+            return Admission::Done(seq.into_response());
+        }
+    } else {
+        seq.next_input = seq.req.prompt[0];
+    }
+    Admission::Active(seq)
+}
+
+/// Serve all `requests` through the continuous-batching engine and return
+/// responses (sorted by id) plus metrics. Latency is measured from
+/// submission, so it includes time spent queued for a slot.
+pub fn run_batched(
+    model: &Model,
+    requests: Vec<Request>,
+    cfg: &ServerConfig,
+) -> (Vec<Response>, Metrics) {
+    let n_slots = cfg.max_batch.max(1);
+    let cap = model.cfg().max_seq;
+    let mut queue: VecDeque<Request> = requests.into_iter().collect();
+    let mut session = BatchedDecodeSession::new(model, n_slots);
+    let mut slots: Vec<Option<ActiveSeq>> = (0..n_slots).map(|_| None).collect();
+    let mut responses: Vec<Response> = Vec::new();
+    let mut metrics = Metrics::new();
     let t0 = Instant::now();
-    std::thread::scope(|scope| {
-        for wi in 0..cfg.workers {
-            let rx = Arc::clone(&rx);
-            let responses = Arc::clone(&responses);
-            let metrics = Arc::clone(&metrics);
-            let done = Arc::clone(&done);
-            let stop = Arc::clone(&stop);
-            scope.spawn(move || {
-                loop {
-                    if stop.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    // dynamic batching: grab up to max_batch requests
-                    let mut batch = Vec::new();
-                    {
-                        let guard = rx.lock().unwrap();
-                        let deadline = Instant::now() + cfg.batch_timeout;
-                        while batch.len() < cfg.max_batch {
-                            match guard.try_recv() {
-                                Ok(r) => batch.push(r),
-                                Err(mpsc::TryRecvError::Empty) => {
-                                    if batch.is_empty() && Instant::now() < deadline {
-                                        std::thread::yield_now();
-                                        continue;
-                                    }
-                                    break;
-                                }
-                                Err(mpsc::TryRecvError::Disconnected) => break,
-                            }
-                        }
-                    }
-                    if batch.is_empty() {
-                        if done.load(Ordering::Relaxed) >= n_total {
-                            break;
-                        }
-                        std::thread::yield_now();
-                        continue;
-                    }
-                    for req in batch {
-                        let resp = serve_one(model, &req, 0xC0FFEE + wi as u64);
-                        let gen_toks = resp.tokens.len();
-                        let lat = resp.latency;
-                        responses.lock().unwrap().push(resp);
-                        metrics.lock().unwrap().record(lat, gen_toks);
-                        done.fetch_add(1, Ordering::Relaxed);
+    loop {
+        // admit queued requests into free slots (continuous batching)
+        for slot in 0..n_slots {
+            while slots[slot].is_none() && !queue.is_empty() {
+                let req = queue.pop_front().unwrap();
+                session.reset_slot(slot);
+                match admit(req, t0) {
+                    Admission::Active(seq) => slots[slot] = Some(seq),
+                    Admission::Done(resp) => {
+                        metrics.record(resp.latency, resp.tokens.len());
+                        responses.push(resp);
                     }
                 }
-            });
+            }
         }
-    });
-    let wall = t0.elapsed();
-    let mut m = Arc::try_unwrap(metrics).unwrap().into_inner().unwrap();
-    m.wall = wall;
+        // one fused step over every active slot; rows still prefilling
+        // skip the LM head (their logits would be discarded anyway)
+        let mut batch: Vec<(usize, usize)> = Vec::with_capacity(n_slots);
+        let mut needs_logits: Vec<bool> = Vec::with_capacity(n_slots);
+        for (s, a) in slots.iter().enumerate() {
+            if let Some(a) = a {
+                batch.push((s, a.next_input));
+                needs_logits.push(a.fed + 1 >= a.req.prompt.len());
+            }
+        }
+        if batch.is_empty() {
+            break; // queue drained and nothing in flight
+        }
+        let logits = session.step_with_logit_mask(&batch, Some(&needs_logits));
+        metrics.engine_steps += 1;
+        metrics.slot_steps += batch.len();
+        for (bi, &(slot, _)) in batch.iter().enumerate() {
+            let seq = slots[slot].as_mut().unwrap();
+            seq.fed += 1;
+            if seq.fed < seq.req.prompt.len() {
+                // still prefilling: logits discarded, feed the next prompt
+                // token on the following step
+                seq.next_input = seq.req.prompt[seq.fed];
+                continue;
+            }
+            // prompt fully fed: these logits belong to the newest token
+            let more = seq.out.len() < seq.req.max_new_tokens && session.pos(slot) < cap;
+            let finished = if more {
+                let next = sample_logits(&logits[bi], seq.req.temperature, &mut seq.rng);
+                seq.out.push(next);
+                seq.next_input = next;
+                // the final sampled token needs no further forward pass
+                seq.out.len() >= seq.req.max_new_tokens
+            } else {
+                true
+            };
+            if finished {
+                let resp = slots[slot].take().unwrap().into_response();
+                metrics.record(resp.latency, resp.tokens.len());
+                responses.push(resp);
+            }
+        }
+    }
+    metrics.wall = t0.elapsed();
     // report what the weight cache actually occupies while serving —
     // packed block formats shrink this ~5× vs dense f32 (Table 3's Mem
     // column, measured on live state)
-    m.weight_memory = model.weight_memory();
-    let mut out = Arc::try_unwrap(responses).unwrap().into_inner().unwrap();
-    out.sort_by_key(|r| r.id);
-    (out, m)
+    metrics.weight_memory = model.weight_memory();
+    responses.sort_by_key(|r| r.id);
+    (responses, metrics)
 }
 
 #[cfg(test)]
@@ -185,15 +253,36 @@ mod tests {
         assert!(resps.iter().all(|r| r.tokens.len() == 4));
         assert_eq!(metrics.completed, 12);
         assert!(metrics.throughput_tps() > 0.0);
+        // every request feeds 3 prompt tokens and generates 4, the last of
+        // which is never fed back — 6 token-steps each
+        assert_eq!(metrics.slot_steps, 12 * 6);
+        assert!(metrics.engine_steps > 0);
+        assert!(metrics.batch_occupancy() > 1.0);
     }
 
     #[test]
-    fn greedy_decode_is_deterministic_across_workers() {
+    fn greedy_decode_is_deterministic_across_batch_sizes() {
+        // the slot-pool size must never change a generated token
         let m = model();
-        let (a, _) = run_batched(&m, reqs(6), &ServerConfig { workers: 1, ..Default::default() });
-        let (b, _) = run_batched(&m, reqs(6), &ServerConfig { workers: 4, ..Default::default() });
+        let (a, _) = run_batched(&m, reqs(6), &ServerConfig { max_batch: 1 });
+        let (b, _) = run_batched(&m, reqs(6), &ServerConfig { max_batch: 4 });
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra.tokens, rb.tokens, "request {}", ra.id);
+        }
+    }
+
+    #[test]
+    fn engine_matches_sequential_reference() {
+        // continuous batching must not change a single generated token
+        let m = model();
+        let requests = reqs(9);
+        let cfg = ServerConfig { max_batch: 4 };
+        let (got, metrics) = run_batched(&m, requests.clone(), &cfg);
+        assert!(metrics.batch_occupancy() > 1.0);
+        for (resp, req) in got.iter().zip(&requests) {
+            let want = serve_one(&m, req, ENGINE_SEED);
+            assert_eq!(resp.id, req.id);
+            assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
         }
     }
 
@@ -234,5 +323,29 @@ mod tests {
         };
         let r = serve_one(&m, &long, 1);
         assert!(r.prompt_len + r.tokens.len() <= m.cfg().max_seq);
+        // the engine honours the cap the same way
+        let (resps, _) = run_batched(&m, vec![long.clone()], &ServerConfig::default());
+        assert_eq!(resps[0].tokens, r.tokens);
+    }
+
+    #[test]
+    fn degenerate_requests_complete() {
+        let m = model();
+        let requests: Vec<Request> = [(0u64, vec![], 0usize), (1, vec![3, 4], 0), (2, vec![], 3)]
+            .into_iter()
+            .map(|(id, prompt, max_new_tokens)| Request {
+                id,
+                prompt,
+                max_new_tokens,
+                temperature: 0.0,
+            })
+            .collect();
+        let (resps, metrics) = run_batched(&m, requests.clone(), &ServerConfig::default());
+        assert_eq!(resps.len(), 3);
+        assert_eq!(metrics.completed, 3);
+        for (resp, req) in resps.iter().zip(&requests) {
+            let want = serve_one(&m, req, ENGINE_SEED);
+            assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
+        }
     }
 }

@@ -27,22 +27,44 @@ pub struct GemmSite {
     pub act_act: bool,
 }
 
+/// Row constructor keeping [`layer_gemms`]'s table readable: (index, name,
+/// k, act numel per token, weight numel, MACs per token, act-act?).
+fn site(
+    index: usize,
+    name: &'static str,
+    k: usize,
+    act: usize,
+    weight: usize,
+    macs: usize,
+    act_act: bool,
+) -> GemmSite {
+    GemmSite {
+        index,
+        name,
+        k,
+        act_numel_per_tok: act,
+        weight_numel: weight,
+        macs_per_tok: macs,
+        act_act,
+    }
+}
+
 /// Enumerate the 8 GEMMs of one transformer layer.
 pub fn layer_gemms(cfg: &ModelConfig, seq: usize) -> Vec<GemmSite> {
     let d = cfg.d_model;
     let f = cfg.d_ff;
     let s = seq;
     vec![
-        GemmSite { index: 1, name: "q_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
-        GemmSite { index: 2, name: "k_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
-        GemmSite { index: 3, name: "v_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
+        site(1, "q_proj", d, d, d * d, d * d, false),
+        site(2, "k_proj", d, d, d * d, d * d, false),
+        site(3, "v_proj", d, d, d * d, d * d, false),
         // ④ S = Q K^T: per token, dot over head_dim with s keys × heads
-        GemmSite { index: 4, name: "qk_t", k: d / cfg.n_heads, act_numel_per_tok: d, weight_numel: 0, macs_per_tok: s * d, act_act: true },
+        site(4, "qk_t", d / cfg.n_heads, d, 0, s * d, true),
         // ⑤ C = A V
-        GemmSite { index: 5, name: "att_v", k: s, act_numel_per_tok: cfg.n_heads * s, weight_numel: 0, macs_per_tok: s * d, act_act: true },
-        GemmSite { index: 6, name: "o_proj", k: d, act_numel_per_tok: d, weight_numel: d * d, macs_per_tok: d * d, act_act: false },
-        GemmSite { index: 7, name: "fc1", k: d, act_numel_per_tok: d, weight_numel: d * f, macs_per_tok: d * f, act_act: false },
-        GemmSite { index: 8, name: "fc2", k: f, act_numel_per_tok: f, weight_numel: d * f, macs_per_tok: d * f, act_act: false },
+        site(5, "att_v", s, cfg.n_heads * s, 0, s * d, true),
+        site(6, "o_proj", d, d, d * d, d * d, false),
+        site(7, "fc1", d, d, d * f, d * f, false),
+        site(8, "fc2", f, f, d * f, d * f, false),
     ]
 }
 

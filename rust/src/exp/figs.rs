@@ -244,7 +244,8 @@ pub fn fig10(args: &Args) {
     let cost = calibrate();
     let task = Task::Sst2;
     let exs = generate(task, &vocab, 777, examples);
-    let fp32_acc = evaluate(&Model::new(params.clone(), QuantPlan::fp32()), task, &exs, threads).accuracy;
+    let fp32_model = Model::new(params.clone(), QuantPlan::fp32());
+    let fp32_acc = evaluate(&fp32_model, task, &exs, threads).accuracy;
 
     let mut traces: Vec<(String, Vec<f64>)> = Vec::new();
     let mut rows: Vec<(String, f64, f64, f64, f64)> = Vec::new();
@@ -308,11 +309,16 @@ pub fn table1(_args: &Args) {
         "Table 1 — LLM quantisation method comparison",
         &["Method", "(QW,QAct)", "Bitwidth", "PTQ or TAQ", "# Quantised GEMMs"],
     );
-    t.row(vec!["ZeroQuant".into(), "(yes,yes)".into(), "W4A8".into(), "TAQ".into(), "8/8".into()]);
-    t.row(vec!["LLM.int8()".into(), "(yes,yes)".into(), "W8A8*".into(), "PTQ".into(), "6/8".into()]);
-    t.row(vec!["GPTQ".into(), "(yes,no)".into(), "W4".into(), "PTQ + DC".into(), "6/8".into()]);
-    t.row(vec!["SmoothQuant".into(), "(yes,yes)".into(), "W8A8".into(), "PTQ + DC".into(), "6/8".into()]);
-    t.row(vec!["OURS (BFP)".into(), "(yes,yes)".into(), "W6A6/W4A4".into(), "PTQ/TAQ".into(), "8/8".into()]);
+    let rows = [
+        ["ZeroQuant", "(yes,yes)", "W4A8", "TAQ", "8/8"],
+        ["LLM.int8()", "(yes,yes)", "W8A8*", "PTQ", "6/8"],
+        ["GPTQ", "(yes,no)", "W4", "PTQ + DC", "6/8"],
+        ["SmoothQuant", "(yes,yes)", "W8A8", "PTQ + DC", "6/8"],
+        ["OURS (BFP)", "(yes,yes)", "W6A6/W4A4", "PTQ/TAQ", "8/8"],
+    ];
+    for r in rows {
+        t.row(r.iter().map(|s| s.to_string()).collect());
+    }
     save_result("table1", &t, None);
     // verify the 6/8 vs 8/8 accounting against our plan machinery
     let cfg = crate::model::config::ModelConfig::preset("nano");

@@ -79,7 +79,9 @@ pub fn run(args: &Args) {
     eval_row("GPTQ", "W4", "<1.6x".into(), "-".into(), &|p| {
         gptq::build(p, &cal, 4, 0.01)
     });
-    eval_row("SmoothQuant", "W8A8", format!("<{}", md(presets::fixed8())), format!("<{}", ad(presets::fixed8())), &|p| {
+    let sq_mem = format!("<{}", md(presets::fixed8()));
+    let sq_arith = format!("<{}", ad(presets::fixed8()));
+    eval_row("SmoothQuant", "W8A8", sq_mem, sq_arith, &|p| {
         smoothquant::build(p, &cal, 0.5).0
     });
     eval_row("SmoothQuant-c", "W8A8", md(presets::fixed8()), ad(presets::fixed8()), &|p| {

@@ -243,8 +243,6 @@ fn cmd_serve(args: &Args) {
         .collect();
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 8),
-        workers: args.usize_or("workers", 8),
-        ..Default::default()
     };
     let (resps, metrics) = run_batched(&model, reqs, &cfg);
     println!("{}", metrics.summary());

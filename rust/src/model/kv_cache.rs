@@ -1,13 +1,25 @@
 //! Incremental decoding with a per-layer KV cache — the serving hot path
 //! used by the coordinator. Numerically identical to the full-context
 //! forward (tested), but O(s) per new token instead of O(s²).
+//!
+//! Two sessions share the same math:
+//!
+//! * [`DecodeSession`] — one sequence, one token per step. The reference
+//!   path: every weight is decoded from its packed payload once per step.
+//! * [`BatchedDecodeSession`] — N sequences over a slot pool, one token per
+//!   *active slot* per step, all rows flowing through a single fused packed
+//!   GEMM per weight site per layer. Weights are decoded once per layer per
+//!   step **regardless of batch size**, which is the amortisation the
+//!   continuous-batching coordinator exists to buy. Every row of a batched
+//!   step is bit-identical to the sequential session (tested), because the
+//!   row-wise kernels accumulate in exactly the m == 1 order and activation
+//!   rows quantise independently ([`crate::quant::fake_quant_rows`]).
 
 use super::config::PosEncoding;
 use super::rope::apply_rope;
 use super::transformer::Model;
-use crate::quant::fake_quant;
-use crate::quant::config::QFormat;
-use crate::tensor::matmul::matmul_bt;
+use crate::quant::{quant_act, quant_act_rows};
+use crate::tensor::matmul::{matmul_bt, matmul_bt_rowwise};
 use crate::tensor::Tensor;
 
 /// Cached keys/values for one layer: rows are positions, [t, d_model].
@@ -40,13 +52,6 @@ impl<'m> DecodeSession<'m> {
         let h = cfg.n_heads;
         let hd = cfg.head_dim();
         assert!(self.pos < cfg.max_seq, "context overflow");
-        let q_act = |fmt: QFormat, t: &Tensor| -> Tensor {
-            if fmt == QFormat::Fp32 {
-                t.clone()
-            } else {
-                fake_quant(t, fmt)
-            }
-        };
         // embedding
         let mut x = Tensor::new(&[1, d], m.params.tok_emb.row(token).to_vec());
         if cfg.pos == PosEncoding::Learned {
@@ -63,9 +68,9 @@ impl<'m> DecodeSession<'m> {
             // ①②③ decode straight from the packed weight cache: for block
             // formats the [1, d] activation streams against bit-packed
             // rows, so the bytes touched per token are the packed payload
-            let q = pl.wq_t.matmul_bt(&q_act(plan.site(li, 1).act, &xn)).add_bias(&l.bq);
-            let k = pl.wk_t.matmul_bt(&q_act(plan.site(li, 2).act, &xn)).add_bias(&l.bk);
-            let v = pl.wv_t.matmul_bt(&q_act(plan.site(li, 3).act, &xn)).add_bias(&l.bv);
+            let q = pl.wq_t.matmul_bt(&quant_act(&xn, plan.site(li, 1).act)).add_bias(&l.bq);
+            let k = pl.wk_t.matmul_bt(&quant_act(&xn, plan.site(li, 2).act)).add_bias(&l.bk);
+            let v = pl.wv_t.matmul_bt(&quant_act(&xn, plan.site(li, 3).act)).add_bias(&l.bv);
             let (q, k) = if cfg.pos == PosEncoding::Rope {
                 (apply_rope(&q, h, self.pos), apply_rope(&k, h, self.pos))
             } else {
@@ -89,25 +94,25 @@ impl<'m> DecodeSession<'m> {
                     vh.row_mut(ti)
                         .copy_from_slice(&cache.v[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
                 }
-                let mut qh_q = q_act(q45.0.act, &qh);
-                let kh_q = q_act(q45.0.weight, &kh);
+                let mut qh_q = quant_act(&qh, q45.0.act);
+                let kh_q = quant_act(&kh, q45.0.weight);
                 for r in qh_q.data.iter_mut() {
                     *r *= scale;
                 }
                 let mut scores = matmul_bt(&qh_q, &kh_q); // [1, t]
                 scores.softmax_rows();
-                let a_q = q_act(q45.1.act, &scores);
-                let vht_q = q_act(q45.1.weight, &vh.t());
+                let a_q = quant_act(&scores, q45.1.act);
+                let vht_q = quant_act(&vh.t(), q45.1.weight);
                 let ctx_h = matmul_bt(&a_q, &vht_q); // [1, hd]
                 ctx.row_mut(0)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
             }
-            let ctx_q = q_act(plan.site(li, 6).act, &ctx);
+            let ctx_q = quant_act(&ctx, plan.site(li, 6).act);
             let att_out = pl.wo_t.matmul_bt(&ctx_q).add_bias(&l.bo);
             let x1 = x.add(&att_out);
             let xn2 = x1.layer_norm(&l.ln2_g, &l.ln2_b, cfg.ln_eps);
-            let hpre = pl.w1_t.matmul_bt(&q_act(plan.site(li, 7).act, &xn2)).add_bias(&l.b1);
+            let hpre = pl.w1_t.matmul_bt(&quant_act(&xn2, plan.site(li, 7).act)).add_bias(&l.b1);
             let hact = hpre.gelu();
-            let h_q = q_act(plan.site(li, 8).act, &hact);
+            let h_q = quant_act(&hact, plan.site(li, 8).act);
             let mlp_out = pl.w2_t.matmul_bt(&h_q).add_bias(&l.b2);
             x = x1.add(&mlp_out);
         }
@@ -115,6 +120,212 @@ impl<'m> DecodeSession<'m> {
         let xn = x.layer_norm(&m.params.lnf_g, &m.params.lnf_b, cfg.ln_eps);
         matmul_bt(&xn, &m.params.tok_emb).data
     }
+}
+
+/// Continuous-batching decode state: per-slot KV caches over a shared slot
+/// pool. The coordinator admits a sequence into a free slot, steps every
+/// active slot together through [`Self::step`], and recycles the slot via
+/// [`Self::reset_slot`] when the sequence finishes.
+pub struct BatchedDecodeSession<'m> {
+    model: &'m Model,
+    /// caches[slot][layer]
+    caches: Vec<Vec<LayerCache>>,
+    /// tokens consumed so far, per slot
+    pos: Vec<usize>,
+}
+
+impl<'m> BatchedDecodeSession<'m> {
+    pub fn new(model: &'m Model, n_slots: usize) -> Self {
+        assert!(n_slots > 0, "need at least one slot");
+        BatchedDecodeSession {
+            caches: vec![vec![LayerCache::default(); model.cfg().n_layers]; n_slots],
+            pos: vec![0; n_slots],
+            model,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// Tokens consumed so far by one slot.
+    pub fn pos(&self, slot: usize) -> usize {
+        self.pos[slot]
+    }
+
+    /// Clear a slot's KV cache and position so the next admitted sequence
+    /// can reuse it.
+    pub fn reset_slot(&mut self, slot: usize) {
+        for c in self.caches[slot].iter_mut() {
+            c.k.clear();
+            c.v.clear();
+        }
+        self.pos[slot] = 0;
+    }
+
+    /// Feed one token per listed `(slot, token)` pair; returns each slot's
+    /// logits in input order. All rows advance through ONE fused packed
+    /// GEMM per weight site per layer — the weight payload is decoded once
+    /// for the whole batch — while attention runs per slot against that
+    /// slot's own KV cache and position. Row `i` of the result is
+    /// bit-identical to what a [`DecodeSession`] holding only that sequence
+    /// would return (tested across every preset format).
+    pub fn step(&mut self, batch: &[(usize, usize)]) -> Vec<Vec<f32>> {
+        self.step_with_logit_mask(batch, None)
+    }
+
+    /// [`Self::step`] with an optional per-row logit mask: rows with
+    /// `needs_logits[i] == false` skip the final layer-norm + LM-head GEMM
+    /// and get an empty vector back. The scheduler masks rows that are
+    /// still prefilling — their logits are discarded anyway, and the
+    /// vocab-sized head GEMM dominates a prefill step's cost. Unmasked rows
+    /// are bit-identical to [`Self::step`]'s output (the head GEMM is
+    /// row-independent; tested).
+    pub fn step_with_logit_mask(
+        &mut self,
+        batch: &[(usize, usize)],
+        needs_logits: Option<&[bool]>,
+    ) -> Vec<Vec<f32>> {
+        let m = self.model;
+        let cfg = m.cfg();
+        let d = cfg.d_model;
+        let h = cfg.n_heads;
+        let hd = cfg.head_dim();
+        let b = batch.len();
+        assert!(b > 0, "empty batch step");
+        for (i, &(slot, _)) in batch.iter().enumerate() {
+            assert!(slot < self.pos.len(), "slot {slot} out of range");
+            assert!(self.pos[slot] < cfg.max_seq, "context overflow in slot {slot}");
+            // a duplicate would append two KV rows and advance pos twice,
+            // silently corrupting the slot — keep this loud in release too
+            // (b is the slot-pool size, so the scan is tiny)
+            assert!(
+                batch[..i].iter().all(|&(s, _)| s != slot),
+                "slot {slot} listed twice in one step"
+            );
+        }
+        // embeddings, with each slot's own absolute position
+        let mut x = Tensor::zeros(&[b, d]);
+        for (bi, &(slot, tok)) in batch.iter().enumerate() {
+            let xr = x.row_mut(bi);
+            xr.copy_from_slice(m.params.tok_emb.row(tok));
+            if cfg.pos == PosEncoding::Learned {
+                for (a, &p) in xr.iter_mut().zip(m.params.pos_emb.row(self.pos[slot])) {
+                    *a += p;
+                }
+            }
+        }
+        for li in 0..cfg.n_layers {
+            let l = &m.params.layers[li];
+            let pl = m.prepared(li);
+            let plan = &m.plan;
+            let xn = x.layer_norm(&l.ln1_g, &l.ln1_b, cfg.ln_eps);
+            // ①②③: one fused [b, k]×[n, k] GEMM each; activation rows are
+            // quantised independently so each sequence sees exactly the
+            // values it would alone
+            let q_in = quant_act_rows(&xn, plan.site(li, 1).act);
+            let q = pl.wq_t.matmul_bt_rowwise(&q_in).add_bias(&l.bq);
+            let k_in = quant_act_rows(&xn, plan.site(li, 2).act);
+            let k = pl.wk_t.matmul_bt_rowwise(&k_in).add_bias(&l.bk);
+            let v_in = quant_act_rows(&xn, plan.site(li, 3).act);
+            let v = pl.wv_t.matmul_bt_rowwise(&v_in).add_bias(&l.bv);
+            let (q, k) = if cfg.pos == PosEncoding::Rope {
+                (self.rope_rows(&q, batch, h), self.rope_rows(&k, batch, h))
+            } else {
+                (q, k)
+            };
+            let scale = 1.0 / (hd as f32).sqrt();
+            let mut ctx = Tensor::zeros(&[b, d]);
+            let q45 = (plan.site(li, 4), plan.site(li, 5));
+            // ④⑤ per slot: attention state is inherently per-sequence
+            for (bi, &(slot, _)) in batch.iter().enumerate() {
+                let cache = &mut self.caches[slot][li];
+                cache.k.extend_from_slice(k.row(bi));
+                cache.v.extend_from_slice(v.row(bi));
+                let t = self.pos[slot] + 1; // keys available in this slot
+                for hi in 0..h {
+                    let qh = Tensor::new(&[1, hd], head_slice(q.row(bi), hi, hd).to_vec());
+                    let mut kh = Tensor::zeros(&[t, hd]);
+                    let mut vh = Tensor::zeros(&[t, hd]);
+                    for ti in 0..t {
+                        kh.row_mut(ti)
+                            .copy_from_slice(&cache.k[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
+                        vh.row_mut(ti)
+                            .copy_from_slice(&cache.v[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
+                    }
+                    let mut qh_q = quant_act(&qh, q45.0.act);
+                    let kh_q = quant_act(&kh, q45.0.weight);
+                    for r in qh_q.data.iter_mut() {
+                        *r *= scale;
+                    }
+                    let mut scores = matmul_bt(&qh_q, &kh_q); // [1, t]
+                    scores.softmax_rows();
+                    let a_q = quant_act(&scores, q45.1.act);
+                    let vht_q = quant_act(&vh.t(), q45.1.weight);
+                    let ctx_h = matmul_bt(&a_q, &vht_q); // [1, hd]
+                    ctx.row_mut(bi)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
+                }
+            }
+            // ⑥⑦⑧: fused batched GEMMs again
+            let ctx_q = quant_act_rows(&ctx, plan.site(li, 6).act);
+            let att_out = pl.wo_t.matmul_bt_rowwise(&ctx_q).add_bias(&l.bo);
+            let x1 = x.add(&att_out);
+            let xn2 = x1.layer_norm(&l.ln2_g, &l.ln2_b, cfg.ln_eps);
+            let h_in = quant_act_rows(&xn2, plan.site(li, 7).act);
+            let hpre = pl.w1_t.matmul_bt_rowwise(&h_in).add_bias(&l.b1);
+            let hact = hpre.gelu();
+            let h_q = quant_act_rows(&hact, plan.site(li, 8).act);
+            let mlp_out = pl.w2_t.matmul_bt_rowwise(&h_q).add_bias(&l.b2);
+            x = x1.add(&mlp_out);
+        }
+        for &(slot, _) in batch {
+            self.pos[slot] += 1;
+        }
+        // tied-embedding LM head, row-order-preserving like everything else
+        match needs_logits {
+            None => {
+                let xn = x.layer_norm(&m.params.lnf_g, &m.params.lnf_b, cfg.ln_eps);
+                let logits = matmul_bt_rowwise(&xn, &m.params.tok_emb);
+                (0..b).map(|bi| logits.row(bi).to_vec()).collect()
+            }
+            Some(mask) => {
+                assert_eq!(mask.len(), b, "logit mask length");
+                // gather the rows that want logits and run ONE batched head
+                // GEMM over them — bit-identical per row to the full path
+                let wanted: Vec<usize> = (0..b).filter(|&bi| mask[bi]).collect();
+                let mut out = vec![Vec::new(); b];
+                if !wanted.is_empty() {
+                    let mut xs = Tensor::zeros(&[wanted.len(), d]);
+                    for (ri, &bi) in wanted.iter().enumerate() {
+                        xs.row_mut(ri).copy_from_slice(x.row(bi));
+                    }
+                    let xn = xs.layer_norm(&m.params.lnf_g, &m.params.lnf_b, cfg.ln_eps);
+                    let logits = matmul_bt_rowwise(&xn, &m.params.tok_emb);
+                    for (ri, &bi) in wanted.iter().enumerate() {
+                        out[bi] = logits.row(ri).to_vec();
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Apply RoPE row by row with each slot's own absolute position.
+    fn rope_rows(&self, t: &Tensor, batch: &[(usize, usize)], n_heads: usize) -> Tensor {
+        let (_, d) = t.dims2();
+        let mut out = t.clone();
+        for (bi, &(slot, _)) in batch.iter().enumerate() {
+            let row = Tensor::new(&[1, d], t.row(bi).to_vec());
+            let rotated = apply_rope(&row, n_heads, self.pos[slot]);
+            out.row_mut(bi).copy_from_slice(&rotated.data);
+        }
+        out
+    }
+}
+
+#[inline]
+fn head_slice(row: &[f32], hi: usize, hd: usize) -> &[f32] {
+    &row[hi * hd..(hi + 1) * hd]
 }
 
 /// Greedy / temperature sampling helper.
@@ -206,6 +417,87 @@ mod tests {
         for j in (0..512).step_by(31) {
             assert!((last[j] - full.row(2)[j]).abs() < 2e-4);
         }
+    }
+
+    #[test]
+    fn batched_step_bit_identical_to_sequential() {
+        // the tentpole guarantee: a batch-of-N step returns, per row, the
+        // exact bits the sequential session produces
+        for plan in [
+            QuantPlan::fp32(),
+            QuantPlan::uniform(presets::bfp_w(6)),
+            QuantPlan::uniform(presets::fixed8()),
+        ] {
+            let m = model("nano", plan);
+            let streams: [&[usize]; 3] = [&[3, 9, 100, 42], &[7, 7, 7, 7], &[250, 1, 30, 8]];
+            let mut batched = BatchedDecodeSession::new(&m, 3);
+            let mut seq: Vec<DecodeSession> = (0..3).map(|_| DecodeSession::new(&m)).collect();
+            for step in 0..4 {
+                let batch: Vec<(usize, usize)> =
+                    (0..3).map(|s| (s, streams[s][step])).collect();
+                let got = batched.step(&batch);
+                for s in 0..3 {
+                    let want = seq[s].step(streams[s][step]);
+                    assert_eq!(got[s], want, "slot {s} step {step}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rope_per_slot_positions() {
+        // slots at different positions must each get their own rotation
+        let m = model("rope-tiny", QuantPlan::fp32());
+        let mut batched = BatchedDecodeSession::new(&m, 2);
+        let mut s0 = DecodeSession::new(&m);
+        let mut s1 = DecodeSession::new(&m);
+        // advance slot 0 by two tokens first, so positions diverge
+        batched.step(&[(0, 5)]);
+        s0.step(5);
+        batched.step(&[(0, 6)]);
+        s0.step(6);
+        let got = batched.step(&[(0, 7), (1, 9)]);
+        let w0 = s0.step(7);
+        let w1 = s1.step(9);
+        assert_eq!(got[0], w0);
+        assert_eq!(got[1], w1);
+        assert_eq!(batched.pos(0), 3);
+        assert_eq!(batched.pos(1), 1);
+    }
+
+    #[test]
+    fn logit_mask_skips_rows_exactly() {
+        // masked rows return empty logits; unmasked rows are bit-identical
+        // to the unmasked step
+        let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
+        let mut a = BatchedDecodeSession::new(&m, 3);
+        let mut b = BatchedDecodeSession::new(&m, 3);
+        let batch = [(0usize, 3usize), (1, 9), (2, 100)];
+        let full = a.step(&batch);
+        let masked = b.step_with_logit_mask(&batch, Some(&[true, false, true]));
+        assert_eq!(masked[0], full[0]);
+        assert!(masked[1].is_empty());
+        assert_eq!(masked[2], full[2]);
+        // positions advance for masked rows too
+        assert_eq!(b.pos(1), 1);
+    }
+
+    #[test]
+    fn reset_slot_reuses_cleanly() {
+        let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
+        let mut batched = BatchedDecodeSession::new(&m, 2);
+        batched.step(&[(0, 3), (1, 9)]);
+        batched.step(&[(0, 4), (1, 10)]);
+        // recycle slot 1 for a fresh sequence; slot 0 keeps its history
+        batched.reset_slot(1);
+        assert_eq!(batched.pos(1), 0);
+        let mut fresh = DecodeSession::new(&m);
+        let mut old = DecodeSession::new(&m);
+        old.step(3);
+        old.step(4);
+        let got = batched.step(&[(0, 5), (1, 42)]);
+        assert_eq!(got[0], old.step(5));
+        assert_eq!(got[1], fresh.step(42));
     }
 
     #[test]

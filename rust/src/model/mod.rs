@@ -10,6 +10,7 @@ pub mod rope;
 pub mod transformer;
 
 pub use config::{ModelConfig, PosEncoding};
+pub use kv_cache::{sample_logits, BatchedDecodeSession, DecodeSession};
 pub use params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
 pub use plan::{QuantPlan, SiteId, WeightStore, GEMM_NAMES};
 pub use transformer::{cross_entropy, ActStats, Model};

@@ -3,9 +3,9 @@
 //! the packed-weight serving cache ([`PackedLayerParams`]).
 
 use super::config::{ModelConfig, PosEncoding};
-use crate::quant::qmatmul::matmul_packed_bt;
+use crate::quant::qmatmul::{matmul_packed_bt, matmul_packed_bt_rowwise};
 use crate::quant::qtensor::QTensor;
-use crate::tensor::matmul::matmul_bt;
+use crate::tensor::matmul::{matmul_bt, matmul_bt_rowwise};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
 use std::io::{Read, Write};
@@ -29,6 +29,18 @@ impl PackedWeight {
         match self {
             PackedWeight::Dense(t) => matmul_bt(act_q, t),
             PackedWeight::Packed(q) => matmul_packed_bt(act_q, q),
+        }
+    }
+
+    /// Batched-decode variant of [`Self::matmul_bt`]: one fused GEMM for
+    /// the whole [m, k] activation batch, with the weight decoded exactly
+    /// once per call and every output row accumulating in the order the
+    /// m == 1 decode path uses — so a batch-of-N step is bit-identical to N
+    /// sequential single-row steps.
+    pub fn matmul_bt_rowwise(&self, act_q: &Tensor) -> Tensor {
+        match self {
+            PackedWeight::Dense(t) => matmul_bt_rowwise(act_q, t),
+            PackedWeight::Packed(q) => matmul_packed_bt_rowwise(act_q, q),
         }
     }
 

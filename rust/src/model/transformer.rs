@@ -9,7 +9,7 @@ use super::plan::{GemmMode, QuantPlan, WeightStore};
 use super::rope::apply_rope;
 use crate::quant::config::QFormat;
 use crate::quant::qtensor::encode;
-use crate::quant::{fake_quant, fake_quant_in_place};
+use crate::quant::{fake_quant, fake_quant_in_place, quant_act};
 use crate::tensor::matmul::matmul_bt;
 use crate::tensor::Tensor;
 use crate::util::stats::Welford;
@@ -209,16 +209,9 @@ impl Model {
             st.record_channels("X1", li, &xn);
         }
         // ①②③: projections with quantised act + weight
-        let q_act = |fmt: QFormat, t: &Tensor| -> Tensor {
-            if fmt == QFormat::Fp32 {
-                t.clone()
-            } else {
-                fake_quant(t, fmt)
-            }
-        };
         let proj = |idx: u8, w_t: &PackedWeight| -> Tensor {
             match plan.mode {
-                GemmMode::FakeQuant => w_t.matmul_bt(&q_act(plan.site(li, idx).act, &xn)),
+                GemmMode::FakeQuant => w_t.matmul_bt(&quant_act(&xn, plan.site(li, idx).act)),
                 GemmMode::LlmInt8 { threshold, bits } => {
                     crate::baselines::llm_int8::llm_int8_matmul(&xn, w_t.dense(), threshold, bits)
                 }
@@ -252,8 +245,8 @@ impl Model {
             };
             let (qh, kh, vh) = (slice_head(&q), slice_head(&k), slice_head(&v));
             // ④: blocks along head_dim on both operands
-            let mut qh_q = q_act(q45.0.act, &qh);
-            let kh_q = q_act(q45.0.weight, &kh);
+            let mut qh_q = quant_act(&qh, q45.0.act);
+            let kh_q = quant_act(&kh, q45.0.weight);
             for r in qh_q.data.iter_mut() {
                 *r *= scale; // scale after quantisation: ASIC applies it in the accumulator
             }
@@ -275,8 +268,8 @@ impl Model {
                 }
             }
             // ⑤: blocks along the key dim: quantise A rows and Vᵀ rows
-            let a_q = q_act(q45.1.act, &scores);
-            let vht_q = q_act(q45.1.weight, &vh.t());
+            let a_q = quant_act(&scores, q45.1.act);
+            let vht_q = quant_act(&vh.t(), q45.1.weight);
             let ctx_h = matmul_bt(&a_q, &vht_q);
             for i in 0..s {
                 ctx.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(i));
@@ -307,7 +300,7 @@ impl Model {
         // ⑦ fc1
         let hpre = match plan.mode {
             GemmMode::FakeQuant => {
-                pl.w1_t.matmul_bt(&q_act(plan.site(li, 7).act, &xn2))
+                pl.w1_t.matmul_bt(&quant_act(&xn2, plan.site(li, 7).act))
             }
             GemmMode::LlmInt8 { threshold, bits } => {
                 crate::baselines::llm_int8::llm_int8_matmul(&xn2, pl.w1_t.dense(), threshold, bits)

@@ -34,7 +34,12 @@ pub fn block_absmax(xs: &[f32]) -> f32 {
 
 /// Apply `f(block_slice)` to every [1, N] block of a row-major [rows, cols]
 /// buffer, mutating in place.
-pub fn for_each_block_mut(data: &mut [f32], cols: usize, block: usize, mut f: impl FnMut(&mut [f32])) {
+pub fn for_each_block_mut(
+    data: &mut [f32],
+    cols: usize,
+    block: usize,
+    mut f: impl FnMut(&mut [f32]),
+) {
     assert_eq!(data.len() % cols.max(1), 0);
     for row in data.chunks_mut(cols) {
         for (s, e) in block_ranges(cols, block) {

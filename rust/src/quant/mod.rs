@@ -62,6 +62,45 @@ pub fn fake_quant_in_place(t: &mut Tensor, fmt: QFormat) {
     fake_quant_buffer(&mut t.data, cols, fmt);
 }
 
+/// Quantise an activation for a GEMM site: pass-through for fp32, else
+/// [`fake_quant`]. The closure every forward path used to inline.
+pub fn quant_act(t: &Tensor, fmt: QFormat) -> Tensor {
+    if fmt == QFormat::Fp32 {
+        t.clone()
+    } else {
+        fake_quant(t, fmt)
+    }
+}
+
+/// Row-independent fake-quant: each row of a [rows, cols] tensor is
+/// quantised as if it were its own [1, cols] tensor. Identical to
+/// [`fake_quant`] for every format whose scales never cross a row (all the
+/// block formats, per-row fixed point, and the element-wise minifloats);
+/// for per-tensor `Fixed` it re-derives the absmax scale per row. This is
+/// what makes a batched decode step bit-identical to the sequential one:
+/// each sequence's activation row quantises exactly as it would alone.
+pub fn fake_quant_rows(t: &Tensor, fmt: QFormat) -> Tensor {
+    let mut out = t.clone();
+    fake_quant_rows_in_place(&mut out, fmt);
+    out
+}
+
+pub fn fake_quant_rows_in_place(t: &mut Tensor, fmt: QFormat) {
+    let cols = (*t.shape.last().unwrap_or(&1)).max(1);
+    for row in t.data.chunks_mut(cols) {
+        fake_quant_buffer(row, cols, fmt);
+    }
+}
+
+/// Row-independent counterpart of [`quant_act`] for batched decode.
+pub fn quant_act_rows(t: &Tensor, fmt: QFormat) -> Tensor {
+    if fmt == QFormat::Fp32 {
+        t.clone()
+    } else {
+        fake_quant_rows(t, fmt)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::config::presets;
@@ -106,6 +145,34 @@ mod tests {
         assert!(bfp8 > fixed + 3.0, "bfp8={bfp8} fixed={fixed}");
         assert!(bfp6 > fixed, "bfp6={bfp6} fixed={fixed}");
         assert!(mini > fixed, "mini={mini} fixed={fixed}");
+    }
+
+    #[test]
+    fn row_wise_quant_matches_per_row_tensors() {
+        // fake_quant_rows on [m, cols] must equal fake_quant applied to each
+        // row separately — including per-tensor Fixed, where the joint scale
+        // would differ
+        let mut formats = presets::table3_formats();
+        formats.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+        for (name, fmt) in formats {
+            check(&format!("rowwise {name}"), 15, |rng| {
+                let cols = 3 + rng.below(40);
+                let rows = 1 + rng.below(6);
+                let t = Tensor::new(&[rows, cols], llmish_values(rng, rows * cols, 1.0, 0.05));
+                let batched = fake_quant_rows(&t, fmt);
+                for i in 0..rows {
+                    let ti = Tensor::new(&[1, cols], t.data[i * cols..(i + 1) * cols].to_vec());
+                    let single = fake_quant(&ti, fmt);
+                    crate::util::check::close_slice(
+                        &batched.data[i * cols..(i + 1) * cols],
+                        &single.data,
+                        0.0,
+                        &format!("{name} row {i}"),
+                    )?;
+                }
+                Ok(())
+            });
+        }
     }
 
     #[test]

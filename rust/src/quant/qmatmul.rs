@@ -51,7 +51,11 @@ pub fn qmatmul_pret(act: &Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat)
 }
 
 /// Activation-side in-place variant to avoid the clone in the hot loop.
-pub fn qmatmul_pret_inplace(act: &mut Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat) -> Tensor {
+pub fn qmatmul_pret_inplace(
+    act: &mut Tensor,
+    weight_t_quantised: &Tensor,
+    act_fmt: QFormat,
+) -> Tensor {
     super::fake_quant_in_place(act, act_fmt);
     matmul_bt(act, weight_t_quantised)
 }
@@ -74,10 +78,10 @@ pub fn qmatmul_packed_inplace(act: &mut Tensor, weight: &QTensor, act_fmt: QForm
 /// `a [m,k] @ dequant(qw) [n,k]ᵀ` with block dequantisation fused into the
 /// GEMM; `a` is used as-is (the caller quantises it). Two regimes:
 ///
-/// * **decode (m < 4)** — the memory-bound per-token path: 4-row dequant
-///   panels stream through the same `gemm_bt_rows` kernel the dense path
-///   uses, so only one small scratch panel is ever resident. For m == 1
-///   the columns are threaded like the f32 path threads rows.
+/// * **decode (m < 4)** — the memory-bound per-token path: delegates to
+///   [`matmul_packed_bt_rowwise`], whose 4-row dequant panels stream
+///   through the same `gemm_bt_rows` kernel the dense path uses, so only
+///   one small scratch panel is ever resident.
 /// * **prefill (m ≥ 4)** — compute-bound: dequantise once into a transient
 ///   dense buffer and reuse the threaded broadcast GEMM; peak extra memory
 ///   is one weight matrix, not one per layer.
@@ -85,35 +89,11 @@ pub fn qmatmul_packed_inplace(act: &mut Tensor, weight: &QTensor, act_fmt: QForm
 /// Both regimes are bit-identical to `matmul_bt(a, &decode(qw))` because
 /// every output element accumulates the identical value sequence.
 pub fn matmul_packed_bt(a: &Tensor, qw: &QTensor) -> Tensor {
-    let (m, k) = a.dims2();
-    assert_eq!(qw.shape.len(), 2, "packed weight must be 2-D, got {:?}", qw.shape);
-    let (n, k2) = (qw.shape[0], qw.shape[1]);
-    assert_eq!(k, k2, "matmul_packed_bt inner dims: {k} vs {k2}");
+    let (m, _) = a.dims2();
     if m >= 4 {
         return matmul_bt(a, &decode(qw));
     }
-    let mut out = vec![0.0f32; m * n];
-    let threads = available_threads();
-    if m == 1 && n * k >= PAR_THRESHOLD && threads > 1 {
-        let nt = threads.min(n.div_ceil(4));
-        // 4-aligned chunks keep the panel grouping — and the f32 summation
-        // order — identical to a single full-width kernel call
-        let per = n.div_ceil(nt).div_ceil(4) * 4;
-        std::thread::scope(|scope| {
-            let mut rest = out.as_mut_slice();
-            let mut j0 = 0usize;
-            while j0 < n {
-                let j1 = (j0 + per).min(n);
-                let (chunk, tail) = rest.split_at_mut(j1 - j0);
-                rest = tail;
-                scope.spawn(move || packed_bt_panel(&a.data, 1, k, qw, j0, j1, chunk));
-                j0 = j1;
-            }
-        });
-    } else {
-        packed_bt_panel(&a.data, m, k, qw, 0, n, &mut out);
-    }
-    Tensor::new(&[m, n], out)
+    matmul_packed_bt_rowwise(a, qw)
 }
 
 /// `out[i][j - j0] = dot(a_i, dequant(qw row j))` for `j ∈ [j0, j1)`,
@@ -153,6 +133,56 @@ fn packed_bt_panel(
         }
         j += 1;
     }
+}
+
+/// `a [m,k] @ dequant(qw) [n,k]ᵀ` for the *batched decode* engine: the
+/// fused 4-row dequant panels of [`matmul_packed_bt`]'s decode regime, but
+/// for any m. Each weight panel is decoded exactly once per call and then
+/// streamed against every activation row, so weights are decoded once per
+/// layer per step no matter how many sequences share the step — the
+/// amortisation continuous batching exists to buy. Unlike the m ≥ 4 prefill
+/// regime (transient dense decode + broadcast kernel, different f32
+/// summation order), every output row here accumulates in exactly the order
+/// the m == 1 path uses, so row i of the batch is bit-identical to a
+/// single-sequence decode of that row (tested).
+pub fn matmul_packed_bt_rowwise(a: &Tensor, qw: &QTensor) -> Tensor {
+    let (m, k) = a.dims2();
+    assert_eq!(qw.shape.len(), 2, "packed weight must be 2-D, got {:?}", qw.shape);
+    let (n, k2) = (qw.shape[0], qw.shape[1]);
+    assert_eq!(k, k2, "matmul_packed_bt_rowwise inner dims: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let threads = available_threads();
+    if m * n * k >= PAR_THRESHOLD && threads > 1 && n >= 8 {
+        // column-partitioned like the m == 1 lane; 4-aligned chunk starts
+        // keep the panel grouping (and the bits) identical to one full-width
+        // call. Each thread fills a private [m, chunk] buffer that is
+        // stitched back afterwards — a row-major chunk of the output is not
+        // contiguous for m > 1.
+        let nt = threads.min(n.div_ceil(4));
+        let per = n.div_ceil(nt).div_ceil(4) * 4;
+        let mut chunks: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + per).min(n);
+            chunks.push((j0, j1, vec![0.0f32; m * (j1 - j0)]));
+            j0 = j1;
+        }
+        std::thread::scope(|scope| {
+            for (j0, j1, buf) in chunks.iter_mut() {
+                let (j0, j1) = (*j0, *j1);
+                scope.spawn(move || packed_bt_panel(&a.data, m, k, qw, j0, j1, buf));
+            }
+        });
+        for (j0, j1, buf) in &chunks {
+            let w = j1 - j0;
+            for i in 0..m {
+                out[i * n + j0..i * n + j1].copy_from_slice(&buf[i * w..(i + 1) * w]);
+            }
+        }
+    } else {
+        packed_bt_panel(&a.data, m, k, qw, 0, n, &mut out);
+    }
+    Tensor::new(&[m, n], out)
 }
 
 /// Integer-domain BFP GEMM (Eq. 4): `act [m,k] @ weight_t [n,k]`.
@@ -302,6 +332,48 @@ mod tests {
         let want = qmatmul_pret(&a, &wt_q, fmt);
         let got = qmatmul_packed(&a, &packed, fmt);
         assert_eq!(want.data, got.data);
+    }
+
+    #[test]
+    fn packed_rowwise_is_bitwise_per_row() {
+        // every row of the batched fused GEMM must match the m == 1 fused
+        // GEMM bit for bit, for every preset format
+        let mut formats = presets::table3_formats();
+        formats.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+        for (name, fmt) in formats {
+            check(&format!("packed rowwise {name}"), 10, |rng| {
+                let m = 1 + rng.below(8);
+                let k = 5 + rng.below(60);
+                let n = 1 + rng.below(12);
+                let a = Tensor::new(&[m, k], llmish_values(rng, m * k, 1.0, 0.05));
+                let w = Tensor::new(&[n, k], llmish_values(rng, n * k, 0.3, 0.02));
+                let packed = crate::quant::qtensor::encode(&w, fmt);
+                let batched = matmul_packed_bt_rowwise(&a, &packed);
+                for i in 0..m {
+                    let ai = Tensor::new(&[1, k], a.row(i).to_vec());
+                    let single = matmul_packed_bt(&ai, &packed);
+                    close_slice(batched.row(i), single.row(0), 0.0, &format!("{name} row {i}"))?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn packed_rowwise_threaded_lane_bitwise() {
+        // force the column-partitioned multi-row lane (m·n·k ≥ PAR_THRESHOLD)
+        let mut rng = crate::util::rng::Pcg32::new(33);
+        let (m, k, n) = (8usize, 1024usize, 260usize); // ragged tail columns
+        let fmt = presets::bfp_w(6);
+        let a = Tensor::new(&[m, k], llmish_values(&mut rng, m * k, 1.0, 0.02));
+        let w = Tensor::new(&[n, k], llmish_values(&mut rng, n * k, 0.3, 0.0));
+        let packed = crate::quant::qtensor::encode(&w, fmt);
+        let batched = matmul_packed_bt_rowwise(&a, &packed);
+        for i in 0..m {
+            let ai = Tensor::new(&[1, k], a.row(i).to_vec());
+            let single = matmul_packed_bt(&ai, &packed);
+            assert_eq!(batched.row(i), single.row(0), "row {i}");
+        }
     }
 
     #[test]

@@ -10,7 +10,10 @@ use super::config::QFormat;
 use super::minifloat::{exp2i, ilogb, round_dmf, round_minifloat};
 use crate::tensor::Tensor;
 
-/// Bit-level writer.
+/// Bit-level writer. Like [`BitReader::read`], `push` places a whole field
+/// through a 64-bit little-endian window in one shot instead of looping bit
+/// by bit — encode sits on every `set_plan` in the mixed-precision search
+/// loop, so it gets the same treatment as the decode hot path.
 struct BitWriter {
     buf: Vec<u8>,
     bitpos: usize,
@@ -26,15 +29,28 @@ impl BitWriter {
 
     fn push(&mut self, value: u32, bits: u32) {
         debug_assert!(bits <= 32);
-        for i in 0..bits {
-            let bit = (value >> i) & 1;
-            let byte = self.bitpos / 8;
-            if byte >= self.buf.len() {
-                self.buf.push(0);
-            }
-            self.buf[byte] |= (bit as u8) << (self.bitpos % 8);
-            self.bitpos += 1;
+        if bits == 0 {
+            return;
         }
+        // mask out any bits above the field width (the bit-serial loop only
+        // ever consumed the low `bits` bits)
+        let field = if bits == 32 {
+            value as u64
+        } else {
+            value as u64 & ((1u64 << bits) - 1)
+        };
+        let byte = self.bitpos / 8;
+        let off = (self.bitpos % 8) as u32;
+        self.bitpos += bits as usize;
+        self.buf.resize(self.bitpos.div_ceil(8), 0);
+        // off ≤ 7 and bits ≤ 32, so the field spans at most 5 bytes — an
+        // 8-byte window always covers it; bits past the write cursor are
+        // still zero, so OR-ing the shifted field is exact
+        let end = (byte + 8).min(self.buf.len());
+        let mut tmp = [0u8; 8];
+        tmp[..end - byte].copy_from_slice(&self.buf[byte..end]);
+        let window = u64::from_le_bytes(tmp) | (field << off);
+        self.buf[byte..end].copy_from_slice(&window.to_le_bytes()[..end - byte]);
     }
 }
 

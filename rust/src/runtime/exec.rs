@@ -155,7 +155,13 @@ pub struct QmatmulExec {
 }
 
 impl QmatmulExec {
-    pub fn load(rt: &mut Runtime, name: &str, m: usize, k: usize, n: usize) -> Result<Self, RuntimeError> {
+    pub fn load(
+        rt: &mut Runtime,
+        name: &str,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Self, RuntimeError> {
         let exe = rt.compile(name)?;
         Ok(QmatmulExec { exe, m, k, n })
     }

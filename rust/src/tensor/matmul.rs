@@ -36,14 +36,28 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 /// amortised.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
-    let (n, k2) = b.dims2();
+    let (_, k2) = b.dims2();
     assert_eq!(k, k2, "matmul_bt inner dims: {k} vs {k2}");
     if m >= 4 {
         return matmul(a, &b.t());
     }
+    matmul_bt_rowwise(a, b)
+}
+
+/// C = A @ B^T like [`matmul_bt`], but every output row accumulates in
+/// exactly the order the m == 1 path uses (the 1×4 panel kernel of
+/// [`gemm_bt_rows`]), for *any* m. The batched decode engine uses this so a
+/// batch-of-N decode step is bit-identical, row for row, to N sequential
+/// single-row steps — the broadcast kernel `matmul_bt` switches to at
+/// m ≥ 4 sums in a different order and would break that guarantee.
+pub fn matmul_bt_rowwise(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (n, k2) = b.dims2();
+    assert_eq!(k, k2, "matmul_bt_rowwise inner dims: {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
     let threads = available_threads();
     if m * n * k >= PAR_THRESHOLD && threads > 1 && m >= 2 {
+        // row partitioning leaves each row's summation order untouched
         par_rows(&mut out, m, threads, |rows, out_chunk| {
             gemm_bt_rows(&a.data, &b.data, out_chunk, rows, k, n);
         });
@@ -91,7 +105,14 @@ where
 
 /// Row-major inner GEMM over a row range. `out` addresses rows relative to
 /// `rows.start`.
-fn gemm_rows(a: &[f32], b: &[f32], out: &mut [f32], rows: std::ops::Range<usize>, k: usize, n: usize) {
+fn gemm_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: std::ops::Range<usize>,
+    k: usize,
+    n: usize,
+) {
     let row0 = rows.start;
     for i in rows {
         let arow = &a[i * k..(i + 1) * k];
@@ -251,6 +272,28 @@ mod tests {
         let fast = matmul(&a, &b);
         let slow = matmul_naive(&a, &b);
         close_slice(&fast.data, &slow.data, 1e-3, "parallel").unwrap();
+    }
+
+    #[test]
+    fn rowwise_bt_is_bitwise_per_row() {
+        // each row of the batched result must equal the m == 1 result bit
+        // for bit — the guarantee the batched decode engine builds on
+        check("rowwise == per-row m1", 20, |rng| {
+            let m = 1 + rng.below(9);
+            let k = 1 + rng.below(65);
+            let n = 1 + rng.below(17);
+            let a = Tensor::randn(&[m, k], 1.0, rng);
+            let b = Tensor::randn(&[n, k], 1.0, rng);
+            let batched = matmul_bt_rowwise(&a, &b);
+            for i in 0..m {
+                let ai = Tensor::new(&[1, k], a.row(i).to_vec());
+                let single = matmul_bt(&ai, &b);
+                if batched.row(i) != single.row(0) {
+                    return Err(format!("row {i} diverged"));
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -11,13 +11,13 @@
 
 use crate::model::config::PosEncoding;
 use crate::model::params::{LayerParams, Params};
-#[allow(unused_imports)]
-use LayerParams as _LayerParamsUsed;
 use crate::model::plan::QuantPlan;
 use crate::quant::config::QFormat;
 use crate::quant::fake_quant;
 use crate::tensor::matmul::{matmul, matmul_bt};
 use crate::tensor::Tensor;
+#[allow(unused_imports)]
+use LayerParams as _LayerParamsUsed;
 
 fn fq(t: &Tensor, f: QFormat) -> Tensor {
     if f == QFormat::Fp32 {
