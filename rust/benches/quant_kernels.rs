@@ -4,12 +4,17 @@
 //! quantised GEMM hot path, the end-to-end forward, the serving loop, and
 //! the continuous-batching decode engine.
 //!
-//!     cargo bench              # full budgets
-//!     cargo bench -- --quick   # CI mode: ~20× smaller time budgets
+//!     cargo bench                      # full budgets
+//!     cargo bench -- --quick           # CI mode: ~20× smaller time budgets
+//!     cargo bench -- --quick --check   # CI gate: perf regressions exit 1
 //!
 //! Either way the decode-engine section writes `BENCH_decode.json`
 //! (single-stream vs batch-8 tokens/sec under BFP6 plus resident weight
-//! bytes) next to the manifest — CI uploads it as the bench artifact.
+//! bytes) and the prefill section writes `BENCH_prefill.json` (chunked vs
+//! token-at-a-time prefill tokens/sec) next to the manifest — CI uploads
+//! both as bench artifacts. Under `--check` the acceptance bars (batch-8
+//! ≥ 2× single-stream decode; chunk-8 ≥ 2× chunk-1 prefill) are hard
+//! failures instead of scrolled-past warnings.
 
 use bbq::coordinator::{run_batched, Metrics, Request, ServerConfig};
 use bbq::model::config::ModelConfig;
@@ -31,11 +36,18 @@ fn main() {
     // `cargo bench` also forwards a bare `--bench` flag; ignore it
     let quick =
         std::env::args().any(|a| a == "--quick") || std::env::var("BBQ_BENCH_QUICK").is_ok();
+    let check = std::env::args().any(|a| a == "--check");
     let budget_div = if quick { 20.0 } else { 1.0 };
     let ms = |full: f64| (full / budget_div).max(10.0);
     if quick {
         println!("(quick mode: budgets cut ~20x for CI)");
     }
+    if check {
+        println!("(check mode: regression gates are hard failures)");
+    }
+    // regression-gate failures collected across sections; fatal at exit
+    // under --check so CI fails instead of scrolling past a warning
+    let mut gates: Vec<String> = Vec::new();
     let mut rng = Pcg32::new(7);
     println!("== quantiser throughput (1M elements, [1,16] blocks) ==");
     let n = 1 << 20;
@@ -161,13 +173,25 @@ fn main() {
         });
     println!("{}", r.line());
 
-    bench_decode_engine(quick);
+    bench_decode_engine(quick, &mut gates);
+    bench_prefill_engine(quick, &mut gates);
+
+    if !gates.is_empty() {
+        println!("\nbench gates below their acceptance bars:");
+        for g in &gates {
+            println!("  FAIL: {g}");
+        }
+        if check {
+            std::process::exit(1);
+        }
+        println!("  (run with --check to make these fatal)");
+    }
 }
 
 /// Continuous-batching decode engine: single-stream vs batch-8 tokens/sec
 /// under BFP6 (the fused packed GEMM decodes each weight once per layer per
 /// step, so batch-8 amortises the dequant 8×). Writes BENCH_decode.json.
-fn bench_decode_engine(quick: bool) {
+fn bench_decode_engine(quick: bool, gates: &mut Vec<String>) {
     println!("\n== continuous-batching decode engine (tiny, BFP6, greedy) ==");
     let fmt = presets::bfp_w(6);
     let cfg = ModelConfig::preset("tiny");
@@ -188,7 +212,10 @@ fn bench_decode_engine(quick: bool) {
     };
     // best-of-N closed-loop runs; tokens/sec from the engine's own metrics
     let run_tps = |max_batch: usize, n_req: usize| -> (f64, Metrics) {
-        let server_cfg = ServerConfig { max_batch };
+        let server_cfg = ServerConfig {
+            max_batch,
+            ..ServerConfig::default()
+        };
         let mut best: Option<(f64, Metrics)> = None;
         for _ in 0..reps {
             let (_, m) = run_batched(&model, mk_reqs(n_req), &server_cfg);
@@ -220,6 +247,9 @@ fn bench_decode_engine(quick: bool) {
     );
     if speedup < 2.0 {
         println!("  WARNING: batch-8 speedup below the 2x acceptance bar");
+        gates.push(format!(
+            "decode: batch-8 speedup {speedup:.2}x < 2.0x over single-stream"
+        ));
     }
     let j = Json::obj(vec![
         ("bench", Json::Str("decode_engine".into())),
@@ -238,5 +268,89 @@ fn bench_decode_engine(quick: bool) {
     ]);
     let path = "BENCH_decode.json";
     std::fs::write(path, j.to_string() + "\n").expect("write BENCH_decode.json");
+    println!("  wrote {path}");
+}
+
+/// Chunked prefill: prompt tokens/sec at prefill_chunk 8 vs 1 (token at a
+/// time) through the batched engine under BFP6. Chunk 8 shares each fused
+/// weight-dequant pass across 8 prompt rows per slot — and attention over
+/// the chunk runs slot-parallel on the worker pool — so prompt absorption
+/// should run well over 2× faster. Writes BENCH_prefill.json.
+fn bench_prefill_engine(quick: bool, gates: &mut Vec<String>) {
+    println!("\n== chunked prefill through the batched engine (tiny, BFP6) ==");
+    let fmt = presets::bfp_w(6);
+    let cfg = ModelConfig::preset("tiny");
+    let params = Params::init(&cfg, 3);
+    let model = Model::new(params, QuantPlan::uniform(fmt));
+    let prompt_len = if quick { 24 } else { 48 };
+    let n_req = 4usize;
+    let reps = if quick { 2 } else { 3 };
+    let mk_reqs = || -> Vec<Request> {
+        (0..n_req)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: (0..prompt_len).map(|t| (3 + i + t * 7) % 512).collect(),
+                max_new_tokens: 1, // prefill-dominated workload
+                temperature: 0.0,
+            })
+            .collect()
+    };
+    // prefill tokens/sec = prompt rows absorbed per wall-clock second,
+    // best of N closed-loop runs
+    let run_prefill_tps = |chunk: usize| -> (f64, Metrics) {
+        let server_cfg = ServerConfig {
+            max_batch: n_req,
+            prefill_chunk: chunk,
+        };
+        let mut best: Option<(f64, Metrics)> = None;
+        for _ in 0..reps {
+            let (_, m) = run_batched(&model, mk_reqs(), &server_cfg);
+            let secs = m.wall.as_secs_f64().max(1e-12);
+            let tps = m.prefill_rows as f64 / secs;
+            let better = match &best {
+                None => true,
+                Some((b, _)) => tps > *b,
+            };
+            if better {
+                best = Some((tps, m));
+            }
+        }
+        best.unwrap()
+    };
+    let (tps1, m1) = run_prefill_tps(1);
+    let (tps8, m8) = run_prefill_tps(8);
+    let speedup = tps8 / tps1.max(1e-12);
+    println!(
+        "  chunk 1: {tps1:.1} prompt tok/s (amort {:.2}x) | chunk 8: {tps8:.1} prompt tok/s \
+         (amort {:.2}x)",
+        m1.prefill_amortisation(),
+        m8.prefill_amortisation(),
+    );
+    println!(
+        "  chunk-8 speedup: {speedup:.2}x over token-at-a-time \
+         ({prompt_len} prompt rows/request, {n_req} requests)"
+    );
+    if speedup < 2.0 {
+        println!("  WARNING: chunked-prefill speedup below the 2x acceptance bar");
+        gates.push(format!(
+            "prefill: chunk-8 speedup {speedup:.2}x < 2.0x over token-at-a-time"
+        ));
+    }
+    let j = Json::obj(vec![
+        ("bench", Json::Str("prefill_engine".into())),
+        ("model", Json::Str(cfg.name.clone())),
+        ("format", Json::Str(fmt.name())),
+        ("prompt_tokens_per_request", Json::Num(prompt_len as f64)),
+        ("requests", Json::Num(n_req as f64)),
+        ("chunk1_prefill_tps", Json::Num(tps1)),
+        ("chunk8_prefill_tps", Json::Num(tps8)),
+        ("chunk8_speedup", Json::Num(speedup)),
+        // prompt rows sharing each fused weight-dequant pass at chunk 8
+        ("chunk8_prefill_amortisation", Json::Num(m8.prefill_amortisation())),
+        ("chunk1_prefill_amortisation", Json::Num(m1.prefill_amortisation())),
+        ("quick", Json::Bool(quick)),
+    ]);
+    let path = "BENCH_prefill.json";
+    std::fs::write(path, j.to_string() + "\n").expect("write BENCH_prefill.json");
     println!("  wrote {path}");
 }

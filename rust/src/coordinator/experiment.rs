@@ -61,7 +61,7 @@ pub fn default_steps(preset: &str) -> usize {
     }
 }
 
-/// Persist an experiment's table: results/<id>.md, .csv, .json.
+/// Persist an experiment's table: `results/<id>.md`, .csv, .json.
 pub fn save_result(id: &str, table: &Table, extra: Option<Json>) {
     let dir = crate::util::results_dir();
     let _ = crate::util::write_file(&dir.join(format!("{id}.md")), &table.render());

@@ -16,10 +16,19 @@ pub struct Metrics {
     /// Fused engine steps executed by the continuous-batching scheduler;
     /// each one decodes every packed weight exactly once.
     pub engine_steps: usize,
-    /// Token-steps processed across all slots (Σ active slots per engine
-    /// step) — what a sequential decoder would have paid one weight-decode
-    /// pass each for.
+    /// Slot contributions across all engine steps (Σ active slots per
+    /// step). A slot counts once per step whether it fed one decode row or
+    /// a whole prefill chunk, so occupancy stays bounded by the pool size.
     pub slot_steps: usize,
+    /// Prompt rows fed through chunked prefill (Σ chunk lengths). Together
+    /// with [`Self::decode_rows`] this is every row the engine processed.
+    pub prefill_rows: usize,
+    /// Engine steps that carried at least one prefill row — each one paid
+    /// exactly one weight-dequant pass for all its prompt rows.
+    pub prefill_steps: usize,
+    /// Decode rows fed (one per decoding slot per step; the final sampled
+    /// token of a sequence is never fed back).
+    pub decode_rows: usize,
 }
 
 impl Metrics {
@@ -52,12 +61,26 @@ impl Metrics {
         }
     }
 
-    /// Packed-weight decode amortisation: token-steps served per weight
-    /// decode pass. Sequential decode pays one pass per token-step; the
-    /// batched engine pays one per engine step, so each fused GEMM's decode
-    /// work is shared by this many sequences on average.
+    /// Decode-side amortisation: sequences sharing each fused weight-dequant
+    /// pass (== [`Self::batch_occupancy`], one slot contribution per step).
+    /// A sequential decoder pays one dequant pass per sequence per step; the
+    /// engine pays one per step for all of them. The *row*-level prefill
+    /// amortisation (chunk rows sharing a pass) is reported separately by
+    /// [`Self::prefill_amortisation`].
     pub fn decode_amortisation(&self) -> f64 {
         self.batch_occupancy()
+    }
+
+    /// Prefill amortisation: prompt rows fed per prefill-carrying engine
+    /// step, i.e. how many prompt tokens shared each fused weight-dequant
+    /// pass. Token-at-a-time prefill caps this at the slot-pool size;
+    /// chunked prefill multiplies it by the chunk length.
+    pub fn prefill_amortisation(&self) -> f64 {
+        if self.prefill_steps == 0 {
+            0.0
+        } else {
+            self.prefill_rows as f64 / self.prefill_steps as f64
+        }
     }
 
     /// generated tokens per wall-clock second
@@ -85,6 +108,14 @@ impl Metrics {
                 self.engine_steps,
                 self.batch_occupancy(),
                 self.decode_amortisation(),
+            ));
+        }
+        if self.prefill_steps > 0 {
+            s.push_str(&format!(
+                " prefill_rows={} prefill_steps={} prefill_amort={:.2}x",
+                self.prefill_rows,
+                self.prefill_steps,
+                self.prefill_amortisation(),
             ));
         }
         if self.weight_memory.dense_f32_bytes > 0 {
@@ -125,5 +156,20 @@ mod tests {
         assert!((m.batch_occupancy() - 2.5).abs() < 1e-12);
         assert_eq!(m.decode_amortisation(), m.batch_occupancy());
         assert!(m.summary().contains("decode_amort=2.50x"));
+    }
+
+    #[test]
+    fn prefill_amortisation_view() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefill_amortisation(), 0.0);
+        assert!(!m.summary().contains("prefill_amort"));
+        m.engine_steps = 6;
+        m.slot_steps = 6;
+        m.prefill_steps = 2;
+        m.prefill_rows = 16;
+        m.decode_rows = 4;
+        assert!((m.prefill_amortisation() - 8.0).abs() < 1e-12);
+        assert!(m.summary().contains("prefill_rows=16"));
+        assert!(m.summary().contains("prefill_amort=8.00x"));
     }
 }

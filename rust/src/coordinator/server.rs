@@ -1,13 +1,18 @@
 //! Continuous-batching inference coordinator — the L3 serving path.
 //!
 //! A single scheduler loop owns a [`BatchedDecodeSession`] slot pool of
-//! `max_batch` slots. Queued requests are admitted into free slots, every
-//! active slot advances one token per fused engine step — the packed
-//! weights are decoded **once per layer per step regardless of how many
-//! sequences are in flight** — and slots are recycled the moment a
-//! sequence finishes, so short requests drain out and queued ones join
-//! mid-flight without batch barriers. Greedy decode is bit-identical to
-//! running each request alone through [`DecodeSession`] (tested here and
+//! `max_batch` slots. Queued requests are admitted into free slots; every
+//! active slot contributes a row-block to each fused engine step — up to
+//! `prefill_chunk` prompt rows while prefilling, one row while decoding —
+//! and the packed weights are decoded **once per layer per step regardless
+//! of how many rows the step carries**, so the dequant cost is amortised
+//! across sequences *and* across prompt tokens. The logit mask covers all
+//! but each slot's final prompt row (intermediate prompt logits are
+//! discarded anyway, and the vocab-sized head GEMM dominates a prefill
+//! step's cost). Slots are recycled the moment a sequence finishes, so
+//! short requests drain out and queued ones join mid-flight without batch
+//! barriers. Greedy decode is bit-identical to running each request alone
+//! through [`DecodeSession`] — for any `prefill_chunk` — (tested here and
 //! in tests/continuous_batching.rs).
 
 use super::metrics::Metrics;
@@ -43,11 +48,20 @@ pub struct ServerConfig {
     /// knobs are gone: the scheduler loop admits work the moment a slot
     /// frees, and the fused GEMMs thread internally.)
     pub max_batch: usize,
+    /// Maximum prompt rows a prefilling slot feeds into one engine step.
+    /// 1 reproduces token-at-a-time prefill; larger chunks amortise the
+    /// per-step weight dequant across that many prompt tokens per slot.
+    /// Never changes results — chunked prefill is bit-identical to
+    /// sequential prefill (tested) — only how fast prompts are absorbed.
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 8 }
+        ServerConfig {
+            max_batch: 8,
+            prefill_chunk: 8,
+        }
     }
 }
 
@@ -89,7 +103,8 @@ struct ActiveSeq {
     /// tokens already fed to the model
     fed: usize,
     out: Vec<usize>,
-    /// token to feed on the next engine step
+    /// sampled token to feed on the next decode step (prompt rows are fed
+    /// directly from `req.prompt` as chunked row-blocks)
     next_input: usize,
 }
 
@@ -169,35 +184,61 @@ pub fn run_batched(
                 }
             }
         }
-        // one fused step over every active slot; rows still prefilling
-        // skip the LM head (their logits would be discarded anyway)
-        let mut batch: Vec<(usize, usize)> = Vec::with_capacity(n_slots);
+        // one fused step over every active slot: prefilling slots feed a
+        // chunk of up to `prefill_chunk` prompt rows, decoding slots one
+        // row; the logit mask keeps only each slot's final prompt row and
+        // decode rows (intermediate prompt logits are discarded anyway)
+        let chunk = cfg.prefill_chunk.max(1);
+        let mut batch: Vec<(usize, &[usize])> = Vec::with_capacity(n_slots);
         let mut needs_logits: Vec<bool> = Vec::with_capacity(n_slots);
+        let mut meta: Vec<(usize, usize)> = Vec::with_capacity(n_slots); // (slot, rows fed)
+        let mut prefill_rows = 0usize;
         for (s, a) in slots.iter().enumerate() {
             if let Some(a) = a {
-                batch.push((s, a.next_input));
-                needs_logits.push(a.fed + 1 >= a.req.prompt.len());
+                let plen = a.req.prompt.len();
+                if a.fed < plen {
+                    let end = (a.fed + chunk).min(plen);
+                    batch.push((s, &a.req.prompt[a.fed..end]));
+                    needs_logits.extend((a.fed..end).map(|j| j + 1 == plen));
+                    meta.push((s, end - a.fed));
+                    prefill_rows += end - a.fed;
+                } else {
+                    batch.push((s, std::slice::from_ref(&a.next_input)));
+                    needs_logits.push(true);
+                    meta.push((s, 1));
+                }
             }
         }
         if batch.is_empty() {
             break; // queue drained and nothing in flight
         }
-        let logits = session.step_with_logit_mask(&batch, Some(&needs_logits));
+        let logits = session.step_chunked(&batch, Some(&needs_logits));
+        drop(batch); // release the borrow of the slots' prompts
         metrics.engine_steps += 1;
-        metrics.slot_steps += batch.len();
-        for (bi, &(slot, _)) in batch.iter().enumerate() {
+        metrics.slot_steps += meta.len();
+        if prefill_rows > 0 {
+            metrics.prefill_steps += 1;
+            metrics.prefill_rows += prefill_rows;
+        }
+        let mut row0 = 0usize;
+        for &(slot, rows) in &meta {
+            let last = row0 + rows - 1; // the slot's final row this step
+            row0 += rows;
             let seq = slots[slot].as_mut().unwrap();
-            seq.fed += 1;
-            if seq.fed < seq.req.prompt.len() {
-                // still prefilling: logits discarded, feed the next prompt
-                // token on the following step
-                seq.next_input = seq.req.prompt[seq.fed];
-                continue;
+            let was_prefill = seq.fed < seq.req.prompt.len();
+            seq.fed += rows;
+            if was_prefill {
+                if seq.fed < seq.req.prompt.len() {
+                    continue; // still prefilling: every row was masked
+                }
+            } else {
+                metrics.decode_rows += 1;
             }
-            // prompt fully fed: these logits belong to the newest token
+            // `last` is the final prompt row (prefill just completed) or
+            // the decode row: its logits belong to the newest token
             let more = seq.out.len() < seq.req.max_new_tokens && session.pos(slot) < cap;
             let finished = if more {
-                let next = sample_logits(&logits[bi], seq.req.temperature, &mut seq.rng);
+                let next = sample_logits(&logits[last], seq.req.temperature, &mut seq.rng);
                 seq.out.push(next);
                 seq.next_input = next;
                 // the final sampled token needs no further forward pass
@@ -253,22 +294,75 @@ mod tests {
         assert!(resps.iter().all(|r| r.tokens.len() == 4));
         assert_eq!(metrics.completed, 12);
         assert!(metrics.throughput_tps() > 0.0);
-        // every request feeds 3 prompt tokens and generates 4, the last of
-        // which is never fed back — 6 token-steps each
-        assert_eq!(metrics.slot_steps, 12 * 6);
+        // every request feeds 3 prompt rows (one chunk at the default
+        // prefill_chunk of 8) and 3 decode rows (the 4th sampled token is
+        // never fed back) — 6 rows each, 4 slot contributions each
+        assert_eq!(metrics.prefill_rows, 12 * 3);
+        assert_eq!(metrics.decode_rows, 12 * 3);
+        assert_eq!(metrics.slot_steps, 12 * 4);
         assert!(metrics.engine_steps > 0);
+        assert!(metrics.prefill_steps > 0);
         assert!(metrics.batch_occupancy() > 1.0);
+        // the whole 3-token prompt shares each prefill dequant pass
+        assert!(metrics.prefill_amortisation() >= 3.0);
     }
 
     #[test]
     fn greedy_decode_is_deterministic_across_batch_sizes() {
         // the slot-pool size must never change a generated token
         let m = model();
-        let (a, _) = run_batched(&m, reqs(6), &ServerConfig { max_batch: 1 });
-        let (b, _) = run_batched(&m, reqs(6), &ServerConfig { max_batch: 4 });
+        let one = ServerConfig {
+            max_batch: 1,
+            ..ServerConfig::default()
+        };
+        let four = ServerConfig {
+            max_batch: 4,
+            ..ServerConfig::default()
+        };
+        let (a, _) = run_batched(&m, reqs(6), &one);
+        let (b, _) = run_batched(&m, reqs(6), &four);
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra.tokens, rb.tokens, "request {}", ra.id);
         }
+    }
+
+    #[test]
+    fn greedy_decode_is_deterministic_across_prefill_chunks() {
+        // the prefill chunk size must never change a generated token:
+        // chunk 1 is token-at-a-time, larger chunks only batch the rows
+        let m = model();
+        let requests: Vec<Request> = (0..5)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: vec![3 + i % 5, 10, 42, 7, 1, 30, 9, 100, 2, 8][..4 + i].to_vec(),
+                max_new_tokens: 3,
+                temperature: 0.0,
+            })
+            .collect();
+        let mut baseline: Option<Vec<Response>> = None;
+        let mut prefill_steps = Vec::new();
+        for chunk in [1usize, 3, 8] {
+            let cfg = ServerConfig {
+                max_batch: 3,
+                prefill_chunk: chunk,
+            };
+            let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
+            prefill_steps.push(metrics.prefill_steps);
+            match &baseline {
+                None => baseline = Some(resps),
+                Some(want) => {
+                    for (ra, rb) in want.iter().zip(&resps) {
+                        assert_eq!(ra.tokens, rb.tokens, "chunk {chunk} request {}", ra.id);
+                    }
+                }
+            }
+        }
+        // chunking must genuinely reduce dequant passes, not just ride on
+        // cross-slot batching: bigger chunks → strictly fewer prefill steps
+        assert!(
+            prefill_steps[2] < prefill_steps[1] && prefill_steps[1] < prefill_steps[0],
+            "prefill steps by chunk: {prefill_steps:?}"
+        );
     }
 
     #[test]
@@ -276,7 +370,10 @@ mod tests {
         // continuous batching must not change a single generated token
         let m = model();
         let requests = reqs(9);
-        let cfg = ServerConfig { max_batch: 4 };
+        let cfg = ServerConfig {
+            max_batch: 4,
+            ..ServerConfig::default()
+        };
         let (got, metrics) = run_batched(&m, requests.clone(), &cfg);
         assert!(metrics.batch_occupancy() > 1.0);
         for (resp, req) in got.iter().zip(&requests) {

@@ -1,6 +1,6 @@
 //! Experiment drivers — one per paper table/figure (DESIGN.md §6 index).
 //! Run with `bbq exp <id>`; each prints the paper-shaped table and writes
-//! results/<id>.{md,csv,json}.
+//! `results/<id>.{md,csv,json}`.
 
 pub mod ablation;
 pub mod blocksize;

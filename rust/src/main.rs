@@ -1,7 +1,7 @@
 //! `bbq` — the L3 coordinator CLI.
 //!
 //! Subcommands:
-//!   exp <id>         run a paper experiment (table1/3/4/5/6/8, fig1/3/4/5/7/10, all)
+//!   exp `<id>`       run a paper experiment (table1/3/4/5/6/8, fig1/3/4/5/7/10, all)
 //!   train            train a model on the synthetic corpus (rust-native)
 //!   train-pjrt       train via the AOT jax train-step artifact (PJRT)
 //!   eval-ppl         perplexity of a model under a format
@@ -13,7 +13,7 @@
 //!   serve            batched-inference demo with latency/throughput metrics
 //!   artifacts        list AOT artifacts visible to the runtime
 //!
-//! Common options: --model <preset> --format <name> --seq N --threads N
+//! Common options: `--model <preset>` `--format <name>` `--seq N` `--threads N`
 
 #![allow(clippy::needless_range_loop, clippy::collapsible_if)]
 
@@ -243,6 +243,7 @@ fn cmd_serve(args: &Args) {
         .collect();
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 8),
+        prefill_chunk: args.usize_or("prefill-chunk", 8),
     };
     let (resps, metrics) = run_batched(&model, reqs, &cfg);
     println!("{}", metrics.summary());

@@ -6,19 +6,29 @@
 //!
 //! * [`DecodeSession`] — one sequence, one token per step. The reference
 //!   path: every weight is decoded from its packed payload once per step.
-//! * [`BatchedDecodeSession`] — N sequences over a slot pool, one token per
-//!   *active slot* per step, all rows flowing through a single fused packed
-//!   GEMM per weight site per layer. Weights are decoded once per layer per
-//!   step **regardless of batch size**, which is the amortisation the
-//!   continuous-batching coordinator exists to buy. Every row of a batched
+//! * [`BatchedDecodeSession`] — N sequences over a slot pool, each slot
+//!   contributing a *row-block* of one or more tokens per step (one for
+//!   decode, up to `prefill_chunk` for chunked prefill), all rows flowing
+//!   through a single fused packed GEMM per weight site per layer. Weights
+//!   are decoded once per layer per step **regardless of how many rows the
+//!   step carries**, which is the amortisation the continuous-batching
+//!   coordinator exists to buy — for decode it is shared across sequences,
+//!   for chunked prefill across prompt *tokens* too. Every row of a batched
 //!   step is bit-identical to the sequential session (tested), because the
-//!   row-wise kernels accumulate in exactly the m == 1 order and activation
-//!   rows quantise independently ([`crate::quant::fake_quant_rows`]).
+//!   row-wise kernels accumulate in exactly the m == 1 order, activation
+//!   rows quantise independently ([`crate::quant::fake_quant_rows`]), and
+//!   attention is causal per slot over the chunk (row j of a chunk attends
+//!   keys 0..=p0+j only). Attention (④⑤) runs as one task per row on the
+//!   shared scoped-thread worker pool ([`crate::runtime::pool`]) once the
+//!   step carries enough work, so it scales across cores — across slots
+//!   *and* across a single slot's chunk rows — instead of serialising on
+//!   the scheduler thread. Threading never changes the bits (every row is
+//!   computed by exactly the same code either way).
 
 use super::config::PosEncoding;
 use super::rope::apply_rope;
 use super::transformer::Model;
-use crate::quant::{quant_act, quant_act_rows};
+use crate::quant::{quant_act, quant_act_rows, GemmQuant};
 use crate::tensor::matmul::{matmul_bt, matmul_bt_rowwise};
 use crate::tensor::Tensor;
 
@@ -44,7 +54,7 @@ impl<'m> DecodeSession<'m> {
         }
     }
 
-    /// Feed one token, return logits [vocab].
+    /// Feed one token, return logits `[vocab]`.
     pub fn step(&mut self, token: usize) -> Vec<f32> {
         let m = self.model;
         let cfg = m.cfg();
@@ -164,26 +174,58 @@ impl<'m> BatchedDecodeSession<'m> {
     }
 
     /// Feed one token per listed `(slot, token)` pair; returns each slot's
-    /// logits in input order. All rows advance through ONE fused packed
-    /// GEMM per weight site per layer — the weight payload is decoded once
-    /// for the whole batch — while attention runs per slot against that
-    /// slot's own KV cache and position. Row `i` of the result is
-    /// bit-identical to what a [`DecodeSession`] holding only that sequence
-    /// would return (tested across every preset format).
+    /// logits in input order. Single-token convenience wrapper around
+    /// [`Self::step_chunked`]; row `i` of the result is bit-identical to
+    /// what a [`DecodeSession`] holding only that sequence would return
+    /// (tested across every preset format).
     pub fn step(&mut self, batch: &[(usize, usize)]) -> Vec<Vec<f32>> {
         self.step_with_logit_mask(batch, None)
     }
 
-    /// [`Self::step`] with an optional per-row logit mask: rows with
+    /// [`Self::step`] with an optional per-slot logit mask: slots with
     /// `needs_logits[i] == false` skip the final layer-norm + LM-head GEMM
-    /// and get an empty vector back. The scheduler masks rows that are
-    /// still prefilling — their logits are discarded anyway, and the
-    /// vocab-sized head GEMM dominates a prefill step's cost. Unmasked rows
-    /// are bit-identical to [`Self::step`]'s output (the head GEMM is
-    /// row-independent; tested).
+    /// and get an empty vector back. Unmasked rows are bit-identical to
+    /// [`Self::step`]'s output (the head GEMM is row-independent; tested).
     pub fn step_with_logit_mask(
         &mut self,
         batch: &[(usize, usize)],
+        needs_logits: Option<&[bool]>,
+    ) -> Vec<Vec<f32>> {
+        let toks: Vec<[usize; 1]> = batch.iter().map(|&(_, t)| [t]).collect();
+        let chunks: Vec<(usize, &[usize])> = batch
+            .iter()
+            .zip(&toks)
+            .map(|(&(slot, _), t)| (slot, &t[..]))
+            .collect();
+        self.step_chunked(&chunks, needs_logits)
+    }
+
+    /// One fused engine step over per-slot *row-blocks*: each `(slot,
+    /// tokens)` entry feeds `tokens.len()` consecutive prompt/decode tokens
+    /// into that slot, and all entries' rows concatenate into one
+    /// `[Σm_i, d]` activation matrix, so every weight site is dequantised
+    /// exactly once per step no matter how many rows — chunked prefill
+    /// amortises the packed-weight decode across prompt tokens the same way
+    /// batching amortises it across sequences.
+    ///
+    /// Returns one logits vector per *row*, in batch-then-token order.
+    /// `needs_logits` (same row order, `Σm_i` long) masks rows out of the
+    /// LM head — the scheduler keeps only each slot's final prompt row and
+    /// decode rows; masked rows return an empty vector. `None` computes
+    /// logits for every row.
+    ///
+    /// Bit-identity: row `(slot, j)` equals the logits a sequential
+    /// [`DecodeSession`] produces when fed the same token at the same
+    /// position (tested for every preset format). This holds because the
+    /// row-wise GEMMs accumulate every output row in the m == 1 order,
+    /// activation rows quantise independently, RoPE uses each row's own
+    /// absolute position, and attention is causal per slot over the chunk:
+    /// row j sees keys `0..=p0+j` only, and its attention operands (the
+    /// gathered `[t_j, hd]` key/value heads) are exactly the tensors the
+    /// sequential step would quantise — per-tensor formats included.
+    pub fn step_chunked(
+        &mut self,
+        batch: &[(usize, &[usize])],
         needs_logits: Option<&[bool]>,
     ) -> Vec<Vec<f32>> {
         let m = self.model;
@@ -193,35 +235,53 @@ impl<'m> BatchedDecodeSession<'m> {
         let hd = cfg.head_dim();
         let b = batch.len();
         assert!(b > 0, "empty batch step");
-        for (i, &(slot, _)) in batch.iter().enumerate() {
+        for (i, &(slot, toks)) in batch.iter().enumerate() {
             assert!(slot < self.pos.len(), "slot {slot} out of range");
-            assert!(self.pos[slot] < cfg.max_seq, "context overflow in slot {slot}");
-            // a duplicate would append two KV rows and advance pos twice,
-            // silently corrupting the slot — keep this loud in release too
-            // (b is the slot-pool size, so the scan is tiny)
+            assert!(!toks.is_empty(), "empty row-block for slot {slot}");
+            assert!(
+                self.pos[slot] + toks.len() <= cfg.max_seq,
+                "context overflow in slot {slot}"
+            );
+            // a duplicate would append interleaved KV rows and advance pos
+            // twice, silently corrupting the slot — keep this loud in
+            // release too (b is the slot-pool size, so the scan is tiny)
             assert!(
                 batch[..i].iter().all(|&(s, _)| s != slot),
                 "slot {slot} listed twice in one step"
             );
         }
-        // embeddings, with each slot's own absolute position
-        let mut x = Tensor::zeros(&[b, d]);
-        for (bi, &(slot, tok)) in batch.iter().enumerate() {
-            let xr = x.row_mut(bi);
-            xr.copy_from_slice(m.params.tok_emb.row(tok));
-            if cfg.pos == PosEncoding::Learned {
-                for (a, &p) in xr.iter_mut().zip(m.params.pos_emb.row(self.pos[slot])) {
-                    *a += p;
+        let r: usize = batch.iter().map(|&(_, toks)| toks.len()).sum();
+        // per-row absolute positions (RoPE and learned embeddings both key
+        // off these; within a chunk they advance token by token)
+        let mut positions: Vec<usize> = Vec::with_capacity(r);
+        for &(slot, toks) in batch {
+            let p0 = self.pos[slot];
+            positions.extend(p0..p0 + toks.len());
+        }
+        // embeddings
+        let mut x = Tensor::zeros(&[r, d]);
+        let mut row = 0usize;
+        for &(slot, toks) in batch {
+            let p0 = self.pos[slot];
+            for (j, &tok) in toks.iter().enumerate() {
+                let xr = x.row_mut(row);
+                xr.copy_from_slice(m.params.tok_emb.row(tok));
+                if cfg.pos == PosEncoding::Learned {
+                    for (a, &p) in xr.iter_mut().zip(m.params.pos_emb.row(p0 + j)) {
+                        *a += p;
+                    }
                 }
+                row += 1;
             }
         }
+        let threads = crate::runtime::pool::available_threads();
         for li in 0..cfg.n_layers {
             let l = &m.params.layers[li];
             let pl = m.prepared(li);
             let plan = &m.plan;
             let xn = x.layer_norm(&l.ln1_g, &l.ln1_b, cfg.ln_eps);
-            // ①②③: one fused [b, k]×[n, k] GEMM each; activation rows are
-            // quantised independently so each sequence sees exactly the
+            // ①②③: one fused [Σm_i, k]×[n, k] GEMM each; activation rows
+            // are quantised independently so each row sees exactly the
             // values it would alone
             let q_in = quant_act_rows(&xn, plan.site(li, 1).act);
             let q = pl.wq_t.matmul_bt_rowwise(&q_in).add_bias(&l.bq);
@@ -230,42 +290,62 @@ impl<'m> BatchedDecodeSession<'m> {
             let v_in = quant_act_rows(&xn, plan.site(li, 3).act);
             let v = pl.wv_t.matmul_bt_rowwise(&v_in).add_bias(&l.bv);
             let (q, k) = if cfg.pos == PosEncoding::Rope {
-                (self.rope_rows(&q, batch, h), self.rope_rows(&k, batch, h))
+                (rope_rows(&q, &positions, h), rope_rows(&k, &positions, h))
             } else {
                 (q, k)
             };
             let scale = 1.0 / (hd as f32).sqrt();
-            let mut ctx = Tensor::zeros(&[b, d]);
             let q45 = (plan.site(li, 4), plan.site(li, 5));
-            // ④⑤ per slot: attention state is inherently per-sequence
-            for (bi, &(slot, _)) in batch.iter().enumerate() {
+            // ④⑤ per slot over its chunk rows. Append this step's K/V rows
+            // first; attention row j then reads keys 0..=p0+j only, so
+            // causality holds within the chunk.
+            let mut row0 = 0usize;
+            for &(slot, toks) in batch {
+                let mi = toks.len();
                 let cache = &mut self.caches[slot][li];
-                cache.k.extend_from_slice(k.row(bi));
-                cache.v.extend_from_slice(v.row(bi));
-                let t = self.pos[slot] + 1; // keys available in this slot
-                for hi in 0..h {
-                    let qh = Tensor::new(&[1, hd], head_slice(q.row(bi), hi, hd).to_vec());
-                    let mut kh = Tensor::zeros(&[t, hd]);
-                    let mut vh = Tensor::zeros(&[t, hd]);
-                    for ti in 0..t {
-                        kh.row_mut(ti)
-                            .copy_from_slice(&cache.k[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
-                        vh.row_mut(ti)
-                            .copy_from_slice(&cache.v[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
-                    }
-                    let mut qh_q = quant_act(&qh, q45.0.act);
-                    let kh_q = quant_act(&kh, q45.0.weight);
-                    for r in qh_q.data.iter_mut() {
-                        *r *= scale;
-                    }
-                    let mut scores = matmul_bt(&qh_q, &kh_q); // [1, t]
-                    scores.softmax_rows();
-                    let a_q = quant_act(&scores, q45.1.act);
-                    let vht_q = quant_act(&vh.t(), q45.1.weight);
-                    let ctx_h = matmul_bt(&a_q, &vht_q); // [1, hd]
-                    ctx.row_mut(bi)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
+                cache.k.extend_from_slice(&k.data[row0 * d..(row0 + mi) * d]);
+                cache.v.extend_from_slice(&v.data[row0 * d..(row0 + mi) * d]);
+                row0 += mi;
+            }
+            // slot/row-parallel attention: one task per row (rows are
+            // independent once the step's K/V rows are appended — row j
+            // only reads keys 0..=p0+j, all present), each writing its own
+            // [d] slice of ctx, dispatched on the shared worker pool when
+            // the step carries enough work. Per-row tasks mean a single
+            // long-prompt slot parallelises across its chunk rows, not
+            // just across slots. The serial lane runs the identical task
+            // code, so the bits never depend on the thread count.
+            let mut ctx = Tensor::zeros(&[r, d]);
+            let mut tasks: Vec<AttnTask> = Vec::with_capacity(r);
+            let mut ctx_rest: &mut [f32] = ctx.data.as_mut_slice();
+            let mut q_rest: &[f32] = &q.data;
+            for &(slot, toks) in batch {
+                let p0 = self.pos[slot];
+                let cache = &self.caches[slot][li];
+                for j in 0..toks.len() {
+                    let (ctx_row, rest) = ctx_rest.split_at_mut(d);
+                    ctx_rest = rest;
+                    let (q_row, rest_q) = q_rest.split_at(d);
+                    q_rest = rest_q;
+                    tasks.push(AttnTask {
+                        ctx: ctx_row,
+                        q: q_row,
+                        cache,
+                        t: p0 + j + 1,
+                    });
                 }
             }
+            let macs: usize = tasks.iter().map(|task| task.t * d * 2).sum();
+            if threads > 1 && tasks.len() > 1 && macs >= ATTN_PAR_MACS {
+                crate::runtime::pool::run_mut(&mut tasks, threads, |task| {
+                    attn_row(task, d, h, hd, scale, q45)
+                });
+            } else {
+                for task in tasks.iter_mut() {
+                    attn_row(task, d, h, hd, scale, q45);
+                }
+            }
+            drop(tasks);
             // ⑥⑦⑧: fused batched GEMMs again
             let ctx_q = quant_act_rows(&ctx, plan.site(li, 6).act);
             let att_out = pl.wo_t.matmul_bt_rowwise(&ctx_q).add_bias(&l.bo);
@@ -278,49 +358,111 @@ impl<'m> BatchedDecodeSession<'m> {
             let mlp_out = pl.w2_t.matmul_bt_rowwise(&h_q).add_bias(&l.b2);
             x = x1.add(&mlp_out);
         }
-        for &(slot, _) in batch {
-            self.pos[slot] += 1;
+        for &(slot, toks) in batch {
+            self.pos[slot] += toks.len();
         }
         // tied-embedding LM head, row-order-preserving like everything else
         match needs_logits {
             None => {
                 let xn = x.layer_norm(&m.params.lnf_g, &m.params.lnf_b, cfg.ln_eps);
                 let logits = matmul_bt_rowwise(&xn, &m.params.tok_emb);
-                (0..b).map(|bi| logits.row(bi).to_vec()).collect()
+                (0..r).map(|ri| logits.row(ri).to_vec()).collect()
             }
             Some(mask) => {
-                assert_eq!(mask.len(), b, "logit mask length");
+                assert_eq!(mask.len(), r, "logit mask length");
                 // gather the rows that want logits and run ONE batched head
                 // GEMM over them — bit-identical per row to the full path
-                let wanted: Vec<usize> = (0..b).filter(|&bi| mask[bi]).collect();
-                let mut out = vec![Vec::new(); b];
+                let wanted: Vec<usize> = (0..r).filter(|&ri| mask[ri]).collect();
+                let mut out = vec![Vec::new(); r];
                 if !wanted.is_empty() {
                     let mut xs = Tensor::zeros(&[wanted.len(), d]);
-                    for (ri, &bi) in wanted.iter().enumerate() {
-                        xs.row_mut(ri).copy_from_slice(x.row(bi));
+                    for (gi, &ri) in wanted.iter().enumerate() {
+                        xs.row_mut(gi).copy_from_slice(x.row(ri));
                     }
                     let xn = xs.layer_norm(&m.params.lnf_g, &m.params.lnf_b, cfg.ln_eps);
                     let logits = matmul_bt_rowwise(&xn, &m.params.tok_emb);
-                    for (ri, &bi) in wanted.iter().enumerate() {
-                        out[bi] = logits.row(ri).to_vec();
+                    for (gi, &ri) in wanted.iter().enumerate() {
+                        out[ri] = logits.row(gi).to_vec();
                     }
                 }
                 out
             }
         }
     }
+}
 
-    /// Apply RoPE row by row with each slot's own absolute position.
-    fn rope_rows(&self, t: &Tensor, batch: &[(usize, usize)], n_heads: usize) -> Tensor {
-        let (_, d) = t.dims2();
-        let mut out = t.clone();
-        for (bi, &(slot, _)) in batch.iter().enumerate() {
-            let row = Tensor::new(&[1, d], t.row(bi).to_vec());
-            let rotated = apply_rope(&row, n_heads, self.pos[slot]);
-            out.row_mut(bi).copy_from_slice(&rotated.data);
+/// MAC threshold below which slot-parallel attention stays on the caller's
+/// thread — tiny steps would pay more in scoped-thread spawn overhead than
+/// the parallelism returns. Lower than the pure-GEMM `PAR_THRESHOLD`
+/// (1 << 21) because each attention "MAC" here also carries KV gathers,
+/// per-head quantisation and small allocations — several times the work of
+/// a GEMM lane — but still high enough that single-token decode steps on
+/// short contexts run serially. Crossing the threshold never changes
+/// results (the parallel lane runs the identical per-slot code).
+const ATTN_PAR_MACS: usize = 1 << 17;
+
+/// One row's attention work for one layer of a chunked step: the row's
+/// `[d]` roped query, the slot's (already-extended) KV cache, how many
+/// keys this row may see, and the matching `&mut` slice of the ctx output.
+/// Rows of the same slot share the cache by `&` reference — attention only
+/// reads it.
+struct AttnTask<'a> {
+    ctx: &'a mut [f32],
+    q: &'a [f32],
+    cache: &'a LayerCache,
+    /// keys visible to this row: its absolute position + 1
+    t: usize,
+}
+
+/// ④⑤ for one chunk row — exactly the sequential session's per-token
+/// attention body with `t` available keys, so the gathered `[t, hd]`
+/// operands (and therefore any per-tensor quantisation scales) match the
+/// sequential step bit for bit.
+fn attn_row(
+    task: &mut AttnTask,
+    d: usize,
+    h: usize,
+    hd: usize,
+    scale: f32,
+    q45: (GemmQuant, GemmQuant),
+) {
+    let cache = task.cache;
+    let t = task.t;
+    for hi in 0..h {
+        let qh = Tensor::new(&[1, hd], head_slice(task.q, hi, hd).to_vec());
+        let mut kh = Tensor::zeros(&[t, hd]);
+        let mut vh = Tensor::zeros(&[t, hd]);
+        for ti in 0..t {
+            kh.row_mut(ti)
+                .copy_from_slice(&cache.k[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
+            vh.row_mut(ti)
+                .copy_from_slice(&cache.v[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
         }
-        out
+        let mut qh_q = quant_act(&qh, q45.0.act);
+        let kh_q = quant_act(&kh, q45.0.weight);
+        for x in qh_q.data.iter_mut() {
+            *x *= scale;
+        }
+        let mut scores = matmul_bt(&qh_q, &kh_q); // [1, t]
+        scores.softmax_rows();
+        let a_q = quant_act(&scores, q45.1.act);
+        let vht_q = quant_act(&vh.t(), q45.1.weight);
+        let ctx_h = matmul_bt(&a_q, &vht_q); // [1, hd]
+        task.ctx[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
     }
+}
+
+/// Apply RoPE row by row with each row's own absolute position.
+fn rope_rows(t: &Tensor, positions: &[usize], n_heads: usize) -> Tensor {
+    let (r, d) = t.dims2();
+    assert_eq!(r, positions.len());
+    let mut out = t.clone();
+    for (i, &pos) in positions.iter().enumerate() {
+        let row = Tensor::new(&[1, d], t.row(i).to_vec());
+        let rotated = apply_rope(&row, n_heads, pos);
+        out.row_mut(i).copy_from_slice(&rotated.data);
+    }
+    out
 }
 
 #[inline]
@@ -498,6 +640,112 @@ mod tests {
         let got = batched.step(&[(0, 5), (1, 42)]);
         assert_eq!(got[0], old.step(5));
         assert_eq!(got[1], fresh.step(42));
+    }
+
+    #[test]
+    fn chunked_prefill_bit_identical_to_token_at_a_time() {
+        // the tentpole guarantee: feeding a prompt as [m_i, d] row-blocks
+        // returns, per row, the exact bits of the one-token-per-step path
+        for plan in [
+            QuantPlan::fp32(),
+            QuantPlan::uniform(presets::bfp_w(6)),
+            QuantPlan::uniform(presets::fixed8()),
+        ] {
+            let m = model("nano", plan);
+            let prompt = [3usize, 9, 100, 42, 7, 250, 1];
+            let mut chunked = BatchedDecodeSession::new(&m, 1);
+            let mut seq = DecodeSession::new(&m);
+            let mut fed = 0usize;
+            for chunk in [3usize, 4] {
+                let toks = &prompt[fed..fed + chunk];
+                let got = chunked.step_chunked(&[(0, toks)], None);
+                assert_eq!(got.len(), chunk);
+                for (j, row_logits) in got.iter().enumerate() {
+                    let want = seq.step(toks[j]);
+                    assert_eq!(row_logits, &want, "row {} of chunk at {fed}", j);
+                }
+                fed += chunk;
+            }
+            assert_eq!(chunked.pos(0), prompt.len());
+        }
+    }
+
+    #[test]
+    fn chunked_rope_uses_per_row_positions() {
+        let m = model("rope-tiny", QuantPlan::fp32());
+        let mut chunked = BatchedDecodeSession::new(&m, 2);
+        let mut s0 = DecodeSession::new(&m);
+        let mut s1 = DecodeSession::new(&m);
+        // stagger slot 0 so the two slots' row positions differ in-step
+        chunked.step_chunked(&[(0, &[5, 6])], None);
+        s0.step(5);
+        s0.step(6);
+        let got = chunked.step_chunked(&[(0, &[7, 8]), (1, &[9, 10, 11])], None);
+        let want = [
+            s0.step(7),
+            s0.step(8),
+            s1.step(9),
+            s1.step(10),
+            s1.step(11),
+        ];
+        for (ri, w) in want.iter().enumerate() {
+            assert_eq!(&got[ri], w, "row {ri}");
+        }
+        assert_eq!(chunked.pos(0), 4);
+        assert_eq!(chunked.pos(1), 3);
+    }
+
+    #[test]
+    fn chunked_mixed_prefill_and_decode_rows() {
+        // one slot decoding while another prefills a chunk, same fused step
+        let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
+        let mut batched = BatchedDecodeSession::new(&m, 2);
+        let mut dec = DecodeSession::new(&m);
+        let mut pre = DecodeSession::new(&m);
+        batched.step_chunked(&[(0, &[3, 9, 100])], None);
+        dec.step(3);
+        dec.step(9);
+        dec.step(100);
+        // slot 0 feeds one decode row; slot 1 a 4-row prefill chunk
+        let got = batched.step_chunked(&[(0, &[42]), (1, &[7, 7, 8, 1])], None);
+        assert_eq!(got[0], dec.step(42));
+        assert_eq!(got[1], pre.step(7));
+        assert_eq!(got[2], pre.step(7));
+        assert_eq!(got[3], pre.step(8));
+        assert_eq!(got[4], pre.step(1));
+    }
+
+    #[test]
+    fn chunked_logit_mask_is_per_row() {
+        // masked rows return empty vectors; unmasked rows are bit-identical
+        // to the unmasked step
+        let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
+        let mut a = BatchedDecodeSession::new(&m, 2);
+        let mut b = BatchedDecodeSession::new(&m, 2);
+        let batch: [(usize, &[usize]); 2] = [(0, &[3, 9, 100]), (1, &[42, 7])];
+        let full = a.step_chunked(&batch, None);
+        let mask = [false, false, true, false, true]; // final row per slot
+        let masked = b.step_chunked(&batch, Some(&mask));
+        assert_eq!(masked.len(), 5);
+        for ri in 0..5 {
+            if mask[ri] {
+                assert_eq!(masked[ri], full[ri], "row {ri}");
+            } else {
+                assert!(masked[ri].is_empty(), "row {ri}");
+            }
+        }
+        // positions advance by the whole chunk either way
+        assert_eq!(b.pos(0), 3);
+        assert_eq!(b.pos(1), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "context overflow")]
+    fn chunked_overflow_is_loud() {
+        let m = model("nano", QuantPlan::fp32());
+        let mut batched = BatchedDecodeSession::new(&m, 1);
+        let long = vec![1usize; m.cfg().max_seq + 1];
+        batched.step_chunked(&[(0, &long)], None);
     }
 
     #[test]

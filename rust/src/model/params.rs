@@ -231,7 +231,7 @@ impl Params {
         out
     }
 
-    /// Mutable counterpart of [`flat_views`] (same order).
+    /// Mutable counterpart of [`Params::flat_views`] (same order).
     pub fn flat_views_mut(&mut self) -> Vec<(String, &mut [f32])> {
         let mut out: Vec<(String, &mut [f32])> = Vec::new();
         out.push(("tok_emb".into(), &mut self.tok_emb.data[..]));

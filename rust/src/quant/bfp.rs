@@ -91,7 +91,7 @@ pub fn bfp_fake_quant(data: &mut [f32], cols: usize, block: usize, e_bits: u32, 
 
 /// Integer-domain encoding of one block: (shared exponent, signed mantissas).
 /// `value = m * 2^(e - M + 1)`. This is the ASIC datapath representation
-/// used by [`crate::quant::qmatmul::bfp_dot_blocked`] (paper Eq. 4).
+/// used by [`crate::quant::qmatmul::bfp_matmul_blocked`] (paper Eq. 4).
 pub fn bfp_encode_block(block: &[f32], e_bits: u32, m_bits: u32) -> (i32, Vec<i32>) {
     let absmax = block_absmax(block);
     let e = shared_exponent(absmax, e_bits);

@@ -167,11 +167,8 @@ pub fn matmul_packed_bt_rowwise(a: &Tensor, qw: &QTensor) -> Tensor {
             chunks.push((j0, j1, vec![0.0f32; m * (j1 - j0)]));
             j0 = j1;
         }
-        std::thread::scope(|scope| {
-            for (j0, j1, buf) in chunks.iter_mut() {
-                let (j0, j1) = (*j0, *j1);
-                scope.spawn(move || packed_bt_panel(&a.data, m, k, qw, j0, j1, buf));
-            }
+        crate::runtime::pool::run_mut(&mut chunks, nt, |c| {
+            packed_bt_panel(&a.data, m, k, qw, c.0, c.1, &mut c.2)
         });
         for (j0, j1, buf) in &chunks {
             let w = j1 - j0;

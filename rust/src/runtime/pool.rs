@@ -1,0 +1,150 @@
+//! Shared scoped-thread worker pool — the crate's one threading primitive.
+//!
+//! Every parallel hot path (the dense GEMM row partition, the packed GEMM's
+//! column panels, and the batched engine's slot-parallel attention) funnels
+//! through [`run_mut`]: a scoped-thread pool whose workers pull items off a
+//! mutex-guarded iterator, so heterogeneous items (e.g. attention over
+//! slots at very different sequence positions) load-balance dynamically
+//! instead of being pinned to a static partition. Scoped threads mean no
+//! `'static` bounds — items may borrow the caller's stack — and the pool
+//! tears down before `run_mut` returns, so there is no global state and no
+//! shutdown protocol.
+//!
+//! Grown out of the row-partition helper that used to live privately in
+//! `tensor::matmul`; generalised here so the batched decode engine's
+//! attention (④⑤) can share it.
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+/// Thread budget: `BBQ_THREADS` env override, else the machine's available
+/// parallelism. Always ≥ 1.
+pub fn available_threads() -> usize {
+    std::env::var("BBQ_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+        .max(1)
+}
+
+/// Run `f` once per item across up to `threads` scoped worker threads.
+///
+/// Workers pull items dynamically from a shared queue, so uneven items
+/// (long vs short attention contexts, ragged GEMM panels) keep every core
+/// busy. With `threads <= 1` or a single item the loop runs inline on the
+/// caller's thread — same `f`, same order-independent semantics, zero
+/// spawn cost. `f` must be safe to call concurrently on *different* items;
+/// each item is visited exactly once.
+pub fn run_mut<T, F>(items: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut T) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    let nt = threads.min(n).max(1);
+    if nt == 1 {
+        for item in items.iter_mut() {
+            f(item);
+        }
+        return;
+    }
+    // IterMut yields &mut T with the slice's lifetime, not the lock
+    // guard's, so a worker holds the lock only long enough to grab its
+    // next item.
+    let queue = Mutex::new(items.iter_mut());
+    let fref = &f;
+    let qref = &queue;
+    std::thread::scope(|scope| {
+        for _ in 0..nt {
+            scope.spawn(move || loop {
+                let next = qref.lock().unwrap().next();
+                match next {
+                    Some(item) => fref(item),
+                    None => break,
+                }
+            });
+        }
+    });
+}
+
+/// Partition the rows of a row-major `[m, n]` buffer across the pool: each
+/// closure call gets a row range and the matching `&mut` chunk of `out`
+/// (addressed relative to the range start). Row partitioning leaves each
+/// row's accumulation order untouched, which is what lets the GEMM callers
+/// keep their bit-identity guarantees while threading.
+pub fn par_rows<F>(out: &mut [f32], m: usize, threads: usize, f: F)
+where
+    F: Fn(Range<usize>, &mut [f32]) + Sync,
+{
+    assert!(m > 0, "par_rows over zero rows");
+    let n = out.len() / m;
+    let nt = threads.min(m).max(1);
+    let rows_per = m.div_ceil(nt);
+    let mut items: Vec<(Range<usize>, &mut [f32])> = Vec::with_capacity(nt);
+    let mut rest = out;
+    let mut start = 0usize;
+    while start < m {
+        let end = (start + rows_per).min(m);
+        let (chunk, tail) = rest.split_at_mut((end - start) * n);
+        rest = tail;
+        items.push((start..end, chunk));
+        start = end;
+    }
+    run_mut(&mut items, nt, |item| f(item.0.clone(), &mut *item.1));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn run_mut_visits_every_item_once() {
+        let mut items: Vec<usize> = vec![0; 37];
+        let calls = AtomicUsize::new(0);
+        run_mut(&mut items, 4, |x| {
+            *x += 1;
+            calls.fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(items.iter().all(|&x| x == 1));
+        assert_eq!(calls.load(Ordering::Relaxed), 37);
+    }
+
+    #[test]
+    fn run_mut_single_thread_and_empty() {
+        let mut items: Vec<usize> = vec![5; 3];
+        run_mut(&mut items, 1, |x| *x *= 2);
+        assert_eq!(items, vec![10, 10, 10]);
+        let mut none: Vec<usize> = Vec::new();
+        run_mut(&mut none, 8, |_| panic!("no items to visit"));
+    }
+
+    #[test]
+    fn par_rows_covers_all_rows_disjointly() {
+        let (m, n) = (13usize, 7usize);
+        let mut out = vec![0.0f32; m * n];
+        par_rows(&mut out, m, 4, |rows, chunk| {
+            let row0 = rows.start;
+            for i in rows {
+                for j in 0..n {
+                    chunk[(i - row0) * n + j] = (i * n + j) as f32;
+                }
+            }
+        });
+        for (idx, &v) in out.iter().enumerate() {
+            assert_eq!(v, idx as f32);
+        }
+    }
+
+    #[test]
+    fn threads_env_floor() {
+        assert!(available_threads() >= 1);
+    }
+}

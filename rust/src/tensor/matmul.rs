@@ -2,10 +2,12 @@
 //!
 //! `matmul(a, b)` computes `a @ b` for 2-D tensors with an i-k-j loop order
 //! (unit-stride inner loop over B's rows), 4-wide k unrolling and cache
-//! blocking. Multi-threaded via std::thread row partitioning for large
-//! problems (no rayon in this environment).
+//! blocking. Multi-threaded for large problems via the shared scoped-thread
+//! worker pool in [`crate::runtime::pool`] (no rayon in this environment).
 
 use super::Tensor;
+pub(crate) use crate::runtime::pool::available_threads;
+use crate::runtime::pool::par_rows;
 
 /// Threshold (in MACs) above which we spawn threads.
 pub(crate) const PAR_THRESHOLD: usize = 1 << 21;
@@ -46,7 +48,7 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// C = A @ B^T like [`matmul_bt`], but every output row accumulates in
 /// exactly the order the m == 1 path uses (the 1×4 panel kernel of
-/// [`gemm_bt_rows`]), for *any* m. The batched decode engine uses this so a
+/// `gemm_bt_rows`), for *any* m. The batched decode engine uses this so a
 /// batch-of-N decode step is bit-identical, row for row, to N sequential
 /// single-row steps — the broadcast kernel `matmul_bt` switches to at
 /// m ≥ 4 sums in a different order and would break that guarantee.
@@ -65,42 +67,6 @@ pub fn matmul_bt_rowwise(a: &Tensor, b: &Tensor) -> Tensor {
         gemm_bt_rows(&a.data, &b.data, &mut out, 0..m, k, n);
     }
     Tensor::new(&[m, n], out)
-}
-
-pub(crate) fn available_threads() -> usize {
-    std::env::var("BBQ_THREADS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or_else(|| {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-        })
-        .max(1)
-}
-
-/// Partition output rows across threads; each closure call gets a row range
-/// and the matching &mut chunk of the output buffer.
-fn par_rows<F>(out: &mut [f32], m: usize, threads: usize, f: F)
-where
-    F: Fn(std::ops::Range<usize>, &mut [f32]) + Sync,
-{
-    let n = out.len() / m;
-    let nt = threads.min(m);
-    let rows_per = (m + nt - 1) / nt;
-    std::thread::scope(|scope| {
-        let mut rest = out;
-        let mut start = 0usize;
-        let fref = &f;
-        while start < m {
-            let end = (start + rows_per).min(m);
-            let (chunk, tail) = rest.split_at_mut((end - start) * n);
-            rest = tail;
-            let range = start..end;
-            scope.spawn(move || fref(range, chunk));
-            start = end;
-        }
-    });
 }
 
 /// Row-major inner GEMM over a row range. `out` addresses rows relative to

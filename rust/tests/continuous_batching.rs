@@ -1,7 +1,9 @@
 //! End-to-end tests for the continuous-batching decode engine: slot
-//! refill, request-id mapping under interleaved completion, and
-//! batched-vs-sequential greedy parity — exact, bit-for-bit — across every
-//! preset quantisation format.
+//! refill, request-id mapping under interleaved completion,
+//! batched-vs-sequential greedy parity, and chunked-prefill-vs-
+//! token-at-a-time logits parity — exact, bit-for-bit — across every
+//! preset quantisation format, plus slot lifecycle under chunked prefill
+//! (reset mid-chunk, short prompts, mixed prefill/decode batches).
 
 use bbq::coordinator::{run_batched, serve_one, Request, ServerConfig, ENGINE_SEED};
 use bbq::model::config::ModelConfig;
@@ -53,7 +55,10 @@ fn batch8_greedy_is_bit_identical_to_sequential_all_formats() {
                 temperature: 0.0,
             })
             .collect();
-        let cfg = ServerConfig { max_batch: 8 };
+        let cfg = ServerConfig {
+            max_batch: 8,
+            prefill_chunk: 8,
+        };
         let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
         assert_eq!(resps.len(), 8, "{name}");
         // all eight decode together: occupancy is the full slot pool
@@ -95,7 +100,10 @@ fn batched_session_logits_bit_identical_all_formats() {
 fn slots_refill_as_sequences_finish() {
     let m = nano(presets::bfp_w(6));
     let requests = staggered_reqs(20);
-    let cfg = ServerConfig { max_batch: 4 };
+    let cfg = ServerConfig {
+        max_batch: 4,
+        prefill_chunk: 4,
+    };
     let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
     assert_eq!(resps.len(), 20);
     assert_eq!(metrics.completed, 20);
@@ -104,11 +112,16 @@ fn slots_refill_as_sequences_finish() {
     // yet never more than the pool size
     assert!(metrics.batch_occupancy() > 1.5, "{}", metrics.batch_occupancy());
     assert!(metrics.batch_occupancy() <= 4.0 + 1e-9);
-    // token-step accounting: prompt + generated - 1 per request (the final
-    // sampled token is never fed back)
+    // row accounting: prompt + generated - 1 rows per request (the final
+    // sampled token is never fed back), split between prefill and decode
     let expected: usize = resps.iter().map(|r| r.prompt_len + r.tokens.len() - 1).sum();
-    assert_eq!(metrics.slot_steps, expected);
+    assert_eq!(metrics.prefill_rows + metrics.decode_rows, expected);
+    let prompts: usize = resps.iter().map(|r| r.prompt_len).sum();
+    assert_eq!(metrics.prefill_rows, prompts);
     assert!(metrics.engine_steps < metrics.slot_steps);
+    // chunk 4 over 2-4-token prompts: prompts complete in one chunk, so
+    // prefill amortisation beats token-at-a-time's one row per slot-step
+    assert!(metrics.prefill_amortisation() > 1.0);
 }
 
 #[test]
@@ -117,7 +130,10 @@ fn responses_map_to_request_ids_under_interleaving() {
     // still carry its own request's tokens
     let m = nano(presets::bfp_w(6));
     let requests = staggered_reqs(13);
-    let cfg = ServerConfig { max_batch: 3 };
+    let cfg = ServerConfig {
+        max_batch: 3,
+        prefill_chunk: 2,
+    };
     let (resps, _) = run_batched(&m, requests.clone(), &cfg);
     assert_eq!(resps.len(), 13);
     for (resp, req) in resps.iter().zip(&requests) {
@@ -136,7 +152,10 @@ fn staggered_parity_across_formats() {
     for (name, fmt) in all_formats() {
         let m = nano(fmt);
         let requests = staggered_reqs(7);
-        let cfg = ServerConfig { max_batch: 3 };
+        let cfg = ServerConfig {
+            max_batch: 3,
+            prefill_chunk: 3,
+        };
         let (resps, _) = run_batched(&m, requests.clone(), &cfg);
         for (resp, req) in resps.iter().zip(&requests) {
             let want = serve_one(&m, req, ENGINE_SEED);
@@ -151,8 +170,165 @@ fn rope_model_parity_through_engine() {
     let cfg = ModelConfig::preset("rope-tiny");
     let m = Model::new(Params::init(&cfg, 42), QuantPlan::uniform(presets::bfp_w(6)));
     let requests = staggered_reqs(6);
-    let server_cfg = ServerConfig { max_batch: 3 };
+    let server_cfg = ServerConfig {
+        max_batch: 3,
+        prefill_chunk: 4,
+    };
     let (resps, _) = run_batched(&m, requests.clone(), &server_cfg);
+    for (resp, req) in resps.iter().zip(&requests) {
+        let want = serve_one(&m, req, ENGINE_SEED);
+        assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
+    }
+}
+
+#[test]
+fn chunked_prefill_logits_bit_identical_all_formats() {
+    // the PR's acceptance bar: feeding a prompt as chunked [m_i, d]
+    // row-blocks produces, per row, logits bit-identical to the
+    // token-at-a-time sequential session — for every preset format
+    for (name, fmt) in all_formats() {
+        let m = nano(fmt);
+        let prompt = [3usize, 9, 100, 42, 7, 250, 1, 30, 8];
+        let mut chunked = BatchedDecodeSession::new(&m, 1);
+        let mut seq = DecodeSession::new(&m);
+        let mut fed = 0usize;
+        for chunk in [4usize, 3, 2] {
+            let toks = &prompt[fed..fed + chunk];
+            let got = chunked.step_chunked(&[(0, toks)], None);
+            for (j, row) in got.iter().enumerate() {
+                let want = seq.step(toks[j]);
+                assert_eq!(row, &want, "{name}: row {j} of chunk at {fed}");
+            }
+            fed += chunk;
+        }
+    }
+}
+
+#[test]
+fn chunked_engine_greedy_parity_all_formats() {
+    // run_batched with chunked prefill must still match serve_one token
+    // for token, for every format — staggered so prompts straddle chunks
+    for (name, fmt) in all_formats() {
+        let m = nano(fmt);
+        let requests: Vec<Request> = (0..6)
+            .map(|i| Request {
+                id: i as u64,
+                prompt: vec![3 + i % 5, 10, 42, 7, 1, 30, 9][..3 + i % 5].to_vec(),
+                max_new_tokens: 2 + i % 3,
+                temperature: 0.0,
+            })
+            .collect();
+        let cfg = ServerConfig {
+            max_batch: 3,
+            prefill_chunk: 2,
+        };
+        let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
+        assert!(metrics.prefill_amortisation() > 1.0, "{name}");
+        for (resp, req) in resps.iter().zip(&requests) {
+            let want = serve_one(&m, req, ENGINE_SEED);
+            assert_eq!(resp.tokens, want.tokens, "{name} request {}", req.id);
+        }
+    }
+}
+
+#[test]
+fn prompt_shorter_than_chunk_completes_in_one_step() {
+    let m = nano(presets::bfp_w(6));
+    let req = Request {
+        id: 0,
+        prompt: vec![3, 10, 42],
+        max_new_tokens: 4,
+        temperature: 0.0,
+    };
+    let cfg = ServerConfig {
+        max_batch: 1,
+        prefill_chunk: 8,
+    };
+    let (resps, metrics) = run_batched(&m, vec![req.clone()], &cfg);
+    let want = serve_one(&m, &req, ENGINE_SEED);
+    assert_eq!(resps[0].tokens, want.tokens);
+    // the whole 3-token prompt is absorbed by a single prefill step
+    assert_eq!(metrics.prefill_steps, 1);
+    assert_eq!(metrics.prefill_rows, 3);
+    // 1 prefill step + 3 decode steps (final sampled token never fed back)
+    assert_eq!(metrics.engine_steps, 4);
+}
+
+#[test]
+fn prefill_engine_step_count_matches_chunking() {
+    // weights are dequantised once per engine step, so the step count IS
+    // the number of dequant passes: a 10-row prompt at chunk 4 must take
+    // ceil(10/4) = 3 prefill steps, not 10
+    let m = nano(presets::bfp_w(6));
+    let req = Request {
+        id: 0,
+        prompt: vec![3; 10],
+        max_new_tokens: 1,
+        temperature: 0.0,
+    };
+    for (chunk, want_steps) in [(1usize, 10usize), (4, 3), (8, 2), (16, 1)] {
+        let cfg = ServerConfig {
+            max_batch: 1,
+            prefill_chunk: chunk,
+        };
+        let (_, metrics) = run_batched(&m, vec![req.clone()], &cfg);
+        assert_eq!(metrics.prefill_steps, want_steps, "chunk {chunk}");
+        assert_eq!(metrics.prefill_rows, 10, "chunk {chunk}");
+    }
+}
+
+#[test]
+fn reset_slot_mid_chunk_recycles_cleanly() {
+    // abandon a sequence halfway through its chunked prefill; the slot
+    // must serve a fresh sequence with no trace of the dropped rows
+    let m = nano(presets::bfp_w(6));
+    let mut batched = BatchedDecodeSession::new(&m, 2);
+    // slot 0: a real sequence we keep; slot 1: prefill 4 rows, then abort
+    batched.step_chunked(&[(0, &[3, 9]), (1, &[7, 7, 8, 1])], None);
+    assert_eq!(batched.pos(1), 4);
+    batched.reset_slot(1);
+    assert_eq!(batched.pos(1), 0);
+    // slot 0 continues where it was; slot 1 restarts as a fresh sequence
+    let mut kept = DecodeSession::new(&m);
+    kept.step(3);
+    kept.step(9);
+    let mut fresh = DecodeSession::new(&m);
+    let got = batched.step_chunked(&[(0, &[100]), (1, &[42, 5, 11])], None);
+    assert_eq!(got[0], kept.step(100));
+    assert_eq!(got[1], fresh.step(42));
+    assert_eq!(got[2], fresh.step(5));
+    assert_eq!(got[3], fresh.step(11));
+}
+
+#[test]
+fn mixed_prefill_decode_batches_match_reference() {
+    // mixed traffic: one long-prompt request arrives while another is
+    // already decoding, so single steps carry decode rows next to prefill
+    // chunks; both sequences must stay bit-exact vs serve_one
+    let m = nano(presets::bfp_w(6));
+    let requests = vec![
+        Request {
+            id: 0,
+            prompt: vec![3, 10],
+            max_new_tokens: 8,
+            temperature: 0.0,
+        },
+        Request {
+            id: 1,
+            prompt: vec![7; 12],
+            max_new_tokens: 2,
+            temperature: 0.0,
+        },
+    ];
+    let cfg = ServerConfig {
+        max_batch: 2,
+        prefill_chunk: 4,
+    };
+    let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
+    // request 0 finishes prefill in one step and decodes while request 1
+    // is still absorbing its 12-token prompt in 4-row chunks
+    assert!(metrics.decode_rows > 0);
+    assert!(metrics.prefill_amortisation() > 1.0);
     for (resp, req) in resps.iter().zip(&requests) {
         let want = serve_one(&m, req, ENGINE_SEED);
         assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
