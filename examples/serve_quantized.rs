@@ -4,16 +4,19 @@
 //! packed weight once for the whole batch), and — via the packed-weight
 //! serving path — *measured* resident weight memory (the deployment story
 //! the paper's ASIC argument targets: block formats shrink the bytes a
-//! decoder must keep hot by ~5×).
+//! decoder must keep hot by ~5×). Ends with the live `Engine` API:
+//! submission through an `EngineHandle`, token streaming over
+//! `TokenEvent`s, and mid-decode cancellation.
 //!
 //!     cargo run --release --example serve_quantized
 
 use bbq::coordinator::experiment::{default_steps, get_or_train};
-use bbq::coordinator::{run_batched, Request, ServerConfig};
+use bbq::coordinator::{run_batched, Engine, GenerationParams, Request, ServerConfig, TokenEvent};
 use bbq::data::vocab::Vocab;
 use bbq::model::plan::QuantPlan;
 use bbq::model::Model;
 use bbq::quant::config::presets;
+use std::sync::Arc;
 
 fn main() {
     let vocab = Vocab::build();
@@ -25,12 +28,7 @@ fn main() {
         "bob was in the",
     ];
     let reqs: Vec<Request> = (0..24)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: vocab.encode(prompts[i % prompts.len()]),
-            max_new_tokens: 12,
-            temperature: 0.0,
-        })
+        .map(|i| Request::greedy(i as u64, vocab.encode(prompts[i % prompts.len()]), 12))
         .collect();
     let cfg = ServerConfig::default();
     for (name, plan) in [
@@ -55,4 +53,45 @@ fn main() {
             }
         }
     }
+
+    // --- the live Engine API -------------------------------------------
+    // A long-lived scheduler accepting work after start: one request
+    // streams its tokens as the engine steps, another is cancelled
+    // mid-decode (its slot is recycled on the next step).
+    let model = Arc::new(Model::new(params, QuantPlan::uniform(presets::bfp_w(6))));
+    let engine = Engine::start(model, ServerConfig::default());
+    let sampled = Request {
+        id: 100,
+        prompt: vocab.encode("the cat chased the"),
+        params: GenerationParams {
+            max_new_tokens: 10,
+            temperature: 0.8,
+            top_k: 16,
+            seed: Some(7),
+            ..GenerationParams::default()
+        },
+    };
+    let streaming = engine.submit(sampled).expect("engine open");
+    let bye = Request::greedy(101, vocab.encode("bob was in the"), 64);
+    let doomed = engine.submit(bye).expect("engine open");
+    doomed.cancel();
+    let mut streamed = Vec::new();
+    while let Some(ev) = streaming.recv() {
+        match ev {
+            TokenEvent::Token(t) => streamed.push(t),
+            TokenEvent::Finished { reason, .. } => {
+                println!("[engine] streamed → {:?} ({reason:?})", vocab.decode(&streamed));
+                break;
+            }
+            _ => {}
+        }
+    }
+    let cancelled = doomed.wait();
+    println!(
+        "[engine] cancelled request {} after {} tokens ({:?})",
+        cancelled.id,
+        cancelled.tokens.len(),
+        cancelled.finish
+    );
+    println!("[engine] {}", engine.shutdown().summary());
 }

@@ -9,14 +9,16 @@
 //!     cargo bench -- --quick --check   # CI gate: perf regressions exit 1
 //!
 //! Either way the decode-engine section writes `BENCH_decode.json`
-//! (single-stream vs batch-8 tokens/sec under BFP6 plus resident weight
-//! bytes) and the prefill section writes `BENCH_prefill.json` (chunked vs
+//! (single-stream vs batch-8 tokens/sec under BFP6, the live-Engine-API
+//! path vs the run_batched wrapper, plus resident weight bytes) and the
+//! prefill section writes `BENCH_prefill.json` (chunked vs
 //! token-at-a-time prefill tokens/sec) next to the manifest — CI uploads
 //! both as bench artifacts. Under `--check` the acceptance bars (batch-8
-//! ≥ 2× single-stream decode; chunk-8 ≥ 2× chunk-1 prefill) are hard
-//! failures instead of scrolled-past warnings.
+//! ≥ 2× single-stream decode; chunk-8 ≥ 2× chunk-1 prefill; EngineHandle
+//! submission within 10% of run_batched) are hard failures instead of
+//! scrolled-past warnings.
 
-use bbq::coordinator::{run_batched, Metrics, Request, ServerConfig};
+use bbq::coordinator::{run_batched, Engine, Metrics, Request, ServerConfig};
 use bbq::model::config::ModelConfig;
 use bbq::model::params::Params;
 use bbq::model::plan::QuantPlan;
@@ -157,12 +159,7 @@ fn main() {
     let paramsm = Params::init(&cfgm, 3);
     let model = Model::new(paramsm, QuantPlan::uniform(presets::bfp_w(6)));
     let reqs: Vec<Request> = (0..8)
-        .map(|i| Request {
-            id: i,
-            prompt: vec![3, 10, 42],
-            max_new_tokens: 8,
-            temperature: 0.0,
-        })
+        .map(|i| Request::greedy(i, vec![3, 10, 42], 8))
         .collect();
     let r = Bench::new("serve/batch8")
         .items(64.0)
@@ -196,18 +193,13 @@ fn bench_decode_engine(quick: bool, gates: &mut Vec<String>) {
     let fmt = presets::bfp_w(6);
     let cfg = ModelConfig::preset("tiny");
     let params = Params::init(&cfg, 3);
-    let model = Model::new(params, QuantPlan::uniform(fmt));
+    let model = std::sync::Arc::new(Model::new(params, QuantPlan::uniform(fmt)));
     let wm = model.weight_memory();
     let new_toks = if quick { 8 } else { 16 };
     let reps = if quick { 2 } else { 3 };
     let mk_reqs = |n: usize| -> Vec<Request> {
         (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: vec![3 + i % 5, 10, 42],
-                max_new_tokens: new_toks,
-                temperature: 0.0,
-            })
+            .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], new_toks))
             .collect()
     };
     // best-of-N closed-loop runs; tokens/sec from the engine's own metrics
@@ -251,6 +243,41 @@ fn bench_decode_engine(quick: bool, gates: &mut Vec<String>) {
             "decode: batch-8 speedup {speedup:.2}x < 2.0x over single-stream"
         ));
     }
+    // engine-path: the same 8 requests submitted live through an
+    // EngineHandle (submission thread + streaming events + metrics
+    // snapshots on top of the identical scheduler core). Must stay within
+    // 10% of the run_batched wrapper — the API redesign is not allowed to
+    // tax the hot path.
+    let mut engine_tps = 0.0f64;
+    for _ in 0..reps {
+        let engine = Engine::start(
+            model.clone(),
+            ServerConfig {
+                max_batch: 8,
+                ..ServerConfig::default()
+            },
+        );
+        let handles: Vec<_> = mk_reqs(8)
+            .into_iter()
+            .map(|r| engine.submit(r).expect("engine open"))
+            .collect();
+        for h in handles {
+            h.wait();
+        }
+        let m = engine.shutdown();
+        engine_tps = engine_tps.max(m.throughput_tps());
+    }
+    let engine_ratio = engine_tps / tps8.max(1e-12);
+    println!(
+        "  engine-path: {engine_tps:.1} tok/s via EngineHandle \
+         ({engine_ratio:.2}x of run_batched)"
+    );
+    if engine_ratio < 0.9 {
+        println!("  WARNING: engine-path throughput >10% below run_batched");
+        gates.push(format!(
+            "engine: EngineHandle path {engine_ratio:.2}x < 0.90x of run_batched"
+        ));
+    }
     let j = Json::obj(vec![
         ("bench", Json::Str("decode_engine".into())),
         ("model", Json::Str(cfg.name.clone())),
@@ -262,6 +289,9 @@ fn bench_decode_engine(quick: bool, gates: &mut Vec<String>) {
         // occupancy IS the decode-amortisation factor (one fused dequant
         // pass per engine step serves `occupancy` token-steps)
         ("batch8_occupancy", Json::Num(m8.batch_occupancy())),
+        // live Engine API vs the run_batched wrapper (same scheduler core)
+        ("engine_api_tps", Json::Num(engine_tps)),
+        ("engine_vs_run_batched", Json::Num(engine_ratio)),
         ("resident_weight_bytes", Json::Num(wm.resident_bytes as f64)),
         ("dense_f32_weight_bytes", Json::Num(wm.dense_f32_bytes as f64)),
         ("quick", Json::Bool(quick)),
@@ -287,11 +317,10 @@ fn bench_prefill_engine(quick: bool, gates: &mut Vec<String>) {
     let reps = if quick { 2 } else { 3 };
     let mk_reqs = || -> Vec<Request> {
         (0..n_req)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: (0..prompt_len).map(|t| (3 + i + t * 7) % 512).collect(),
-                max_new_tokens: 1, // prefill-dominated workload
-                temperature: 0.0,
+            .map(|i| {
+                // max_new_tokens 1: a prefill-dominated workload
+                let prompt = (0..prompt_len).map(|t| (3 + i + t * 7) % 512).collect();
+                Request::greedy(i as u64, prompt, 1)
             })
             .collect()
     };
@@ -301,6 +330,7 @@ fn bench_prefill_engine(quick: bool, gates: &mut Vec<String>) {
         let server_cfg = ServerConfig {
             max_batch: n_req,
             prefill_chunk: chunk,
+            ..ServerConfig::default()
         };
         let mut best: Option<(f64, Metrics)> = None;
         for _ in 0..reps {

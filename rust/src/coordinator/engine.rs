@@ -1,0 +1,772 @@
+//! Long-lived serving engine: live submission, per-request token
+//! streaming, cancellation, and graceful shutdown over the
+//! continuous-batching scheduler.
+//!
+//! [`Engine::start`] spawns a scheduler thread that owns a
+//! [`BatchedDecodeSession`] slot pool and returns a cloneable
+//! [`EngineHandle`]. Requests join and leave the pool mid-flight — the
+//! serving shape that makes the paper's amortised block-dequant economics
+//! pay off: every fused engine step dequantises each packed weight exactly
+//! once for *all* rows it carries, so throughput grows with occupancy, and
+//! occupancy only stays high if work can be admitted the moment a slot
+//! frees.
+//!
+//! The lifecycle of one request:
+//!
+//! 1. [`EngineHandle::submit`] places it on the bounded admission queue
+//!    (blocking when full; [`EngineHandle::try_submit`] returns
+//!    [`SubmitError::QueueFull`] instead) and returns a [`RequestHandle`].
+//! 2. The handle streams [`TokenEvent`]s: `Queued` at submission,
+//!    `Started` when a slot admits the request, one `Token` per sampled
+//!    token, and a terminal `Finished` carrying the [`FinishReason`] and
+//!    the full [`Response`].
+//! 3. [`RequestHandle::cancel`] (or dropping the handle mid-stream) frees
+//!    the slot on the next engine step; the `Finished` event then carries
+//!    [`FinishReason::Cancelled`] and the tokens generated so far.
+//! 4. [`Engine::shutdown`] stops admissions, drains queued and in-flight
+//!    work to completion, and returns the final [`Metrics`] snapshot.
+//!
+//! Scheduling never changes results: greedy *and* seeded sampling are
+//! bit-identical to [`super::server::serve_one`] because each request owns
+//! a [`Pcg32`] advanced exactly once per sampled token
+//! (tests/engine_lifecycle.rs asserts this for every preset format).
+//!
+//! The scheduler body itself is the lifetime-generic `EngineCore`, which
+//! [`super::server::run_batched`] also drives on a scoped thread borrowing
+//! `&Model` — one scheduler, two front doors.
+
+use super::metrics::Metrics;
+use super::server::{FinishReason, Request, Response, ServerConfig};
+use crate::model::kv_cache::{sample_top_k, BatchedDecodeSession};
+use crate::model::Model;
+use crate::util::rng::Pcg32;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Per-request lifecycle events streamed over a [`RequestHandle`].
+#[derive(Clone, Debug)]
+pub enum TokenEvent {
+    /// The request was accepted into the bounded admission queue.
+    Queued,
+    /// The request was admitted into an engine slot; prefill begins.
+    Started,
+    /// One sampled token, emitted the engine step it was produced.
+    Token(usize),
+    /// Terminal event: why generation stopped, plus the full response.
+    /// Nothing is emitted for a request after this.
+    Finished {
+        /// Why the sequence stopped.
+        reason: FinishReason,
+        /// The completed (possibly partial, if cancelled) response.
+        response: Response,
+    },
+}
+
+/// Why a submission was rejected; the request is handed back unmodified.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// The bounded admission queue is at `queue_depth` — backpressure.
+    /// Only returned by [`EngineHandle::try_submit`] (blocking `submit`
+    /// waits for space instead).
+    QueueFull(Request),
+    /// The engine has shut down (or its scheduler exited).
+    Closed(Request),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull(r) => write!(f, "admission queue full (request {})", r.id),
+            SubmitError::Closed(r) => write!(f, "engine closed (request {})", r.id),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A submitted request travelling to the scheduler.
+pub(crate) struct Submission {
+    req: Request,
+    submitted: Instant,
+    events: Sender<TokenEvent>,
+    cancelled: Arc<AtomicBool>,
+}
+
+/// Scheduler mailbox messages.
+pub(crate) enum Msg {
+    Submit(Box<Submission>),
+    /// Wake an idle scheduler so it notices a freshly set cancel flag.
+    Wake,
+    /// Stop admitting, drain queued + in-flight work, then exit.
+    Shutdown,
+}
+
+/// Admission-queue accounting shared between submitters and the scheduler.
+struct QueueState {
+    len: usize,
+    peak: usize,
+    closed: bool,
+}
+
+/// State shared by the scheduler thread and every handle.
+pub(crate) struct Shared {
+    queue: Mutex<QueueState>,
+    space: Condvar,
+    queue_cap: usize,
+    /// Latest metrics snapshot, refreshed by the scheduler every step and
+    /// finally at exit.
+    pub(crate) metrics: Mutex<Metrics>,
+}
+
+/// Build the handle/mailbox/shared-state triple for one scheduler. Used by
+/// [`Engine::start`] (detached thread) and `run_batched` (scoped thread).
+pub(crate) fn channels(cfg: &ServerConfig) -> (EngineHandle, Receiver<Msg>, Arc<Shared>) {
+    let (tx, rx) = channel();
+    let state = QueueState {
+        len: 0,
+        peak: 0,
+        closed: false,
+    };
+    let shared = Arc::new(Shared {
+        queue: Mutex::new(state),
+        space: Condvar::new(),
+        queue_cap: cfg.queue_depth,
+        metrics: Mutex::new(Metrics::new()),
+    });
+    let handle = EngineHandle {
+        tx,
+        shared: shared.clone(),
+    };
+    (handle, rx, shared)
+}
+
+/// Cloneable submission/observation handle to a running engine. All clones
+/// feed the same scheduler; the engine keeps serving until every clone
+/// (and every outstanding [`RequestHandle`]) is dropped or
+/// [`Engine::shutdown`] is called.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Msg>,
+    shared: Arc<Shared>,
+}
+
+impl EngineHandle {
+    /// Submit a request, blocking while the admission queue is full
+    /// (explicit backpressure). Returns the streaming [`RequestHandle`],
+    /// or [`SubmitError::Closed`] once the engine is shutting down.
+    pub fn submit(&self, req: Request) -> Result<RequestHandle, SubmitError> {
+        self.enqueue(req, true)
+    }
+
+    /// Non-blocking [`Self::submit`]: a full queue returns
+    /// [`SubmitError::QueueFull`] with the request handed back, letting
+    /// callers shed or retry on their own policy.
+    pub fn try_submit(&self, req: Request) -> Result<RequestHandle, SubmitError> {
+        self.enqueue(req, false)
+    }
+
+    fn enqueue(&self, req: Request, block: bool) -> Result<RequestHandle, SubmitError> {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            loop {
+                if q.closed {
+                    return Err(SubmitError::Closed(req));
+                }
+                if q.len < self.shared.queue_cap {
+                    break;
+                }
+                if !block {
+                    return Err(SubmitError::QueueFull(req));
+                }
+                q = self.shared.space.wait(q).unwrap();
+            }
+            q.len += 1;
+            q.peak = q.peak.max(q.len);
+        }
+        let (etx, erx) = channel();
+        let cancelled = Arc::new(AtomicBool::new(false));
+        let _ = etx.send(TokenEvent::Queued);
+        let id = req.id;
+        let sub = Submission {
+            req,
+            submitted: Instant::now(),
+            events: etx,
+            cancelled: cancelled.clone(),
+        };
+        match self.tx.send(Msg::Submit(Box::new(sub))) {
+            Ok(()) => Ok(RequestHandle {
+                id,
+                events: erx,
+                cancelled,
+                wake: self.tx.clone(),
+            }),
+            Err(std::sync::mpsc::SendError(msg)) => {
+                // the scheduler exited between the queue check and the
+                // send: undo the count and report closed
+                {
+                    let mut q = self.shared.queue.lock().unwrap();
+                    q.len -= 1;
+                    q.closed = true;
+                }
+                self.shared.space.notify_all();
+                let req = match msg {
+                    Msg::Submit(sub) => sub.req,
+                    _ => unreachable!("enqueue only sends Submit"),
+                };
+                Err(SubmitError::Closed(req))
+            }
+        }
+    }
+
+    /// Clone of the scheduler's latest [`Metrics`] snapshot. Counters and
+    /// gauges (completed, steps, occupancy, queue depth/peak, KV bytes…)
+    /// are refreshed every engine step; the per-request latency and
+    /// queue-wait *distributions* are published once at shutdown, so
+    /// mid-flight snapshots report them empty.
+    pub fn metrics(&self) -> Metrics {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    /// Requests currently waiting in the admission queue (live gauge, not
+    /// a snapshot).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.lock().unwrap().len
+    }
+
+    /// True once the engine stops accepting submissions (shutdown
+    /// requested or scheduler exited).
+    pub fn is_closed(&self) -> bool {
+        self.shared.queue.lock().unwrap().closed
+    }
+}
+
+/// Streaming handle to one submitted request. Receive [`TokenEvent`]s as
+/// the engine produces them, [`Self::cancel`] to stop early, or
+/// [`Self::wait`] to block for the final [`Response`]. Dropping the handle
+/// without cancelling also releases the request's slot: once the engine
+/// notices nobody is listening it finishes the request as
+/// [`FinishReason::Cancelled`].
+pub struct RequestHandle {
+    id: u64,
+    events: Receiver<TokenEvent>,
+    cancelled: Arc<AtomicBool>,
+    wake: Sender<Msg>,
+}
+
+impl RequestHandle {
+    /// The submitted request's id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Ask the engine to stop this request. The slot is freed on the next
+    /// engine step; the terminal event then reports
+    /// [`FinishReason::Cancelled`] with the tokens generated so far.
+    /// Cancelling a request that already finished is a no-op.
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+        let _ = self.wake.send(Msg::Wake);
+    }
+
+    /// Block for the next event; `None` once the stream is exhausted
+    /// (after `Finished`, or if the engine died).
+    pub fn recv(&self) -> Option<TokenEvent> {
+        self.events.recv().ok()
+    }
+
+    /// Non-blocking [`Self::recv`].
+    pub fn try_recv(&self) -> Option<TokenEvent> {
+        self.events.try_recv().ok()
+    }
+
+    /// Drain events until the terminal `Finished` and return its
+    /// [`Response`]. Panics if the engine exited without finishing the
+    /// request (it never does on the drain paths — only if the scheduler
+    /// thread itself panicked).
+    pub fn wait(self) -> Response {
+        loop {
+            match self.events.recv() {
+                Ok(TokenEvent::Finished { response, .. }) => return response,
+                Ok(_) => {}
+                Err(_) => panic!("engine dropped request {} without finishing it", self.id),
+            }
+        }
+    }
+}
+
+/// A running engine: the scheduler thread plus its root handle.
+///
+/// ```text
+/// let engine = Engine::start(model, ServerConfig::default());
+/// let h = engine.submit(Request::greedy(0, prompt, 16))?;
+/// while let Some(ev) = h.recv() { /* Queued/Started/Token/Finished */ }
+/// let metrics = engine.shutdown();
+/// ```
+pub struct Engine {
+    handle: EngineHandle,
+    join: JoinHandle<()>,
+}
+
+impl Engine {
+    /// Validate `cfg`, spawn the scheduler thread over `model`'s slot
+    /// pool, and return the running engine. The model is shared by `Arc`
+    /// so the engine owns its lifetime independent of the caller.
+    pub fn start(model: Arc<Model>, cfg: ServerConfig) -> Engine {
+        cfg.validate();
+        let (handle, rx, shared) = channels(&cfg);
+        let join = std::thread::Builder::new()
+            .name("bbq-engine".into())
+            .spawn(move || EngineCore::new(&model, cfg, rx, shared).run())
+            .expect("spawn engine scheduler thread");
+        Engine { handle, join }
+    }
+
+    /// A new [`EngineHandle`] feeding this engine (clone freely; hand to
+    /// other threads).
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Submit on the root handle — see [`EngineHandle::submit`].
+    pub fn submit(&self, req: Request) -> Result<RequestHandle, SubmitError> {
+        self.handle.submit(req)
+    }
+
+    /// Latest metrics snapshot — see [`EngineHandle::metrics`].
+    pub fn metrics(&self) -> Metrics {
+        self.handle.metrics()
+    }
+
+    /// Graceful shutdown: reject new submissions, drain queued and
+    /// in-flight requests to completion (every outstanding
+    /// [`RequestHandle`] still receives its `Finished` event), join the
+    /// scheduler thread, and return the final metrics.
+    pub fn shutdown(self) -> Metrics {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        self.join.join().expect("engine scheduler thread panicked");
+        self.handle.metrics()
+    }
+}
+
+/// One in-flight sequence occupying an engine slot.
+struct Active {
+    req: Request,
+    /// submission time — latency includes time queued for a slot
+    start: Instant,
+    rng: Pcg32,
+    /// tokens already fed to the model
+    fed: usize,
+    out: Vec<usize>,
+    /// sampled token to feed on the next decode step (prompt rows are fed
+    /// directly from `req.prompt` as chunked row-blocks)
+    next_input: usize,
+    events: Sender<TokenEvent>,
+    cancelled: Arc<AtomicBool>,
+}
+
+impl Active {
+    fn response(&self, reason: FinishReason) -> Response {
+        Response {
+            id: self.req.id,
+            tokens: self.out.clone(),
+            latency: self.start.elapsed(),
+            prompt_len: self.req.prompt.len(),
+            finish: reason,
+        }
+    }
+}
+
+/// Emit the admission events for a sequence entering (or immediately
+/// leaving) a slot: `Started`, then one `Token` per token already sampled
+/// at admission (only the empty-prompt path samples there).
+fn announce(seq: &Active) {
+    let _ = seq.events.send(TokenEvent::Started);
+    for &t in &seq.out {
+        let _ = seq.events.send(TokenEvent::Token(t));
+    }
+}
+
+/// Admission result: most requests occupy a slot; degenerate ones (empty
+/// prompt and at most one token to sample) finish immediately.
+enum Admission {
+    Run(Box<Active>),
+    Done(Box<Active>, FinishReason),
+}
+
+fn admit_request(sub: Submission) -> Admission {
+    let Submission {
+        req,
+        submitted,
+        events,
+        cancelled,
+    } = sub;
+    let mut seq = Active {
+        rng: Pcg32::new(req.params.sampler_seed(req.id)),
+        start: submitted,
+        fed: 0,
+        out: Vec::new(),
+        next_input: 0,
+        events,
+        cancelled,
+        req,
+    };
+    if seq.req.prompt.is_empty() {
+        // mirror `serve_one`: with no prompt there are no logits yet, and
+        // greedy sampling from an empty logit vector yields token 0
+        if seq.req.params.max_new_tokens == 0 {
+            return Admission::Done(Box::new(seq), FinishReason::MaxTokens);
+        }
+        let p = seq.req.params.clone();
+        let next = sample_top_k(&[], p.temperature, p.top_k, &mut seq.rng);
+        seq.out.push(next);
+        seq.next_input = next;
+        if p.stop_tokens.contains(&next) {
+            return Admission::Done(Box::new(seq), FinishReason::StopToken);
+        }
+        if seq.out.len() >= p.max_new_tokens {
+            return Admission::Done(Box::new(seq), FinishReason::MaxTokens);
+        }
+    } else {
+        seq.next_input = seq.req.prompt[0];
+    }
+    Admission::Run(Box::new(seq))
+}
+
+/// The scheduler loop body, generic over the model borrow so it runs both
+/// detached over an `Arc<Model>` ([`Engine::start`]) and on a scoped
+/// thread over `&Model` ([`super::server::run_batched`]).
+pub(crate) struct EngineCore<'m> {
+    model: &'m Model,
+    cfg: ServerConfig,
+    session: BatchedDecodeSession<'m>,
+    slots: Vec<Option<Box<Active>>>,
+    queue: VecDeque<Box<Submission>>,
+    rx: Receiver<Msg>,
+    shared: Arc<Shared>,
+    metrics: Metrics,
+    draining: bool,
+    disconnected: bool,
+}
+
+impl<'m> EngineCore<'m> {
+    pub(crate) fn new(
+        model: &'m Model,
+        cfg: ServerConfig,
+        rx: Receiver<Msg>,
+        shared: Arc<Shared>,
+    ) -> EngineCore<'m> {
+        cfg.validate();
+        let n = cfg.max_batch;
+        let mut metrics = Metrics::new();
+        // the prepared weight cache is immutable for the engine's whole
+        // lifetime — measure it once, not once per step
+        metrics.weight_memory = model.weight_memory();
+        EngineCore {
+            session: BatchedDecodeSession::new(model, n),
+            slots: (0..n).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            metrics,
+            draining: false,
+            disconnected: false,
+            model,
+            cfg,
+            rx,
+            shared,
+        }
+    }
+
+    /// Run the scheduler until shutdown (drained) or every handle is gone.
+    pub(crate) fn run(mut self) {
+        let t0 = Instant::now();
+        loop {
+            self.drain_msgs();
+            self.reap_cancelled();
+            self.admit();
+            let stepped = self.step();
+            self.publish(t0);
+            if stepped {
+                continue;
+            }
+            // nothing in flight: exit if drained, else sleep on the
+            // mailbox until new work (or a shutdown) arrives
+            if self.idle_exit() {
+                break;
+            }
+            if !self.queue.is_empty() {
+                continue; // idle_exit drained a submission — go admit it
+            }
+            match self.rx.recv() {
+                Ok(msg) => self.on_msg(msg),
+                Err(_) => self.disconnected = true,
+            }
+        }
+        self.close(t0);
+    }
+
+    /// With no active slots: true when the engine should exit — shutdown
+    /// was requested or every sender is gone, and no submission can still
+    /// be in the pipe. A submit that won the race against `closed` (its
+    /// queue-counter increment landed before the flag) keeps the engine
+    /// alive until its message arrives.
+    fn idle_exit(&mut self) -> bool {
+        if !self.draining && !self.disconnected {
+            return false;
+        }
+        self.drain_msgs();
+        if !self.queue.is_empty() {
+            return false;
+        }
+        self.disconnected || self.shared.queue.lock().unwrap().len == 0
+    }
+
+    fn on_msg(&mut self, msg: Msg) {
+        match msg {
+            Msg::Submit(sub) => self.queue.push_back(sub),
+            Msg::Wake => {}
+            Msg::Shutdown => {
+                self.draining = true;
+                // stop accepting new work immediately; wake blocked
+                // submitters so they observe `closed`
+                self.shared.queue.lock().unwrap().closed = true;
+                self.shared.space.notify_all();
+            }
+        }
+    }
+
+    fn drain_msgs(&mut self) {
+        loop {
+            match self.rx.try_recv() {
+                Ok(msg) => self.on_msg(msg),
+                Err(TryRecvError::Empty) => return,
+                Err(TryRecvError::Disconnected) => {
+                    self.disconnected = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    /// One request left the admission queue: release its backpressure
+    /// seat and wake a blocked submitter.
+    fn leave_queue(&mut self) {
+        self.shared.queue.lock().unwrap().len -= 1;
+        self.shared.space.notify_all();
+    }
+
+    /// Finish a sequence: account it, then emit the terminal event.
+    fn complete(&mut self, seq: Active, reason: FinishReason) {
+        let response = seq.response(reason);
+        if reason == FinishReason::Cancelled {
+            self.metrics.cancelled += 1;
+        } else {
+            self.metrics.record(response.latency, response.tokens.len());
+        }
+        let _ = seq.events.send(TokenEvent::Finished { reason, response });
+    }
+
+    /// Finish a submission that never reached a slot (cancelled while
+    /// queued).
+    fn complete_unadmitted(&mut self, sub: Submission) {
+        self.metrics.cancelled += 1;
+        let response = Response {
+            id: sub.req.id,
+            tokens: Vec::new(),
+            latency: sub.submitted.elapsed(),
+            prompt_len: sub.req.prompt.len(),
+            finish: FinishReason::Cancelled,
+        };
+        let reason = FinishReason::Cancelled;
+        let _ = sub.events.send(TokenEvent::Finished { reason, response });
+    }
+
+    /// Drop cancelled requests: queued ones finish without ever running,
+    /// active ones free their slot (and its KV rows) this step.
+    fn reap_cancelled(&mut self) {
+        for _ in 0..self.queue.len() {
+            let sub = self.queue.pop_front().unwrap();
+            if sub.cancelled.load(Ordering::SeqCst) {
+                self.leave_queue();
+                self.complete_unadmitted(*sub);
+            } else {
+                self.queue.push_back(sub);
+            }
+        }
+        for slot in 0..self.slots.len() {
+            let hit = match &self.slots[slot] {
+                Some(a) => a.cancelled.load(Ordering::SeqCst),
+                None => false,
+            };
+            if hit {
+                let seq = self.slots[slot].take().unwrap();
+                self.session.reset_slot(slot);
+                self.complete(*seq, FinishReason::Cancelled);
+            }
+        }
+    }
+
+    /// Admit queued requests into free slots (continuous batching).
+    fn admit(&mut self) {
+        for slot in 0..self.slots.len() {
+            while self.slots[slot].is_none() {
+                let Some(sub) = self.queue.pop_front() else {
+                    return;
+                };
+                self.leave_queue();
+                if sub.cancelled.load(Ordering::SeqCst) {
+                    self.complete_unadmitted(*sub);
+                    continue;
+                }
+                let wait_ms = sub.submitted.elapsed().as_secs_f64() * 1e3;
+                self.metrics.queue_wait_ms.push(wait_ms);
+                match admit_request(*sub) {
+                    Admission::Run(seq) => {
+                        announce(&seq);
+                        self.session.reset_slot(slot);
+                        self.slots[slot] = Some(seq);
+                    }
+                    Admission::Done(seq, reason) => {
+                        announce(&seq);
+                        self.complete(*seq, reason);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One fused step over every active slot: prefilling slots feed a
+    /// chunk of up to `prefill_chunk` prompt rows, decoding slots one row;
+    /// the logit mask keeps only each slot's final prompt row and decode
+    /// rows (intermediate prompt logits are discarded anyway). Returns
+    /// false when nothing is in flight.
+    fn step(&mut self) -> bool {
+        let cap = self.model.cfg().max_seq;
+        let chunk = self.cfg.prefill_chunk;
+        let n_slots = self.slots.len();
+        let mut batch: Vec<(usize, &[usize])> = Vec::with_capacity(n_slots);
+        let mut needs_logits: Vec<bool> = Vec::with_capacity(n_slots);
+        let mut meta: Vec<(usize, usize)> = Vec::with_capacity(n_slots); // (slot, rows fed)
+        let mut prefill_rows = 0usize;
+        for (s, a) in self.slots.iter().enumerate() {
+            if let Some(a) = a {
+                let plen = a.req.prompt.len();
+                if a.fed < plen {
+                    let end = (a.fed + chunk).min(plen);
+                    batch.push((s, &a.req.prompt[a.fed..end]));
+                    needs_logits.extend((a.fed..end).map(|j| j + 1 == plen));
+                    meta.push((s, end - a.fed));
+                    prefill_rows += end - a.fed;
+                } else {
+                    batch.push((s, std::slice::from_ref(&a.next_input)));
+                    needs_logits.push(true);
+                    meta.push((s, 1));
+                }
+            }
+        }
+        if batch.is_empty() {
+            return false;
+        }
+        let logits = self.session.step_chunked(&batch, Some(&needs_logits));
+        drop(batch); // release the borrow of the slots' prompts
+        self.metrics.engine_steps += 1;
+        self.metrics.slot_steps += meta.len();
+        if prefill_rows > 0 {
+            self.metrics.prefill_steps += 1;
+            self.metrics.prefill_rows += prefill_rows;
+        }
+        let mut row0 = 0usize;
+        for &(slot, rows) in &meta {
+            let last = row0 + rows - 1; // the slot's final row this step
+            row0 += rows;
+            let seq = self.slots[slot].as_mut().unwrap();
+            let was_prefill = seq.fed < seq.req.prompt.len();
+            seq.fed += rows;
+            if was_prefill {
+                if seq.fed < seq.req.prompt.len() {
+                    continue; // still prefilling: every row was masked
+                }
+            } else {
+                self.metrics.decode_rows += 1;
+            }
+            // `last` is the final prompt row (prefill just completed) or
+            // the decode row: its logits belong to the newest token
+            let max_new = seq.req.params.max_new_tokens;
+            let more = seq.out.len() < max_new && self.session.pos(slot) < cap;
+            let finished: Option<FinishReason> = if more {
+                let next = sample_top_k(
+                    &logits[last],
+                    seq.req.params.temperature,
+                    seq.req.params.top_k,
+                    &mut seq.rng,
+                );
+                seq.out.push(next);
+                let listener = seq.events.send(TokenEvent::Token(next));
+                if seq.req.params.stop_tokens.contains(&next) {
+                    Some(FinishReason::StopToken)
+                } else if seq.out.len() >= max_new {
+                    // the final sampled token needs no further forward pass
+                    Some(FinishReason::MaxTokens)
+                } else if listener.is_err() {
+                    // the RequestHandle was dropped without cancel():
+                    // nobody can observe further tokens, so free the slot
+                    // exactly like a cancellation
+                    Some(FinishReason::Cancelled)
+                } else {
+                    seq.next_input = next;
+                    None
+                }
+            } else if seq.out.len() < max_new {
+                Some(FinishReason::ContextFull)
+            } else {
+                Some(FinishReason::MaxTokens)
+            };
+            if let Some(reason) = finished {
+                let seq = self.slots[slot].take().unwrap();
+                self.session.reset_slot(slot); // release the KV rows now
+                self.complete(*seq, reason);
+            }
+        }
+        true
+    }
+
+    /// Refresh the shared metrics snapshot so `EngineHandle::metrics`
+    /// observes live state. Per step only the O(1) counters and gauges are
+    /// synced; the per-request distribution vectors (latencies, queue
+    /// waits) are published at shutdown — cloning them every step would
+    /// cost O(completed requests) per step on a long-lived engine.
+    fn publish(&mut self, t0: Instant) {
+        {
+            let q = self.shared.queue.lock().unwrap();
+            self.metrics.queue_depth = q.len;
+            self.metrics.queue_peak = q.peak;
+        }
+        self.metrics.kv_bytes = self.session.kv_bytes();
+        self.metrics.wall = t0.elapsed();
+        let mut snap = self.shared.metrics.lock().unwrap();
+        snap.completed = self.metrics.completed;
+        snap.generated_tokens = self.metrics.generated_tokens;
+        snap.wall = self.metrics.wall;
+        snap.weight_memory = self.metrics.weight_memory;
+        snap.engine_steps = self.metrics.engine_steps;
+        snap.slot_steps = self.metrics.slot_steps;
+        snap.prefill_rows = self.metrics.prefill_rows;
+        snap.prefill_steps = self.metrics.prefill_steps;
+        snap.decode_rows = self.metrics.decode_rows;
+        snap.cancelled = self.metrics.cancelled;
+        snap.queue_depth = self.metrics.queue_depth;
+        snap.queue_peak = self.metrics.queue_peak;
+        snap.kv_bytes = self.metrics.kv_bytes;
+    }
+
+    /// Publish the full final metrics (latency and queue-wait
+    /// distributions included) and reject any submitter still blocked.
+    fn close(&mut self, t0: Instant) {
+        self.publish(t0);
+        *self.shared.metrics.lock().unwrap() = self.metrics.clone();
+        self.shared.queue.lock().unwrap().closed = true;
+        self.shared.space.notify_all();
+    }
+}

@@ -29,6 +29,23 @@ pub struct Metrics {
     /// Decode rows fed (one per decoding slot per step; the final sampled
     /// token of a sequence is never fed back).
     pub decode_rows: usize,
+    /// Requests cancelled before finishing — via
+    /// [`crate::coordinator::RequestHandle::cancel`] or a dropped event
+    /// listener. Cancelled requests are not counted in [`Self::completed`]
+    /// and do not contribute to the latency distribution.
+    pub cancelled: usize,
+    /// Admission-queue depth when this snapshot was published (a gauge;
+    /// the live value is `EngineHandle::queue_depth`).
+    pub queue_depth: usize,
+    /// Highest admission-queue depth observed — how hard backpressure was
+    /// leaned on.
+    pub queue_peak: usize,
+    /// Per-request time spent in the admission queue before a slot
+    /// admitted it, in milliseconds (one entry per admitted request).
+    pub queue_wait_ms: Vec<f64>,
+    /// Resident KV-cache bytes across all slots when this snapshot was
+    /// published (drops back to 0 once every sequence finishes).
+    pub kv_bytes: usize,
 }
 
 impl Metrics {
@@ -83,6 +100,15 @@ impl Metrics {
         }
     }
 
+    /// Mean time-in-queue across admitted requests, milliseconds.
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        if self.queue_wait_ms.is_empty() {
+            0.0
+        } else {
+            self.queue_wait_ms.iter().sum::<f64>() / self.queue_wait_ms.len() as f64
+        }
+    }
+
     /// generated tokens per wall-clock second
     pub fn throughput_tps(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -117,6 +143,18 @@ impl Metrics {
                 self.prefill_steps,
                 self.prefill_amortisation(),
             ));
+        }
+        if self.queue_peak > 0 || self.cancelled > 0 {
+            s.push_str(&format!(
+                " queued={} qpeak={} qwait_mean={:.1}ms cancelled={}",
+                self.queue_depth,
+                self.queue_peak,
+                self.mean_queue_wait_ms(),
+                self.cancelled,
+            ));
+        }
+        if self.kv_bytes > 0 {
+            s.push_str(&format!(" kv={}B", self.kv_bytes));
         }
         if self.weight_memory.dense_f32_bytes > 0 {
             s.push_str(&format!(
@@ -156,6 +194,25 @@ mod tests {
         assert!((m.batch_occupancy() - 2.5).abs() < 1e-12);
         assert_eq!(m.decode_amortisation(), m.batch_occupancy());
         assert!(m.summary().contains("decode_amort=2.50x"));
+    }
+
+    #[test]
+    fn queue_and_cancellation_counters() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mean_queue_wait_ms(), 0.0);
+        assert!(!m.summary().contains("qpeak"));
+        m.queue_depth = 2;
+        m.queue_peak = 7;
+        m.cancelled = 3;
+        m.queue_wait_ms = vec![1.0, 3.0];
+        m.kv_bytes = 128;
+        assert!((m.mean_queue_wait_ms() - 2.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("queued=2"));
+        assert!(s.contains("qpeak=7"));
+        assert!(s.contains("qwait_mean=2.0ms"));
+        assert!(s.contains("cancelled=3"));
+        assert!(s.contains("kv=128B"));
     }
 
     #[test]

@@ -1,10 +1,16 @@
-//! L3 coordination: batched inference serving (server.rs), metrics, and
-//! experiment orchestration (model zoo, result persistence).
+//! L3 coordination: the live serving engine (engine.rs), the batch
+//! front door and request/response types (server.rs), serving metrics,
+//! and experiment orchestration (model zoo, result persistence).
 
+pub mod engine;
 pub mod experiment;
 pub mod metrics;
 pub mod server;
 
+pub use engine::{Engine, EngineHandle, RequestHandle, SubmitError, TokenEvent};
 pub use experiment::{default_steps, get_or_train, save_result};
 pub use metrics::Metrics;
-pub use server::{run_batched, serve_one, Request, Response, ServerConfig, ENGINE_SEED};
+pub use server::{
+    run_batched, serve_one, FinishReason, GenerationParams, Request, Response, ServerConfig,
+    ENGINE_SEED,
+};

@@ -1,52 +1,145 @@
-//! Continuous-batching inference coordinator — the L3 serving path.
+//! Serving front door: request/response types, per-request
+//! [`GenerationParams`], the sequential reference path ([`serve_one`]),
+//! and the offline batch wrapper ([`run_batched`]).
 //!
-//! A single scheduler loop owns a [`BatchedDecodeSession`] slot pool of
-//! `max_batch` slots. Queued requests are admitted into free slots; every
-//! active slot contributes a row-block to each fused engine step — up to
+//! The actual scheduler lives in [`super::engine`]: a long-lived loop over
+//! a [`crate::model::kv_cache::BatchedDecodeSession`] slot pool that
+//! admits queued requests into free slots, steps every active slot through
+//! one fused packed GEMM per weight site per layer — up to
 //! `prefill_chunk` prompt rows while prefilling, one row while decoding —
-//! and the packed weights are decoded **once per layer per step regardless
-//! of how many rows the step carries**, so the dequant cost is amortised
-//! across sequences *and* across prompt tokens. The logit mask covers all
-//! but each slot's final prompt row (intermediate prompt logits are
-//! discarded anyway, and the vocab-sized head GEMM dominates a prefill
-//! step's cost). Slots are recycled the moment a sequence finishes, so
-//! short requests drain out and queued ones join mid-flight without batch
-//! barriers. Greedy decode is bit-identical to running each request alone
-//! through [`DecodeSession`] — for any `prefill_chunk` — (tested here and
-//! in tests/continuous_batching.rs).
+//! and recycles slots the moment a sequence finishes or is cancelled.
+//! [`run_batched`] is a thin submit-all/collect wrapper over that same
+//! core, so everything proved about the engine (batched greedy decode
+//! bit-identical to [`serve_one`], chunked prefill bit-identical to
+//! token-at-a-time, for any slot count and chunk size) holds for the batch
+//! path by construction (tested here and in tests/continuous_batching.rs
+//! and tests/engine_lifecycle.rs).
 
+use super::engine::{channels, EngineCore, RequestHandle};
 use super::metrics::Metrics;
-use crate::model::kv_cache::{sample_logits, BatchedDecodeSession, DecodeSession};
+use crate::model::kv_cache::{sample_top_k, DecodeSession};
 use crate::model::Model;
 use crate::util::rng::Pcg32;
-use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// Seed for the engine's per-request sampling RNGs (`seed ^ request id`),
-/// so temperature > 0 decodes are reproducible for a given schedule.
+/// Default seed for per-request sampling RNGs (`ENGINE_SEED ^ request id`
+/// when [`GenerationParams::seed`] is `None`), so temperature > 0 decodes
+/// are reproducible and schedule-independent.
 pub const ENGINE_SEED: u64 = 0xC0FFEE;
 
+/// Per-request generation knobs, shared verbatim by [`serve_one`] and the
+/// engine so the two paths stay bit-identical for any setting.
+#[derive(Clone, Debug)]
+pub struct GenerationParams {
+    /// Maximum number of tokens to sample (the context cap and stop
+    /// tokens may end generation earlier — see [`FinishReason`]).
+    pub max_new_tokens: usize,
+    /// `<= 0` is greedy argmax; otherwise softmax temperature sampling
+    /// from the per-request RNG.
+    pub temperature: f32,
+    /// Restrict temperature sampling to the `top_k` highest logits;
+    /// `0` disables the filter. Ignored under greedy decoding.
+    pub top_k: usize,
+    /// Generation stops (with [`FinishReason::StopToken`]) as soon as one
+    /// of these tokens is sampled; the stop token is included in the
+    /// output.
+    pub stop_tokens: Vec<usize>,
+    /// Explicit sampler seed for reproducible temperature sampling.
+    /// `None` derives `ENGINE_SEED ^ id`, which already makes every
+    /// request reproducible independent of batch schedule.
+    pub seed: Option<u64>,
+}
+
+impl Default for GenerationParams {
+    fn default() -> Self {
+        GenerationParams {
+            max_new_tokens: 16,
+            temperature: 0.0,
+            top_k: 0,
+            stop_tokens: Vec::new(),
+            seed: None,
+        }
+    }
+}
+
+impl GenerationParams {
+    /// Greedy decoding for `max_new_tokens` tokens — the common test and
+    /// benchmark configuration.
+    pub fn greedy(max_new_tokens: usize) -> GenerationParams {
+        GenerationParams {
+            max_new_tokens,
+            ..GenerationParams::default()
+        }
+    }
+
+    /// The per-request sampler seed: explicit seed if set, else
+    /// `ENGINE_SEED ^ id` (schedule-independent either way).
+    pub(crate) fn sampler_seed(&self, id: u64) -> u64 {
+        self.seed.unwrap_or(ENGINE_SEED ^ id)
+    }
+}
+
+/// One generation request: a prompt plus its [`GenerationParams`].
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen id, echoed on the [`Response`] (and used to derive
+    /// the default sampler seed).
     pub id: u64,
+    /// Prompt token ids (may be empty).
     pub prompt: Vec<usize>,
-    pub max_new_tokens: usize,
-    pub temperature: f32,
+    /// Generation parameters for this request.
+    pub params: GenerationParams,
 }
 
+impl Request {
+    /// Greedy request — the common shorthand.
+    pub fn greedy(id: u64, prompt: Vec<usize>, max_new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            params: GenerationParams::greedy(max_new_tokens),
+        }
+    }
+}
+
+/// Why a sequence stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// `max_new_tokens` tokens were sampled.
+    MaxTokens,
+    /// A [`GenerationParams::stop_tokens`] entry was sampled (it is the
+    /// last token of the output).
+    StopToken,
+    /// The model's context window filled before `max_new_tokens`.
+    ContextFull,
+    /// The request was cancelled ([`RequestHandle::cancel`], or its event
+    /// listener was dropped); the response holds the tokens generated so
+    /// far.
+    Cancelled,
+}
+
+/// A finished (or cancelled) generation.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The request's id.
     pub id: u64,
+    /// Generated tokens (prompt not included).
     pub tokens: Vec<usize>,
+    /// Submission-to-finish latency, time queued for a slot included.
     pub latency: Duration,
+    /// Length of the request's prompt.
     pub prompt_len: usize,
+    /// Why generation stopped.
+    pub finish: FinishReason,
 }
 
+/// Engine configuration. Validated at construction via
+/// [`ServerConfig::new`] / [`ServerConfig::validate`] (the scheduler
+/// asserts it once at start instead of patching values deep in the loop).
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Slot-pool size: the maximum number of sequences decoded together in
-    /// one fused engine step. (The worker-pool-era `workers`/`batch_timeout`
-    /// knobs are gone: the scheduler loop admits work the moment a slot
-    /// frees, and the fused GEMMs thread internally.)
+    /// one fused engine step.
     pub max_batch: usize,
     /// Maximum prompt rows a prefilling slot feeds into one engine step.
     /// 1 reproduces token-at-a-time prefill; larger chunks amortise the
@@ -54,6 +147,33 @@ pub struct ServerConfig {
     /// Never changes results — chunked prefill is bit-identical to
     /// sequential prefill (tested) — only how fast prompts are absorbed.
     pub prefill_chunk: usize,
+    /// Bound of the admission queue: once this many submitted requests are
+    /// waiting for a slot, [`super::engine::EngineHandle::submit`] blocks
+    /// and `try_submit` returns `QueueFull` — the engine's explicit
+    /// backpressure signal.
+    pub queue_depth: usize,
+}
+
+impl ServerConfig {
+    /// Build a validated config (panics on a zero field; see
+    /// [`Self::validate`]).
+    pub fn new(max_batch: usize, prefill_chunk: usize, queue_depth: usize) -> ServerConfig {
+        let cfg = ServerConfig {
+            max_batch,
+            prefill_chunk,
+            queue_depth,
+        };
+        cfg.validate();
+        cfg
+    }
+
+    /// Assert the invariants the scheduler relies on: at least one slot,
+    /// at least one prompt row per prefill step, a non-zero queue bound.
+    pub fn validate(&self) {
+        assert!(self.max_batch >= 1, "ServerConfig: max_batch must be >= 1");
+        assert!(self.prefill_chunk >= 1, "ServerConfig: prefill_chunk must be >= 1");
+        assert!(self.queue_depth >= 1, "ServerConfig: queue_depth must be >= 1");
+    }
 }
 
 impl Default for ServerConfig {
@@ -61,203 +181,85 @@ impl Default for ServerConfig {
         ServerConfig {
             max_batch: 8,
             prefill_chunk: 8,
+            queue_depth: 64,
         }
     }
 }
 
 /// Process one request to completion (prefill + decode) on the calling
 /// thread with its own [`DecodeSession`] — the sequential reference the
-/// batched engine must match bit for bit under greedy decoding, and the
-/// single-stream baseline the decode bench compares against.
-pub fn serve_one(model: &Model, req: &Request, seed: u64) -> Response {
+/// batched engine must match bit for bit (greedy *and* seeded sampling),
+/// and the single-stream baseline the decode bench compares against.
+pub fn serve_one(model: &Model, req: &Request) -> Response {
     let start = Instant::now();
+    let p = &req.params;
     let mut session = DecodeSession::new(model);
-    let mut rng = Pcg32::new(seed ^ req.id);
+    let mut rng = Pcg32::new(p.sampler_seed(req.id));
     let mut logits = Vec::new();
     for &t in &req.prompt {
         logits = session.step(t);
     }
-    let mut out = Vec::with_capacity(req.max_new_tokens);
+    let mut out = Vec::with_capacity(p.max_new_tokens);
     let cap = model.cfg().max_seq;
-    for _ in 0..req.max_new_tokens {
+    let mut finish = FinishReason::MaxTokens;
+    for _ in 0..p.max_new_tokens {
         if session.pos >= cap {
+            finish = FinishReason::ContextFull;
             break;
         }
-        let next = sample_logits(&logits, req.temperature, &mut rng);
+        let next = sample_top_k(&logits, p.temperature, p.top_k, &mut rng);
         out.push(next);
-        logits = session.step(next);
+        if p.stop_tokens.contains(&next) {
+            finish = FinishReason::StopToken;
+            break;
+        }
+        // the final sampled token needs no further forward pass
+        if out.len() < p.max_new_tokens {
+            logits = session.step(next);
+        }
     }
     Response {
         id: req.id,
         tokens: out,
         latency: start.elapsed(),
         prompt_len: req.prompt.len(),
+        finish,
     }
-}
-
-/// One in-flight sequence occupying an engine slot.
-struct ActiveSeq {
-    req: Request,
-    start: Instant,
-    rng: Pcg32,
-    /// tokens already fed to the model
-    fed: usize,
-    out: Vec<usize>,
-    /// sampled token to feed on the next decode step (prompt rows are fed
-    /// directly from `req.prompt` as chunked row-blocks)
-    next_input: usize,
-}
-
-impl ActiveSeq {
-    fn into_response(self) -> Response {
-        Response {
-            id: self.req.id,
-            tokens: self.out,
-            latency: self.start.elapsed(),
-            prompt_len: self.req.prompt.len(),
-        }
-    }
-}
-
-/// Admission result: most requests become active; degenerate ones (no
-/// prompt and nothing to generate) complete immediately.
-enum Admission {
-    Active(ActiveSeq),
-    Done(Response),
-}
-
-fn admit(req: Request, submitted: Instant) -> Admission {
-    let mut seq = ActiveSeq {
-        rng: Pcg32::new(ENGINE_SEED ^ req.id),
-        start: submitted,
-        fed: 0,
-        out: Vec::new(),
-        next_input: 0,
-        req,
-    };
-    if seq.req.prompt.is_empty() {
-        // mirror `serve_one`: with no prompt there are no logits yet, and
-        // sampling from an empty logit vector yields token 0
-        if seq.req.max_new_tokens == 0 {
-            return Admission::Done(seq.into_response());
-        }
-        let next = sample_logits(&[], seq.req.temperature, &mut seq.rng);
-        seq.out.push(next);
-        seq.next_input = next;
-        if seq.out.len() >= seq.req.max_new_tokens {
-            return Admission::Done(seq.into_response());
-        }
-    } else {
-        seq.next_input = seq.req.prompt[0];
-    }
-    Admission::Active(seq)
 }
 
 /// Serve all `requests` through the continuous-batching engine and return
-/// responses (sorted by id) plus metrics. Latency is measured from
-/// submission, so it includes time spent queued for a slot.
+/// responses (sorted by id) plus metrics — a thin submit-all/collect
+/// wrapper over the same `EngineCore` scheduler that powers
+/// [`super::engine::Engine`], run on a scoped thread so it can borrow
+/// `model` directly. Latency is measured from submission, so it includes
+/// time spent queued for a slot.
+///
+/// Every request is enqueued before the scheduler starts (the admission
+/// queue is widened to hold them all), which keeps offline-batch
+/// scheduling — and therefore the step/occupancy metrics — deterministic.
 pub fn run_batched(
     model: &Model,
     requests: Vec<Request>,
     cfg: &ServerConfig,
 ) -> (Vec<Response>, Metrics) {
-    let n_slots = cfg.max_batch.max(1);
-    let cap = model.cfg().max_seq;
-    let mut queue: VecDeque<Request> = requests.into_iter().collect();
-    let mut session = BatchedDecodeSession::new(model, n_slots);
-    let mut slots: Vec<Option<ActiveSeq>> = (0..n_slots).map(|_| None).collect();
-    let mut responses: Vec<Response> = Vec::new();
-    let mut metrics = Metrics::new();
-    let t0 = Instant::now();
-    loop {
-        // admit queued requests into free slots (continuous batching)
-        for slot in 0..n_slots {
-            while slots[slot].is_none() && !queue.is_empty() {
-                let req = queue.pop_front().unwrap();
-                session.reset_slot(slot);
-                match admit(req, t0) {
-                    Admission::Active(seq) => slots[slot] = Some(seq),
-                    Admission::Done(resp) => {
-                        metrics.record(resp.latency, resp.tokens.len());
-                        responses.push(resp);
-                    }
-                }
-            }
-        }
-        // one fused step over every active slot: prefilling slots feed a
-        // chunk of up to `prefill_chunk` prompt rows, decoding slots one
-        // row; the logit mask keeps only each slot's final prompt row and
-        // decode rows (intermediate prompt logits are discarded anyway)
-        let chunk = cfg.prefill_chunk.max(1);
-        let mut batch: Vec<(usize, &[usize])> = Vec::with_capacity(n_slots);
-        let mut needs_logits: Vec<bool> = Vec::with_capacity(n_slots);
-        let mut meta: Vec<(usize, usize)> = Vec::with_capacity(n_slots); // (slot, rows fed)
-        let mut prefill_rows = 0usize;
-        for (s, a) in slots.iter().enumerate() {
-            if let Some(a) = a {
-                let plen = a.req.prompt.len();
-                if a.fed < plen {
-                    let end = (a.fed + chunk).min(plen);
-                    batch.push((s, &a.req.prompt[a.fed..end]));
-                    needs_logits.extend((a.fed..end).map(|j| j + 1 == plen));
-                    meta.push((s, end - a.fed));
-                    prefill_rows += end - a.fed;
-                } else {
-                    batch.push((s, std::slice::from_ref(&a.next_input)));
-                    needs_logits.push(true);
-                    meta.push((s, 1));
-                }
-            }
-        }
-        if batch.is_empty() {
-            break; // queue drained and nothing in flight
-        }
-        let logits = session.step_chunked(&batch, Some(&needs_logits));
-        drop(batch); // release the borrow of the slots' prompts
-        metrics.engine_steps += 1;
-        metrics.slot_steps += meta.len();
-        if prefill_rows > 0 {
-            metrics.prefill_steps += 1;
-            metrics.prefill_rows += prefill_rows;
-        }
-        let mut row0 = 0usize;
-        for &(slot, rows) in &meta {
-            let last = row0 + rows - 1; // the slot's final row this step
-            row0 += rows;
-            let seq = slots[slot].as_mut().unwrap();
-            let was_prefill = seq.fed < seq.req.prompt.len();
-            seq.fed += rows;
-            if was_prefill {
-                if seq.fed < seq.req.prompt.len() {
-                    continue; // still prefilling: every row was masked
-                }
-            } else {
-                metrics.decode_rows += 1;
-            }
-            // `last` is the final prompt row (prefill just completed) or
-            // the decode row: its logits belong to the newest token
-            let more = seq.out.len() < seq.req.max_new_tokens && session.pos(slot) < cap;
-            let finished = if more {
-                let next = sample_logits(&logits[last], seq.req.temperature, &mut seq.rng);
-                seq.out.push(next);
-                seq.next_input = next;
-                // the final sampled token needs no further forward pass
-                seq.out.len() >= seq.req.max_new_tokens
-            } else {
-                true
-            };
-            if finished {
-                let resp = slots[slot].take().unwrap().into_response();
-                metrics.record(resp.latency, resp.tokens.len());
-                responses.push(resp);
-            }
-        }
-    }
-    metrics.wall = t0.elapsed();
-    // report what the weight cache actually occupies while serving —
-    // packed block formats shrink this ~5× vs dense f32 (Table 3's Mem
-    // column, measured on live state)
-    metrics.weight_memory = model.weight_memory();
+    cfg.validate();
+    let mut engine_cfg = cfg.clone();
+    engine_cfg.queue_depth = cfg.queue_depth.max(requests.len()).max(1);
+    let (handle, rx, shared) = channels(&engine_cfg);
+    let pending: Vec<RequestHandle> = requests
+        .into_iter()
+        .map(|r| handle.submit(r).expect("pre-start submit fits queue"))
+        .collect();
+    let core_shared = shared.clone();
+    let mut responses: Vec<Response> = std::thread::scope(|s| {
+        s.spawn(move || EngineCore::new(model, engine_cfg, rx, core_shared).run());
+        let out: Vec<Response> = pending.into_iter().map(|h| h.wait()).collect();
+        // every RequestHandle is consumed and this drops the last sender,
+        // so the scheduler drains, publishes final metrics, and exits
+        drop(handle);
+        out
+    });
+    let metrics = shared.metrics.lock().unwrap().clone();
     responses.sort_by_key(|r| r.id);
     (responses, metrics)
 }
@@ -277,12 +279,7 @@ mod tests {
 
     fn reqs(n: usize) -> Vec<Request> {
         (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: vec![3 + i % 5, 10, 42],
-                max_new_tokens: 4,
-                temperature: 0.0,
-            })
+            .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], 4))
             .collect()
     }
 
@@ -292,6 +289,7 @@ mod tests {
         let (resps, metrics) = run_batched(&m, reqs(12), &ServerConfig::default());
         assert_eq!(resps.len(), 12);
         assert!(resps.iter().all(|r| r.tokens.len() == 4));
+        assert!(resps.iter().all(|r| r.finish == FinishReason::MaxTokens));
         assert_eq!(metrics.completed, 12);
         assert!(metrics.throughput_tps() > 0.0);
         // every request feeds 3 prompt rows (one chunk at the default
@@ -305,6 +303,11 @@ mod tests {
         assert!(metrics.batch_occupancy() > 1.0);
         // the whole 3-token prompt shares each prefill dequant pass
         assert!(metrics.prefill_amortisation() >= 3.0);
+        // queue accounting: all 12 were pre-queued, all were admitted
+        assert_eq!(metrics.queue_wait_ms.len(), 12);
+        assert_eq!(metrics.queue_peak, 12);
+        assert_eq!(metrics.queue_depth, 0);
+        assert_eq!(metrics.cancelled, 0);
     }
 
     #[test]
@@ -332,11 +335,9 @@ mod tests {
         // chunk 1 is token-at-a-time, larger chunks only batch the rows
         let m = model();
         let requests: Vec<Request> = (0..5)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: vec![3 + i % 5, 10, 42, 7, 1, 30, 9, 100, 2, 8][..4 + i].to_vec(),
-                max_new_tokens: 3,
-                temperature: 0.0,
+            .map(|i| {
+                let prompt = vec![3 + i % 5, 10, 42, 7, 1, 30, 9, 100, 2, 8][..4 + i].to_vec();
+                Request::greedy(i as u64, prompt, 3)
             })
             .collect();
         let mut baseline: Option<Vec<Response>> = None;
@@ -345,6 +346,7 @@ mod tests {
             let cfg = ServerConfig {
                 max_batch: 3,
                 prefill_chunk: chunk,
+                ..ServerConfig::default()
             };
             let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
             prefill_steps.push(metrics.prefill_steps);
@@ -377,8 +379,39 @@ mod tests {
         let (got, metrics) = run_batched(&m, requests.clone(), &cfg);
         assert!(metrics.batch_occupancy() > 1.0);
         for (resp, req) in got.iter().zip(&requests) {
-            let want = serve_one(&m, req, ENGINE_SEED);
+            let want = serve_one(&m, req);
             assert_eq!(resp.id, req.id);
+            assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
+            assert_eq!(resp.finish, want.finish, "request {}", req.id);
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_matches_reference_through_engine() {
+        // temperature sampling draws from a per-request RNG exactly once
+        // per generated token, so batch schedule never changes the draw
+        // sequence: sampled decodes match serve_one token for token
+        let m = model();
+        let requests: Vec<Request> = (0..6u64)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![3 + i as usize % 5, 10, 42],
+                params: GenerationParams {
+                    max_new_tokens: 5,
+                    temperature: 0.9,
+                    top_k: 8,
+                    seed: if i % 2 == 0 { Some(1234 + i) } else { None },
+                    ..GenerationParams::default()
+                },
+            })
+            .collect();
+        let cfg = ServerConfig {
+            max_batch: 3,
+            ..ServerConfig::default()
+        };
+        let (got, _) = run_batched(&m, requests.clone(), &cfg);
+        for (resp, req) in got.iter().zip(&requests) {
+            let want = serve_one(&m, req);
             assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
         }
     }
@@ -412,37 +445,84 @@ mod tests {
     #[test]
     fn respects_context_cap() {
         let m = model();
-        let long = Request {
-            id: 0,
-            prompt: vec![1; 250],
-            max_new_tokens: 50,
-            temperature: 0.0,
-        };
-        let r = serve_one(&m, &long, 1);
+        let long = Request::greedy(0, vec![1; 250], 50);
+        let r = serve_one(&m, &long);
         assert!(r.prompt_len + r.tokens.len() <= m.cfg().max_seq);
+        assert_eq!(r.finish, FinishReason::ContextFull);
         // the engine honours the cap the same way
         let (resps, _) = run_batched(&m, vec![long.clone()], &ServerConfig::default());
         assert_eq!(resps[0].tokens, r.tokens);
+        assert_eq!(resps[0].finish, FinishReason::ContextFull);
     }
 
     #[test]
     fn degenerate_requests_complete() {
         let m = model();
-        let requests: Vec<Request> = [(0u64, vec![], 0usize), (1, vec![3, 4], 0), (2, vec![], 3)]
+        let base = [(0u64, vec![], 0usize), (1, vec![3, 4], 0), (2, vec![], 3)];
+        let mut requests: Vec<Request> = base
             .into_iter()
-            .map(|(id, prompt, max_new_tokens)| Request {
-                id,
-                prompt,
-                max_new_tokens,
-                temperature: 0.0,
-            })
+            .map(|(id, prompt, max_new_tokens)| Request::greedy(id, prompt, max_new_tokens))
             .collect();
+        // empty prompt + temperature > 0: the first token is sampled from
+        // empty logits — must fall back to token 0, never panic the
+        // scheduler thread
+        requests.push(Request {
+            id: 3,
+            prompt: vec![],
+            params: GenerationParams {
+                max_new_tokens: 3,
+                temperature: 0.8,
+                ..GenerationParams::default()
+            },
+        });
         let (resps, metrics) = run_batched(&m, requests.clone(), &ServerConfig::default());
-        assert_eq!(resps.len(), 3);
-        assert_eq!(metrics.completed, 3);
+        assert_eq!(resps.len(), 4);
+        assert_eq!(metrics.completed, 4);
         for (resp, req) in resps.iter().zip(&requests) {
-            let want = serve_one(&m, req, ENGINE_SEED);
+            let want = serve_one(&m, req);
             assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
         }
+        assert_eq!(resps[3].tokens[0], 0);
+    }
+
+    #[test]
+    fn stop_tokens_match_reference() {
+        // a stop token ends generation early on both paths, identically
+        let m = model();
+        let free = serve_one(&m, &Request::greedy(0, vec![3, 10, 42], 6));
+        assert_eq!(free.tokens.len(), 6);
+        let stop = free.tokens[2];
+        let req = Request {
+            id: 0,
+            prompt: vec![3, 10, 42],
+            params: GenerationParams {
+                max_new_tokens: 6,
+                stop_tokens: vec![stop],
+                ..GenerationParams::default()
+            },
+        };
+        let want = serve_one(&m, &req);
+        assert_eq!(want.finish, FinishReason::StopToken);
+        assert_eq!(want.tokens.last(), Some(&stop));
+        assert!(want.tokens.len() <= 3);
+        let (resps, _) = run_batched(&m, vec![req], &ServerConfig::default());
+        assert_eq!(resps[0].tokens, want.tokens);
+        assert_eq!(resps[0].finish, FinishReason::StopToken);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch must be >= 1")]
+    fn zero_max_batch_is_rejected_at_construction() {
+        ServerConfig::new(0, 8, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "prefill_chunk must be >= 1")]
+    fn zero_prefill_chunk_is_rejected() {
+        let cfg = ServerConfig {
+            prefill_chunk: 0,
+            ..ServerConfig::default()
+        };
+        run_batched(&model(), Vec::new(), &cfg);
     }
 }

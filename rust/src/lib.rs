@@ -13,7 +13,9 @@
 //! - [`baselines`]: LLM.int8(), SmoothQuant(-c), GPTQ re-implementations.
 //! - [`search`]: the TPE mixed-precision search (§3.3, §4.4).
 //! - [`runtime`] / [`coordinator`]: PJRT execution of AOT-compiled JAX
-//!   artifacts and the batched serving/experiment orchestration.
+//!   artifacts and the serving stack — the live `Engine` (submission,
+//!   token streaming, cancellation), its batch wrapper, and experiment
+//!   orchestration.
 
 // Style lints that fight the numeric-kernel idiom used throughout the
 // crate (explicit index loops over several buffers at once, wide kernel

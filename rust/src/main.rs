@@ -11,6 +11,10 @@
 //!   profile-variance Figure-1-style variance profile
 //!   search           mixed-precision TPE search
 //!   serve            batched-inference demo with latency/throughput metrics
+//!                    (`--stream` drives the live Engine API and prints
+//!                    request 0's tokens as they arrive; `--temperature`,
+//!                    `--top-k`, `--stop-token`, `--seed`, `--queue-depth`
+//!                    set the per-request GenerationParams / engine queue)
 //!   artifacts        list AOT artifacts visible to the runtime
 //!
 //! Common options: `--model <preset>` `--format <name>` `--seq N` `--threads N`
@@ -18,7 +22,7 @@
 #![allow(clippy::needless_range_loop, clippy::collapsible_if)]
 
 use bbq::coordinator::experiment::{default_steps, get_or_train};
-use bbq::coordinator::{run_batched, Request, ServerConfig};
+use bbq::coordinator::{run_batched, Engine, GenerationParams, Request, ServerConfig, TokenEvent};
 use bbq::data::corpus::test_stream;
 use bbq::data::lm_eval::perplexity_par;
 use bbq::data::tasks::{evaluate, generate, Task};
@@ -226,29 +230,69 @@ fn cmd_search(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
+    use std::io::Write;
     let preset = args.get_or("model", "tiny");
     let params = get_or_train(&preset, default_steps(&preset), true);
     let plan = plan_from_args(args, params.cfg.n_layers);
     let model = Model::new(params, plan);
     let vocab = Vocab::build();
     let n_req = args.usize_or("requests", 32);
-    let new_toks = args.usize_or("new-tokens", 16);
+    let stop_token: Option<usize> = args.get("stop-token").and_then(|s| s.parse().ok());
+    let gen = GenerationParams {
+        max_new_tokens: args.usize_or("new-tokens", 16),
+        temperature: args.f64_or("temperature", 0.0) as f32,
+        top_k: args.usize_or("top-k", 0),
+        stop_tokens: stop_token.into_iter().collect(),
+        seed: args.get("seed").and_then(|s| s.parse().ok()),
+    };
     let reqs: Vec<Request> = (0..n_req)
         .map(|i| Request {
             id: i as u64,
             prompt: vocab.encode("the cat chased the"),
-            max_new_tokens: new_toks,
-            temperature: 0.0,
+            params: gen.clone(),
         })
         .collect();
     let cfg = ServerConfig {
         max_batch: args.usize_or("max-batch", 8),
         prefill_chunk: args.usize_or("prefill-chunk", 8),
+        queue_depth: args.usize_or("queue-depth", 64),
     };
-    let (resps, metrics) = run_batched(&model, reqs, &cfg);
-    println!("{}", metrics.summary());
-    if let Some(r) = resps.first() {
-        println!("sample completion: {}", vocab.decode(&r.tokens));
+    if args.has_flag("stream") {
+        // live-engine demo: submit through an EngineHandle and stream
+        // request 0's tokens as the scheduler produces them
+        let engine = Engine::start(std::sync::Arc::new(model), cfg);
+        let handles: Vec<_> = reqs
+            .into_iter()
+            .map(|r| engine.submit(r).expect("engine accepts while open"))
+            .collect();
+        let mut handles = handles.into_iter();
+        if let Some(first) = handles.next() {
+            print!("request 0:");
+            while let Some(ev) = first.recv() {
+                match ev {
+                    TokenEvent::Token(t) => {
+                        print!(" {}", vocab.decode(&[t]));
+                        let _ = std::io::stdout().flush();
+                    }
+                    TokenEvent::Finished { reason, .. } => {
+                        println!("  [{reason:?}]");
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        for h in handles {
+            h.wait();
+        }
+        let metrics = engine.shutdown();
+        println!("{}", metrics.summary());
+    } else {
+        let (resps, metrics) = run_batched(&model, reqs, &cfg);
+        println!("{}", metrics.summary());
+        if let Some(r) = resps.first() {
+            println!("sample completion: {}", vocab.decode(&r.tokens));
+        }
     }
 }
 

@@ -164,13 +164,27 @@ impl<'m> BatchedDecodeSession<'m> {
     }
 
     /// Clear a slot's KV cache and position so the next admitted sequence
-    /// can reuse it.
+    /// can reuse it — the release path for finished *and* cancelled
+    /// sequences (the engine resets a cancelled slot the step it reaps it,
+    /// so abandoned KV rows never linger). Buffer capacity is kept for the
+    /// next occupant; only the rows are dropped.
     pub fn reset_slot(&mut self, slot: usize) {
         for c in self.caches[slot].iter_mut() {
             c.k.clear();
             c.v.clear();
         }
         self.pos[slot] = 0;
+    }
+
+    /// Resident KV-cache bytes across every slot — the f32 key/value rows
+    /// actually stored right now (a serving-pressure gauge surfaced by the
+    /// engine's metrics; back to 0 once every slot is reset).
+    pub fn kv_bytes(&self) -> usize {
+        self.caches
+            .iter()
+            .flat_map(|layers| layers.iter())
+            .map(|c| (c.k.len() + c.v.len()) * 4)
+            .sum()
     }
 
     /// Feed one token per listed `(slot, token)` pair; returns each slot's
@@ -470,6 +484,38 @@ fn head_slice(row: &[f32], hi: usize, hd: usize) -> &[f32] {
     &row[hi * hd..(hi + 1) * hd]
 }
 
+/// Temperature sampling restricted to the `top_k` highest logits;
+/// `top_k == 0` (or `top_k >= vocab`) disables the filter and greedy
+/// decoding (`temperature <= 0`) ignores it entirely. Ties at the k-th
+/// logit break by index, so the candidate set is deterministic. This is
+/// the sampler both `serve_one` and the engine call — one RNG draw per
+/// generated token — which is what keeps sampled decodes bit-identical
+/// across batch schedules.
+pub fn sample_top_k(
+    logits: &[f32],
+    temperature: f32,
+    top_k: usize,
+    rng: &mut crate::util::rng::Pcg32,
+) -> usize {
+    if temperature <= 0.0 || top_k == 0 || top_k >= logits.len() {
+        return sample_logits(logits, temperature, rng);
+    }
+    // index-tie-broken descending order is a strict total order, so the
+    // top-k *set* is unique: selecting it in O(vocab) and then sorting
+    // just those k is bit-identical to sorting the whole vocabulary
+    let cmp = |a: &usize, b: &usize| logits[*b].partial_cmp(&logits[*a]).unwrap().then(a.cmp(b));
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    idx.select_nth_unstable_by(top_k - 1, cmp);
+    idx.truncate(top_k);
+    idx.sort_unstable_by(cmp);
+    let m = idx.iter().fold(f32::NEG_INFINITY, |acc, &i| acc.max(logits[i]));
+    let weights: Vec<f64> = idx
+        .iter()
+        .map(|&i| (((logits[i] - m) / temperature) as f64).exp())
+        .collect();
+    idx[rng.weighted(&weights)]
+}
+
 /// Greedy / temperature sampling helper.
 pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut crate::util::rng::Pcg32) -> usize {
     if temperature <= 0.0 {
@@ -479,6 +525,12 @@ pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut crate::util::rn
             .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|(i, _)| i)
             .unwrap_or(0);
+    }
+    if logits.is_empty() {
+        // mirror the greedy fallback (empty-prompt first step): token 0.
+        // Without this, weighted(&[]) would divide by zero — and on the
+        // engine that panic would be on the shared scheduler thread.
+        return 0;
     }
     let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
     let weights: Vec<f64> = logits
@@ -746,6 +798,49 @@ mod tests {
         let mut batched = BatchedDecodeSession::new(&m, 1);
         let long = vec![1usize; m.cfg().max_seq + 1];
         batched.step_chunked(&[(0, &long)], None);
+    }
+
+    #[test]
+    fn kv_bytes_tracks_rows_and_resets() {
+        let m = model("nano", QuantPlan::fp32());
+        let d = m.cfg().d_model;
+        let layers = m.cfg().n_layers;
+        let mut batched = BatchedDecodeSession::new(&m, 2);
+        assert_eq!(batched.kv_bytes(), 0);
+        batched.step_chunked(&[(0, &[3, 9, 100]), (1, &[7])], None);
+        // k + v rows of d floats, per layer, 4 bytes each; 3 + 1 tokens
+        assert_eq!(batched.kv_bytes(), (3 + 1) * d * 2 * layers * 4);
+        batched.reset_slot(0);
+        assert_eq!(batched.kv_bytes(), d * 2 * layers * 4);
+        batched.reset_slot(1);
+        assert_eq!(batched.kv_bytes(), 0);
+    }
+
+    #[test]
+    fn top_k_sampling_restricts_support() {
+        let mut rng = crate::util::rng::Pcg32::new(7);
+        let logits = vec![0.0, 5.0, 4.0, -1.0, 3.0];
+        // greedy ignores top_k
+        assert_eq!(sample_top_k(&logits, 0.0, 2, &mut rng), 1);
+        // top_k == 1 is argmax even at high temperature
+        for _ in 0..50 {
+            assert_eq!(sample_top_k(&logits, 2.0, 1, &mut rng), 1);
+        }
+        // top_k == 3 only ever yields the three largest logits {1, 2, 4}
+        let mut seen = [0usize; 5];
+        for _ in 0..300 {
+            seen[sample_top_k(&logits, 1.5, 3, &mut rng)] += 1;
+        }
+        assert_eq!(seen[0], 0);
+        assert_eq!(seen[3], 0);
+        assert!(seen[1] > 0 && seen[2] > 0 && seen[4] > 0);
+        // top_k == 0 and top_k >= vocab fall back to full-vocab sampling
+        let full = sample_top_k(&logits, 0.0, 0, &mut rng);
+        assert_eq!(full, sample_top_k(&logits, 0.0, 99, &mut rng));
+        // empty logits (empty-prompt first step) yield token 0 at any
+        // temperature — the engine's scheduler thread must never panic here
+        assert_eq!(sample_logits(&[], 1.0, &mut rng), 0);
+        assert_eq!(sample_top_k(&[], 0.7, 3, &mut rng), 0);
     }
 
     #[test]

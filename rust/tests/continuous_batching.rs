@@ -4,8 +4,10 @@
 //! token-at-a-time logits parity — exact, bit-for-bit — across every
 //! preset quantisation format, plus slot lifecycle under chunked prefill
 //! (reset mid-chunk, short prompts, mixed prefill/decode batches).
+//! Engine-lifecycle behaviour (streaming, cancellation, backpressure,
+//! shutdown) lives in tests/engine_lifecycle.rs.
 
-use bbq::coordinator::{run_batched, serve_one, Request, ServerConfig, ENGINE_SEED};
+use bbq::coordinator::{run_batched, serve_one, Request, ServerConfig};
 use bbq::model::config::ModelConfig;
 use bbq::model::kv_cache::{BatchedDecodeSession, DecodeSession};
 use bbq::model::params::Params;
@@ -32,11 +34,9 @@ fn nano(fmt: QFormat) -> Model {
 /// steps and slots are recycled mid-flight.
 fn staggered_reqs(n: usize) -> Vec<Request> {
     (0..n)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: vec![3 + i % 5, 10, 42, 7 + i % 3][..2 + i % 3].to_vec(),
-            max_new_tokens: 1 + i % 5,
-            temperature: 0.0,
+        .map(|i| {
+            let prompt = vec![3 + i % 5, 10, 42, 7 + i % 3][..2 + i % 3].to_vec();
+            Request::greedy(i as u64, prompt, 1 + i % 5)
         })
         .collect()
 }
@@ -48,23 +48,19 @@ fn batch8_greedy_is_bit_identical_to_sequential_all_formats() {
     for (name, fmt) in all_formats() {
         let m = nano(fmt);
         let requests: Vec<Request> = (0..8)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: vec![3 + i % 5, 10, 42],
-                max_new_tokens: 6,
-                temperature: 0.0,
-            })
+            .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], 6))
             .collect();
         let cfg = ServerConfig {
             max_batch: 8,
             prefill_chunk: 8,
+            ..ServerConfig::default()
         };
         let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
         assert_eq!(resps.len(), 8, "{name}");
         // all eight decode together: occupancy is the full slot pool
         assert!(metrics.batch_occupancy() > 7.9, "{name}: {}", metrics.batch_occupancy());
         for (resp, req) in resps.iter().zip(&requests) {
-            let want = serve_one(&m, req, ENGINE_SEED);
+            let want = serve_one(&m, req);
             assert_eq!(resp.id, req.id, "{name}");
             assert_eq!(resp.tokens, want.tokens, "{name} request {}", req.id);
         }
@@ -103,6 +99,7 @@ fn slots_refill_as_sequences_finish() {
     let cfg = ServerConfig {
         max_batch: 4,
         prefill_chunk: 4,
+        ..ServerConfig::default()
     };
     let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
     assert_eq!(resps.len(), 20);
@@ -122,6 +119,9 @@ fn slots_refill_as_sequences_finish() {
     // chunk 4 over 2-4-token prompts: prompts complete in one chunk, so
     // prefill amortisation beats token-at-a-time's one row per slot-step
     assert!(metrics.prefill_amortisation() > 1.0);
+    // every request passed through the admission queue exactly once
+    assert_eq!(metrics.queue_wait_ms.len(), 20);
+    assert_eq!(metrics.cancelled, 0);
 }
 
 #[test]
@@ -133,14 +133,15 @@ fn responses_map_to_request_ids_under_interleaving() {
     let cfg = ServerConfig {
         max_batch: 3,
         prefill_chunk: 2,
+        ..ServerConfig::default()
     };
     let (resps, _) = run_batched(&m, requests.clone(), &cfg);
     assert_eq!(resps.len(), 13);
     for (resp, req) in resps.iter().zip(&requests) {
         assert_eq!(resp.id, req.id);
         assert_eq!(resp.prompt_len, req.prompt.len());
-        assert_eq!(resp.tokens.len(), req.max_new_tokens);
-        let want = serve_one(&m, req, ENGINE_SEED);
+        assert_eq!(resp.tokens.len(), req.params.max_new_tokens);
+        let want = serve_one(&m, req);
         assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
     }
 }
@@ -155,10 +156,11 @@ fn staggered_parity_across_formats() {
         let cfg = ServerConfig {
             max_batch: 3,
             prefill_chunk: 3,
+            ..ServerConfig::default()
         };
         let (resps, _) = run_batched(&m, requests.clone(), &cfg);
         for (resp, req) in resps.iter().zip(&requests) {
-            let want = serve_one(&m, req, ENGINE_SEED);
+            let want = serve_one(&m, req);
             assert_eq!(resp.tokens, want.tokens, "{name} request {}", req.id);
         }
     }
@@ -173,17 +175,18 @@ fn rope_model_parity_through_engine() {
     let server_cfg = ServerConfig {
         max_batch: 3,
         prefill_chunk: 4,
+        ..ServerConfig::default()
     };
     let (resps, _) = run_batched(&m, requests.clone(), &server_cfg);
     for (resp, req) in resps.iter().zip(&requests) {
-        let want = serve_one(&m, req, ENGINE_SEED);
+        let want = serve_one(&m, req);
         assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
     }
 }
 
 #[test]
 fn chunked_prefill_logits_bit_identical_all_formats() {
-    // the PR's acceptance bar: feeding a prompt as chunked [m_i, d]
+    // the PR-3 acceptance bar: feeding a prompt as chunked [m_i, d]
     // row-blocks produces, per row, logits bit-identical to the
     // token-at-a-time sequential session — for every preset format
     for (name, fmt) in all_formats() {
@@ -211,21 +214,20 @@ fn chunked_engine_greedy_parity_all_formats() {
     for (name, fmt) in all_formats() {
         let m = nano(fmt);
         let requests: Vec<Request> = (0..6)
-            .map(|i| Request {
-                id: i as u64,
-                prompt: vec![3 + i % 5, 10, 42, 7, 1, 30, 9][..3 + i % 5].to_vec(),
-                max_new_tokens: 2 + i % 3,
-                temperature: 0.0,
+            .map(|i| {
+                let prompt = vec![3 + i % 5, 10, 42, 7, 1, 30, 9][..3 + i % 5].to_vec();
+                Request::greedy(i as u64, prompt, 2 + i % 3)
             })
             .collect();
         let cfg = ServerConfig {
             max_batch: 3,
             prefill_chunk: 2,
+            ..ServerConfig::default()
         };
         let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
         assert!(metrics.prefill_amortisation() > 1.0, "{name}");
         for (resp, req) in resps.iter().zip(&requests) {
-            let want = serve_one(&m, req, ENGINE_SEED);
+            let want = serve_one(&m, req);
             assert_eq!(resp.tokens, want.tokens, "{name} request {}", req.id);
         }
     }
@@ -234,18 +236,14 @@ fn chunked_engine_greedy_parity_all_formats() {
 #[test]
 fn prompt_shorter_than_chunk_completes_in_one_step() {
     let m = nano(presets::bfp_w(6));
-    let req = Request {
-        id: 0,
-        prompt: vec![3, 10, 42],
-        max_new_tokens: 4,
-        temperature: 0.0,
-    };
+    let req = Request::greedy(0, vec![3, 10, 42], 4);
     let cfg = ServerConfig {
         max_batch: 1,
         prefill_chunk: 8,
+        ..ServerConfig::default()
     };
     let (resps, metrics) = run_batched(&m, vec![req.clone()], &cfg);
-    let want = serve_one(&m, &req, ENGINE_SEED);
+    let want = serve_one(&m, &req);
     assert_eq!(resps[0].tokens, want.tokens);
     // the whole 3-token prompt is absorbed by a single prefill step
     assert_eq!(metrics.prefill_steps, 1);
@@ -260,16 +258,12 @@ fn prefill_engine_step_count_matches_chunking() {
     // the number of dequant passes: a 10-row prompt at chunk 4 must take
     // ceil(10/4) = 3 prefill steps, not 10
     let m = nano(presets::bfp_w(6));
-    let req = Request {
-        id: 0,
-        prompt: vec![3; 10],
-        max_new_tokens: 1,
-        temperature: 0.0,
-    };
+    let req = Request::greedy(0, vec![3; 10], 1);
     for (chunk, want_steps) in [(1usize, 10usize), (4, 3), (8, 2), (16, 1)] {
         let cfg = ServerConfig {
             max_batch: 1,
             prefill_chunk: chunk,
+            ..ServerConfig::default()
         };
         let (_, metrics) = run_batched(&m, vec![req.clone()], &cfg);
         assert_eq!(metrics.prefill_steps, want_steps, "chunk {chunk}");
@@ -286,6 +280,7 @@ fn reset_slot_mid_chunk_recycles_cleanly() {
     // slot 0: a real sequence we keep; slot 1: prefill 4 rows, then abort
     batched.step_chunked(&[(0, &[3, 9]), (1, &[7, 7, 8, 1])], None);
     assert_eq!(batched.pos(1), 4);
+    assert!(batched.kv_bytes() > 0);
     batched.reset_slot(1);
     assert_eq!(batched.pos(1), 0);
     // slot 0 continues where it was; slot 1 restarts as a fresh sequence
@@ -307,22 +302,13 @@ fn mixed_prefill_decode_batches_match_reference() {
     // chunks; both sequences must stay bit-exact vs serve_one
     let m = nano(presets::bfp_w(6));
     let requests = vec![
-        Request {
-            id: 0,
-            prompt: vec![3, 10],
-            max_new_tokens: 8,
-            temperature: 0.0,
-        },
-        Request {
-            id: 1,
-            prompt: vec![7; 12],
-            max_new_tokens: 2,
-            temperature: 0.0,
-        },
+        Request::greedy(0, vec![3, 10], 8),
+        Request::greedy(1, vec![7; 12], 2),
     ];
     let cfg = ServerConfig {
         max_batch: 2,
         prefill_chunk: 4,
+        ..ServerConfig::default()
     };
     let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
     // request 0 finishes prefill in one step and decodes while request 1
@@ -330,7 +316,7 @@ fn mixed_prefill_decode_batches_match_reference() {
     assert!(metrics.decode_rows > 0);
     assert!(metrics.prefill_amortisation() > 1.0);
     for (resp, req) in resps.iter().zip(&requests) {
-        let want = serve_one(&m, req, ENGINE_SEED);
+        let want = serve_one(&m, req);
         assert_eq!(resp.tokens, want.tokens, "request {}", req.id);
     }
 }

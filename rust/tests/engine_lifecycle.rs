@@ -1,0 +1,365 @@
+//! Lifecycle tests for the live `Engine` API: submission after start,
+//! token streaming, mid-decode cancellation (slot recycled, co-resident
+//! slots bit-unaffected), stop-token termination, backpressure on a full
+//! admission queue, graceful shutdown, and — the acceptance bar —
+//! `run_batched`-via-engine matching `serve_one` token for token for
+//! every preset quantisation format, per-request params included.
+
+use bbq::coordinator::{
+    run_batched, serve_one, Engine, FinishReason, GenerationParams, Request, ServerConfig,
+    SubmitError, TokenEvent,
+};
+use bbq::model::config::ModelConfig;
+use bbq::model::params::Params;
+use bbq::model::plan::QuantPlan;
+use bbq::model::Model;
+use bbq::quant::config::{presets, QFormat};
+use std::sync::Arc;
+
+/// Every preset the paper sweeps, plus the ZeroQuant-style per-row fixed
+/// point and plain fp32 pass-through.
+fn all_formats() -> Vec<(&'static str, QFormat)> {
+    let mut f = presets::table3_formats();
+    f.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+    f.push(("FixedRow W4", QFormat::FixedRow { w: 4 }));
+    f.push(("Fp32", QFormat::Fp32));
+    f
+}
+
+fn model(preset: &str, fmt: QFormat) -> Arc<Model> {
+    let cfg = ModelConfig::preset(preset);
+    Arc::new(Model::new(Params::init(&cfg, 42), QuantPlan::uniform(fmt)))
+}
+
+#[test]
+fn submit_after_start_streams_lifecycle_events() {
+    let m = model("nano", presets::bfp_w(6));
+    let engine = Engine::start(m.clone(), ServerConfig::default());
+    let req = Request::greedy(0, vec![3, 10, 42], 5);
+    let h = engine.submit(req.clone()).expect("engine open");
+    assert_eq!(h.id(), 0);
+    let mut tokens = Vec::new();
+    let mut phases = Vec::new();
+    let resp = loop {
+        match h.recv().expect("engine alive") {
+            TokenEvent::Queued => phases.push("queued"),
+            TokenEvent::Started => phases.push("started"),
+            TokenEvent::Token(t) => tokens.push(t),
+            TokenEvent::Finished { reason, response } => {
+                assert_eq!(reason, FinishReason::MaxTokens);
+                break response;
+            }
+        }
+    };
+    // lifecycle order, and the stream is exactly the final token list
+    assert_eq!(phases, ["queued", "started"]);
+    assert_eq!(tokens, resp.tokens);
+    let want = serve_one(&m, &req);
+    assert_eq!(resp.tokens, want.tokens);
+    assert_eq!(resp.finish, FinishReason::MaxTokens);
+    // live submission: the engine accepts more work long after start
+    let req2 = Request::greedy(1, vec![7, 7], 4);
+    let r2 = engine.submit(req2.clone()).expect("engine open").wait();
+    assert_eq!(r2.tokens, serve_one(&m, &req2).tokens);
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.completed, 2);
+    assert_eq!(metrics.cancelled, 0);
+    assert_eq!(metrics.queue_wait_ms.len(), 2);
+}
+
+#[test]
+fn mid_decode_cancellation_recycles_slot() {
+    // "tiny" steps are slow enough (ms-scale) that the cancel lands long
+    // before the 200-token budget is exhausted
+    let m = model("tiny", presets::bfp_w(6));
+    let engine = Engine::start(
+        m.clone(),
+        ServerConfig {
+            max_batch: 2,
+            ..ServerConfig::default()
+        },
+    );
+    let long = Request::greedy(0, vec![3, 10, 42], 200);
+    let short = Request::greedy(1, vec![5, 9], 6);
+    let hl = engine.submit(long.clone()).expect("engine open");
+    let hs = engine.submit(short.clone()).expect("engine open");
+    // let the long request stream a few tokens, then cancel it mid-decode
+    let mut streamed = 0usize;
+    while streamed < 3 {
+        match hl.recv().expect("engine alive") {
+            TokenEvent::Token(_) => streamed += 1,
+            TokenEvent::Finished { .. } => panic!("long request finished before cancel"),
+            _ => {}
+        }
+    }
+    hl.cancel();
+    let got = hl.wait();
+    assert_eq!(got.finish, FinishReason::Cancelled);
+    let want = serve_one(&m, &long);
+    assert!(got.tokens.len() >= 3 && got.tokens.len() < want.tokens.len());
+    assert_eq!(
+        got.tokens[..],
+        want.tokens[..got.tokens.len()],
+        "cancelled output must be a prefix of the uncancelled decode"
+    );
+    // the co-resident slot is bit-unaffected by the cancellation
+    let rs = hs.wait();
+    assert_eq!(rs.tokens, serve_one(&m, &short).tokens);
+    assert_eq!(rs.finish, FinishReason::MaxTokens);
+    // the freed slot serves a fresh request cleanly
+    let after = Request::greedy(2, vec![8, 1, 30], 4);
+    let ra = engine.submit(after.clone()).expect("engine open").wait();
+    assert_eq!(ra.tokens, serve_one(&m, &after).tokens);
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.cancelled, 1);
+    assert_eq!(metrics.completed, 2);
+}
+
+#[test]
+fn stop_token_terminates_engine_and_reference_identically() {
+    let m = model("nano", presets::bfp_w(6));
+    let free = serve_one(&m, &Request::greedy(0, vec![3, 10, 42], 6));
+    assert_eq!(free.tokens.len(), 6);
+    let stop = free.tokens[2];
+    let req = Request {
+        id: 0,
+        prompt: vec![3, 10, 42],
+        params: GenerationParams {
+            max_new_tokens: 6,
+            stop_tokens: vec![stop],
+            ..GenerationParams::default()
+        },
+    };
+    let want = serve_one(&m, &req);
+    assert_eq!(want.finish, FinishReason::StopToken);
+    assert_eq!(want.tokens.last(), Some(&stop));
+    assert!(want.tokens.len() <= 3);
+    let engine = Engine::start(m.clone(), ServerConfig::default());
+    let got = engine.submit(req).expect("engine open").wait();
+    assert_eq!(got.tokens, want.tokens);
+    assert_eq!(got.finish, FinishReason::StopToken);
+    engine.shutdown();
+}
+
+#[test]
+fn backpressure_on_full_queue() {
+    // one slot, one queue seat: a slow request occupies the slot, the
+    // next fills the queue, and try_submit must shed with QueueFull
+    let m = model("tiny", presets::bfp_w(6));
+    let engine = Engine::start(m.clone(), ServerConfig::new(1, 8, 1));
+    let hog = engine.submit(Request::greedy(0, vec![3], 200)).expect("engine open");
+    // wait until the hog actually occupies the slot (its Started event)
+    loop {
+        match hog.recv().expect("engine alive") {
+            TokenEvent::Started => break,
+            TokenEvent::Finished { .. } => panic!("hog finished prematurely"),
+            _ => {}
+        }
+    }
+    let queued_req = Request::greedy(1, vec![5, 9], 3);
+    let queued = engine.submit(queued_req.clone()).expect("engine open");
+    assert_eq!(engine.handle().queue_depth(), 1);
+    // the queue seat is taken and the slot is busy for ~200 slow steps:
+    // a non-blocking submit must report backpressure, handing the
+    // request back
+    match engine.handle().try_submit(Request::greedy(2, vec![7], 2)) {
+        Err(SubmitError::QueueFull(r)) => assert_eq!(r.id, 2),
+        Err(e) => panic!("expected QueueFull, got {e:?}"),
+        Ok(_) => panic!("queue should be full"),
+    }
+    // freeing the slot un-blocks the pipeline: the queued request is
+    // admitted, and a blocking submit gets its seat once the queue drains
+    hog.cancel();
+    let r1 = queued.wait();
+    assert_eq!(r1.tokens, serve_one(&m, &queued_req).tokens);
+    let late_req = Request::greedy(3, vec![8], 2);
+    let late = engine.submit(late_req.clone()).expect("engine open");
+    let r3 = late.wait();
+    assert_eq!(r3.tokens, serve_one(&m, &late_req).tokens);
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.cancelled, 1);
+    assert_eq!(metrics.completed, 2);
+    assert!(metrics.queue_peak >= 1);
+    assert!(metrics.mean_queue_wait_ms() >= 0.0);
+}
+
+#[test]
+fn streaming_cancellation_and_stop_tokens_in_one_run() {
+    // the PR acceptance bar, in a single engine run: one request streams,
+    // one is cancelled mid-decode, one stops on a stop token — and every
+    // non-cancelled output is bit-identical to serve_one
+    let m = model("nano", presets::bfp_w(6));
+    let plain = Request::greedy(3, vec![8, 1, 30], 5);
+    let streaming = Request::greedy(0, vec![3, 10, 42], 6);
+    let doomed = Request::greedy(1, vec![5, 9], 250);
+    let free = serve_one(&m, &Request::greedy(2, vec![7, 42], 6));
+    let stopping = Request {
+        id: 2,
+        prompt: vec![7, 42],
+        params: GenerationParams {
+            max_new_tokens: 6,
+            stop_tokens: vec![free.tokens[1]],
+            ..GenerationParams::default()
+        },
+    };
+    let engine = Engine::start(
+        m.clone(),
+        ServerConfig {
+            max_batch: 4,
+            ..ServerConfig::default()
+        },
+    );
+    let hs = engine.submit(streaming.clone()).expect("engine open");
+    let hd = engine.submit(doomed.clone()).expect("engine open");
+    let hstop = engine.submit(stopping.clone()).expect("engine open");
+    let hp = engine.submit(plain.clone()).expect("engine open");
+    // cancel the long request as soon as it holds a slot — it has a
+    // 250-token budget, so it is nowhere near finishing
+    loop {
+        match hd.recv().expect("engine alive") {
+            TokenEvent::Started => break,
+            TokenEvent::Finished { .. } => panic!("doomed request finished before cancel"),
+            _ => {}
+        }
+    }
+    hd.cancel();
+    // stream request 0 token by token while the others run alongside
+    let mut streamed = Vec::new();
+    let streamed_resp = loop {
+        match hs.recv().expect("engine alive") {
+            TokenEvent::Token(t) => streamed.push(t),
+            TokenEvent::Finished { response, .. } => break response,
+            _ => {}
+        }
+    };
+    assert_eq!(streamed, streamed_resp.tokens);
+    assert_eq!(streamed_resp.tokens, serve_one(&m, &streaming).tokens);
+    let rd = hd.wait();
+    assert_eq!(rd.finish, FinishReason::Cancelled);
+    let want_doomed = serve_one(&m, &doomed);
+    assert_eq!(rd.tokens[..], want_doomed.tokens[..rd.tokens.len()]);
+    // stop-token request ends early, identically to the reference
+    let rstop = hstop.wait();
+    assert_eq!(rstop.finish, FinishReason::StopToken);
+    assert_eq!(rstop.tokens, serve_one(&m, &stopping).tokens);
+    // the plain greedy request is untouched by all of the above
+    let rp = hp.wait();
+    assert_eq!(rp.tokens, serve_one(&m, &plain).tokens);
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.completed, 3);
+    assert_eq!(metrics.cancelled, 1);
+}
+
+#[test]
+fn shutdown_drains_in_flight_work_then_closes() {
+    let m = model("nano", presets::bfp_w(6));
+    let engine = Engine::start(m.clone(), ServerConfig::default());
+    let handle = engine.handle(); // clone outlives the shutdown
+    let reqs: Vec<Request> = (0..10)
+        .map(|i| Request::greedy(i as u64, vec![3 + i as usize % 5, 10], 4))
+        .collect();
+    let mut hs = Vec::new();
+    for r in &reqs {
+        hs.push(engine.submit(r.clone()).expect("engine open"));
+    }
+    // shutdown drains: every already-submitted request completes in full
+    let metrics = engine.shutdown();
+    assert_eq!(metrics.completed, 10);
+    assert_eq!(metrics.queue_depth, 0);
+    for (h, req) in hs.into_iter().zip(&reqs) {
+        let r = h.wait();
+        assert_eq!(r.id, req.id);
+        assert_eq!(r.finish, FinishReason::MaxTokens);
+        assert_eq!(r.tokens, serve_one(&m, req).tokens);
+    }
+    // ...but nothing new is accepted afterwards
+    assert!(handle.is_closed());
+    match handle.submit(Request::greedy(99, vec![1], 1)) {
+        Err(SubmitError::Closed(r)) => assert_eq!(r.id, 99),
+        Err(e) => panic!("expected Closed, got {e:?}"),
+        Ok(_) => panic!("engine accepted work after shutdown"),
+    }
+}
+
+#[test]
+fn engine_metrics_keep_occupancy_and_amortisation_invariants() {
+    // the run_batched wrapper drives the same scheduler core, so the
+    // engine metrics must satisfy the established invariants
+    let m = model("nano", presets::bfp_w(6));
+    let requests: Vec<Request> = (0..12)
+        .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], 4))
+        .collect();
+    let cfg = ServerConfig {
+        max_batch: 4,
+        ..ServerConfig::default()
+    };
+    let (resps, metrics) = run_batched(&m, requests, &cfg);
+    assert_eq!(metrics.completed, 12);
+    // occupancy: above 1 (batching happened), bounded by the pool size
+    assert!(metrics.batch_occupancy() > 1.0);
+    assert!(metrics.batch_occupancy() <= 4.0 + 1e-9);
+    assert_eq!(metrics.decode_amortisation(), metrics.batch_occupancy());
+    // each 3-token prompt is absorbed in one chunk: ≥ 3 rows per pass
+    assert!(metrics.prefill_amortisation() >= 3.0);
+    // row accounting across the whole run
+    let rows: usize = resps.iter().map(|r| r.prompt_len + r.tokens.len() - 1).sum();
+    assert_eq!(metrics.prefill_rows + metrics.decode_rows, rows);
+    // queue accounting: all 12 pre-queued (deterministic for the batch
+    // wrapper), everything admitted, nothing left behind
+    assert_eq!(metrics.queue_peak, 12);
+    assert_eq!(metrics.queue_depth, 0);
+    assert_eq!(metrics.queue_wait_ms.len(), 12);
+    assert_eq!(metrics.cancelled, 0);
+    // all KV rows are released once every sequence finishes
+    assert_eq!(metrics.kv_bytes, 0);
+}
+
+#[test]
+fn run_batched_via_engine_matches_serve_one_all_formats() {
+    // acceptance: the batch wrapper rides the engine, and for every preset
+    // format its greedy *and* sampled outputs equal serve_one exactly —
+    // per-request GenerationParams included
+    for (name, fmt) in all_formats() {
+        let cfg = ModelConfig::preset("nano");
+        let m = Model::new(Params::init(&cfg, 42), QuantPlan::uniform(fmt));
+        let mut requests: Vec<Request> = (0..5)
+            .map(|i| {
+                let prompt = vec![3 + i % 5, 10, 42, 7][..2 + i % 3].to_vec();
+                Request::greedy(i as u64, prompt, 1 + i % 4)
+            })
+            .collect();
+        // a sampled request and a stop-token request ride along
+        requests.push(Request {
+            id: 5,
+            prompt: vec![9, 100],
+            params: GenerationParams {
+                max_new_tokens: 4,
+                temperature: 0.7,
+                top_k: 12,
+                seed: Some(99),
+                ..GenerationParams::default()
+            },
+        });
+        let probe = serve_one(&m, &Request::greedy(6, vec![1, 30], 5));
+        requests.push(Request {
+            id: 6,
+            prompt: vec![1, 30],
+            params: GenerationParams {
+                max_new_tokens: 5,
+                stop_tokens: vec![probe.tokens[1]],
+                ..GenerationParams::default()
+            },
+        });
+        let server_cfg = ServerConfig {
+            max_batch: 3,
+            prefill_chunk: 2,
+            ..ServerConfig::default()
+        };
+        let (resps, _) = run_batched(&m, requests.clone(), &server_cfg);
+        for (resp, req) in resps.iter().zip(&requests) {
+            let want = serve_one(&m, req);
+            assert_eq!(resp.tokens, want.tokens, "{name} request {}", req.id);
+            assert_eq!(resp.finish, want.finish, "{name} request {}", req.id);
+        }
+    }
+}

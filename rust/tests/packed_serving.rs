@@ -103,12 +103,7 @@ fn kv_decode_identical_across_weight_stores() {
 fn batched_server_serves_from_packed_weights() {
     let params = nano_params();
     let reqs: Vec<Request> = (0..6)
-        .map(|i| Request {
-            id: i as u64,
-            prompt: vec![3 + i % 5, 10, 42],
-            max_new_tokens: 5,
-            temperature: 0.0,
-        })
+        .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], 5))
         .collect();
     let fmt = presets::bfp_w(6);
     let packed = Model::new(
@@ -136,6 +131,6 @@ fn batched_server_serves_from_packed_weights() {
         md.weight_memory.dense_f32_bytes
     );
     // single-request path too
-    let r = serve_one(&packed, &reqs[0], 7);
+    let r = serve_one(&packed, &reqs[0]);
     assert_eq!(r.tokens, rp[0].tokens);
 }
