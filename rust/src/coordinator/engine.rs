@@ -222,11 +222,10 @@ impl EngineHandle {
         }
     }
 
-    /// Clone of the scheduler's latest [`Metrics`] snapshot. Counters and
-    /// gauges (completed, steps, occupancy, queue depth/peak, KV bytes…)
-    /// are refreshed every engine step; the per-request latency and
-    /// queue-wait *distributions* are published once at shutdown, so
-    /// mid-flight snapshots report them empty.
+    /// Clone of the scheduler's latest [`Metrics`] snapshot, refreshed
+    /// every engine step — counters, gauges (queue depth/peak, KV bytes…)
+    /// *and* the latency/queue-wait distributions, which are fixed-size
+    /// log-bucket histograms and therefore O(1) to publish live.
     pub fn metrics(&self) -> Metrics {
         self.shared.metrics.lock().unwrap().clone()
     }
@@ -621,7 +620,7 @@ impl<'m> EngineCore<'m> {
                     continue;
                 }
                 let wait_ms = sub.submitted.elapsed().as_secs_f64() * 1e3;
-                self.metrics.queue_wait_ms.push(wait_ms);
+                self.metrics.queue_wait.record(wait_ms);
                 match admit_request(*sub) {
                     Admission::Run(seq) => {
                         announce(&seq);
@@ -733,10 +732,11 @@ impl<'m> EngineCore<'m> {
     }
 
     /// Refresh the shared metrics snapshot so `EngineHandle::metrics`
-    /// observes live state. Per step only the O(1) counters and gauges are
-    /// synced; the per-request distribution vectors (latencies, queue
-    /// waits) are published at shutdown — cloning them every step would
-    /// cost O(completed requests) per step on a long-lived engine.
+    /// observes live state. The whole struct is published every step —
+    /// since the per-request distributions became fixed-size log-bucket
+    /// histograms this is O(1) per step, so mid-flight snapshots now carry
+    /// live latency/queue-wait percentiles too (they used to be
+    /// shutdown-only, when the distributions were per-request vectors).
     fn publish(&mut self, t0: Instant) {
         {
             let q = self.shared.queue.lock().unwrap();
@@ -745,27 +745,12 @@ impl<'m> EngineCore<'m> {
         }
         self.metrics.kv_bytes = self.session.kv_bytes();
         self.metrics.wall = t0.elapsed();
-        let mut snap = self.shared.metrics.lock().unwrap();
-        snap.completed = self.metrics.completed;
-        snap.generated_tokens = self.metrics.generated_tokens;
-        snap.wall = self.metrics.wall;
-        snap.weight_memory = self.metrics.weight_memory;
-        snap.engine_steps = self.metrics.engine_steps;
-        snap.slot_steps = self.metrics.slot_steps;
-        snap.prefill_rows = self.metrics.prefill_rows;
-        snap.prefill_steps = self.metrics.prefill_steps;
-        snap.decode_rows = self.metrics.decode_rows;
-        snap.cancelled = self.metrics.cancelled;
-        snap.queue_depth = self.metrics.queue_depth;
-        snap.queue_peak = self.metrics.queue_peak;
-        snap.kv_bytes = self.metrics.kv_bytes;
+        *self.shared.metrics.lock().unwrap() = self.metrics.clone();
     }
 
-    /// Publish the full final metrics (latency and queue-wait
-    /// distributions included) and reject any submitter still blocked.
+    /// Publish the final metrics and reject any submitter still blocked.
     fn close(&mut self, t0: Instant) {
         self.publish(t0);
-        *self.shared.metrics.lock().unwrap() = self.metrics.clone();
         self.shared.queue.lock().unwrap().closed = true;
         self.shared.space.notify_all();
     }

@@ -1,14 +1,149 @@
 //! Serving metrics: latency distribution, token throughput, and the
 //! served model's resident weight memory.
+//!
+//! Per-request distributions (request latency, admission-queue wait) are
+//! held in fixed-size log-bucket histograms ([`LogHistogram`]), not
+//! per-request vectors: a daemon serving millions of requests accumulates
+//! O(1) state per request, and the whole `Metrics` struct stays cheap to
+//! clone — which is what lets the engine publish a complete live snapshot
+//! (distributions included) every step.
 
 use crate::model::WeightMemory;
 use std::time::Duration;
+
+/// Fixed-size log-bucketed histogram over millisecond samples.
+///
+/// Buckets are quarter-octaves (each spans a factor of 2^(1/4) ≈ 1.19×)
+/// starting at [`LogHistogram::MIN_MS`]; with [`LogHistogram::BUCKETS`]
+/// buckets the range covers ~1 µs to ~70 minutes, and samples outside it
+/// clamp into the edge buckets. Memory is constant no matter how many
+/// samples are recorded — the daemon-scale replacement for the
+/// per-request vectors `Metrics` used to keep. Percentiles come back as
+/// the containing bucket's upper edge (≤ 19% high, clamped to the exact
+/// observed min/max, which are tracked separately); count, sum, min and
+/// max are exact.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    counts: [u64; Self::BUCKETS],
+    total: u64,
+    sum_ms: f64,
+    min_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        LogHistogram {
+            counts: [0; Self::BUCKETS],
+            total: 0,
+            sum_ms: 0.0,
+            min_ms: f64::INFINITY,
+            max_ms: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl LogHistogram {
+    /// Number of buckets (fixed — the whole point).
+    pub const BUCKETS: usize = 128;
+    /// Lower edge of bucket 0, in milliseconds.
+    pub const MIN_MS: f64 = 1e-3;
+    /// Buckets per factor-of-2 span.
+    pub const PER_OCTAVE: f64 = 4.0;
+
+    pub fn new() -> LogHistogram {
+        LogHistogram::default()
+    }
+
+    /// Bucket index for a sample (clamped into range).
+    pub fn bucket(ms: f64) -> usize {
+        if ms.is_nan() || ms <= Self::MIN_MS {
+            // non-positive, sub-minimum and NaN samples land in bucket 0
+            return 0;
+        }
+        let b = ((ms / Self::MIN_MS).log2() * Self::PER_OCTAVE).floor() as isize;
+        b.clamp(0, Self::BUCKETS as isize - 1) as usize
+    }
+
+    /// Lower edge of bucket `i` in milliseconds (`bucket_floor(i + 1)` is
+    /// its upper edge).
+    pub fn bucket_floor(i: usize) -> f64 {
+        Self::MIN_MS * (2.0f64).powf(i as f64 / Self::PER_OCTAVE)
+    }
+
+    /// Record one sample, in milliseconds. A NaN sample is recorded as 0
+    /// (the bucket it lands in anyway), so min/mean/max/percentile stay
+    /// well-defined whatever a caller feeds in.
+    pub fn record(&mut self, ms: f64) {
+        let ms = if ms.is_nan() { 0.0 } else { ms };
+        self.counts[Self::bucket(ms)] += 1;
+        self.total += 1;
+        self.sum_ms += ms;
+        self.min_ms = self.min_ms.min(ms);
+        self.max_ms = self.max_ms.max(ms);
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> usize {
+        self.total as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact mean of all samples (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.total as f64
+        }
+    }
+
+    /// Exact smallest sample (0 when empty).
+    pub fn min(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.min_ms
+        }
+    }
+
+    /// Exact largest sample (0 when empty).
+    pub fn max(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.max_ms
+        }
+    }
+
+    /// The `pct`-th percentile (0–100): the upper edge of the bucket
+    /// holding the sample of that rank, clamped to the exact observed
+    /// min/max — so the error is bounded by the ~19% bucket width.
+    pub fn percentile(&self, pct: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = ((pct / 100.0) * self.total as f64).ceil().clamp(1.0, self.total as f64) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_floor(i + 1).clamp(self.min_ms, self.max_ms);
+            }
+        }
+        self.max_ms
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub completed: usize,
     pub generated_tokens: usize,
-    pub latencies_ms: Vec<f64>,
+    /// Submission-to-finish request latency distribution, milliseconds.
+    pub latency: LogHistogram,
     pub wall: Duration,
     /// Dense-f32 vs actually-resident bytes of the served model's weight
     /// cache (packed payloads under block formats).
@@ -40,9 +175,9 @@ pub struct Metrics {
     /// Highest admission-queue depth observed — how hard backpressure was
     /// leaned on.
     pub queue_peak: usize,
-    /// Per-request time spent in the admission queue before a slot
-    /// admitted it, in milliseconds (one entry per admitted request).
-    pub queue_wait_ms: Vec<f64>,
+    /// Time admitted requests spent in the admission queue before a slot
+    /// took them, milliseconds (one sample per admitted request).
+    pub queue_wait: LogHistogram,
     /// Resident KV-cache bytes across all slots when this snapshot was
     /// published (drops back to 0 once every sequence finishes).
     pub kv_bytes: usize,
@@ -56,17 +191,13 @@ impl Metrics {
     pub fn record(&mut self, latency: Duration, tokens: usize) {
         self.completed += 1;
         self.generated_tokens += tokens;
-        self.latencies_ms.push(latency.as_secs_f64() * 1e3);
+        self.latency.record(latency.as_secs_f64() * 1e3);
     }
 
+    /// Latency percentile in milliseconds (log-bucket resolution, ≤ ~19%
+    /// high; exact at the observed min/max).
     pub fn p(&self, pct: f64) -> f64 {
-        if self.latencies_ms.is_empty() {
-            return 0.0;
-        }
-        let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((pct / 100.0) * (v.len() - 1) as f64).round() as usize;
-        v[idx.min(v.len() - 1)]
+        self.latency.percentile(pct)
     }
 
     /// Mean active slots per engine step — continuous-batching occupancy.
@@ -102,11 +233,7 @@ impl Metrics {
 
     /// Mean time-in-queue across admitted requests, milliseconds.
     pub fn mean_queue_wait_ms(&self) -> f64 {
-        if self.queue_wait_ms.is_empty() {
-            0.0
-        } else {
-            self.queue_wait_ms.iter().sum::<f64>() / self.queue_wait_ms.len() as f64
-        }
+        self.queue_wait.mean()
     }
 
     /// generated tokens per wall-clock second
@@ -173,16 +300,81 @@ mod tests {
     use super::*;
 
     #[test]
+    fn bucket_boundaries() {
+        // bucket 0 starts at MIN_MS; everything at or below lands there
+        assert_eq!(LogHistogram::bucket(0.0), 0);
+        assert_eq!(LogHistogram::bucket(-3.0), 0);
+        assert_eq!(LogHistogram::bucket(LogHistogram::MIN_MS), 0);
+        assert_eq!(LogHistogram::bucket(f64::NAN), 0);
+        // each bucket spans exactly one quarter-octave: a sample nudged
+        // just above floor(i) maps to i, just below floor(i+1) still to i
+        for i in 0..LogHistogram::BUCKETS - 1 {
+            let lo = LogHistogram::bucket_floor(i);
+            let hi = LogHistogram::bucket_floor(i + 1);
+            assert!(hi / lo > 1.18 && hi / lo < 1.20, "bucket {i} width");
+            assert_eq!(LogHistogram::bucket(lo * 1.001), i, "floor of bucket {i}");
+            assert_eq!(LogHistogram::bucket(hi * 0.999), i, "ceil of bucket {i}");
+        }
+        // beyond the last edge everything clamps into the final bucket
+        let top = LogHistogram::bucket_floor(LogHistogram::BUCKETS);
+        assert_eq!(LogHistogram::bucket(top * 1e6), LogHistogram::BUCKETS - 1);
+        // the range really covers ~1µs .. minutes
+        assert!(LogHistogram::bucket_floor(LogHistogram::BUCKETS) > 60_000.0);
+    }
+
+    #[test]
+    fn histogram_stats_and_percentiles() {
+        let mut h = LogHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.percentile(50.0), 0.0);
+        assert_eq!(h.mean(), 0.0);
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.min(), 1.0);
+        assert_eq!(h.max(), 100.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+        // percentiles are bucket upper edges: within one bucket width
+        // (2^(1/4) ≈ 1.19×) of the exact answer
+        let p50 = h.percentile(50.0);
+        assert!(p50 >= 50.0 && p50 <= 50.0 * 1.19, "p50 {p50}");
+        let p99 = h.percentile(99.0);
+        assert!(p99 >= 99.0 && p99 <= 100.0, "p99 {p99}"); // clamped to max
+        assert_eq!(h.percentile(100.0), 100.0);
+        // a single sample reports itself exactly at every percentile
+        let mut one = LogHistogram::new();
+        one.record(7.3);
+        assert_eq!(one.percentile(50.0), 7.3);
+        assert_eq!(one.percentile(99.0), 7.3);
+        // degenerate samples must not poison the stats: NaN records as 0,
+        // negatives land in bucket 0 with exact min/max — and percentile
+        // never panics on its min/max clamp
+        let mut odd = LogHistogram::new();
+        odd.record(f64::NAN);
+        assert_eq!(odd.count(), 1);
+        assert_eq!(odd.min(), 0.0);
+        assert_eq!(odd.max(), 0.0);
+        assert_eq!(odd.percentile(50.0), 0.0);
+        odd.record(-5.0);
+        assert_eq!(odd.min(), -5.0);
+        assert_eq!(odd.max(), 0.0);
+        assert!(odd.percentile(99.0) <= 0.0);
+    }
+
+    #[test]
     fn percentiles() {
         let mut m = Metrics::new();
         for i in 1..=100 {
             m.record(Duration::from_millis(i), 1);
         }
         m.wall = Duration::from_secs(1);
-        assert!((m.p(50.0) - 50.0).abs() <= 1.0);
-        assert!((m.p(99.0) - 99.0).abs() <= 1.0);
+        // log-bucket resolution: within ~19% above the exact percentile
+        assert!(m.p(50.0) >= 50.0 && m.p(50.0) <= 60.0);
+        assert!(m.p(99.0) >= 99.0 && m.p(99.0) <= 100.0);
         assert_eq!(m.throughput_tps(), 100.0);
         assert!(m.summary().contains("tok/s"));
+        assert_eq!(m.latency.count(), 100);
     }
 
     #[test]
@@ -204,7 +396,8 @@ mod tests {
         m.queue_depth = 2;
         m.queue_peak = 7;
         m.cancelled = 3;
-        m.queue_wait_ms = vec![1.0, 3.0];
+        m.queue_wait.record(1.0);
+        m.queue_wait.record(3.0);
         m.kv_bytes = 128;
         assert!((m.mean_queue_wait_ms() - 2.0).abs() < 1e-12);
         let s = m.summary();

@@ -9,7 +9,7 @@ pub mod server;
 
 pub use engine::{Engine, EngineHandle, RequestHandle, SubmitError, TokenEvent};
 pub use experiment::{default_steps, get_or_train, save_result};
-pub use metrics::Metrics;
+pub use metrics::{LogHistogram, Metrics};
 pub use server::{
     run_batched, serve_one, FinishReason, GenerationParams, Request, Response, ServerConfig,
     ENGINE_SEED,

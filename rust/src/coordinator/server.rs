@@ -304,7 +304,7 @@ mod tests {
         // the whole 3-token prompt shares each prefill dequant pass
         assert!(metrics.prefill_amortisation() >= 3.0);
         // queue accounting: all 12 were pre-queued, all were admitted
-        assert_eq!(metrics.queue_wait_ms.len(), 12);
+        assert_eq!(metrics.queue_wait.count(), 12);
         assert_eq!(metrics.queue_peak, 12);
         assert_eq!(metrics.queue_depth, 0);
         assert_eq!(metrics.cancelled, 0);

@@ -1,0 +1,353 @@
+//! Shared per-head attention body (GEMMs ④⑤ of Algorithm 2) — one
+//! implementation behind every execution path.
+//!
+//! The full-context forward ([`super::transformer::Model::forward`]), the
+//! sequential decoder ([`super::kv_cache::DecodeSession`]) and the batched
+//! engine's slot-parallel rows ([`super::kv_cache::BatchedDecodeSession`])
+//! all used to carry their own copy of the per-head loop, each building
+//! three fresh `Tensor`s per head per layer. They now share the two
+//! functions here, which gather head slices into a reusable
+//! [`AttnScratch`] instead: after a scratch's first head, processing more
+//! heads performs **zero further allocations** (asserted by
+//! [`AttnScratch::grow_events`] in tests).
+//!
+//! Bit-identity is the design constraint, not an accident: every
+//! operation replicates the exact sequence the old tensor-based code
+//! performed — gather, `fake_quant_buffer` over the same buffer layout,
+//! the same `matmul_bt` regime split (broadcast kernel via a transposed
+//! copy at m ≥ 4, dot-product panels below), the same row softmax — so
+//! logits are unchanged from the pre-refactor paths and independent of
+//! which path (or thread) computes them.
+
+use crate::quant::{fake_quant_buffer, GemmQuant};
+use crate::tensor::matmul::{gemm_bt_rows, gemm_rows};
+use crate::tensor::Tensor;
+
+/// MAC threshold below which parallel attention stays on the caller's
+/// thread — tiny steps would pay more in pool-dispatch overhead than the
+/// parallelism returns. Lower than the pure-GEMM `PAR_THRESHOLD` (1 << 21)
+/// because each attention "MAC" here also carries KV gathers and per-head
+/// quantisation — several times the work of a GEMM lane — but still high
+/// enough that single-token decode steps on short contexts run serially.
+/// Crossing the threshold never changes results (the parallel lane runs
+/// the identical per-head/per-row code).
+pub(crate) const ATTN_PAR_MACS: usize = 1 << 17;
+
+/// Reusable buffers for one attention worker: per-head query/key/value
+/// gathers, the score matrix, the head's context output, and a transpose
+/// scratch for the broadcast-kernel lane. Buffers grow to the largest
+/// size requested and are then reused verbatim — [`Self::grow_events`]
+/// counts capacity growths so tests can assert that processing additional
+/// heads allocates nothing.
+#[derive(Debug, Default)]
+pub(crate) struct AttnScratch {
+    /// `[rows, hd]` quantised (then scaled) query head.
+    qh: Vec<f32>,
+    /// `[t, hd]` quantised key head.
+    kh: Vec<f32>,
+    /// `[hd, t]` quantised value head, pre-transposed (Vᵀ rows run along
+    /// the key dim, the layout GEMM ⑤ consumes).
+    vt: Vec<f32>,
+    /// `[rows, t]` attention scores / post-softmax weights.
+    scores: Vec<f32>,
+    /// `[rows, hd]` per-head context output.
+    hctx: Vec<f32>,
+    /// Transpose scratch for the m ≥ 4 broadcast lanes.
+    tbuf: Vec<f32>,
+    grow_events: usize,
+}
+
+/// Size `v` to exactly `len` elements, counting capacity growths. Kept
+/// contents are *not* re-zeroed: every scratch buffer is fully written
+/// before it is read (gathers overwrite, the dot-panel kernel assigns,
+/// and the broadcast lane zero-fills its accumulator itself), so reuse
+/// across heads costs no memset.
+fn ensure(v: &mut Vec<f32>, len: usize, grows: &mut usize) {
+    if v.capacity() < len {
+        *grows += 1;
+    }
+    v.resize(len, 0.0);
+}
+
+impl AttnScratch {
+    pub(crate) fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    /// Times any internal buffer had to grow its capacity. Stable across
+    /// heads (and across layers of equal width): the zero-extra-allocation
+    /// guarantee the refactor makes.
+    pub(crate) fn grow_events(&self) -> usize {
+        self.grow_events
+    }
+}
+
+/// `C = A @ Bᵀ` on raw row-major buffers (`a: [m,k]`, `b: [n,k]`,
+/// `out: [m,n]`), replicating [`crate::tensor::matmul::matmul_bt`]'s
+/// regime split — and therefore its bits: at m ≥ 4, transpose `b` into
+/// `tbuf` and run the i-k-j broadcast kernel; below, the 1×4 dot-product
+/// panels. `out` is fully overwritten.
+#[allow(clippy::too_many_arguments)]
+fn gemm_bt_into(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    tbuf: &mut Vec<f32>,
+    grows: &mut usize,
+) {
+    debug_assert!(a.len() >= m * k && b.len() >= n * k && out.len() >= m * n);
+    if m >= 4 {
+        ensure(tbuf, k * n, grows);
+        for j in 0..n {
+            for kk in 0..k {
+                tbuf[kk * n + j] = b[j * k + kk];
+            }
+        }
+        out[..m * n].fill(0.0);
+        gemm_rows(a, tbuf, out, 0..m, k, n);
+    } else {
+        gemm_bt_rows(a, b, out, 0..m, k, n);
+    }
+}
+
+/// Row softmax, exactly [`Tensor::softmax_rows`]'s per-row body.
+fn softmax_row(row: &mut [f32]) {
+    let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum.max(1e-30);
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// One head of full-context causal attention (④⑤) over `q`/`k`/`v`
+/// `[s, d]` projections: gather head `hi`, quantise per the site formats,
+/// scale after quantisation (the ASIC applies it in the accumulator),
+/// mask causally, softmax, and write the head's `[s, hd]` context into
+/// `out` at column `out_col` with row stride `out_stride`. Bit-identical
+/// to the tensor-based per-head body `Model::layer_forward` used to
+/// inline. When `scores_out` is given, the post-softmax,
+/// pre-quantisation attention weights are copied into it (the stats
+/// collector's "A" tensor — the in-scratch copy is quantised in place
+/// for GEMM ⑤ afterwards).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_head_full(
+    scr: &mut AttnScratch,
+    q: &Tensor,
+    k: &Tensor,
+    v: &Tensor,
+    s: usize,
+    hi: usize,
+    hd: usize,
+    scale: f32,
+    q45: (GemmQuant, GemmQuant),
+    out: &mut [f32],
+    out_stride: usize,
+    out_col: usize,
+    scores_out: Option<&mut Vec<f32>>,
+) {
+    // gather head slices: the same `[s, hd]` buffers slice_head built
+    ensure(&mut scr.qh, s * hd, &mut scr.grow_events);
+    ensure(&mut scr.kh, s * hd, &mut scr.grow_events);
+    for i in 0..s {
+        scr.qh[i * hd..(i + 1) * hd].copy_from_slice(&q.row(i)[hi * hd..(hi + 1) * hd]);
+        scr.kh[i * hd..(i + 1) * hd].copy_from_slice(&k.row(i)[hi * hd..(hi + 1) * hd]);
+    }
+    // ④: blocks along head_dim on both operands
+    fake_quant_buffer(&mut scr.qh, hd, q45.0.act);
+    fake_quant_buffer(&mut scr.kh, hd, q45.0.weight);
+    for x in scr.qh.iter_mut() {
+        *x *= scale; // scale after quantisation: ASIC applies it in the accumulator
+    }
+    ensure(&mut scr.scores, s * s, &mut scr.grow_events);
+    gemm_bt_into(
+        &scr.qh,
+        &scr.kh,
+        &mut scr.scores,
+        s,
+        hd,
+        s,
+        &mut scr.tbuf,
+        &mut scr.grow_events,
+    );
+    // causal mask (queries at row i attend keys ≤ i), then row softmax
+    for i in 0..s {
+        let row = &mut scr.scores[i * s..(i + 1) * s];
+        for x in row.iter_mut().skip(i + 1) {
+            *x = f32::NEG_INFINITY;
+        }
+    }
+    for i in 0..s {
+        softmax_row(&mut scr.scores[i * s..(i + 1) * s]);
+    }
+    if let Some(dst) = scores_out {
+        dst.clear();
+        dst.extend_from_slice(&scr.scores[..s * s]);
+    }
+    // ⑤: blocks along the key dim — quantise A rows and Vᵀ rows
+    ensure(&mut scr.vt, hd * s, &mut scr.grow_events);
+    for ti in 0..s {
+        let vrow = &v.row(ti)[hi * hd..(hi + 1) * hd];
+        for (c, &x) in vrow.iter().enumerate() {
+            scr.vt[c * s + ti] = x;
+        }
+    }
+    fake_quant_buffer(&mut scr.scores, s, q45.1.act);
+    fake_quant_buffer(&mut scr.vt, s, q45.1.weight);
+    ensure(&mut scr.hctx, s * hd, &mut scr.grow_events);
+    gemm_bt_into(
+        &scr.scores,
+        &scr.vt,
+        &mut scr.hctx,
+        s,
+        s,
+        hd,
+        &mut scr.tbuf,
+        &mut scr.grow_events,
+    );
+    for i in 0..s {
+        out[i * out_stride + out_col..i * out_stride + out_col + hd]
+            .copy_from_slice(&scr.hctx[i * hd..(i + 1) * hd]);
+    }
+}
+
+/// All heads of one KV-cached attention row (④⑤ for a single query at
+/// position `t - 1` against `t` cached keys): the per-token body shared by
+/// [`super::kv_cache::DecodeSession::step`] and the batched engine's
+/// per-row attention tasks. `cache_k`/`cache_v` hold at least `t` rows of
+/// `d` floats; the result fills `ctx_row` (`[d]`). Bit-identical to the
+/// tensor-based loop both callers used to inline — the gathered `[t, hd]`
+/// operands (and therefore any per-tensor quantisation scales) match the
+/// old code exactly.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attn_row_cached(
+    scr: &mut AttnScratch,
+    q_row: &[f32],
+    cache_k: &[f32],
+    cache_v: &[f32],
+    t: usize,
+    d: usize,
+    h: usize,
+    hd: usize,
+    scale: f32,
+    q45: (GemmQuant, GemmQuant),
+    ctx_row: &mut [f32],
+) {
+    for hi in 0..h {
+        ensure(&mut scr.qh, hd, &mut scr.grow_events);
+        scr.qh.copy_from_slice(&q_row[hi * hd..(hi + 1) * hd]);
+        ensure(&mut scr.kh, t * hd, &mut scr.grow_events);
+        ensure(&mut scr.vt, hd * t, &mut scr.grow_events);
+        for ti in 0..t {
+            let krow = &cache_k[ti * d + hi * hd..ti * d + (hi + 1) * hd];
+            scr.kh[ti * hd..(ti + 1) * hd].copy_from_slice(krow);
+            let vrow = &cache_v[ti * d + hi * hd..ti * d + (hi + 1) * hd];
+            for (c, &x) in vrow.iter().enumerate() {
+                scr.vt[c * t + ti] = x;
+            }
+        }
+        fake_quant_buffer(&mut scr.qh, hd, q45.0.act);
+        fake_quant_buffer(&mut scr.kh, hd, q45.0.weight);
+        for x in scr.qh.iter_mut() {
+            *x *= scale;
+        }
+        ensure(&mut scr.scores, t, &mut scr.grow_events);
+        // m == 1: the dot-product panel lane, like matmul_bt at m < 4
+        gemm_bt_rows(&scr.qh, &scr.kh, &mut scr.scores, 0..1, hd, t);
+        softmax_row(&mut scr.scores);
+        fake_quant_buffer(&mut scr.scores, t, q45.1.act);
+        fake_quant_buffer(&mut scr.vt, t, q45.1.weight);
+        ensure(&mut scr.hctx, hd, &mut scr.grow_events);
+        gemm_bt_rows(&scr.scores, &scr.vt, &mut scr.hctx, 0..1, t, hd);
+        ctx_row[hi * hd..(hi + 1) * hd].copy_from_slice(&scr.hctx[..hd]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::{presets, QFormat};
+    use crate::util::rng::Pcg32;
+
+    fn q45(fmt: QFormat) -> (GemmQuant, GemmQuant) {
+        (GemmQuant::uniform(fmt), GemmQuant::uniform(fmt))
+    }
+
+    #[test]
+    fn full_heads_reuse_scratch_with_zero_extra_allocations() {
+        // the satellite guarantee: after the first head warms the scratch,
+        // every further head performs zero allocations
+        let (s, h, hd) = (12usize, 8usize, 16usize);
+        let d = h * hd;
+        let mut rng = Pcg32::new(9);
+        let q = Tensor::randn(&[s, d], 1.0, &mut rng);
+        let k = Tensor::randn(&[s, d], 1.0, &mut rng);
+        let v = Tensor::randn(&[s, d], 1.0, &mut rng);
+        let mut out = vec![0.0f32; s * d];
+        let mut scr = AttnScratch::new();
+        let fmts = q45(presets::bfp_w(6));
+        attn_head_full(&mut scr, &q, &k, &v, s, 0, hd, 0.25, fmts, &mut out, d, 0, None);
+        let warm = scr.grow_events();
+        assert!(warm > 0, "first head must size the buffers");
+        for hi in 1..h {
+            attn_head_full(
+                &mut scr,
+                &q,
+                &k,
+                &v,
+                s,
+                hi,
+                hd,
+                0.25,
+                fmts,
+                &mut out,
+                d,
+                hi * hd,
+                None,
+            );
+        }
+        assert_eq!(
+            scr.grow_events(),
+            warm,
+            "heads beyond the first must not allocate"
+        );
+    }
+
+    #[test]
+    fn cached_rows_reuse_scratch_at_fixed_context() {
+        let (t, h, hd) = (9usize, 4usize, 8usize);
+        let d = h * hd;
+        let mut rng = Pcg32::new(5);
+        let q = Tensor::randn(&[1, d], 1.0, &mut rng);
+        let ck = Tensor::randn(&[t, d], 1.0, &mut rng);
+        let cv = Tensor::randn(&[t, d], 1.0, &mut rng);
+        let mut ctx = vec![0.0f32; d];
+        let mut scr = AttnScratch::new();
+        let fmts = q45(presets::fixed8());
+        attn_row_cached(&mut scr, &q.data, &ck.data, &cv.data, t, d, h, hd, 0.3, fmts, &mut ctx);
+        let warm = scr.grow_events();
+        for _ in 0..5 {
+            attn_row_cached(
+                &mut scr,
+                &q.data,
+                &ck.data,
+                &cv.data,
+                t,
+                d,
+                h,
+                hd,
+                0.3,
+                fmts,
+                &mut ctx,
+            );
+        }
+        assert_eq!(scr.grow_events(), warm);
+    }
+}

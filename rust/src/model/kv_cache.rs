@@ -19,12 +19,13 @@
 //!   rows quantise independently ([`crate::quant::fake_quant_rows`]), and
 //!   attention is causal per slot over the chunk (row j of a chunk attends
 //!   keys 0..=p0+j only). Attention (④⑤) runs as one task per row on the
-//!   shared scoped-thread worker pool ([`crate::runtime::pool`]) once the
+//!   shared persistent worker pool ([`crate::runtime::pool`]) once the
 //!   step carries enough work, so it scales across cores — across slots
 //!   *and* across a single slot's chunk rows — instead of serialising on
 //!   the scheduler thread. Threading never changes the bits (every row is
 //!   computed by exactly the same code either way).
 
+use super::attention::{attn_row_cached, AttnScratch, ATTN_PAR_MACS};
 use super::config::PosEncoding;
 use super::rope::apply_rope;
 use super::transformer::Model;
@@ -42,6 +43,9 @@ struct LayerCache {
 pub struct DecodeSession<'m> {
     model: &'m Model,
     caches: Vec<LayerCache>,
+    /// Attention scratch reused across steps, layers and heads — steady
+    /// decode allocates nothing here once the buffers are warm.
+    scratch: AttnScratch,
     pub pos: usize,
 }
 
@@ -49,6 +53,7 @@ impl<'m> DecodeSession<'m> {
     pub fn new(model: &'m Model) -> Self {
         DecodeSession {
             caches: vec![LayerCache::default(); model.cfg().n_layers],
+            scratch: AttnScratch::new(),
             model,
             pos: 0,
         }
@@ -93,29 +98,22 @@ impl<'m> DecodeSession<'m> {
             let scale = 1.0 / (hd as f32).sqrt();
             let mut ctx = Tensor::zeros(&[1, d]);
             let q45 = (plan.site(li, 4), plan.site(li, 5));
-            for hi in 0..h {
-                // gather head slices
-                let qh = Tensor::new(&[1, hd], q.data[hi * hd..(hi + 1) * hd].to_vec());
-                let mut kh = Tensor::zeros(&[t, hd]);
-                let mut vh = Tensor::zeros(&[t, hd]);
-                for ti in 0..t {
-                    kh.row_mut(ti)
-                        .copy_from_slice(&cache.k[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
-                    vh.row_mut(ti)
-                        .copy_from_slice(&cache.v[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
-                }
-                let mut qh_q = quant_act(&qh, q45.0.act);
-                let kh_q = quant_act(&kh, q45.0.weight);
-                for r in qh_q.data.iter_mut() {
-                    *r *= scale;
-                }
-                let mut scores = matmul_bt(&qh_q, &kh_q); // [1, t]
-                scores.softmax_rows();
-                let a_q = quant_act(&scores, q45.1.act);
-                let vht_q = quant_act(&vh.t(), q45.1.weight);
-                let ctx_h = matmul_bt(&a_q, &vht_q); // [1, hd]
-                ctx.row_mut(0)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
-            }
+            // ④⑤ via the shared per-row attention body (strided head
+            // gathers into the reused scratch — bit-identical to the
+            // tensor-per-head loop this used to inline)
+            attn_row_cached(
+                &mut self.scratch,
+                &q.data,
+                &cache.k,
+                &cache.v,
+                t,
+                d,
+                h,
+                hd,
+                scale,
+                q45,
+                ctx.row_mut(0),
+            );
             let ctx_q = quant_act(&ctx, plan.site(li, 6).act);
             let att_out = pl.wo_t.matmul_bt(&ctx_q).add_bias(&l.bo);
             let x1 = x.add(&att_out);
@@ -142,6 +140,9 @@ pub struct BatchedDecodeSession<'m> {
     caches: Vec<Vec<LayerCache>>,
     /// tokens consumed so far, per slot
     pos: Vec<usize>,
+    /// One attention scratch per step row, grown on demand and reused
+    /// across layers and steps — steady-state decode re-warms nothing.
+    scratches: Vec<AttnScratch>,
 }
 
 impl<'m> BatchedDecodeSession<'m> {
@@ -150,6 +151,7 @@ impl<'m> BatchedDecodeSession<'m> {
         BatchedDecodeSession {
             caches: vec![vec![LayerCache::default(); model.cfg().n_layers]; n_slots],
             pos: vec![0; n_slots],
+            scratches: Vec::new(),
             model,
         }
     }
@@ -289,6 +291,10 @@ impl<'m> BatchedDecodeSession<'m> {
             }
         }
         let threads = crate::runtime::pool::available_threads();
+        // one scratch per row, kept across layers and steps
+        if self.scratches.len() < r {
+            self.scratches.resize_with(r, AttnScratch::new);
+        }
         for li in 0..cfg.n_layers {
             let l = &m.params.layers[li];
             let pl = m.prepared(li);
@@ -333,6 +339,7 @@ impl<'m> BatchedDecodeSession<'m> {
             let mut tasks: Vec<AttnTask> = Vec::with_capacity(r);
             let mut ctx_rest: &mut [f32] = ctx.data.as_mut_slice();
             let mut q_rest: &[f32] = &q.data;
+            let mut scr_iter = self.scratches.iter_mut();
             for &(slot, toks) in batch {
                 let p0 = self.pos[slot];
                 let cache = &self.caches[slot][li];
@@ -346,6 +353,7 @@ impl<'m> BatchedDecodeSession<'m> {
                         q: q_row,
                         cache,
                         t: p0 + j + 1,
+                        scr: scr_iter.next().expect("one scratch per row"),
                     });
                 }
             }
@@ -405,33 +413,26 @@ impl<'m> BatchedDecodeSession<'m> {
     }
 }
 
-/// MAC threshold below which slot-parallel attention stays on the caller's
-/// thread — tiny steps would pay more in scoped-thread spawn overhead than
-/// the parallelism returns. Lower than the pure-GEMM `PAR_THRESHOLD`
-/// (1 << 21) because each attention "MAC" here also carries KV gathers,
-/// per-head quantisation and small allocations — several times the work of
-/// a GEMM lane — but still high enough that single-token decode steps on
-/// short contexts run serially. Crossing the threshold never changes
-/// results (the parallel lane runs the identical per-slot code).
-const ATTN_PAR_MACS: usize = 1 << 17;
-
 /// One row's attention work for one layer of a chunked step: the row's
 /// `[d]` roped query, the slot's (already-extended) KV cache, how many
-/// keys this row may see, and the matching `&mut` slice of the ctx output.
-/// Rows of the same slot share the cache by `&` reference — attention only
-/// reads it.
+/// keys this row may see, the matching `&mut` slice of the ctx output,
+/// and the task's own reusable scratch. Rows of the same slot share the
+/// cache by `&` reference — attention only reads it.
 struct AttnTask<'a> {
     ctx: &'a mut [f32],
     q: &'a [f32],
     cache: &'a LayerCache,
     /// keys visible to this row: its absolute position + 1
     t: usize,
+    /// the session-resident scratch assigned to this row
+    scr: &'a mut AttnScratch,
 }
 
 /// ④⑤ for one chunk row — exactly the sequential session's per-token
-/// attention body with `t` available keys, so the gathered `[t, hd]`
-/// operands (and therefore any per-tensor quantisation scales) match the
-/// sequential step bit for bit.
+/// attention body with `t` available keys (the shared
+/// [`attn_row_cached`]), so the gathered `[t, hd]` operands (and
+/// therefore any per-tensor quantisation scales) match the sequential
+/// step bit for bit.
 fn attn_row(
     task: &mut AttnTask,
     d: usize,
@@ -440,30 +441,19 @@ fn attn_row(
     scale: f32,
     q45: (GemmQuant, GemmQuant),
 ) {
-    let cache = task.cache;
-    let t = task.t;
-    for hi in 0..h {
-        let qh = Tensor::new(&[1, hd], head_slice(task.q, hi, hd).to_vec());
-        let mut kh = Tensor::zeros(&[t, hd]);
-        let mut vh = Tensor::zeros(&[t, hd]);
-        for ti in 0..t {
-            kh.row_mut(ti)
-                .copy_from_slice(&cache.k[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
-            vh.row_mut(ti)
-                .copy_from_slice(&cache.v[ti * d + hi * hd..ti * d + (hi + 1) * hd]);
-        }
-        let mut qh_q = quant_act(&qh, q45.0.act);
-        let kh_q = quant_act(&kh, q45.0.weight);
-        for x in qh_q.data.iter_mut() {
-            *x *= scale;
-        }
-        let mut scores = matmul_bt(&qh_q, &kh_q); // [1, t]
-        scores.softmax_rows();
-        let a_q = quant_act(&scores, q45.1.act);
-        let vht_q = quant_act(&vh.t(), q45.1.weight);
-        let ctx_h = matmul_bt(&a_q, &vht_q); // [1, hd]
-        task.ctx[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(0));
-    }
+    attn_row_cached(
+        &mut *task.scr,
+        task.q,
+        &task.cache.k,
+        &task.cache.v,
+        task.t,
+        d,
+        h,
+        hd,
+        scale,
+        q45,
+        &mut *task.ctx,
+    );
 }
 
 /// Apply RoPE row by row with each row's own absolute position.
@@ -477,11 +467,6 @@ fn rope_rows(t: &Tensor, positions: &[usize], n_heads: usize) -> Tensor {
         out.row_mut(i).copy_from_slice(&rotated.data);
     }
     out
-}
-
-#[inline]
-fn head_slice(row: &[f32], hi: usize, hd: usize) -> &[f32] {
-    &row[hi * hd..(hi + 1) * hd]
 }
 
 /// Temperature sampling restricted to the `top_k` highest logits;

@@ -2,6 +2,7 @@
 //! quantisation plans, full-sequence forward (Algorithm 2's eight GEMMs),
 //! RoPE variant, and KV-cache incremental decoding.
 
+pub(crate) mod attention;
 pub mod config;
 pub mod kv_cache;
 pub mod params;

@@ -3,6 +3,7 @@
 //! attention, GELU MLP, tied-embedding LM head (kept FP32, as the paper
 //! quantises the per-layer GEMMs).
 
+use super::attention;
 use super::config::{ModelConfig, PosEncoding};
 use super::params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
 use super::plan::{GemmMode, QuantPlan, WeightStore};
@@ -232,47 +233,97 @@ impl Model {
         }
         let scale = 1.0 / (hd as f32).sqrt();
         let mut ctx = Tensor::zeros(&[s, d]);
-        // per-head attention: ④ S = QKᵀ, ⑤ C = softmax(S)·V, both quantised
+        // per-head attention: ④ S = QKᵀ, ⑤ C = softmax(S)·V, both quantised,
+        // gathered through strided head views into reused scratch buffers
+        // (the shared body in `model::attention`) instead of three fresh
+        // Tensors per head per layer. Heads fan out over the worker pool
+        // when the layer carries enough work; the serial lane (also the
+        // stats-recording lane) runs the identical per-head code, so the
+        // thread count never changes the bits.
         let q45 = (plan.site(li, 4), plan.site(li, 5));
-        for hi in 0..h {
-            let slice_head = |t: &Tensor| -> Tensor {
-                let mut out = Tensor::zeros(&[s, hd]);
-                for i in 0..s {
-                    out.row_mut(i)
-                        .copy_from_slice(&t.row(i)[hi * hd..(hi + 1) * hd]);
-                }
-                out
-            };
-            let (qh, kh, vh) = (slice_head(&q), slice_head(&k), slice_head(&v));
-            // ④: blocks along head_dim on both operands
-            let mut qh_q = quant_act(&qh, q45.0.act);
-            let kh_q = quant_act(&kh, q45.0.weight);
-            for r in qh_q.data.iter_mut() {
-                *r *= scale; // scale after quantisation: ASIC applies it in the accumulator
-            }
-            let mut scores = matmul_bt(&qh_q, &kh_q);
-            // causal mask (queries at pos0+i attend keys ≤ pos0+i; full
-            // context path has pos0 = key offset 0)
-            for i in 0..s {
-                let row = scores.row_mut(i);
-                for (j, val) in row.iter_mut().enumerate() {
-                    if j > i {
-                        *val = f32::NEG_INFINITY;
+        let threads = crate::runtime::pool::available_threads();
+        let attn_macs = 2 * s * s * d;
+        if stats.is_some() || threads <= 1 || h < 2 || attn_macs < attention::ATTN_PAR_MACS {
+            let mut scr = attention::AttnScratch::new();
+            let mut a_rec: Vec<f32> = Vec::new();
+            for hi in 0..h {
+                let rec = if hi == 0 && stats.is_some() {
+                    Some(&mut a_rec)
+                } else {
+                    None
+                };
+                attention::attn_head_full(
+                    &mut scr,
+                    &q,
+                    &k,
+                    &v,
+                    s,
+                    hi,
+                    hd,
+                    scale,
+                    q45,
+                    &mut ctx.data,
+                    d,
+                    hi * hd,
+                    rec,
+                );
+                if hi == 0 {
+                    if let Some(st) = stats.as_deref_mut() {
+                        st.record("A", li, &a_rec);
                     }
                 }
             }
-            scores.softmax_rows();
-            if let Some(st) = stats.as_deref_mut() {
-                if hi == 0 {
-                    st.record("A", li, &scores.data);
-                }
+        } else {
+            // contiguous head ranges, one scratch + one [s, range·hd]
+            // output per task, stitched into ctx afterwards — allocations
+            // stay O(threads) per layer no matter how many heads
+            struct HeadTask {
+                h0: usize,
+                h1: usize,
+                out: Vec<f32>,
+                scr: attention::AttnScratch,
             }
-            // ⑤: blocks along the key dim: quantise A rows and Vᵀ rows
-            let a_q = quant_act(&scores, q45.1.act);
-            let vht_q = quant_act(&vh.t(), q45.1.weight);
-            let ctx_h = matmul_bt(&a_q, &vht_q);
-            for i in 0..s {
-                ctx.row_mut(i)[hi * hd..(hi + 1) * hd].copy_from_slice(ctx_h.row(i));
+            let nt = threads.min(h);
+            let per = h.div_ceil(nt);
+            let mut tasks: Vec<HeadTask> = Vec::with_capacity(nt);
+            let mut h0 = 0usize;
+            while h0 < h {
+                let h1 = (h0 + per).min(h);
+                tasks.push(HeadTask {
+                    h0,
+                    h1,
+                    out: vec![0.0f32; s * (h1 - h0) * hd],
+                    scr: attention::AttnScratch::new(),
+                });
+                h0 = h1;
+            }
+            let (qr, kr, vr) = (&q, &k, &v);
+            crate::runtime::pool::run_mut(&mut tasks, nt, |t| {
+                let w = (t.h1 - t.h0) * hd;
+                for hi in t.h0..t.h1 {
+                    attention::attn_head_full(
+                        &mut t.scr,
+                        qr,
+                        kr,
+                        vr,
+                        s,
+                        hi,
+                        hd,
+                        scale,
+                        q45,
+                        &mut t.out,
+                        w,
+                        (hi - t.h0) * hd,
+                        None,
+                    );
+                }
+            });
+            for t in &tasks {
+                let w = (t.h1 - t.h0) * hd;
+                for i in 0..s {
+                    ctx.data[i * d + t.h0 * hd..i * d + t.h0 * hd + w]
+                        .copy_from_slice(&t.out[i * w..(i + 1) * w]);
+                }
             }
         }
         if let Some(st) = stats.as_deref_mut() {

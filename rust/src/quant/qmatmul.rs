@@ -20,9 +20,9 @@
 
 use super::block::block_ranges;
 use super::config::{GemmQuant, QFormat};
-use super::qtensor::{decode, QTensor};
+use super::qtensor::QTensor;
 use crate::tensor::matmul::{
-    available_threads, dot, gemm_bt_rows, matmul, matmul_bt, PAR_THRESHOLD,
+    available_threads, dot, gemm_bt_rows, gemm_rows, matmul, matmul_bt, PAR_THRESHOLD,
 };
 use crate::tensor::Tensor;
 
@@ -76,24 +76,123 @@ pub fn qmatmul_packed_inplace(act: &mut Tensor, weight: &QTensor, act_fmt: QForm
 }
 
 /// `a [m,k] @ dequant(qw) [n,k]ᵀ` with block dequantisation fused into the
-/// GEMM; `a` is used as-is (the caller quantises it). Two regimes:
+/// GEMM; `a` is used as-is (the caller quantises it). This is the crate's
+/// one packed-GEMM dispatch point — serving *and* the full-context
+/// experiment path route here — with two regimes:
 ///
 /// * **decode (m < 4)** — the memory-bound per-token path: delegates to
 ///   [`matmul_packed_bt_rowwise`], whose 4-row dequant panels stream
 ///   through the same `gemm_bt_rows` kernel the dense path uses, so only
 ///   one small scratch panel is ever resident.
-/// * **prefill (m ≥ 4)** — compute-bound: dequantise once into a transient
-///   dense buffer and reuse the threaded broadcast GEMM; peak extra memory
-///   is one weight matrix, not one per layer.
+/// * **prefill (m ≥ 4)** — compute-bound: delegates to
+///   [`matmul_packed_bt_bcast`], which streams column panels of the packed
+///   weight through the broadcast kernel — each weight row decoded exactly
+///   once per call, into a bounded panel scratch, never into a transient
+///   dense weight matrix.
 ///
 /// Both regimes are bit-identical to `matmul_bt(a, &decode(qw))` because
 /// every output element accumulates the identical value sequence.
 pub fn matmul_packed_bt(a: &Tensor, qw: &QTensor) -> Tensor {
     let (m, _) = a.dims2();
     if m >= 4 {
-        return matmul_bt(a, &decode(qw));
+        return matmul_packed_bt_bcast(a, qw);
     }
     matmul_packed_bt_rowwise(a, qw)
+}
+
+/// Column width of the fused prefill kernel's decode panel: big enough to
+/// amortise the per-panel transpose, small enough that the scratch
+/// (`2 · JBLK · k` floats per thread) stays cache-resident.
+const BCAST_JBLK: usize = 64;
+
+/// `a [m,k] @ dequant(qw) [n,k]ᵀ` for the compute-bound prefill regime
+/// (m ≥ 4) with block dequantisation fused into the GEMM. Replaces the
+/// transient dense decode the experiment path used to pay per call: the
+/// packed weight is decoded one `[≤64, k]` column panel at a time (each
+/// weight row exactly once per call), transposed into a panel-local
+/// `[k, ≤64]` buffer, and streamed through the same i-k-j broadcast kernel
+/// the dense path uses — so every output element accumulates the identical
+/// value sequence and the result is bit-identical to
+/// `matmul_bt(a, &decode(qw))` (tested), while peak scratch drops from one
+/// dense weight matrix to a few panel buffers. Threads over column panels
+/// on the shared worker pool above the `PAR_THRESHOLD` MAC count;
+/// per-element accumulation order is independent of the column partition,
+/// so the thread count never changes the bits.
+pub fn matmul_packed_bt_bcast(a: &Tensor, qw: &QTensor) -> Tensor {
+    let (m, k) = a.dims2();
+    assert_eq!(qw.shape.len(), 2, "packed weight must be 2-D, got {:?}", qw.shape);
+    let (n, k2) = (qw.shape[0], qw.shape[1]);
+    assert_eq!(k, k2, "matmul_packed_bt_bcast inner dims: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    let threads = available_threads();
+    if m * n * k >= PAR_THRESHOLD && threads > 1 && n > BCAST_JBLK {
+        // parallel over disjoint column ranges; each task decodes its own
+        // rows (still exactly once overall) into a private [m, chunk]
+        // buffer that is stitched back afterwards
+        let nt = threads.min(n.div_ceil(BCAST_JBLK));
+        let per = n.div_ceil(nt);
+        let mut chunks: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        let mut j0 = 0usize;
+        while j0 < n {
+            let j1 = (j0 + per).min(n);
+            chunks.push((j0, j1, vec![0.0f32; m * (j1 - j0)]));
+            j0 = j1;
+        }
+        crate::runtime::pool::run_mut(&mut chunks, nt, |c| {
+            packed_bcast_columns(&a.data, m, k, qw, c.0, c.1, &mut c.2)
+        });
+        for (j0, j1, buf) in &chunks {
+            let w = j1 - j0;
+            for i in 0..m {
+                out[i * n + j0..i * n + j1].copy_from_slice(&buf[i * w..(i + 1) * w]);
+            }
+        }
+    } else {
+        packed_bcast_columns(&a.data, m, k, qw, 0, n, &mut out);
+    }
+    Tensor::new(&[m, n], out)
+}
+
+/// Fill `out` (row-major `[m, j1-j0]`) with output columns `[j0, j1)` of
+/// the fused prefill GEMM: decode a `[≤JBLK, k]` row panel of the packed
+/// weight, transpose it to `[k, ≤JBLK]`, run the broadcast kernel over all
+/// m activation rows, and copy the panel's `[m, w]` result into place.
+fn packed_bcast_columns(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    qw: &QTensor,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let w_total = j1 - j0;
+    debug_assert_eq!(out.len(), m * w_total);
+    let wmax = BCAST_JBLK.min(w_total.max(1));
+    let mut panel = vec![0.0f32; wmax * k];
+    let mut panel_t = vec![0.0f32; k * wmax];
+    let mut tmp = vec![0.0f32; m * wmax];
+    let mut j = j0;
+    while j < j1 {
+        let je = (j + BCAST_JBLK).min(j1);
+        let w = je - j;
+        for r in 0..w {
+            qw.decode_row_into(j + r, &mut panel[r * k..(r + 1) * k]);
+        }
+        for r in 0..w {
+            for kk in 0..k {
+                panel_t[kk * w + r] = panel[r * k + kk];
+            }
+        }
+        let t = &mut tmp[..m * w];
+        t.fill(0.0);
+        gemm_rows(a, &panel_t[..k * w], t, 0..m, k, w);
+        for i in 0..m {
+            out[i * w_total + (j - j0)..i * w_total + (je - j0)]
+                .copy_from_slice(&t[i * w..(i + 1) * w]);
+        }
+        j = je;
+    }
 }
 
 /// `out[i][j - j0] = dot(a_i, dequant(qw row j))` for `j ∈ [j0, j1)`,
@@ -141,9 +240,9 @@ fn packed_bt_panel(
 /// streamed against every activation row, so weights are decoded once per
 /// layer per step no matter how many sequences share the step — the
 /// amortisation continuous batching exists to buy. Unlike the m ≥ 4 prefill
-/// regime (transient dense decode + broadcast kernel, different f32
-/// summation order), every output row here accumulates in exactly the order
-/// the m == 1 path uses, so row i of the batch is bit-identical to a
+/// regime (fused column panels through the broadcast kernel, a different
+/// f32 summation order), every output row here accumulates in exactly the
+/// order the m == 1 path uses, so row i of the batch is bit-identical to a
 /// single-sequence decode of that row (tested).
 pub fn matmul_packed_bt_rowwise(a: &Tensor, qw: &QTensor) -> Tensor {
     let (m, k) = a.dims2();
@@ -371,6 +470,44 @@ mod tests {
             let single = matmul_packed_bt(&ai, &packed);
             assert_eq!(batched.row(i), single.row(0), "row {i}");
         }
+    }
+
+    #[test]
+    fn packed_bcast_matches_transient_dense_decode_bitwise() {
+        // the pre-refactor m ≥ 4 path decoded the whole packed weight into
+        // a transient dense matrix and called matmul_bt; the fused panel
+        // kernel must reproduce those bits exactly for every preset format
+        // (ragged k blocks and non-JBLK-aligned column tails included)
+        let mut formats = presets::table3_formats();
+        formats.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+        for (name, fmt) in formats {
+            check(&format!("bcast == dense decode {name}"), 10, |rng| {
+                let m = 4 + rng.below(6);
+                let k = 5 + rng.below(60);
+                let n = 1 + rng.below(90);
+                let a = Tensor::new(&[m, k], llmish_values(rng, m * k, 1.0, 0.05));
+                let w = Tensor::new(&[n, k], llmish_values(rng, n * k, 0.3, 0.02));
+                let packed = crate::quant::qtensor::encode(&w, fmt);
+                let want = matmul_bt(&a, &crate::quant::qtensor::decode(&packed));
+                let got = matmul_packed_bt_bcast(&a, &packed);
+                close_slice(&want.data, &got.data, 0.0, name)
+            });
+        }
+    }
+
+    #[test]
+    fn packed_bcast_threaded_lane_bitwise() {
+        // force the column-parallel lane (m·n·k ≥ PAR_THRESHOLD with a
+        // ragged tail vs the 64-wide panel) — still the dense-decode bits
+        let mut rng = crate::util::rng::Pcg32::new(44);
+        let (m, k, n) = (8usize, 1024usize, 300usize);
+        let fmt = presets::bfp_w(6);
+        let a = Tensor::new(&[m, k], llmish_values(&mut rng, m * k, 1.0, 0.02));
+        let w = Tensor::new(&[n, k], llmish_values(&mut rng, n * k, 0.3, 0.0));
+        let packed = crate::quant::qtensor::encode(&w, fmt);
+        let want = matmul_bt(&a, &crate::quant::qtensor::decode(&packed));
+        let got = matmul_packed_bt_bcast(&a, &packed);
+        assert_eq!(want.data, got.data);
     }
 
     #[test]

@@ -16,9 +16,10 @@
 /// false instead of tripping over [`stub`]'s `Disabled` errors.
 pub const PJRT_AVAILABLE: bool = cfg!(feature = "xla");
 
-/// Scoped-thread worker pool shared by the GEMM kernels and the batched
-/// engine's slot-parallel attention. Feature-independent: it backs the
-/// CPU hot paths whether or not the PJRT client is compiled in.
+/// Persistent worker pool shared by the GEMM kernels, the fused packed
+/// prefill/decode lanes, and the batched engine's slot-parallel attention.
+/// Feature-independent: it backs the CPU hot paths whether or not the
+/// PJRT client is compiled in.
 pub mod pool;
 
 #[cfg(feature = "xla")]

@@ -1,25 +1,58 @@
-//! Shared scoped-thread worker pool — the crate's one threading primitive.
+//! Persistent worker pool — the crate's one threading primitive.
 //!
 //! Every parallel hot path (the dense GEMM row partition, the packed GEMM's
-//! column panels, and the batched engine's slot-parallel attention) funnels
-//! through [`run_mut`]: a scoped-thread pool whose workers pull items off a
-//! mutex-guarded iterator, so heterogeneous items (e.g. attention over
-//! slots at very different sequence positions) load-balance dynamically
-//! instead of being pinned to a static partition. Scoped threads mean no
-//! `'static` bounds — items may borrow the caller's stack — and the pool
-//! tears down before `run_mut` returns, so there is no global state and no
-//! shutdown protocol.
+//! column panels, the fused prefill kernel's column blocks, and the batched
+//! engine's slot-parallel attention) funnels through [`run_mut`]: workers
+//! pull items off a mutex-guarded iterator, so heterogeneous items (e.g.
+//! attention over slots at very different sequence positions) load-balance
+//! dynamically instead of being pinned to a static partition.
 //!
-//! Grown out of the row-partition helper that used to live privately in
-//! `tensor::matmul`; generalised here so the batched decode engine's
-//! attention (④⑤) can share it.
+//! Unlike the scoped-thread pool this module used to be, the workers are
+//! **long-lived**: a [`WorkerPool`] is started lazily on first use
+//! ([`global`]), sized by `BBQ_THREADS` (or the machine's available
+//! parallelism), and its workers park between jobs instead of being
+//! re-spawned per GEMM per layer — the recurring spawn/join cost the
+//! roadmap flagged is paid exactly once per process ([`spawn_count`] lets
+//! tests assert that steady-state decode loops spawn nothing). The
+//! scoped-job guarantee is kept: [`WorkerPool::scoped`] does not return
+//! until every worker has finished the job, so jobs may borrow the
+//! caller's stack exactly like `std::thread::scope` allowed.
+//!
+//! Threading never changes results anywhere in the crate: every item is
+//! computed by the same code whether it runs on a worker or inline, and
+//! the GEMM callers partition work so each output element accumulates in a
+//! fixed order.
 
 use std::ops::Range;
-use std::sync::Mutex;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::JoinHandle;
 
-/// Thread budget: `BBQ_THREADS` env override, else the machine's available
+thread_local! {
+    /// Per-thread override of the thread budget (test hook; see
+    /// [`with_threads`]).
+    static THREADS_OVERRIDE: std::cell::Cell<Option<usize>> =
+        const { std::cell::Cell::new(None) };
+    /// True while this thread is executing a pool job (worker or
+    /// participating caller). Nested parallel calls run inline instead of
+    /// deadlocking on the dispatch lock.
+    static IN_POOL_JOB: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Thread budget: the calling thread's [`with_threads`] override if set,
+/// else the `BBQ_THREADS` env override, else the machine's available
 /// parallelism. Always ≥ 1.
 pub fn available_threads() -> usize {
+    if let Some(n) = THREADS_OVERRIDE.with(|c| c.get()) {
+        return n;
+    }
+    configured_threads()
+}
+
+/// The process-wide thread budget (env/machine only — ignores the
+/// per-thread test override, because the global pool is sized once).
+fn configured_threads() -> usize {
     std::env::var("BBQ_THREADS")
         .ok()
         .and_then(|s| s.parse().ok())
@@ -31,14 +64,278 @@ pub fn available_threads() -> usize {
         .max(1)
 }
 
-/// Run `f` once per item across up to `threads` scoped worker threads.
+/// Run `f` with [`available_threads`] pinned to `threads` on this thread
+/// (restored on exit, panics included). A test hook: lets one process
+/// compare thread counts — e.g. assert a forward pass is bit-identical
+/// under 1 and 4 threads — without racing on the process environment.
+/// Only affects dispatch decisions made on the calling thread.
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREADS_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREADS_OVERRIDE.with(|c| c.replace(Some(threads.max(1))));
+    let _restore = Restore(prev);
+    f()
+}
+
+/// Worker threads spawned by every [`WorkerPool`] so far (process-wide,
+/// monotonic). Steady-state serving must not move this: the acceptance
+/// tests snapshot it after pool start and assert whole forward/decode
+/// loops leave it unchanged.
+pub fn spawn_count() -> usize {
+    SPAWN_COUNT.load(Ordering::SeqCst)
+}
+
+static SPAWN_COUNT: AtomicUsize = AtomicUsize::new(0);
+
+/// Type-erased scoped job: a borrow of the caller's closure. Sound because
+/// [`WorkerPool::scoped`] blocks until every worker finished the job, so
+/// the pointee outlives every use.
+struct JobPtr(*const (dyn Fn() + Sync));
+unsafe impl Send for JobPtr {}
+
+struct PoolState {
+    job: Option<JobPtr>,
+    /// Bumped per job so each worker runs each job exactly once.
+    epoch: u64,
+    /// Workers that have not yet picked up the current job.
+    to_start: usize,
+    /// Workers currently executing the current job.
+    running: usize,
+    /// A worker's job execution panicked (the worker itself survives).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work: Condvar,
+    /// The dispatching caller parks here until every worker is done.
+    done: Condvar,
+}
+
+impl PoolShared {
+    /// Lock the state, recovering from poisoning (a panicking job must not
+    /// brick the pool — the panic is re-raised on the caller instead).
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A persistent pool of parked worker threads with a scoped-job API.
 ///
-/// Workers pull items dynamically from a shared queue, so uneven items
-/// (long vs short attention contexts, ragged GEMM panels) keep every core
-/// busy. With `threads <= 1` or a single item the loop runs inline on the
-/// caller's thread — same `f`, same order-independent semantics, zero
-/// spawn cost. `f` must be safe to call concurrently on *different* items;
-/// each item is visited exactly once.
+/// `WorkerPool::new(t)` spawns `t - 1` workers; the thread calling
+/// [`WorkerPool::scoped`] is always a participant, so a pool sized 1 has
+/// no workers at all and every job runs inline. Jobs are dispatched one
+/// at a time (a caller that finds the workers busy runs its job inline
+/// rather than waiting), each job subscribes up to its requested thread
+/// count of workers (the rest stay parked), and `scoped` returns only
+/// after the last participant finishes
+/// — which is what makes it safe for jobs to borrow stack data. A panic
+/// inside a job is caught on the workers (they park again and stay
+/// reusable) and re-raised on the calling thread.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    /// Serialises job dispatch: one scoped job owns the workers at a time.
+    dispatch: Mutex<()>,
+    workers: usize,
+    spawned: AtomicUsize,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl WorkerPool {
+    /// Build a pool sized for `threads` total participants (the caller
+    /// counts as one, so this spawns `threads - 1` workers).
+    pub fn new(threads: usize) -> WorkerPool {
+        let workers = threads.max(1) - 1;
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                job: None,
+                epoch: 0,
+                to_start: 0,
+                running: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = shared.clone();
+            SPAWN_COUNT.fetch_add(1, Ordering::SeqCst);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("bbq-pool-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn pool worker"),
+            );
+        }
+        WorkerPool {
+            shared,
+            dispatch: Mutex::new(()),
+            workers,
+            spawned: AtomicUsize::new(workers),
+            handles: Mutex::new(handles),
+        }
+    }
+
+    /// Parked worker threads owned by this pool.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Worker threads this pool has spawned over its lifetime (equals
+    /// [`Self::workers`] — workers are reused, never re-spawned; the
+    /// counter exists so tests can assert exactly that).
+    pub fn spawned(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Run `f` once on up to `threads - 1` pool workers *and* the calling
+    /// thread, returning once all participants have finished. `f` is
+    /// typically a queue-drain loop, so extra participants beyond the
+    /// number of work items simply find the queue empty and return. `f`
+    /// may borrow the caller's stack; it must be safe to run concurrently
+    /// with itself. Workers beyond the cap skip the job and stay parked,
+    /// so a `threads` below the pool size genuinely bounds concurrency.
+    ///
+    /// Runs inline (no workers involved) when `threads <= 1`, when the
+    /// pool has no workers, when called from inside another pool job, or
+    /// when another caller currently owns the workers — concurrent and
+    /// nested parallel sections degrade to sequential execution instead
+    /// of deadlocking or stalling behind a foreign job.
+    pub fn scoped<F: Fn() + Sync>(&self, threads: usize, f: F) {
+        let helpers = threads.saturating_sub(1).min(self.workers);
+        if helpers == 0 || IN_POOL_JOB.with(|c| c.get()) {
+            f();
+            return;
+        }
+        // Jobs are dispatched one at a time; rather than queueing behind
+        // another caller's whole job (unbounded added latency for, say,
+        // an engine step racing an experiment forward), a contended
+        // caller just runs its work inline on its own thread.
+        let _serial = match self.dispatch.try_lock() {
+            Ok(guard) => guard,
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                f();
+                return;
+            }
+        };
+        {
+            let fr: &(dyn Fn() + Sync) = &f;
+            // SAFETY: erase the borrow's lifetime. Sound because the
+            // rendezvous below blocks until every subscribed worker has
+            // finished with the job, so the pointee strictly outlives
+            // every use.
+            let job: &'static (dyn Fn() + Sync + 'static) = unsafe { std::mem::transmute(fr) };
+            let mut st = self.shared.lock();
+            st.job = Some(JobPtr(job as *const _));
+            st.epoch = st.epoch.wrapping_add(1);
+            st.to_start = helpers;
+            st.running = 0;
+            st.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // The caller is a participant too.
+        IN_POOL_JOB.with(|c| c.set(true));
+        let mine = catch_unwind(AssertUnwindSafe(&f));
+        IN_POOL_JOB.with(|c| c.set(false));
+        // Rendezvous: every subscribed worker has started and finished.
+        let worker_panicked = {
+            let mut st = self.shared.lock();
+            while st.to_start > 0 || st.running > 0 {
+                st = self.shared.done.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.job = None;
+            st.panicked
+        };
+        match mine {
+            Err(payload) => resume_unwind(payload),
+            Ok(()) if worker_panicked => panic!("worker panicked during pool job"),
+            Ok(()) => {}
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    let mut seen = 0u64;
+    loop {
+        let task = {
+            let mut st = shared.lock();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(job) = &st.job {
+                        let ptr = job.0;
+                        seen = st.epoch;
+                        // subscribe only while the job wants more hands —
+                        // a capped job leaves the rest of the pool parked
+                        if st.to_start > 0 {
+                            st.to_start -= 1;
+                            st.running += 1;
+                            break ptr;
+                        }
+                    }
+                }
+                st = shared.work.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        IN_POOL_JOB.with(|c| c.set(true));
+        // The job borrow is valid: the dispatcher cannot return from
+        // `scoped` until this worker decrements `running` below.
+        let res = catch_unwind(AssertUnwindSafe(|| unsafe { (&*task)() }));
+        IN_POOL_JOB.with(|c| c.set(false));
+        let mut st = shared.lock();
+        if res.is_err() {
+            st.panicked = true;
+        }
+        st.running -= 1;
+        if st.to_start == 0 && st.running == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide pool, started lazily on first use and sized by
+/// `BBQ_THREADS` (else available parallelism). Lives for the whole
+/// process; workers park between jobs and are never re-spawned.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL.get_or_init(|| WorkerPool::new(configured_threads()))
+}
+
+/// Run `f` once per item across up to `threads` participants of the
+/// global pool (the calling thread included; workers beyond the cap stay
+/// parked).
+///
+/// Participants pull items dynamically from a shared queue, so uneven
+/// items (long vs short attention contexts, ragged GEMM panels) keep every
+/// core busy. With `threads <= 1` or a single item the loop runs inline on
+/// the caller's thread — same `f`, same order-independent semantics, no
+/// pool involved. `f` must be safe to call concurrently on *different*
+/// items; each item is visited exactly once regardless of thread count.
 pub fn run_mut<T, F>(items: &mut [T], threads: usize, f: F)
 where
     T: Send,
@@ -56,20 +353,14 @@ where
         return;
     }
     // IterMut yields &mut T with the slice's lifetime, not the lock
-    // guard's, so a worker holds the lock only long enough to grab its
-    // next item.
+    // guard's, so a participant holds the lock only long enough to grab
+    // its next item.
     let queue = Mutex::new(items.iter_mut());
-    let fref = &f;
-    let qref = &queue;
-    std::thread::scope(|scope| {
-        for _ in 0..nt {
-            scope.spawn(move || loop {
-                let next = qref.lock().unwrap().next();
-                match next {
-                    Some(item) => fref(item),
-                    None => break,
-                }
-            });
+    global().scoped(nt, || loop {
+        let next = queue.lock().unwrap().next();
+        match next {
+            Some(item) => f(item),
+            None => break,
         }
     });
 }
@@ -144,7 +435,86 @@ mod tests {
     }
 
     #[test]
-    fn threads_env_floor() {
+    fn threads_env_floor_and_override() {
         assert!(available_threads() >= 1);
+        let inside = with_threads(3, available_threads);
+        assert_eq!(inside, 3);
+        // restored afterwards (either the env/machine value, not the pin)
+        assert_eq!(available_threads(), configured_threads());
+        // nested overrides restore the outer pin
+        with_threads(2, || {
+            assert_eq!(available_threads(), 2);
+            with_threads(5, || assert_eq!(available_threads(), 5));
+            assert_eq!(available_threads(), 2);
+        });
+    }
+
+    #[test]
+    fn workers_are_reused_across_jobs() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 2);
+        assert_eq!(pool.spawned(), 2);
+        let hits = AtomicUsize::new(0);
+        for _ in 0..16 {
+            pool.scoped(3, || {
+                hits.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        // every participant (2 workers + caller) ran each of the 16 jobs,
+        // and not a single extra thread was spawned to do it
+        assert_eq!(hits.load(Ordering::SeqCst), 16 * 3);
+        assert_eq!(pool.spawned(), 2);
+        // a capped job leaves the extra worker parked: exactly one worker
+        // joins the caller
+        let capped = AtomicUsize::new(0);
+        pool.scoped(2, || {
+            capped.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(capped.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_job() {
+        let pool = WorkerPool::new(3);
+        let spawned = pool.spawned();
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped(3, || panic!("job panic"));
+        }));
+        assert!(boom.is_err(), "job panic must propagate to the caller");
+        // the pool is still serviceable afterwards, with the same workers
+        let hits = AtomicUsize::new(0);
+        pool.scoped(3, || {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.spawned(), spawned);
+    }
+
+    #[test]
+    fn run_mut_panic_propagates_and_pool_recovers() {
+        let mut items: Vec<usize> = (0..8).collect();
+        let boom = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_mut(&mut items, 4, |x| {
+                if *x == 3 {
+                    panic!("item 3");
+                }
+            });
+        }));
+        assert!(boom.is_err());
+        // the global pool keeps working after the panicked job
+        let mut again: Vec<usize> = vec![0; 9];
+        run_mut(&mut again, 4, |x| *x += 1);
+        assert!(again.iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn nested_run_mut_degrades_to_inline() {
+        // a pool job that itself calls run_mut must not deadlock on the
+        // dispatch lock — the inner call runs inline on its participant
+        let mut outer: Vec<Vec<usize>> = (0..6).map(|_| vec![0; 5]).collect();
+        run_mut(&mut outer, 4, |inner| {
+            run_mut(inner, 4, |x| *x += 1);
+        });
+        assert!(outer.iter().flatten().all(|&x| x == 1));
     }
 }

@@ -2,7 +2,7 @@
 //!
 //! `matmul(a, b)` computes `a @ b` for 2-D tensors with an i-k-j loop order
 //! (unit-stride inner loop over B's rows), 4-wide k unrolling and cache
-//! blocking. Multi-threaded for large problems via the shared scoped-thread
+//! blocking. Multi-threaded for large problems via the shared persistent
 //! worker pool in [`crate::runtime::pool`] (no rayon in this environment).
 
 use super::Tensor;
@@ -70,8 +70,12 @@ pub fn matmul_bt_rowwise(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// Row-major inner GEMM over a row range. `out` addresses rows relative to
-/// `rows.start`.
-fn gemm_rows(
+/// `rows.start`, and must be zeroed by the caller (the kernel accumulates).
+/// pub(crate): the fused packed prefill GEMM in `quant::qmatmul` and the
+/// shared attention body in `model::attention` stream panels through this
+/// exact kernel so their summation order — and therefore their bits —
+/// match the dense broadcast path.
+pub(crate) fn gemm_rows(
     a: &[f32],
     b: &[f32],
     out: &mut [f32],

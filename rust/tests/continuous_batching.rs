@@ -120,7 +120,7 @@ fn slots_refill_as_sequences_finish() {
     // prefill amortisation beats token-at-a-time's one row per slot-step
     assert!(metrics.prefill_amortisation() > 1.0);
     // every request passed through the admission queue exactly once
-    assert_eq!(metrics.queue_wait_ms.len(), 20);
+    assert_eq!(metrics.queue_wait.count(), 20);
     assert_eq!(metrics.cancelled, 0);
 }
 

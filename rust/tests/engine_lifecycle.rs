@@ -64,7 +64,7 @@ fn submit_after_start_streams_lifecycle_events() {
     let metrics = engine.shutdown();
     assert_eq!(metrics.completed, 2);
     assert_eq!(metrics.cancelled, 0);
-    assert_eq!(metrics.queue_wait_ms.len(), 2);
+    assert_eq!(metrics.queue_wait.count(), 2);
 }
 
 #[test]
@@ -308,7 +308,7 @@ fn engine_metrics_keep_occupancy_and_amortisation_invariants() {
     // wrapper), everything admitted, nothing left behind
     assert_eq!(metrics.queue_peak, 12);
     assert_eq!(metrics.queue_depth, 0);
-    assert_eq!(metrics.queue_wait_ms.len(), 12);
+    assert_eq!(metrics.queue_wait.count(), 12);
     assert_eq!(metrics.cancelled, 0);
     // all KV rows are released once every sequence finishes
     assert_eq!(metrics.kv_bytes, 0);
