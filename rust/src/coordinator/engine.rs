@@ -42,10 +42,10 @@ use crate::model::Model;
 use crate::util::rng::Pcg32;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-request lifecycle events streamed over a [`RequestHandle`].
 #[derive(Clone, Debug)]
@@ -280,6 +280,15 @@ impl RequestHandle {
     /// Non-blocking [`Self::recv`].
     pub fn try_recv(&self) -> Option<TokenEvent> {
         self.events.try_recv().ok()
+    }
+
+    /// Block for the next event at most `timeout`. `Err(Timeout)` means no
+    /// event arrived in time (the request is still live — deadline
+    /// enforcement can now [`Self::cancel`] and keep draining);
+    /// `Err(Disconnected)` means the stream is exhausted, exactly like
+    /// [`Self::recv`] returning `None`.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<TokenEvent, RecvTimeoutError> {
+        self.events.recv_timeout(timeout)
     }
 
     /// Drain events until the terminal `Finished` and return its

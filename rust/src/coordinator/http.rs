@@ -1,0 +1,950 @@
+//! Zero-dependency HTTP/1.1 front door over the serving stack.
+//!
+//! [`HttpServer`] listens on a [`std::net::TcpListener`] and fronts the
+//! engines registered with a [`super::router::Router`] — the network
+//! surface that turns the paper's arithmetic-density claim into a serving
+//! claim (traffic over a wire, latency SLOs under load, see
+//! `coordinator/traffic.rs`). The server is hand-rolled on the standard
+//! library: blocking accept loop, one thread per connection, HTTP/1.1
+//! keep-alive, chunk-free bodies framed by `Content-Length`.
+//!
+//! ## Endpoints
+//!
+//! - `POST /v1/generate` — JSON body → [`Request`] +
+//!   [`super::router::Priority`] + optional deadline. With `"stream":
+//!   true` the response is Server-Sent Events mirroring the engine's
+//!   [`TokenEvent`] stream (`queued`, `started`, one `token` per sampled
+//!   token, a terminal `done` carrying the full response JSON); otherwise
+//!   a single JSON document once generation finishes.
+//! - `GET /v1/metrics` — live [`super::metrics::Metrics`] snapshot per
+//!   registered model (p50/p99 latency and queue-wait straight from the
+//!   engine's [`LogHistogram`]s) plus per-class router counters.
+//! - `GET /healthz` — liveness (reports `draining: true` once shutdown
+//!   begins).
+//!
+//! ## Deadlines and cancellation
+//!
+//! A request's `deadline_ms` covers queueing *and* generation. If it
+//! expires while the request waits for admission, the request is
+//! abandoned (the engine reaps it as cancelled the moment it is
+//! dispatched) and the client receives an empty response with finish
+//! reason `"cancelled"`. If it expires mid-generation the connection
+//! handler calls [`RequestHandle::cancel`] and keeps draining, so the
+//! terminal event — and therefore the client's response — carries the
+//! tokens generated so far with finish reason `"cancelled"`. A client
+//! that stops reading its SSE stream is handled the same way: the write
+//! fails (or times out), the handler cancels, and the slot frees on the
+//! next engine step. Event channels are unbounded, so a slow reader only
+//! ever stalls its own connection thread, never a co-resident slot.
+//!
+//! ## Validation
+//!
+//! The front door is the trust boundary: prompts are checked against the
+//! served model's vocabulary size and context window (see
+//! [`super::router::ModelEntry`]) before submission, because an
+//! out-of-range token id would panic the scheduler thread it reaches.
+//! Oversized bodies are refused with 413 before reading, malformed
+//! request lines and bodies with 400, unknown routes with 404.
+//!
+//! ## Shutdown
+//!
+//! [`HttpServer::shutdown`] stops the accept loop and waits (bounded by
+//! [`HttpConfig::drain_wait`]) for in-flight connections to finish. The
+//! full graceful-drain order — used by `bbq serve` on SIGTERM via
+//! [`shutdown_signal`] — is HTTP server first (stop taking traffic),
+//! then [`super::router::Router::shutdown`] (dispatch everything already
+//! accepted), then [`super::engine::Engine::shutdown`] (drain queued and
+//! in-flight requests to completion), so every admitted request still
+//! receives its terminal event.
+
+use super::engine::{RequestHandle, SubmitError, TokenEvent};
+use super::metrics::LogHistogram;
+use super::router::{Priority, RouteError, RouterHandle, Ticket};
+use super::server::{FinishReason, GenerationParams, Request, Response};
+use crate::util::json::Json;
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::RecvTimeoutError;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request/header line, bytes.
+const MAX_LINE: usize = 8 * 1024;
+/// Most headers accepted on one request.
+const MAX_HEADERS: usize = 64;
+/// First auto-assigned request id (client-supplied ids normally stay
+/// below this, keeping the default sampler seeds disjoint).
+const AUTO_ID_BASE: u64 = 1 << 32;
+
+/// HTTP front-door limits and timeouts.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Largest accepted request body; anything bigger is refused with 413
+    /// before reading.
+    pub max_body_bytes: usize,
+    /// Socket read timeout (also bounds how long an idle keep-alive
+    /// connection is held open).
+    pub read_timeout: Duration,
+    /// Socket write timeout: a client that stops reading its (SSE)
+    /// response for this long gets its request cancelled.
+    pub write_timeout: Duration,
+    /// How long [`HttpServer::shutdown`] waits for in-flight connections
+    /// to finish before giving up on stragglers.
+    pub drain_wait: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            max_body_bytes: 1 << 20,
+            read_timeout: Duration::from_secs(60),
+            write_timeout: Duration::from_secs(30),
+            drain_wait: Duration::from_secs(10),
+        }
+    }
+}
+
+/// SIGTERM/SIGINT latch for graceful drain, with no libc dependency: the
+/// handler only flips an [`AtomicBool`] (async-signal-safe), which the
+/// serve loop polls between metric ticks. [`trigger`] flips the same
+/// latch from code — tests and programmatic shutdown use it, and on
+/// non-Unix targets (where [`install`] is a no-op) it is the only source.
+///
+/// [`trigger`]: shutdown_signal::trigger
+/// [`install`]: shutdown_signal::install
+pub mod shutdown_signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    #[cfg(unix)]
+    extern "C" fn latch(_signum: i32) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the latch for SIGTERM and SIGINT (no-op off Unix).
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        let handler = latch as extern "C" fn(i32) as usize;
+        unsafe {
+            signal(SIGTERM, handler);
+            signal(SIGINT, handler);
+        }
+    }
+
+    /// Install the latch for SIGTERM and SIGINT (no-op off Unix).
+    #[cfg(not(unix))]
+    pub fn install() {}
+
+    /// True once a shutdown signal (or [`trigger`]) has fired.
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+
+    /// Flip the latch from code, exactly as a signal would.
+    pub fn trigger() {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+}
+
+struct ServerShared {
+    router: RouterHandle,
+    cfg: HttpConfig,
+    next_id: AtomicU64,
+    open: Mutex<usize>,
+    idle: Condvar,
+    draining: AtomicBool,
+}
+
+impl ServerShared {
+    fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+}
+
+/// Decrements the open-connection gauge when a connection thread exits —
+/// held across the handler so panics unwind through it too.
+struct ConnGuard(Arc<ServerShared>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        let mut open = self.0.open.lock().unwrap();
+        *open -= 1;
+        self.0.idle.notify_all();
+    }
+}
+
+/// A running HTTP front door: accept loop plus one thread per live
+/// connection, all submitting through a shared [`RouterHandle`].
+pub struct HttpServer {
+    shared: Arc<ServerShared>,
+    addr: SocketAddr,
+    accept: JoinHandle<()>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
+    /// start serving `router`'s engines.
+    pub fn bind(addr: &str, router: RouterHandle, cfg: HttpConfig) -> io::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(ServerShared {
+            router,
+            cfg,
+            next_id: AtomicU64::new(AUTO_ID_BASE),
+            open: Mutex::new(0),
+            idle: Condvar::new(),
+            draining: AtomicBool::new(false),
+        });
+        let accept_shared = shared.clone();
+        let accept = std::thread::Builder::new()
+            .name("bbq-http".into())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if accept_shared.draining() {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    *accept_shared.open.lock().unwrap() += 1;
+                    let conn_shared = accept_shared.clone();
+                    let spawned = std::thread::Builder::new()
+                        .name("bbq-http-conn".into())
+                        .spawn(move || {
+                            let _guard = ConnGuard(conn_shared.clone());
+                            let _ = serve_conn(stream, &conn_shared);
+                        });
+                    if spawned.is_err() {
+                        let mut open = accept_shared.open.lock().unwrap();
+                        *open -= 1;
+                    }
+                }
+            })
+            .expect("spawn http accept thread");
+        Ok(HttpServer {
+            shared,
+            addr: local,
+            accept,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the actual ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and wait — bounded by
+    /// [`HttpConfig::drain_wait`] — for in-flight ones to finish. Shut
+    /// the router and engines down *after* this so already-admitted
+    /// requests still stream their terminal events.
+    pub fn shutdown(self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // the accept loop is blocked in accept(): poke it awake
+        let _ = TcpStream::connect(self.addr);
+        let _ = self.accept.join();
+        let deadline = Instant::now() + self.shared.cfg.drain_wait;
+        let mut open = self.shared.open.lock().unwrap();
+        while *open > 0 {
+            let now = Instant::now();
+            if now >= deadline {
+                break; // stragglers keep their sockets; we stop waiting
+            }
+            let (guard, _) = self.shared.idle.wait_timeout(open, deadline - now).unwrap();
+            open = guard;
+        }
+    }
+}
+
+/// A parsed and validated `POST /v1/generate` body.
+struct GenerateSpec {
+    req: Request,
+    priority: Priority,
+    deadline: Option<Duration>,
+    stream: bool,
+}
+
+/// Read one `\r\n`- (or `\n`-) terminated line, rejecting anything longer
+/// than `cap`. `None` is clean EOF before any byte.
+fn read_limited_line(r: &mut impl BufRead, cap: usize) -> io::Result<Option<String>> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+                }
+                if byte[0] != b'\r' {
+                    buf.push(byte[0]);
+                }
+                if buf.len() > cap {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "request line too long",
+                    ));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// `"METHOD /path HTTP/1.x"` → `(method, path)` with any query string
+/// stripped; `None` on anything else.
+fn parse_request_line(line: &str) -> Option<(&str, &str)> {
+    let mut parts = line.split_whitespace();
+    let method = parts.next()?;
+    let target = parts.next()?;
+    let version = parts.next()?;
+    if parts.next().is_some() || !version.starts_with("HTTP/1.") || !target.starts_with('/') {
+        return None;
+    }
+    let path = target.split('?').next().unwrap_or(target);
+    Some((method, path))
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))]).to_string()
+}
+
+fn write_json(w: &mut TcpStream, status: u16, reason: &str, body: &str, keep: bool) -> io::Result<()> {
+    let conn = if keep { "keep-alive" } else { "close" };
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {conn}\r\n\r\n{body}",
+        body.len()
+    )?;
+    w.flush()
+}
+
+fn sse_event(w: &mut TcpStream, name: &str, data: &str) -> io::Result<()> {
+    write!(w, "event: {name}\ndata: {data}\n\n")?;
+    w.flush()
+}
+
+/// Serialise a [`Response`] to its wire JSON (`finish` uses
+/// [`FinishReason::as_str`]).
+pub fn response_json(r: &Response) -> Json {
+    Json::obj(vec![
+        ("id", Json::Num(r.id as f64)),
+        ("tokens", Json::arr_usize(&r.tokens)),
+        ("prompt_len", Json::Num(r.prompt_len as f64)),
+        ("finish", Json::Str(r.finish.as_str().to_string())),
+        ("latency_ms", Json::Num(r.latency.as_secs_f64() * 1e3)),
+    ])
+}
+
+/// Serialise a [`LogHistogram`] summary (`count`/`mean`/`p50`/`p99`/
+/// `max`, milliseconds) — the shape `/v1/metrics` and `BENCH_serve.json`
+/// share.
+pub fn hist_json(h: &LogHistogram) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("mean", Json::Num(h.mean())),
+        ("p50", Json::Num(h.percentile(50.0))),
+        ("p99", Json::Num(h.percentile(99.0))),
+        ("max", Json::Num(h.max())),
+    ])
+}
+
+fn arr_u64(xs: &[u64]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+}
+
+/// The `GET /v1/metrics` document: one entry per registered model with
+/// the engine's live counters and latency/queue-wait percentiles, plus
+/// the router's per-class admission counters.
+pub fn metrics_json(router: &RouterHandle) -> Json {
+    let models: Vec<Json> = router
+        .entries()
+        .iter()
+        .map(|e| {
+            let m = e.handle.metrics();
+            Json::obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("completed", Json::Num(m.completed as f64)),
+                ("generated_tokens", Json::Num(m.generated_tokens as f64)),
+                ("throughput_tps", Json::Num(m.throughput_tps())),
+                ("cancelled", Json::Num(m.cancelled as f64)),
+                ("queue_depth", Json::Num(e.handle.queue_depth() as f64)),
+                ("queue_peak", Json::Num(m.queue_peak as f64)),
+                ("latency_ms", hist_json(&m.latency)),
+                ("queue_wait_ms", hist_json(&m.queue_wait)),
+            ])
+        })
+        .collect();
+    let stats = router.stats();
+    Json::obj(vec![
+        ("models", Json::Arr(models)),
+        (
+            "router",
+            Json::obj(vec![
+                ("queued", Json::arr_usize(&stats.queued)),
+                ("submitted", arr_u64(&stats.submitted)),
+                ("dispatched", arr_u64(&stats.dispatched)),
+                ("rejected", arr_u64(&stats.rejected)),
+            ]),
+        ),
+    ])
+}
+
+/// A JSON number that is a non-negative integer fitting `usize` (token
+/// ids, counts). Rejects fractions, negatives, non-numbers.
+fn num_usize(v: &Json) -> Option<usize> {
+    let x = v.as_f64()?;
+    if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= u32::MAX as f64 {
+        Some(x as usize)
+    } else {
+        None
+    }
+}
+
+/// A JSON number that is a non-negative integer exactly representable in
+/// f64 (request ids, seeds).
+fn num_u64(v: &Json) -> Option<u64> {
+    let x = v.as_f64()?;
+    if x.is_finite() && x >= 0.0 && x.fract() == 0.0 && x <= 9.007_199_254_740_992e15 {
+        Some(x as u64)
+    } else {
+        None
+    }
+}
+
+/// Validate a generate body against the served model's bounds and build
+/// the [`Request`]. Every error string becomes a 400 response body.
+fn parse_generate(
+    j: &Json,
+    vocab_size: usize,
+    max_seq: usize,
+    auto_id: u64,
+) -> Result<GenerateSpec, String> {
+    let id = match j.get("id") {
+        None => auto_id,
+        Some(v) => num_u64(v).ok_or("\"id\" must be a non-negative integer")?,
+    };
+    let prompt_json = j.get("prompt").ok_or("missing \"prompt\"")?;
+    let arr = prompt_json
+        .as_arr()
+        .ok_or("\"prompt\" must be an array of token ids")?;
+    if arr.len() > max_seq {
+        return Err(format!(
+            "prompt length {} exceeds context window {max_seq}",
+            arr.len()
+        ));
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for v in arr {
+        let t = num_usize(v).ok_or("prompt tokens must be non-negative integers")?;
+        if t >= vocab_size {
+            return Err(format!(
+                "prompt token {t} out of range (vocabulary size {vocab_size})"
+            ));
+        }
+        prompt.push(t);
+    }
+    let mut params = GenerationParams::default();
+    if let Some(v) = j.get("max_new_tokens") {
+        params.max_new_tokens =
+            num_usize(v).ok_or("\"max_new_tokens\" must be a non-negative integer")?;
+    }
+    if let Some(v) = j.get("temperature") {
+        let t = v.as_f64().ok_or("\"temperature\" must be a number")?;
+        if !t.is_finite() {
+            return Err("\"temperature\" must be finite".into());
+        }
+        params.temperature = t as f32;
+    }
+    if let Some(v) = j.get("top_k") {
+        params.top_k = num_usize(v).ok_or("\"top_k\" must be a non-negative integer")?;
+    }
+    if let Some(v) = j.get("stop_tokens") {
+        let stops = v.as_arr().ok_or("\"stop_tokens\" must be an array")?;
+        params.stop_tokens = stops
+            .iter()
+            .map(num_usize)
+            .collect::<Option<Vec<usize>>>()
+            .ok_or("stop tokens must be non-negative integers")?;
+    }
+    if let Some(v) = j.get("seed") {
+        params.seed = Some(num_u64(v).ok_or("\"seed\" must be a non-negative integer")?);
+    }
+    let priority = match j.get("priority") {
+        None => Priority::Standard,
+        Some(v) => {
+            let s = v.as_str().ok_or("\"priority\" must be a string")?;
+            Priority::parse(s).ok_or_else(|| format!("unknown priority \"{s}\""))?
+        }
+    };
+    let deadline = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v.as_f64().ok_or("\"deadline_ms\" must be a number")?;
+            if !ms.is_finite() || ms <= 0.0 {
+                return Err("\"deadline_ms\" must be positive".into());
+            }
+            Some(Duration::from_millis((ms as u64).max(1)))
+        }
+    };
+    let stream = match j.get("stream") {
+        None => false,
+        Some(v) => v.as_bool().ok_or("\"stream\" must be a boolean")?,
+    };
+    Ok(GenerateSpec {
+        req: Request { id, prompt, params },
+        priority,
+        deadline,
+        stream,
+    })
+}
+
+/// One connection's keep-alive loop. Any `Err` drops the connection (the
+/// peer vanished or broke framing); clean EOF returns `Ok`.
+fn serve_conn(stream: TcpStream, shared: &ServerShared) -> io::Result<()> {
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    loop {
+        let line = match read_limited_line(&mut reader, MAX_LINE) {
+            Ok(None) => return Ok(()),
+            Ok(Some(l)) => l,
+            Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                let _ = write_json(&mut writer, 400, "Bad Request", &err_json("line too long"), false);
+                return Ok(());
+            }
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            continue; // tolerate stray CRLFs between pipelined requests
+        }
+        let Some((method, path)) = parse_request_line(&line) else {
+            write_json(
+                &mut writer,
+                400,
+                "Bad Request",
+                &err_json("malformed request line"),
+                false,
+            )?;
+            return Ok(());
+        };
+        let method = method.to_string();
+        let path = path.to_string();
+        let mut content_length = 0usize;
+        let mut close = shared.draining();
+        let mut header_error: Option<&'static str> = None;
+        let mut n_headers = 0usize;
+        loop {
+            let header = match read_limited_line(&mut reader, MAX_LINE) {
+                Ok(None) => return Ok(()), // peer vanished mid-headers
+                Ok(Some(h)) => h,
+                Err(e) if e.kind() == io::ErrorKind::InvalidData => {
+                    let _ =
+                        write_json(&mut writer, 400, "Bad Request", &err_json("header too long"), false);
+                    return Ok(());
+                }
+                Err(e) => return Err(e),
+            };
+            if header.is_empty() {
+                break;
+            }
+            n_headers += 1;
+            if n_headers > MAX_HEADERS {
+                header_error = Some("too many headers");
+                continue;
+            }
+            let Some((name, value)) = header.split_once(':') else {
+                header_error = Some("malformed header");
+                continue;
+            };
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                match value.parse::<usize>() {
+                    Ok(n) => content_length = n,
+                    Err(_) => header_error = Some("bad content-length"),
+                }
+            } else if name == "connection" && value.eq_ignore_ascii_case("close") {
+                close = true;
+            }
+        }
+        if let Some(msg) = header_error {
+            write_json(&mut writer, 400, "Bad Request", &err_json(msg), false)?;
+            return Ok(());
+        }
+        if content_length > shared.cfg.max_body_bytes {
+            // refuse before reading; framing is now unknown, so close
+            write_json(
+                &mut writer,
+                413,
+                "Payload Too Large",
+                &err_json("body exceeds limit"),
+                false,
+            )?;
+            return Ok(());
+        }
+        let mut body = vec![0u8; content_length];
+        if content_length > 0 {
+            if let Err(e) = reader.read_exact(&mut body) {
+                // truncated body: answer best-effort, then drop the conn
+                let _ = write_json(&mut writer, 400, "Bad Request", &err_json("truncated body"), false);
+                return Err(e);
+            }
+        }
+        let keep = dispatch(&mut writer, shared, &method, &path, &body, !close)?;
+        if !keep {
+            return Ok(());
+        }
+    }
+}
+
+/// Route one parsed request; returns whether to keep the connection.
+fn dispatch(
+    w: &mut TcpStream,
+    shared: &ServerShared,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    keep: bool,
+) -> io::Result<bool> {
+    match (method, path) {
+        ("GET", "/healthz") => {
+            let doc = Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(shared.draining())),
+            ]);
+            write_json(w, 200, "OK", &doc.to_string(), keep)?;
+            Ok(keep)
+        }
+        ("GET", "/v1/metrics") => {
+            write_json(w, 200, "OK", &metrics_json(&shared.router).to_string(), keep)?;
+            Ok(keep)
+        }
+        ("POST", "/v1/generate") => generate(w, shared, body, keep),
+        (_, "/healthz") | (_, "/v1/metrics") | (_, "/v1/generate") => {
+            write_json(
+                w,
+                405,
+                "Method Not Allowed",
+                &err_json("method not allowed"),
+                keep,
+            )?;
+            Ok(keep)
+        }
+        _ => {
+            write_json(w, 404, "Not Found", &err_json("unknown route"), keep)?;
+            Ok(keep)
+        }
+    }
+}
+
+/// Handle `POST /v1/generate`: validate, submit through the router, then
+/// stream SSE or block for the single JSON response.
+fn generate(w: &mut TcpStream, shared: &ServerShared, body: &[u8], keep: bool) -> io::Result<bool> {
+    let Ok(text) = std::str::from_utf8(body) else {
+        write_json(w, 400, "Bad Request", &err_json("body is not UTF-8"), keep)?;
+        return Ok(keep);
+    };
+    let parsed = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            write_json(w, 400, "Bad Request", &err_json(&format!("bad JSON: {e}")), keep)?;
+            return Ok(keep);
+        }
+    };
+    let model = parsed
+        .get("model")
+        .and_then(|m| m.as_str())
+        .map(|s| s.to_string());
+    let Some(entry) = shared.router.entry(model.as_deref()) else {
+        write_json(w, 404, "Not Found", &err_json("unknown model"), keep)?;
+        return Ok(keep);
+    };
+    let (vocab_size, max_seq) = (entry.vocab_size, entry.max_seq);
+    let auto_id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let spec = match parse_generate(&parsed, vocab_size, max_seq, auto_id) {
+        Ok(s) => s,
+        Err(msg) => {
+            write_json(w, 400, "Bad Request", &err_json(&msg), keep)?;
+            return Ok(keep);
+        }
+    };
+    let id = spec.req.id;
+    let prompt_len = spec.req.prompt.len();
+    let deadline = spec.deadline.map(|d| Instant::now() + d);
+    let submitted = Instant::now();
+    let ticket = match shared.router.submit(model.as_deref(), spec.priority, spec.req) {
+        Ok(t) => t,
+        Err(RouteError::ClassFull(_)) => {
+            write_json(
+                w,
+                429,
+                "Too Many Requests",
+                &err_json("priority class queue full"),
+                keep,
+            )?;
+            return Ok(keep);
+        }
+        Err(RouteError::UnknownModel(_)) => {
+            write_json(w, 404, "Not Found", &err_json("unknown model"), keep)?;
+            return Ok(keep);
+        }
+        Err(RouteError::Closed(_)) => {
+            write_json(w, 503, "Service Unavailable", &err_json("server draining"), keep)?;
+            return Ok(keep);
+        }
+    };
+    if spec.stream {
+        stream_sse(w, ticket, id, prompt_len, deadline, submitted)?;
+        Ok(false) // SSE responses always close the connection
+    } else {
+        respond_once(w, ticket, id, prompt_len, deadline, submitted, keep)
+    }
+}
+
+/// The synthetic response for a request whose deadline expired before it
+/// was ever dispatched to an engine.
+fn queued_cancel_response(id: u64, prompt_len: usize, submitted: Instant) -> Response {
+    Response {
+        id,
+        tokens: Vec::new(),
+        latency: submitted.elapsed(),
+        prompt_len,
+        finish: FinishReason::Cancelled,
+    }
+}
+
+fn engine_gone() -> io::Error {
+    io::Error::other("engine dropped the request")
+}
+
+/// Pump a dispatched request's event stream to the terminal `Finished`,
+/// enforcing `deadline` by cancelling and continuing to drain (the
+/// terminal response then carries the partial output). `sink` observes
+/// every event; a sink failure cancels the request and aborts.
+fn drive(
+    handle: RequestHandle,
+    deadline: Option<Instant>,
+    sink: &mut dyn FnMut(&TokenEvent) -> io::Result<()>,
+) -> io::Result<Response> {
+    let mut expired = false;
+    loop {
+        let ev = if expired {
+            // already cancelled: the terminal event arrives promptly
+            match handle.recv() {
+                Some(ev) => ev,
+                None => return Err(engine_gone()),
+            }
+        } else if let Some(d) = deadline {
+            let now = Instant::now();
+            if now >= d {
+                handle.cancel();
+                expired = true;
+                continue;
+            }
+            match handle.recv_timeout(d - now) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    handle.cancel();
+                    expired = true;
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => return Err(engine_gone()),
+            }
+        } else {
+            match handle.recv() {
+                Some(ev) => ev,
+                None => return Err(engine_gone()),
+            }
+        };
+        if let TokenEvent::Finished { response, .. } = &ev {
+            let response = response.clone();
+            sink(&ev)?;
+            return Ok(response);
+        }
+        if sink(&ev).is_err() {
+            // client stopped reading: free the slot, drop the stream
+            handle.cancel();
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "client write failed"));
+        }
+    }
+}
+
+/// Non-streaming generate: block until the terminal event, answer with
+/// one JSON document.
+#[allow(clippy::too_many_arguments)]
+fn respond_once(
+    w: &mut TcpStream,
+    ticket: Ticket,
+    id: u64,
+    prompt_len: usize,
+    deadline: Option<Instant>,
+    submitted: Instant,
+    keep: bool,
+) -> io::Result<bool> {
+    let handle = match ticket.wait_until(deadline) {
+        None => {
+            let resp = queued_cancel_response(id, prompt_len, submitted);
+            write_json(w, 200, "OK", &response_json(&resp).to_string(), keep)?;
+            return Ok(keep);
+        }
+        Some(Ok(h)) => h,
+        Some(Err(SubmitError::Closed(_))) | Some(Err(SubmitError::QueueFull(_))) => {
+            write_json(w, 503, "Service Unavailable", &err_json("engine closed"), keep)?;
+            return Ok(keep);
+        }
+    };
+    let resp = drive(handle, deadline, &mut |_| Ok(()))?;
+    write_json(w, 200, "OK", &response_json(&resp).to_string(), keep)?;
+    Ok(keep)
+}
+
+/// Streaming generate: SSE events `queued`, `started`, `token`…, and a
+/// terminal `done` carrying the full response JSON (or `error` if the
+/// engine refused the dispatch).
+fn stream_sse(
+    w: &mut TcpStream,
+    ticket: Ticket,
+    id: u64,
+    prompt_len: usize,
+    deadline: Option<Instant>,
+    submitted: Instant,
+) -> io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()?;
+    let id_doc = Json::obj(vec![("id", Json::Num(id as f64))]).to_string();
+    let handle = match ticket.wait_until(deadline) {
+        None => {
+            let resp = queued_cancel_response(id, prompt_len, submitted);
+            return sse_event(w, "done", &response_json(&resp).to_string());
+        }
+        Some(Ok(h)) => h,
+        Some(Err(e)) => return sse_event(w, "error", &err_json(&e.to_string())),
+    };
+    let resp = drive(handle, deadline, &mut |ev| match ev {
+        TokenEvent::Queued => sse_event(w, "queued", &id_doc),
+        TokenEvent::Started => sse_event(w, "started", &id_doc),
+        TokenEvent::Token(t) => sse_event(
+            w,
+            "token",
+            &Json::obj(vec![("token", Json::Num(*t as f64))]).to_string(),
+        ),
+        TokenEvent::Finished { .. } => Ok(()),
+    })?;
+    sse_event(w, "done", &response_json(&resp).to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_line_grammar() {
+        assert_eq!(
+            parse_request_line("GET /healthz HTTP/1.1"),
+            Some(("GET", "/healthz"))
+        );
+        assert_eq!(
+            parse_request_line("POST /v1/generate?x=1 HTTP/1.0"),
+            Some(("POST", "/v1/generate"))
+        );
+        assert_eq!(parse_request_line("GARBAGE"), None);
+        assert_eq!(parse_request_line("GET /x HTTP/2"), None);
+        assert_eq!(parse_request_line("GET noslash HTTP/1.1"), None);
+        assert_eq!(parse_request_line("GET /x HTTP/1.1 extra"), None);
+        assert_eq!(parse_request_line(""), None);
+    }
+
+    #[test]
+    fn generate_body_validation() {
+        let parse = |s: &str| parse_generate(&Json::parse(s).unwrap(), 512, 256, 7);
+        // defaults
+        let spec = parse(r#"{"prompt": [1, 2, 3]}"#).unwrap();
+        assert_eq!(spec.req.id, 7);
+        assert_eq!(spec.req.prompt, vec![1, 2, 3]);
+        assert_eq!(spec.req.params.max_new_tokens, 16);
+        assert_eq!(spec.req.params.temperature, 0.0);
+        assert!(spec.req.params.seed.is_none());
+        assert_eq!(spec.priority, Priority::Standard);
+        assert!(spec.deadline.is_none());
+        assert!(!spec.stream);
+        // everything set
+        let spec = parse(
+            r#"{"id": 9, "prompt": [0, 511], "max_new_tokens": 4, "temperature": 0.9,
+                "top_k": 8, "stop_tokens": [5], "seed": 42, "priority": "interactive",
+                "deadline_ms": 250, "stream": true}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.req.id, 9);
+        assert_eq!(spec.req.params.max_new_tokens, 4);
+        assert_eq!(spec.req.params.top_k, 8);
+        assert_eq!(spec.req.params.stop_tokens, vec![5]);
+        assert_eq!(spec.req.params.seed, Some(42));
+        assert_eq!(spec.priority, Priority::Interactive);
+        assert_eq!(spec.deadline, Some(Duration::from_millis(250)));
+        assert!(spec.stream);
+        // the trust boundary: bounds and types are enforced here
+        assert!(parse(r#"{}"#).is_err(), "prompt required");
+        assert!(parse(r#"{"prompt": "hi"}"#).is_err(), "prompt must be array");
+        assert!(parse(r#"{"prompt": [512]}"#).is_err(), "token >= vocab");
+        assert!(parse(r#"{"prompt": [-1]}"#).is_err(), "negative token");
+        assert!(parse(r#"{"prompt": [1.5]}"#).is_err(), "fractional token");
+        assert!(parse(r#"{"prompt": [1], "priority": "bulk"}"#).is_err());
+        assert!(parse(r#"{"prompt": [1], "deadline_ms": -5}"#).is_err());
+        assert!(parse(r#"{"prompt": [1], "stream": 1}"#).is_err());
+        assert!(parse(r#"{"prompt": [1], "seed": -2}"#).is_err());
+        let long = format!("{{\"prompt\": [{}]}}", vec!["1"; 257].join(","));
+        assert!(parse(&long).is_err(), "prompt longer than max_seq");
+    }
+
+    #[test]
+    fn response_wire_format_roundtrips() {
+        let resp = Response {
+            id: 5,
+            tokens: vec![1, 2, 3],
+            latency: Duration::from_millis(12),
+            prompt_len: 2,
+            finish: FinishReason::MaxTokens,
+        };
+        let j = Json::parse(&response_json(&resp).to_string()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.get("tokens").unwrap().usize_vec().unwrap(), vec![1, 2, 3]);
+        assert_eq!(j.get("prompt_len").unwrap().as_f64(), Some(2.0));
+        let finish = j.get("finish").unwrap().as_str().unwrap();
+        assert_eq!(FinishReason::parse(finish), Some(FinishReason::MaxTokens));
+        assert!(j.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn numeric_bounds() {
+        assert_eq!(num_usize(&Json::Num(3.0)), Some(3));
+        assert_eq!(num_usize(&Json::Num(-1.0)), None);
+        assert_eq!(num_usize(&Json::Num(1.5)), None);
+        assert_eq!(num_usize(&Json::Num(f64::NAN)), None);
+        assert_eq!(num_usize(&Json::Str("3".into())), None);
+        assert_eq!(num_u64(&Json::Num(2.0_f64.powi(53))), Some(1 << 53));
+        assert_eq!(num_u64(&Json::Num(2.0_f64.powi(54))), None);
+    }
+
+    #[test]
+    fn shutdown_signal_latch() {
+        shutdown_signal::install(); // must not crash; handler is a no-op here
+        shutdown_signal::trigger();
+        assert!(shutdown_signal::triggered());
+    }
+}

@@ -1,16 +1,30 @@
 //! L3 coordination: the live serving engine (engine.rs), the batch
-//! front door and request/response types (server.rs), serving metrics,
-//! and experiment orchestration (model zoo, result persistence).
+//! front door and request/response types (server.rs), the network front
+//! door (router.rs priority admission + http.rs HTTP/SSE server), the
+//! open-loop SLO traffic harness (traffic.rs), serving metrics, and
+//! experiment orchestration (model zoo, result persistence).
 
 pub mod engine;
 pub mod experiment;
+pub mod http;
 pub mod metrics;
+pub mod router;
 pub mod server;
+pub mod traffic;
 
 pub use engine::{Engine, EngineHandle, RequestHandle, SubmitError, TokenEvent};
 pub use experiment::{default_steps, get_or_train, save_result};
+pub use http::{hist_json, metrics_json, response_json, shutdown_signal, HttpConfig, HttpServer};
 pub use metrics::{LogHistogram, Metrics};
+pub use router::{
+    FairPicker, ModelEntry, Priority, RouteError, Router, RouterConfig, RouterHandle, RouterStats,
+    Ticket,
+};
 pub use server::{
     run_batched, serve_one, FinishReason, GenerationParams, Request, Response, ServerConfig,
     ENGINE_SEED,
+};
+pub use traffic::{
+    http_exchange, run_trace, serve_trace, HttpOutcome, OpenLoopReport, SseRecord, Trace,
+    TraceItem, TrafficConfig,
 };

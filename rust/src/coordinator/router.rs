@@ -1,0 +1,660 @@
+//! Multi-engine request router with priority classes and weighted-fair
+//! admission.
+//!
+//! The [`super::engine::EngineHandle`] admission queue is a blind FIFO: a
+//! burst of bulk work admitted first starves an interactive request that
+//! arrives a millisecond later. The router replaces direct submission with
+//! three bounded per-class queues ([`Priority::Interactive`] /
+//! [`Priority::Standard`] / [`Priority::Batch`]) drained by a single pump
+//! thread in **weighted-fair order** (stride scheduling, see
+//! [`FairPicker`]): whenever the engine's bounded queue has a free seat,
+//! the backlogged class with the lowest virtual time takes it, so under
+//! sustained contention the classes share engine admissions in the ratio
+//! of their [`RouterConfig::weights`] while an idle class builds no
+//! credit.
+//!
+//! The router is also the model registry for the network front door: each
+//! [`ModelEntry`] names one engine plus the bounds the HTTP layer needs to
+//! validate requests (vocabulary size, context window) before they can
+//! reach — and panic — a scheduler thread.
+//!
+//! Flow control is explicit at both levels: a full class queue rejects at
+//! submission ([`RouteError::ClassFull`] → HTTP 429), while a full engine
+//! queue merely blocks the pump — the weighted-fair choice is made again
+//! for every engine seat as it frees.
+
+use super::engine::{EngineHandle, RequestHandle, SubmitError};
+use super::server::Request;
+use crate::model::Model;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Request priority class. Classes share engine admissions in the ratio
+/// of their configured weights when backlogged; an empty class accrues no
+/// credit (no burst after idling).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive traffic (default weight 8).
+    Interactive,
+    /// Ordinary traffic, the default class (default weight 4).
+    Standard,
+    /// Throughput traffic that tolerates queueing (default weight 1).
+    Batch,
+}
+
+impl Priority {
+    /// Number of priority classes.
+    pub const COUNT: usize = 3;
+    /// All classes, index order.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Batch];
+
+    /// Dense index (0 = interactive, 1 = standard, 2 = batch).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Standard => 1,
+            Priority::Batch => 2,
+        }
+    }
+
+    /// Stable wire name (HTTP JSON, trace files).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Standard => "standard",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`].
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "standard" => Some(Priority::Standard),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// One engine behind the router: its route name plus the request bounds
+/// the HTTP layer validates against before submission (a prompt token ≥
+/// `vocab_size` or a prompt longer than `max_seq` would panic the
+/// scheduler thread it reaches — the front door must shed those with a
+/// 400, never forward them).
+#[derive(Clone)]
+pub struct ModelEntry {
+    /// Route name (the `"model"` field of a generate request).
+    pub name: String,
+    /// Submission handle to the engine serving this model.
+    pub handle: EngineHandle,
+    /// Exclusive upper bound for prompt token ids.
+    pub vocab_size: usize,
+    /// Context window: maximum prompt length admitted.
+    pub max_seq: usize,
+}
+
+impl ModelEntry {
+    /// Entry for `handle` serving `model`, bounds read off the model config.
+    pub fn for_model(name: &str, handle: EngineHandle, model: &Model) -> ModelEntry {
+        ModelEntry {
+            name: name.to_string(),
+            handle,
+            vocab_size: model.cfg().vocab_size,
+            max_seq: model.cfg().max_seq,
+        }
+    }
+}
+
+/// Router configuration.
+#[derive(Clone, Debug)]
+pub struct RouterConfig {
+    /// Admission weight per class, [interactive, standard, batch]. Under
+    /// sustained backlog the classes take engine-queue seats in this
+    /// ratio. Zero weights are clamped to 1.
+    pub weights: [u32; 3],
+    /// Bound of each per-class queue; a class at this depth rejects new
+    /// submissions with [`RouteError::ClassFull`] (→ HTTP 429).
+    pub class_depth: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            weights: [8, 4, 1],
+            class_depth: 256,
+        }
+    }
+}
+
+/// Why the router refused a submission; the request is handed back.
+#[derive(Debug)]
+pub enum RouteError {
+    /// The priority class's bounded queue is full — shed or retry later.
+    ClassFull(Request),
+    /// No [`ModelEntry`] matches the requested model name.
+    UnknownModel(Request),
+    /// The router (or its engine) has shut down.
+    Closed(Request),
+}
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::ClassFull(r) => write!(f, "priority class full (request {})", r.id),
+            RouteError::UnknownModel(r) => write!(f, "unknown model (request {})", r.id),
+            RouteError::Closed(r) => write!(f, "router closed (request {})", r.id),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
+
+/// Stride scheduler over the priority classes: each class carries a
+/// virtual time (`pass`) advanced by `1/weight` per dispatch; the
+/// backlogged class with the lowest pass goes next, so over any busy
+/// window dispatches converge to the weight ratio. A class activating
+/// from empty is clamped forward to the scheduler's current virtual time,
+/// so idling earns no burst credit.
+#[derive(Clone, Debug)]
+pub struct FairPicker {
+    stride: [f64; 3],
+    pass: [f64; 3],
+    global: f64,
+}
+
+impl FairPicker {
+    /// Scheduler with the given per-class weights (zeros clamp to 1).
+    pub fn new(weights: [u32; 3]) -> FairPicker {
+        let mut stride = [0.0; 3];
+        for (s, &w) in stride.iter_mut().zip(&weights) {
+            *s = 1e6 / w.max(1) as f64;
+        }
+        FairPicker {
+            stride,
+            pass: [0.0; 3],
+            global: 0.0,
+        }
+    }
+
+    /// Class `i` went from empty to backlogged: forfeit credit accrued
+    /// while idle.
+    pub fn activate(&mut self, i: usize) {
+        self.pass[i] = self.pass[i].max(self.global);
+    }
+
+    /// Choose the next class to dispatch among the currently backlogged
+    /// ones and advance its virtual time. Ties break toward the more
+    /// latency-sensitive (lower-index) class.
+    pub fn pick(&mut self, backlogged: &[bool; 3]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for i in 0..3 {
+            if !backlogged[i] {
+                continue;
+            }
+            best = match best {
+                Some(b) if self.pass[b] <= self.pass[i] => Some(b),
+                _ => Some(i),
+            };
+        }
+        if let Some(i) = best {
+            self.global = self.pass[i];
+            self.pass[i] += self.stride[i];
+        }
+        best
+    }
+}
+
+/// Per-class router counters (a snapshot; `queued` is live depth).
+#[derive(Clone, Debug, Default)]
+pub struct RouterStats {
+    /// Requests currently waiting in each class queue.
+    pub queued: [usize; 3],
+    /// Requests accepted into each class queue since start.
+    pub submitted: [u64; 3],
+    /// Requests handed to an engine (weighted-fair order) per class.
+    pub dispatched: [u64; 3],
+    /// Requests shed at a full class queue per class.
+    pub rejected: [u64; 3],
+}
+
+struct Pending {
+    model: usize,
+    req: Request,
+    reply: Sender<Result<RequestHandle, SubmitError>>,
+}
+
+struct RouterState {
+    classes: [VecDeque<Pending>; 3],
+    picker: FairPicker,
+    submitted: [u64; 3],
+    dispatched: [u64; 3],
+    rejected: [u64; 3],
+    closed: bool,
+}
+
+struct RouterShared {
+    entries: Vec<ModelEntry>,
+    cfg: RouterConfig,
+    state: Mutex<RouterState>,
+    work: Condvar,
+}
+
+/// The admission result of one routed submission: resolves to the
+/// engine's [`RequestHandle`] once the pump dispatches the request in
+/// weighted-fair order (or to the engine's [`SubmitError`] if it closed
+/// first). Dropping an unresolved ticket abandons the request: when the
+/// pump eventually dispatches it, the unobserved handle is dropped and the
+/// engine reaps it as a cancellation.
+pub struct Ticket {
+    rx: Receiver<Result<RequestHandle, SubmitError>>,
+}
+
+impl Ticket {
+    /// Block until the request is dispatched to its engine.
+    pub fn wait(self) -> Result<RequestHandle, SubmitError> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            // the pump exited with the request still queued (router
+            // shutdown drains, so this only happens if the pump panicked)
+            Err(_) => panic!("router pump dropped a pending request"),
+        }
+    }
+
+    /// Like [`Self::wait`] but gives up at `deadline` (`None` = never).
+    /// `None` result means the deadline passed first; the request stays
+    /// queued and will be reaped as cancelled when dispatched unobserved.
+    pub fn wait_until(self, deadline: Option<Instant>) -> Option<Result<RequestHandle, SubmitError>> {
+        match deadline {
+            None => Some(self.wait()),
+            Some(d) => loop {
+                let now = Instant::now();
+                if now >= d {
+                    return None;
+                }
+                match self.rx.recv_timeout(d - now) {
+                    Ok(res) => return Some(res),
+                    Err(RecvTimeoutError::Timeout) => return None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        panic!("router pump dropped a pending request")
+                    }
+                }
+            },
+        }
+    }
+}
+
+/// Cloneable submission/observation handle to a running [`Router`].
+#[derive(Clone)]
+pub struct RouterHandle {
+    shared: Arc<RouterShared>,
+}
+
+impl RouterHandle {
+    /// The registered engines, route order (`None` model routes to the
+    /// first entry).
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.shared.entries
+    }
+
+    /// Look up a route: `None` is the default (first) entry.
+    pub fn entry(&self, model: Option<&str>) -> Option<&ModelEntry> {
+        match model {
+            None => self.shared.entries.first(),
+            Some(name) => self.shared.entries.iter().find(|e| e.name == name),
+        }
+    }
+
+    /// Queue `req` for `model` under `priority`. Returns a [`Ticket`]
+    /// resolving to the engine's streaming handle once the pump dispatches
+    /// the request in weighted-fair order.
+    pub fn submit(
+        &self,
+        model: Option<&str>,
+        priority: Priority,
+        req: Request,
+    ) -> Result<Ticket, RouteError> {
+        let idx = match model {
+            None => 0,
+            Some(name) => match self.shared.entries.iter().position(|e| e.name == name) {
+                Some(i) => i,
+                None => return Err(RouteError::UnknownModel(req)),
+            },
+        };
+        if self.shared.entries.is_empty() {
+            return Err(RouteError::UnknownModel(req));
+        }
+        let (tx, rx) = channel();
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.closed {
+                return Err(RouteError::Closed(req));
+            }
+            let c = priority.index();
+            if st.classes[c].len() >= self.shared.cfg.class_depth {
+                st.rejected[c] += 1;
+                return Err(RouteError::ClassFull(req));
+            }
+            if st.classes[c].is_empty() {
+                st.picker.activate(c);
+            }
+            st.submitted[c] += 1;
+            st.classes[c].push_back(Pending {
+                model: idx,
+                req,
+                reply: tx,
+            });
+        }
+        self.shared.work.notify_all();
+        Ok(Ticket { rx })
+    }
+
+    /// Current per-class counters.
+    pub fn stats(&self) -> RouterStats {
+        let st = self.shared.state.lock().unwrap();
+        RouterStats {
+            queued: [
+                st.classes[0].len(),
+                st.classes[1].len(),
+                st.classes[2].len(),
+            ],
+            submitted: st.submitted,
+            dispatched: st.dispatched,
+            rejected: st.rejected,
+        }
+    }
+
+    /// True once the router stops accepting submissions.
+    pub fn is_closed(&self) -> bool {
+        self.shared.state.lock().unwrap().closed
+    }
+}
+
+/// A running router: the weighted-fair pump thread plus its root handle.
+/// One pump serves all classes and all engines; it blocks on a full
+/// engine queue (that backpressure is the point — the fair choice is
+/// re-made per engine seat) and drains every already-accepted request on
+/// [`Self::shutdown`].
+pub struct Router {
+    handle: RouterHandle,
+    pump: JoinHandle<()>,
+}
+
+impl Router {
+    /// Start a router over `entries` (route order; the first entry is the
+    /// default model).
+    pub fn new(entries: Vec<ModelEntry>, cfg: RouterConfig) -> Router {
+        let shared = Arc::new(RouterShared {
+            state: Mutex::new(RouterState {
+                classes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                picker: FairPicker::new(cfg.weights),
+                submitted: [0; 3],
+                dispatched: [0; 3],
+                rejected: [0; 3],
+                closed: false,
+            }),
+            work: Condvar::new(),
+            entries,
+            cfg,
+        });
+        let pump_shared = shared.clone();
+        let pump = std::thread::Builder::new()
+            .name("bbq-router".into())
+            .spawn(move || Router::pump(pump_shared))
+            .expect("spawn router pump thread");
+        Router {
+            handle: RouterHandle { shared },
+            pump,
+        }
+    }
+
+    /// A new [`RouterHandle`] feeding this router.
+    pub fn handle(&self) -> RouterHandle {
+        self.handle.clone()
+    }
+
+    /// Submit on the root handle — see [`RouterHandle::submit`].
+    pub fn submit(
+        &self,
+        model: Option<&str>,
+        priority: Priority,
+        req: Request,
+    ) -> Result<Ticket, RouteError> {
+        self.handle.submit(model, priority, req)
+    }
+
+    /// Stop accepting submissions, dispatch every already-queued request
+    /// to its engine (weighted-fair to the end), and join the pump. The
+    /// engines keep running — shut them down after the router so drained
+    /// requests still complete.
+    pub fn shutdown(self) {
+        {
+            let mut st = self.handle.shared.state.lock().unwrap();
+            st.closed = true;
+        }
+        self.handle.shared.work.notify_all();
+        self.pump.join().expect("router pump thread panicked");
+    }
+
+    fn pump(shared: Arc<RouterShared>) {
+        loop {
+            let pending = {
+                let mut st = shared.state.lock().unwrap();
+                loop {
+                    let backlogged = [
+                        !st.classes[0].is_empty(),
+                        !st.classes[1].is_empty(),
+                        !st.classes[2].is_empty(),
+                    ];
+                    if let Some(c) = st.picker.pick(&backlogged) {
+                        st.dispatched[c] += 1;
+                        break st.classes[c].pop_front().unwrap();
+                    }
+                    if st.closed {
+                        return; // every accepted request has been dispatched
+                    }
+                    st = shared.work.wait(st).unwrap();
+                }
+            };
+            // lock released: the engine's bounded queue may block here —
+            // that is the backpressure seat the fair schedule is filling
+            let res = shared.entries[pending.model].handle.submit(pending.req);
+            // a dropped ticket (deadline passed while queued, client gone)
+            // leaves the handle unobserved; the engine reaps it as cancelled
+            let _ = pending.reply.send(res);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ServerConfig;
+    use crate::coordinator::{serve_one, Engine, TokenEvent};
+    use crate::model::config::ModelConfig;
+    use crate::model::params::Params;
+    use crate::model::plan::QuantPlan;
+    use crate::quant::config::presets;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn priority_wire_names_roundtrip() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("bulk"), None);
+        assert_eq!(Priority::Interactive.index(), 0);
+        assert_eq!(Priority::Batch.index(), 2);
+    }
+
+    #[test]
+    fn fair_picker_respects_weights_under_backlog() {
+        // all classes permanently backlogged: dispatches converge to the
+        // exact weight ratio over any window that is a multiple of the
+        // weight sum
+        let mut p = FairPicker::new([4, 2, 1]);
+        let mut counts = [0usize; 3];
+        for _ in 0..70 {
+            counts[p.pick(&[true, true, true]).unwrap()] += 1;
+        }
+        assert_eq!(counts, [40, 20, 10], "dispatch ratio must be 4:2:1");
+    }
+
+    #[test]
+    fn fair_picker_idle_class_earns_no_burst() {
+        // batch idles while interactive is served, then activates: it must
+        // rejoin at the current virtual time, not claim the whole backlog
+        let mut p = FairPicker::new([1, 1, 1]);
+        for _ in 0..50 {
+            assert_eq!(p.pick(&[true, false, false]), Some(0));
+        }
+        p.activate(2);
+        let mut batch_run = 0;
+        for _ in 0..10 {
+            match p.pick(&[true, false, true]).unwrap() {
+                2 => batch_run += 1,
+                _ => break,
+            }
+        }
+        // equal weights: at most one catch-up dispatch, never a burst
+        assert!(batch_run <= 1, "idle class burst of {batch_run}");
+    }
+
+    #[test]
+    fn fair_picker_skips_empty_classes() {
+        let mut p = FairPicker::new([8, 4, 1]);
+        assert_eq!(p.pick(&[false, false, true]), Some(2));
+        assert_eq!(p.pick(&[false, true, false]), Some(1));
+        assert_eq!(p.pick(&[false, false, false]), None);
+    }
+
+    fn tiny_engine() -> (Engine, Arc<crate::model::Model>) {
+        let cfg = ModelConfig::preset("tiny");
+        let m = Arc::new(crate::model::Model::new(
+            Params::init(&cfg, 42),
+            QuantPlan::uniform(presets::bfp_w(6)),
+        ));
+        // one slot, one engine-queue seat: admission contention on demand
+        let engine = Engine::start(m.clone(), ServerConfig::new(1, 8, 1));
+        (engine, m)
+    }
+
+    #[test]
+    fn routes_reject_and_drain_end_to_end() {
+        let (engine, m) = tiny_engine();
+        let entry = ModelEntry::for_model("default", engine.handle(), &m);
+        assert_eq!(entry.vocab_size, 512);
+        assert_eq!(entry.max_seq, 256);
+        let router = Router::new(
+            vec![entry],
+            RouterConfig {
+                class_depth: 1,
+                ..RouterConfig::default()
+            },
+        );
+        // unknown model is refused up front, request handed back
+        match router.submit(Some("nope"), Priority::Standard, Request::greedy(9, vec![1], 1)) {
+            Err(RouteError::UnknownModel(r)) => assert_eq!(r.id, 9),
+            other => panic!("expected UnknownModel, got {:?}", other.map(|_| ())),
+        }
+        // hog occupies the engine's single slot for ~200 slow steps
+        let hog = router
+            .submit(None, Priority::Interactive, Request::greedy(0, vec![3], 200))
+            .expect("router open")
+            .wait()
+            .expect("engine open");
+        loop {
+            match hog.recv().expect("engine alive") {
+                TokenEvent::Started => break,
+                TokenEvent::Finished { .. } => panic!("hog finished prematurely"),
+                _ => {}
+            }
+        }
+        // r1 takes the engine's one queue seat, r2 blocks the pump on the
+        // full engine queue, r3 fills the 1-deep standard class queue
+        let r1 = Request::greedy(1, vec![5, 9], 3);
+        let t1 = router.submit(None, Priority::Standard, r1.clone()).expect("router open");
+        // wait until the pump has picked r1 up and is blocked in the
+        // engine submit (the class queue shows empty again)
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while router.handle().stats().queued[1] > 0 {
+            assert!(std::time::Instant::now() < deadline, "pump never drained r1");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let r2 = Request::greedy(2, vec![7, 1], 3);
+        let t2 = router.submit(None, Priority::Standard, r2.clone()).expect("router open");
+        while router.handle().stats().queued[1] > 0 {
+            assert!(std::time::Instant::now() < deadline, "pump never drained r2");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let r3 = Request::greedy(3, vec![8], 2);
+        let t3 = router.submit(None, Priority::Standard, r3.clone()).expect("router open");
+        // class queue is now at depth 1: the next standard submission sheds
+        match router.submit(None, Priority::Standard, Request::greedy(4, vec![2], 2)) {
+            Err(RouteError::ClassFull(r)) => assert_eq!(r.id, 4),
+            other => panic!("expected ClassFull, got {:?}", other.map(|_| ())),
+        }
+        let stats = router.handle().stats();
+        assert_eq!(stats.rejected[1], 1);
+        assert_eq!(stats.submitted[1], 3);
+        // free the slot: everything queued drains, outputs bit-match the
+        // sequential reference
+        hog.cancel();
+        for (ticket, req) in [(t1, &r1), (t2, &r2), (t3, &r3)] {
+            let got = ticket.wait().expect("engine open").wait();
+            assert_eq!(got.tokens, serve_one(&m, req).tokens, "request {}", req.id);
+        }
+        let handle = router.handle();
+        router.shutdown();
+        assert!(handle.is_closed());
+        match handle.submit(None, Priority::Batch, Request::greedy(99, vec![1], 1)) {
+            Err(RouteError::Closed(r)) => assert_eq!(r.id, 99),
+            other => panic!("expected Closed, got {:?}", other.map(|_| ())),
+        }
+        let metrics = engine.shutdown();
+        assert_eq!(metrics.cancelled, 1);
+        assert_eq!(metrics.completed, 3);
+    }
+
+    #[test]
+    fn ticket_wait_until_times_out_and_request_reaps_as_cancelled() {
+        let (engine, _m) = tiny_engine();
+        let router = Router::new(
+            vec![ModelEntry {
+                name: "default".into(),
+                handle: engine.handle(),
+                vocab_size: 512,
+                max_seq: 256,
+            }],
+            RouterConfig::default(),
+        );
+        // hog the single slot and queue seat so the next request waits
+        let hog = router
+            .submit(None, Priority::Interactive, Request::greedy(0, vec![3], 200))
+            .expect("router open")
+            .wait()
+            .expect("engine open");
+        let seat = router
+            .submit(None, Priority::Standard, Request::greedy(1, vec![5], 2))
+            .expect("router open");
+        // this one cannot be dispatched while the pump is blocked: its
+        // ticket deadline expires and the request is abandoned
+        let late = router
+            .submit(None, Priority::Standard, Request::greedy(2, vec![7], 2))
+            .expect("router open");
+        let res = late.wait_until(Some(std::time::Instant::now() + Duration::from_millis(50)));
+        assert!(res.is_none(), "deadline must expire while the pump is blocked");
+        hog.cancel();
+        // the abandoned request is dispatched unobserved and reaped as a
+        // cancellation; the seated request completes normally
+        seat.wait().expect("engine open").wait();
+        router.shutdown();
+        let metrics = engine.shutdown();
+        assert_eq!(metrics.completed, 1);
+        assert_eq!(metrics.cancelled, 2, "hog + abandoned ticket");
+    }
+}

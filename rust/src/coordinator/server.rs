@@ -118,6 +118,30 @@ pub enum FinishReason {
     Cancelled,
 }
 
+impl FinishReason {
+    /// Stable wire name, used by the HTTP front door's JSON and SSE
+    /// framing (`coordinator/http.rs`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::StopToken => "stop_token",
+            FinishReason::ContextFull => "context_full",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`] (used by HTTP clients and tests).
+    pub fn parse(s: &str) -> Option<FinishReason> {
+        match s {
+            "max_tokens" => Some(FinishReason::MaxTokens),
+            "stop_token" => Some(FinishReason::StopToken),
+            "context_full" => Some(FinishReason::ContextFull),
+            "cancelled" => Some(FinishReason::Cancelled),
+            _ => None,
+        }
+    }
+}
+
 /// A finished (or cancelled) generation.
 #[derive(Clone, Debug)]
 pub struct Response {

@@ -1,0 +1,652 @@
+//! Open-loop SLO traffic harness for the HTTP front door.
+//!
+//! Closed-loop load generators (fire the next request when the previous
+//! one finishes) hide queueing collapse: when the server slows down the
+//! generator slows down with it, and the measured latency stays
+//! flattering. This harness is **open-loop**: arrivals follow a seeded
+//! Poisson process ([`Trace::poisson`], exponential inter-arrival gaps
+//! drawn from the crate's [`Pcg32`]) and are dispatched at their trace
+//! timestamps no matter how the server is doing, so offered load and
+//! achieved throughput can diverge — which is exactly the signal the
+//! `serve-bench` SLO bars assert on.
+//!
+//! Traces are plain JSON ([`Trace::to_json`] / [`Trace::from_json`]), so
+//! a run can be replayed byte-for-byte later (`bbq serve-bench
+//! --trace-out` / `--trace-in`) — same arrival times, same prompts, same
+//! priorities.
+//!
+//! [`run_trace`] drives a trace against a live server end to end over
+//! real sockets: one dispatcher pacing arrivals, one client thread per
+//! request streaming SSE and timestamping every event. The resulting
+//! [`OpenLoopReport`] carries offered vs achieved rates plus TTFT,
+//! inter-token gap, and whole-request latency distributions in the same
+//! [`LogHistogram`]s the engine uses, and serialises into
+//! `BENCH_serve.json` via [`OpenLoopReport::to_json`].
+
+use super::engine::Engine;
+use super::http::{hist_json, HttpConfig, HttpServer};
+use super::metrics::{LogHistogram, Metrics};
+use super::router::{ModelEntry, Priority, Router, RouterConfig};
+use super::server::ServerConfig;
+use crate::model::Model;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Parameters for synthesising a Poisson [`Trace`].
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Number of requests in the trace.
+    pub requests: usize,
+    /// Mean arrival rate, requests per second (the offered load).
+    pub rate_rps: f64,
+    /// Inclusive range of prompt lengths, sampled uniformly.
+    pub prompt_len: (usize, usize),
+    /// Inclusive range of `max_new_tokens`, sampled uniformly.
+    pub new_tokens: (usize, usize),
+    /// Exclusive upper bound for sampled prompt token ids (the served
+    /// model's vocabulary size).
+    pub vocab: usize,
+    /// Unnormalised weights for the priority mix,
+    /// `[interactive, standard, batch]`.
+    pub priority_mix: [f64; 3],
+    /// Seed for arrivals, lengths, prompts, and priorities alike.
+    pub seed: u64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            requests: 64,
+            rate_rps: 8.0,
+            prompt_len: (4, 24),
+            new_tokens: (4, 16),
+            vocab: 512,
+            priority_mix: [0.5, 0.4, 0.1],
+            seed: 0x7EA_7EA,
+        }
+    }
+}
+
+/// One scheduled request of a [`Trace`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceItem {
+    /// Dispatch time, milliseconds after the run starts.
+    pub at_ms: f64,
+    /// Request id (also fixes the default sampler seed, keeping replays
+    /// bit-identical).
+    pub id: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<usize>,
+    /// Tokens to generate.
+    pub max_new_tokens: usize,
+    /// Priority class submitted with the request.
+    pub priority: Priority,
+}
+
+impl TraceItem {
+    /// The `POST /v1/generate` body for this item (streaming on, so the
+    /// client can timestamp TTFT and inter-token gaps).
+    pub fn request_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("prompt", Json::arr_usize(&self.prompt)),
+            ("max_new_tokens", Json::Num(self.max_new_tokens as f64)),
+            ("priority", Json::Str(self.priority.as_str().to_string())),
+            ("stream", Json::Bool(true)),
+        ])
+    }
+}
+
+/// A replayable open-loop arrival schedule.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Trace {
+    /// Scheduled requests, ascending `at_ms`.
+    pub items: Vec<TraceItem>,
+}
+
+impl Trace {
+    /// Synthesise a Poisson trace: inter-arrival gaps `-ln(1-u)/rate`,
+    /// uniform prompt/output-length mix, weighted priority classes — all
+    /// from one seeded [`Pcg32`], so the same config reproduces the same
+    /// trace on any machine.
+    pub fn poisson(cfg: &TrafficConfig) -> Trace {
+        assert!(cfg.rate_rps > 0.0, "rate_rps must be positive");
+        assert!(cfg.vocab > 0, "vocab must be positive");
+        let (plo, phi) = cfg.prompt_len;
+        let (nlo, nhi) = cfg.new_tokens;
+        assert!(plo <= phi && nlo <= nhi, "length ranges must be lo <= hi");
+        let mut rng = Pcg32::new(cfg.seed);
+        let mut at_ms = 0.0f64;
+        let mut items = Vec::with_capacity(cfg.requests);
+        for i in 0..cfg.requests {
+            let u = rng.f64();
+            at_ms += -(1.0 - u).ln() / cfg.rate_rps * 1e3;
+            let plen = plo + rng.below(phi - plo + 1);
+            let prompt = (0..plen).map(|_| rng.below(cfg.vocab)).collect();
+            let max_new_tokens = (nlo + rng.below(nhi - nlo + 1)).max(1);
+            let priority = Priority::ALL[rng.weighted(&cfg.priority_mix)];
+            items.push(TraceItem {
+                at_ms,
+                id: i as u64,
+                prompt,
+                max_new_tokens,
+                priority,
+            });
+        }
+        Trace { items }
+    }
+
+    /// Serialise for replay files.
+    pub fn to_json(&self) -> Json {
+        let items = self
+            .items
+            .iter()
+            .map(|it| {
+                Json::obj(vec![
+                    ("at_ms", Json::Num(it.at_ms)),
+                    ("id", Json::Num(it.id as f64)),
+                    ("prompt", Json::arr_usize(&it.prompt)),
+                    ("max_new_tokens", Json::Num(it.max_new_tokens as f64)),
+                    ("priority", Json::Str(it.priority.as_str().to_string())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("items", Json::Arr(items))])
+    }
+
+    /// Inverse of [`Self::to_json`].
+    pub fn from_json(j: &Json) -> Result<Trace, String> {
+        let items = j
+            .get("items")
+            .and_then(|v| v.as_arr())
+            .ok_or("trace: missing \"items\" array")?;
+        let mut out = Vec::with_capacity(items.len());
+        for (i, it) in items.iter().enumerate() {
+            let field = |k: &str| it.get(k).ok_or(format!("trace item {i}: missing \"{k}\""));
+            let at_ms = field("at_ms")?.as_f64().ok_or("at_ms must be a number")?;
+            let id = field("id")?.as_f64().ok_or("id must be a number")? as u64;
+            let prompt = field("prompt")?
+                .usize_vec()
+                .ok_or("prompt must be an array")?;
+            let max_new_tokens =
+                field("max_new_tokens")?.as_f64().ok_or("max_new_tokens must be a number")? as usize;
+            let pname = field("priority")?.as_str().ok_or("priority must be a string")?;
+            let priority =
+                Priority::parse(pname).ok_or(format!("trace item {i}: unknown priority"))?;
+            out.push(TraceItem {
+                at_ms,
+                id,
+                prompt,
+                max_new_tokens,
+                priority,
+            });
+        }
+        Ok(Trace { items: out })
+    }
+
+    /// Write the trace to `path` as JSON.
+    pub fn save(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Load a trace previously written by [`Self::save`].
+    pub fn load(path: &str) -> Result<Trace, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("read {path}: {e}"))?;
+        Trace::from_json(&Json::parse(&text).map_err(|e| format!("parse {path}: {e}"))?)
+    }
+}
+
+/// One timestamped Server-Sent Event observed by the client.
+#[derive(Clone, Debug)]
+pub struct SseRecord {
+    /// The `event:` name (`queued`, `started`, `token`, `done`, `error`).
+    pub event: String,
+    /// The parsed `data:` document.
+    pub data: Json,
+    /// Milliseconds after the request was written to the socket.
+    pub at_ms: f64,
+}
+
+/// What one HTTP exchange produced.
+#[derive(Clone, Debug)]
+pub struct HttpOutcome {
+    /// HTTP status code.
+    pub status: u16,
+    /// SSE events in arrival order (empty for non-SSE responses).
+    pub events: Vec<SseRecord>,
+    /// The response document: the JSON body for plain responses, the
+    /// `done` (or `error`) event's data for SSE streams.
+    pub body: Option<Json>,
+}
+
+impl HttpOutcome {
+    /// The generated token ids carried by `token` events, arrival order.
+    pub fn tokens(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .filter(|r| r.event == "token")
+            .filter_map(|r| r.data.get("token").and_then(|t| t.as_f64()))
+            .map(|t| t as usize)
+            .collect()
+    }
+
+    /// The `finish` field of the response document, if any.
+    pub fn finish(&self) -> Option<&str> {
+        self.body.as_ref()?.get("finish")?.as_str()
+    }
+}
+
+/// Perform one HTTP exchange against a front door: write the request,
+/// then read either a single JSON response or a full SSE stream,
+/// timestamping every event. This is the client half the harness and the
+/// end-to-end tests share.
+pub fn http_exchange(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> Result<HttpOutcome, String> {
+    let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    stream
+        .set_read_timeout(Some(timeout))
+        .map_err(|e| e.to_string())?;
+    let _ = stream.set_nodelay(true);
+    let mut w = stream.try_clone().map_err(|e| e.to_string())?;
+    let body = body.unwrap_or("");
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: bbq\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .map_err(|e| format!("write: {e}"))?;
+    w.flush().map_err(|e| format!("flush: {e}"))?;
+    let sent = Instant::now();
+    let mut r = BufReader::new(stream);
+    let mut line = String::new();
+    r.read_line(&mut line).map_err(|e| format!("status: {e}"))?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or(format!("bad status line {line:?}"))?;
+    let mut content_length = 0usize;
+    let mut sse = false;
+    loop {
+        let mut h = String::new();
+        r.read_line(&mut h).map_err(|e| format!("header: {e}"))?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = h.split_once(':') {
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim();
+            if name == "content-length" {
+                content_length = value.parse().unwrap_or(0);
+            } else if name == "content-type" && value.starts_with("text/event-stream") {
+                sse = true;
+            }
+        }
+    }
+    if !sse {
+        let mut buf = vec![0u8; content_length];
+        std::io::Read::read_exact(&mut r, &mut buf).map_err(|e| format!("body: {e}"))?;
+        let text = String::from_utf8_lossy(&buf);
+        let body = Json::parse(&text).ok();
+        return Ok(HttpOutcome {
+            status,
+            events: Vec::new(),
+            body,
+        });
+    }
+    // SSE: accumulate `event:`/`data:` lines, finalise on each blank line
+    let mut events: Vec<SseRecord> = Vec::new();
+    let mut done: Option<Json> = None;
+    let (mut name, mut data) = (String::new(), String::new());
+    loop {
+        let mut l = String::new();
+        let n = r.read_line(&mut l).map_err(|e| format!("sse read: {e}"))?;
+        if n == 0 {
+            break; // server closed the stream
+        }
+        let l = l.trim_end();
+        if let Some(v) = l.strip_prefix("event:") {
+            name = v.trim().to_string();
+        } else if let Some(v) = l.strip_prefix("data:") {
+            data = v.trim().to_string();
+        } else if l.is_empty() && !name.is_empty() {
+            let parsed = Json::parse(&data).map_err(|e| format!("sse data: {e}"))?;
+            if name == "done" || name == "error" {
+                done = Some(parsed.clone());
+            }
+            events.push(SseRecord {
+                event: std::mem::take(&mut name),
+                data: parsed,
+                at_ms: sent.elapsed().as_secs_f64() * 1e3,
+            });
+            data.clear();
+        }
+    }
+    Ok(HttpOutcome {
+        status,
+        events,
+        body: done,
+    })
+}
+
+/// What an open-loop run measured, client side.
+#[derive(Clone, Debug, Default)]
+pub struct OpenLoopReport {
+    /// Requests dispatched (the whole trace, regardless of outcome).
+    pub sent: usize,
+    /// Requests that finished normally over the wire.
+    pub completed: usize,
+    /// Requests the server shed with 429/503 (admission control working
+    /// as designed).
+    pub rejected: usize,
+    /// Requests lost any other way — transport errors, cancelled
+    /// mid-stream, malformed replies. The SLO gate requires zero.
+    pub dropped: usize,
+    /// Tokens received over the wire across completed requests.
+    pub generated_tokens: usize,
+    /// Offered load: the trace's arrival rate, requests per second.
+    pub offered_rps: f64,
+    /// Completed requests per wall-clock second.
+    pub achieved_rps: f64,
+    /// Tokens received per wall-clock second.
+    pub achieved_tps: f64,
+    /// Dispatch-to-first-token latency, ms (one sample per completed
+    /// request).
+    pub ttft_ms: LogHistogram,
+    /// Gap between consecutive token events, ms.
+    pub token_gap_ms: LogHistogram,
+    /// Dispatch-to-done whole-request latency, ms.
+    pub request_ms: LogHistogram,
+    /// Wall-clock time of the whole run.
+    pub wall: Duration,
+}
+
+impl OpenLoopReport {
+    /// Fraction of sent requests the server shed.
+    pub fn rejection_rate(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.sent as f64
+        }
+    }
+
+    /// The `BENCH_serve.json` payload (queue/SLO fields are appended by
+    /// the CLI, which owns the server-side handles and the bars).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::Num(self.sent as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("generated_tokens", Json::Num(self.generated_tokens as f64)),
+            ("offered_rps", Json::Num(self.offered_rps)),
+            ("achieved_rps", Json::Num(self.achieved_rps)),
+            ("achieved_tps", Json::Num(self.achieved_tps)),
+            ("rejection_rate", Json::Num(self.rejection_rate())),
+            ("ttft_ms", hist_json(&self.ttft_ms)),
+            ("token_gap_ms", hist_json(&self.token_gap_ms)),
+            ("request_ms", hist_json(&self.request_ms)),
+            ("wall_s", Json::Num(self.wall.as_secs_f64())),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct Acc {
+    completed: usize,
+    rejected: usize,
+    dropped: usize,
+    generated_tokens: usize,
+    ttft_ms: LogHistogram,
+    token_gap_ms: LogHistogram,
+    request_ms: LogHistogram,
+}
+
+/// How long a client waits on a silent socket before counting the
+/// request as dropped.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Drive `trace` against the front door at `addr`, open-loop: a
+/// dispatcher sleeps to each item's `at_ms` and hands it to its own
+/// client thread, which streams SSE and timestamps TTFT / inter-token
+/// gaps / completion. Blocks until every client finishes.
+pub fn run_trace(addr: SocketAddr, trace: &Trace) -> OpenLoopReport {
+    let start = Instant::now();
+    let acc = Arc::new(Mutex::new(Acc::default()));
+    let mut workers = Vec::with_capacity(trace.items.len());
+    for item in &trace.items {
+        let due = Duration::from_secs_f64(item.at_ms / 1e3);
+        let elapsed = start.elapsed();
+        if due > elapsed {
+            std::thread::sleep(due - elapsed);
+        }
+        let item = item.clone();
+        let acc = acc.clone();
+        workers.push(std::thread::spawn(move || {
+            let body = item.request_json().to_string();
+            let outcome = http_exchange(addr, "POST", "/v1/generate", Some(&body), CLIENT_TIMEOUT);
+            let mut a = acc.lock().unwrap();
+            match outcome {
+                Err(_) => a.dropped += 1,
+                Ok(o) if o.status == 429 || o.status == 503 => a.rejected += 1,
+                Ok(o) if o.status == 200 && o.finish().is_some() => {
+                    if o.finish() == Some("cancelled") {
+                        // the server gave up on it (deadline/drain): lost
+                        a.dropped += 1;
+                        return;
+                    }
+                    a.completed += 1;
+                    let tokens: Vec<&SseRecord> =
+                        o.events.iter().filter(|r| r.event == "token").collect();
+                    a.generated_tokens += tokens.len();
+                    if let Some(first) = tokens.first() {
+                        a.ttft_ms.record(first.at_ms);
+                    }
+                    for pair in tokens.windows(2) {
+                        a.token_gap_ms.record(pair[1].at_ms - pair[0].at_ms);
+                    }
+                    if let Some(done) = o.events.iter().find(|r| r.event == "done") {
+                        a.request_ms.record(done.at_ms);
+                    }
+                }
+                Ok(_) => a.dropped += 1,
+            }
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    let wall = start.elapsed();
+    let acc = Arc::try_unwrap(acc)
+        .map(|m| m.into_inner().unwrap())
+        .unwrap_or_else(|arc| {
+            let a = arc.lock().unwrap();
+            Acc {
+                completed: a.completed,
+                rejected: a.rejected,
+                dropped: a.dropped,
+                generated_tokens: a.generated_tokens,
+                ttft_ms: a.ttft_ms.clone(),
+                token_gap_ms: a.token_gap_ms.clone(),
+                request_ms: a.request_ms.clone(),
+            }
+        });
+    let span_s = trace.items.last().map(|it| it.at_ms / 1e3).unwrap_or(0.0);
+    let offered_rps = if span_s > 0.0 {
+        trace.items.len() as f64 / span_s
+    } else {
+        0.0
+    };
+    let wall_s = wall.as_secs_f64().max(1e-9);
+    OpenLoopReport {
+        sent: trace.items.len(),
+        completed: acc.completed,
+        rejected: acc.rejected,
+        dropped: acc.dropped,
+        generated_tokens: acc.generated_tokens,
+        offered_rps,
+        achieved_rps: acc.completed as f64 / wall_s,
+        achieved_tps: acc.generated_tokens as f64 / wall_s,
+        ttft_ms: acc.ttft_ms,
+        token_gap_ms: acc.token_gap_ms,
+        request_ms: acc.request_ms,
+        wall,
+    }
+}
+
+/// Stand up the full serving stack (engine → router → HTTP server) on an
+/// ephemeral localhost port, drive `trace` through it open-loop, then
+/// drain everything in graceful order. Returns the client-side report
+/// and the engine's final [`Metrics`] — the shared core of `bbq
+/// serve-bench` and the end-to-end tests.
+pub fn serve_trace(
+    model: Arc<Model>,
+    server_cfg: ServerConfig,
+    router_cfg: RouterConfig,
+    http_cfg: HttpConfig,
+    trace: &Trace,
+) -> (OpenLoopReport, Metrics) {
+    let engine = Engine::start(model.clone(), server_cfg);
+    let entry = ModelEntry::for_model("default", engine.handle(), &model);
+    let router = Router::new(vec![entry], router_cfg);
+    let server =
+        HttpServer::bind("127.0.0.1:0", router.handle(), http_cfg).expect("bind ephemeral port");
+    let addr = server.local_addr();
+    let report = run_trace(addr, trace);
+    server.shutdown();
+    router.shutdown();
+    let metrics = engine.shutdown();
+    (report, metrics)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::params::Params;
+    use crate::model::plan::QuantPlan;
+    use crate::quant::config::presets;
+
+    fn cfg() -> TrafficConfig {
+        TrafficConfig {
+            requests: 200,
+            rate_rps: 50.0,
+            ..TrafficConfig::default()
+        }
+    }
+
+    #[test]
+    fn poisson_trace_is_deterministic_and_in_bounds() {
+        let a = Trace::poisson(&cfg());
+        let b = Trace::poisson(&cfg());
+        assert_eq!(a, b, "same seed must reproduce the same trace");
+        let c = Trace::poisson(&TrafficConfig {
+            seed: 1,
+            ..cfg()
+        });
+        assert_ne!(a, c, "a different seed must change the trace");
+        let tc = cfg();
+        let mut last = 0.0;
+        for it in &a.items {
+            assert!(it.at_ms >= last, "arrivals must be non-decreasing");
+            last = it.at_ms;
+            assert!(it.prompt.len() >= tc.prompt_len.0 && it.prompt.len() <= tc.prompt_len.1);
+            assert!(it.prompt.iter().all(|&t| t < tc.vocab));
+            assert!(it.max_new_tokens >= tc.new_tokens.0 && it.max_new_tokens <= tc.new_tokens.1);
+        }
+        // mean inter-arrival ≈ 1/rate (20ms at 50 rps); generous bound
+        let mean_gap = last / (a.items.len() - 1) as f64;
+        assert!(
+            (mean_gap - 20.0).abs() < 8.0,
+            "mean gap {mean_gap}ms vs expected 20ms"
+        );
+        // the weighted mix must actually produce every class
+        for p in Priority::ALL {
+            assert!(
+                a.items.iter().any(|it| it.priority == p),
+                "no {} items",
+                p.as_str()
+            );
+        }
+    }
+
+    #[test]
+    fn trace_roundtrips_through_json() {
+        let trace = Trace::poisson(&TrafficConfig {
+            requests: 17,
+            ..cfg()
+        });
+        let back = Trace::from_json(&Json::parse(&trace.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(trace, back);
+        assert!(Trace::from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(Trace::from_json(
+            &Json::parse(r#"{"items": [{"at_ms": 1}]}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn open_loop_run_completes_a_small_trace() {
+        let mcfg = ModelConfig::preset("nano");
+        let model = Arc::new(Model::new(
+            Params::init(&mcfg, 42),
+            QuantPlan::uniform(presets::bfp_w(6)),
+        ));
+        let trace = Trace::poisson(&TrafficConfig {
+            requests: 6,
+            rate_rps: 200.0,
+            prompt_len: (2, 5),
+            new_tokens: (2, 4),
+            vocab: mcfg.vocab_size,
+            ..TrafficConfig::default()
+        });
+        let (report, metrics) = serve_trace(
+            model,
+            ServerConfig::default(),
+            RouterConfig::default(),
+            HttpConfig::default(),
+            &trace,
+        );
+        assert_eq!(report.sent, 6);
+        assert_eq!(report.completed, 6, "dropped={} rejected={}", report.dropped, report.rejected);
+        assert_eq!(report.dropped, 0);
+        assert_eq!(report.rejected, 0);
+        assert!(report.generated_tokens >= 6 * 2);
+        assert_eq!(report.ttft_ms.count(), 6);
+        assert_eq!(report.request_ms.count(), 6);
+        assert!(report.achieved_tps > 0.0);
+        assert_eq!(metrics.completed, 6);
+        assert_eq!(metrics.cancelled, 0);
+        // the report serialises with the full BENCH_serve schema
+        let doc = Json::parse(&report.to_json().to_string()).unwrap();
+        for key in [
+            "sent",
+            "completed",
+            "rejected",
+            "dropped",
+            "generated_tokens",
+            "offered_rps",
+            "achieved_rps",
+            "achieved_tps",
+            "rejection_rate",
+            "ttft_ms",
+            "token_gap_ms",
+            "request_ms",
+            "wall_s",
+        ] {
+            assert!(doc.get(key).is_some(), "missing {key}");
+        }
+        assert_eq!(doc.get("ttft_ms").unwrap().get("count").unwrap().as_f64(), Some(6.0));
+    }
+}

@@ -14,7 +14,18 @@
 //!                    (`--stream` drives the live Engine API and prints
 //!                    request 0's tokens as they arrive; `--temperature`,
 //!                    `--top-k`, `--stop-token`, `--seed`, `--queue-depth`
-//!                    set the per-request GenerationParams / engine queue)
+//!                    set the per-request GenerationParams / engine queue;
+//!                    `--listen ADDR` starts the HTTP/SSE front door
+//!                    instead, printing live p50/p99 latency and queue-wait
+//!                    snapshots until SIGTERM/SIGINT drains it)
+//!   serve-bench      open-loop Poisson traffic against the HTTP front
+//!                    door; writes BENCH_serve.json (`--quick` shrinks the
+//!                    trace for CI, `--check` makes the SLO bars fatal,
+//!                    `--trace-out`/`--trace-in` record/replay a trace)
+//!   bench-report     render BENCH_*.json files as markdown tables (CI
+//!                    appends the output to $GITHUB_STEP_SUMMARY)
+//!   bench-snapshot   fail if committed BENCH_*.json snapshots drifted
+//!                    out of schema-sync with freshly produced ones
 //!   artifacts        list AOT artifacts visible to the runtime
 //!
 //! Common options: `--model <preset>` `--format <name>` `--seq N` `--threads N`
@@ -142,6 +153,9 @@ fn main() {
         }
         "search" => cmd_search(&args),
         "serve" => cmd_serve(&args),
+        "serve-bench" => cmd_serve_bench(&args),
+        "bench-report" => cmd_bench_report(&args),
+        "bench-snapshot" => cmd_bench_snapshot(&args),
         "artifacts" => {
             let rt = bbq::runtime::Runtime::open(&bbq::util::artifacts_dir())
                 .expect("open artifacts dir");
@@ -161,7 +175,7 @@ fn main() {
 }
 
 const HELP: &str = "bbq — block-based quantisation lab (EMNLP 2023 reproduction)
-usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|serve|artifacts> [--opts]
+usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|serve|serve-bench|bench-report|bench-snapshot|artifacts> [--opts]
 see rust/src/main.rs header for the option list";
 
 fn cmd_quantize(args: &Args) {
@@ -257,6 +271,11 @@ fn cmd_serve(args: &Args) {
         prefill_chunk: args.usize_or("prefill-chunk", 8),
         queue_depth: args.usize_or("queue-depth", 64),
     };
+    if let Some(listen) = args.get("listen") {
+        let listen = listen.to_string();
+        serve_listen(&listen, model, &preset, cfg, args);
+        return;
+    }
     if args.has_flag("stream") {
         // live-engine demo: submit through an EngineHandle and stream
         // request 0's tokens as the scheduler produces them
@@ -293,6 +312,312 @@ fn cmd_serve(args: &Args) {
         if let Some(r) = resps.first() {
             println!("sample completion: {}", vocab.decode(&r.tokens));
         }
+    }
+}
+
+/// `bbq serve --listen ADDR`: stand up the network front door (engine →
+/// router → HTTP server) on `addr` and run until SIGTERM/SIGINT, printing
+/// live p50/p99 latency and queue-wait snapshots from the engine's
+/// metrics between requests. On a signal the stack drains gracefully in
+/// order: HTTP server (stop accepting), router (dispatch everything
+/// accepted), engine (finish queued + in-flight requests).
+fn serve_listen(addr: &str, model: Model, name: &str, cfg: ServerConfig, args: &Args) {
+    use bbq::coordinator::{
+        shutdown_signal, HttpConfig, HttpServer, ModelEntry, Router, RouterConfig,
+    };
+    use std::time::{Duration, Instant};
+    let model = std::sync::Arc::new(model);
+    let engine = Engine::start(model.clone(), cfg);
+    let entry = ModelEntry::for_model(name, engine.handle(), &model);
+    let router = Router::new(vec![entry], RouterConfig::default());
+    let server =
+        HttpServer::bind(addr, router.handle(), HttpConfig::default()).expect("bind listen address");
+    shutdown_signal::install();
+    println!(
+        "listening on http://{} (model {name}; POST /v1/generate, GET /v1/metrics, GET /healthz; \
+         SIGTERM/SIGINT drains)",
+        server.local_addr()
+    );
+    let handle = engine.handle();
+    let interval = Duration::from_millis(args.u64_or("metrics-interval-ms", 2000).max(100));
+    let mut last_tick = Instant::now();
+    let mut last_completed = usize::MAX; // force one initial line
+    while !shutdown_signal::triggered() {
+        std::thread::sleep(Duration::from_millis(100));
+        if last_tick.elapsed() < interval {
+            continue;
+        }
+        last_tick = Instant::now();
+        let m = handle.metrics();
+        if m.completed == last_completed {
+            continue; // idle: don't scroll identical snapshots
+        }
+        last_completed = m.completed;
+        println!(
+            "[metrics] completed {} ({} cancelled) | {:.1} tok/s | latency p50/p99 \
+             {:.1}/{:.1} ms | queue wait p50/p99 {:.1}/{:.1} ms | queue depth {} (peak {})",
+            m.completed,
+            m.cancelled,
+            m.throughput_tps(),
+            m.p(50.0),
+            m.p(99.0),
+            m.queue_wait.percentile(50.0),
+            m.queue_wait.percentile(99.0),
+            handle.queue_depth(),
+            m.queue_peak,
+        );
+    }
+    println!("shutdown signal received: draining (http server -> router -> engine)");
+    server.shutdown();
+    router.shutdown();
+    let metrics = engine.shutdown();
+    println!("{}", metrics.summary());
+}
+
+/// `bbq serve-bench`: open-loop Poisson traffic through the real HTTP
+/// front door, end to end over localhost sockets. Writes BENCH_serve.json
+/// next to the manifest. Under `--check` the SLO bars (zero dropped, zero
+/// rejected, every request completed, TTFT p99 and inter-token-gap p99
+/// under their bars) are hard failures.
+fn cmd_serve_bench(args: &Args) {
+    use bbq::coordinator::{serve_trace, HttpConfig, RouterConfig, Trace, TrafficConfig};
+    use bbq::model::config::ModelConfig;
+    use bbq::model::params::Params;
+    use bbq::util::json::Json;
+
+    let quick = args.has_flag("quick");
+    let check = args.has_flag("check");
+    let preset = args.get_or("model", "tiny");
+    let fmt_name = args.get_or("format", "bfp_e8m5n16");
+    let fmt = QFormat::parse(&fmt_name).unwrap_or_else(|| panic!("unknown format '{fmt_name}'"));
+    let mcfg = ModelConfig::preset(&preset);
+    // untrained weights: the bench measures the serving stack, not the model
+    let model = std::sync::Arc::new(Model::new(Params::init(&mcfg, 3), QuantPlan::uniform(fmt)));
+    let trace = match args.get("trace-in") {
+        Some(path) => Trace::load(path).unwrap_or_else(|e| panic!("{e}")),
+        None => Trace::poisson(&TrafficConfig {
+            requests: args.usize_or("requests", if quick { 32 } else { 128 }),
+            rate_rps: args.f64_or("rate", if quick { 16.0 } else { 24.0 }),
+            prompt_len: (4, 16),
+            new_tokens: (4, 12),
+            vocab: mcfg.vocab_size,
+            priority_mix: [0.5, 0.4, 0.1],
+            seed: args.u64_or("seed", 0x5EED),
+        }),
+    };
+    if let Some(path) = args.get("trace-out") {
+        trace.save(path).expect("write trace file");
+        println!("wrote trace ({} items) to {path}", trace.items.len());
+    }
+    let server_cfg = ServerConfig {
+        max_batch: args.usize_or("max-batch", 8),
+        prefill_chunk: args.usize_or("prefill-chunk", 8),
+        // the zero-rejection SLO bar is structural: by default every
+        // request in the trace can sit in the engine queue at once
+        queue_depth: args.usize_or("queue-depth", trace.items.len().max(64)),
+    };
+    let queue_depth = server_cfg.queue_depth;
+    let router_cfg = RouterConfig {
+        class_depth: trace.items.len().max(256),
+        ..RouterConfig::default()
+    };
+    println!(
+        "serve-bench: {} requests, model {preset} / {fmt_name}{}{}",
+        trace.items.len(),
+        if quick { ", quick" } else { "" },
+        if check { ", gated" } else { "" },
+    );
+    let (report, metrics) = serve_trace(model, server_cfg, router_cfg, HttpConfig::default(), &trace);
+
+    let slo_ttft = args.f64_or("slo-ttft-p99-ms", 2500.0);
+    let slo_gap = args.f64_or("slo-token-p99-ms", 500.0);
+    let ttft_p99 = report.ttft_ms.percentile(99.0);
+    let gap_p99 = report.token_gap_ms.percentile(99.0);
+    let mut failures: Vec<String> = Vec::new();
+    if report.dropped > 0 {
+        failures.push(format!("{} dropped requests (bar: 0)", report.dropped));
+    }
+    if report.rejected > 0 {
+        failures.push(format!("{} rejected requests (bar: 0)", report.rejected));
+    }
+    if report.completed != report.sent {
+        failures.push(format!(
+            "completed {}/{} (bar: every request)",
+            report.completed, report.sent
+        ));
+    }
+    if ttft_p99 > slo_ttft {
+        failures.push(format!("TTFT p99 {ttft_p99:.1} ms > {slo_ttft:.0} ms bar"));
+    }
+    if gap_p99 > slo_gap {
+        failures.push(format!("token gap p99 {gap_p99:.1} ms > {slo_gap:.0} ms bar"));
+    }
+    let pass = failures.is_empty();
+
+    let mut doc = report.to_json();
+    if let Json::Obj(map) = &mut doc {
+        map.insert("bench".to_string(), Json::Str("serve".to_string()));
+        map.insert("model".to_string(), Json::Str(preset.clone()));
+        map.insert("format".to_string(), Json::Str(fmt.name()));
+        map.insert("quick".to_string(), Json::Bool(quick));
+        map.insert("queue_depth".to_string(), Json::Num(queue_depth as f64));
+        map.insert("queue_peak".to_string(), Json::Num(metrics.queue_peak as f64));
+        map.insert(
+            "engine_completed".to_string(),
+            Json::Num(metrics.completed as f64),
+        );
+        map.insert(
+            "engine_cancelled".to_string(),
+            Json::Num(metrics.cancelled as f64),
+        );
+        map.insert(
+            "slo".to_string(),
+            Json::obj(vec![
+                ("ttft_p99_ms_bar", Json::Num(slo_ttft)),
+                ("token_gap_p99_ms_bar", Json::Num(slo_gap)),
+                ("pass", Json::Bool(pass)),
+            ]),
+        );
+    }
+    let out = args.get_or("out", "BENCH_serve.json");
+    std::fs::write(&out, doc.to_string() + "\n").expect("write BENCH_serve.json");
+
+    println!(
+        "  offered {:.1} rps | achieved {:.1} rps, {:.1} tok/s | completed {}/{} \
+         (rejected {}, dropped {})",
+        report.offered_rps,
+        report.achieved_rps,
+        report.achieved_tps,
+        report.completed,
+        report.sent,
+        report.rejected,
+        report.dropped,
+    );
+    println!(
+        "  TTFT p50/p99 {:.1}/{:.1} ms | token gap p50/p99 {:.1}/{:.1} ms | request p99 {:.1} ms \
+         | queue peak {}",
+        report.ttft_ms.percentile(50.0),
+        ttft_p99,
+        report.token_gap_ms.percentile(50.0),
+        gap_p99,
+        report.request_ms.percentile(99.0),
+        metrics.queue_peak,
+    );
+    println!("  wrote {out}");
+    if pass {
+        println!("  all serve SLO bars met");
+    } else {
+        println!("serve SLO bars missed:");
+        for f in &failures {
+            println!("  FAIL: {f}");
+        }
+        if check {
+            std::process::exit(1);
+        }
+        println!("  (run with --check to make these fatal)");
+    }
+}
+
+/// `BENCH_*.json` files directly under `dir`, sorted by name.
+fn bench_files(dir: &str) -> Vec<std::path::PathBuf> {
+    let mut out: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                        .unwrap_or(false)
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    out.sort();
+    out
+}
+
+fn read_bench_json(path: &std::path::Path) -> bbq::util::json::Json {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    bbq::util::json::Json::parse(&text).unwrap_or_else(|e| panic!("parse {}: {e}", path.display()))
+}
+
+/// `bbq bench-report [files...]`: one markdown table per BENCH_*.json
+/// (positional paths, or every BENCH_*.json under `--dir`, default `.`).
+/// CI appends the output to `$GITHUB_STEP_SUMMARY`.
+fn cmd_bench_report(args: &Args) {
+    use bbq::util::report::markdown_table;
+    let files: Vec<std::path::PathBuf> = if args.positional.is_empty() {
+        bench_files(&args.get_or("dir", "."))
+    } else {
+        args.positional.iter().map(std::path::PathBuf::from).collect()
+    };
+    if files.is_empty() {
+        println!("no BENCH_*.json files found");
+        return;
+    }
+    for path in files {
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        print!("{}", markdown_table(&name, &read_bench_json(&path)));
+    }
+}
+
+/// `bbq bench-snapshot --committed DIR --fresh DIR`: for every committed
+/// `BENCH_*.json` snapshot, require a freshly produced file of the same
+/// name whose *schema* (dotted key set) matches. Values are ignored — the
+/// committed trajectory files hold nulls until refreshed from CI — and so
+/// are the `pending_first_ci_run`/`note` bookkeeping keys the committed
+/// copies carry. Exits 1 on any drift.
+fn cmd_bench_snapshot(args: &Args) {
+    use bbq::util::json::Json;
+    use bbq::util::report::schema_diff;
+    let committed_dir = args.get_or("committed", "..");
+    let fresh_dir = args.get_or("fresh", ".");
+    let committed = bench_files(&committed_dir);
+    if committed.is_empty() {
+        eprintln!("no committed BENCH_*.json snapshots under {committed_dir}");
+        std::process::exit(1);
+    }
+    let strip_bookkeeping = |mut doc: Json| -> Json {
+        if let Json::Obj(map) = &mut doc {
+            map.remove("pending_first_ci_run");
+            map.remove("note");
+        }
+        doc
+    };
+    let mut problems: Vec<String> = Vec::new();
+    let mut checked = 0usize;
+    for cpath in committed {
+        let name = cpath
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| cpath.display().to_string());
+        let fpath = std::path::Path::new(&fresh_dir).join(&name);
+        if !fpath.exists() {
+            problems.push(format!(
+                "{name}: committed snapshot has no freshly produced counterpart in {fresh_dir}"
+            ));
+            continue;
+        }
+        checked += 1;
+        for d in schema_diff(
+            &strip_bookkeeping(read_bench_json(&cpath)),
+            &read_bench_json(&fpath),
+        ) {
+            problems.push(format!("{name}: {d}"));
+        }
+    }
+    if problems.is_empty() {
+        println!("bench snapshots: {checked} file(s) schema-synced with fresh output");
+    } else {
+        println!("bench snapshot drift (refresh the committed BENCH_*.json from CI artifacts):");
+        for p in &problems {
+            println!("  FAIL: {p}");
+        }
+        std::process::exit(1);
     }
 }
 

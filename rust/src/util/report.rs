@@ -1,0 +1,139 @@
+//! Bench-report rendering and schema comparison for the `BENCH_*.json`
+//! trajectory files.
+//!
+//! Two consumers, both wired into CI:
+//!
+//! - `bbq bench-report` turns every `BENCH_*.json` produced by a job into
+//!   a GitHub-flavoured markdown table ([`markdown_table`]) appended to
+//!   `$GITHUB_STEP_SUMMARY`, so the numbers are readable without
+//!   downloading the artifact.
+//! - `bbq bench-snapshot` diffs the *schema* (the dotted key set, not the
+//!   values) of the committed root `BENCH_*.json` snapshots against
+//!   freshly produced ones ([`schema_diff`]). The committed files are
+//!   null-pending trajectory snapshots — their values are refreshed by
+//!   copy-paste from a green run — so the check that keeps them honest is
+//!   that their shape still matches what the benches actually emit.
+
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Flatten a JSON document into `(dotted.path, leaf)` pairs, sorted by
+/// path. Objects recurse; arrays and scalars are leaves.
+pub fn flatten(doc: &Json) -> Vec<(String, Json)> {
+    let mut out = Vec::new();
+    fn walk(prefix: &str, j: &Json, out: &mut Vec<(String, Json)>) {
+        match j {
+            Json::Obj(m) => {
+                for (k, v) in m {
+                    let path = if prefix.is_empty() {
+                        k.clone()
+                    } else {
+                        format!("{prefix}.{k}")
+                    };
+                    walk(&path, v, out);
+                }
+            }
+            other => out.push((prefix.to_string(), other.clone())),
+        }
+    }
+    walk("", doc, &mut out);
+    out
+}
+
+fn fmt_value(v: &Json) -> String {
+    let s = match v {
+        Json::Null => "null".to_string(),
+        Json::Num(x) => {
+            if *x == x.trunc() && x.abs() < 1e15 {
+                format!("{}", *x as i64)
+            } else {
+                format!("{x:.4}")
+            }
+        }
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    };
+    // keep table framing intact whatever the value contains
+    s.replace('|', "\\|").replace('\n', " ")
+}
+
+/// Render one bench document as a GitHub-flavoured markdown table titled
+/// `name`, one row per flattened metric.
+pub fn markdown_table(name: &str, doc: &Json) -> String {
+    let mut out = format!("### {name}\n\n| metric | value |\n| --- | --- |\n");
+    for (path, leaf) in flatten(doc) {
+        out.push_str(&format!("| {path} | {} |\n", fmt_value(&leaf)));
+    }
+    out.push('\n');
+    out
+}
+
+/// Compare the *schemas* (dotted key sets) of a committed snapshot and a
+/// freshly produced document. Returns one human-readable line per
+/// difference; empty means the shapes match. Values are ignored — the
+/// committed trajectory files hold nulls until refreshed from CI.
+pub fn schema_diff(committed: &Json, fresh: &Json) -> Vec<String> {
+    let keys = |j: &Json| -> BTreeSet<String> {
+        flatten(j).into_iter().map(|(path, _)| path).collect()
+    };
+    let committed_keys = keys(committed);
+    let fresh_keys = keys(fresh);
+    let mut diffs = Vec::new();
+    for k in committed_keys.difference(&fresh_keys) {
+        diffs.push(format!("key \"{k}\" is committed but the bench no longer emits it"));
+    }
+    for k in fresh_keys.difference(&committed_keys) {
+        diffs.push(format!("key \"{k}\" is emitted but missing from the committed snapshot"));
+    }
+    diffs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc() -> Json {
+        Json::parse(
+            r#"{"bench": "serve", "completed": 32, "ttft_ms": {"p50": 10.5, "p99": null},
+                "note": "has | pipe"}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn flatten_produces_dotted_sorted_paths() {
+        let paths: Vec<String> = flatten(&doc()).into_iter().map(|(p, _)| p).collect();
+        assert_eq!(
+            paths,
+            vec!["bench", "completed", "note", "ttft_ms.p50", "ttft_ms.p99"]
+        );
+    }
+
+    #[test]
+    fn markdown_table_rows_and_escaping() {
+        let t = markdown_table("BENCH_serve.json", &doc());
+        assert!(t.starts_with("### BENCH_serve.json\n"));
+        assert!(t.contains("| metric | value |"));
+        assert!(t.contains("| completed | 32 |"));
+        assert!(t.contains("| ttft_ms.p50 | 10.5000 |"));
+        assert!(t.contains("| ttft_ms.p99 | null |"));
+        assert!(t.contains("has \\| pipe"), "pipes must be escaped: {t}");
+    }
+
+    #[test]
+    fn schema_diff_ignores_values_flags_shape() {
+        // identical shape, different values (nulls vs numbers): no diff
+        let fresh = Json::parse(
+            r#"{"bench": "serve", "completed": 99, "ttft_ms": {"p50": 1, "p99": 2},
+                "note": "x"}"#,
+        )
+        .unwrap();
+        assert!(schema_diff(&doc(), &fresh).is_empty());
+        // a dropped and an added key are both reported
+        let drifted = Json::parse(r#"{"bench": "serve", "completed": 1, "extra": true}"#).unwrap();
+        let diffs = schema_diff(&doc(), &drifted);
+        assert_eq!(diffs.len(), 4, "{diffs:?}"); // note, ttft_ms.p50/.p99 gone; extra new
+        assert!(diffs.iter().any(|d| d.contains("\"extra\"")));
+        assert!(diffs.iter().any(|d| d.contains("ttft_ms.p50")));
+    }
+}
