@@ -14,18 +14,23 @@
 //! prefill section writes `BENCH_prefill.json` (chunked vs
 //! token-at-a-time prefill tokens/sec), and the full-context section
 //! writes `BENCH_forward.json` (fused packed prefill GEMM vs the
-//! pre-refactor transient dense decode, plus forward tok/s) next to the
-//! manifest — CI uploads all three as bench artifacts. Under `--check`
-//! the acceptance bars (batch-8 ≥ 2× single-stream decode; chunk-8 ≥ 2×
-//! chunk-1 prefill; EngineHandle submission within 10% of run_batched;
-//! fused prefill GEMM ≥ 1.0× of transient dense decode) are hard
+//! pre-refactor transient dense decode, plus forward tok/s), and the
+//! paged-KV section writes `BENCH_kv.json` (paged vs dense-equivalent
+//! decode, quantised-KV capacity multiplier, warm-vs-cold prefix-cached
+//! prefill) next to the manifest — CI uploads all four as bench
+//! artifacts. Under `--check` the acceptance bars (batch-8 ≥ 2×
+//! single-stream decode; chunk-8 ≥ 2× chunk-1 prefill; EngineHandle
+//! submission within 10% of run_batched; fused prefill GEMM ≥ 1.0× of
+//! transient dense decode; paged-f32 decode ≥ 0.90× dense-equivalent;
+//! quantised-KV capacity ≥ 2×; prefix-cached prefill ≥ 2× cold) are hard
 //! failures instead of scrolled-past warnings.
 
 use bbq::coordinator::{run_batched, Engine, Metrics, Request, ServerConfig};
 use bbq::model::config::ModelConfig;
+use bbq::model::kv_cache::BatchedDecodeSession;
 use bbq::model::params::Params;
 use bbq::model::plan::QuantPlan;
-use bbq::model::Model;
+use bbq::model::{KvConfig, Model, SessionConfig};
 use bbq::quant::config::presets;
 use bbq::quant::fake_quant;
 use bbq::quant::qmatmul::{
@@ -178,6 +183,7 @@ fn main() {
     bench_decode_engine(quick, &mut gates);
     bench_prefill_engine(quick, &mut gates);
     bench_forward_unified(quick, &mut gates);
+    bench_kv(quick, &mut gates);
 
     if !gates.is_empty() {
         println!("\nbench gates below their acceptance bars:");
@@ -466,5 +472,150 @@ fn bench_forward_unified(quick: bool, gates: &mut Vec<String>) {
     ]);
     let path = "BENCH_forward.json";
     std::fs::write(path, j.to_string() + "\n").expect("write BENCH_forward.json");
+    println!("  wrote {path}");
+}
+
+/// Paged KV cache: (1) decode throughput of 16-row f32 pages vs a
+/// dense-equivalent configuration (one page spanning the whole context
+/// with the prefix cache off — the store's single-page zero-copy fast
+/// path, i.e. the contiguous pre-paging layout); (2) resident KV bytes
+/// with BFP6 pages vs dense f32 rows (sealed pages bit-pack, so capacity
+/// grows ~5×); (3) prompt absorption cold vs through the prefix cache
+/// (warm admissions attach the sealed pages and only recompute the final
+/// prompt row). Writes BENCH_kv.json; under `--check` the paged decode
+/// must hold ≥ 0.90× of dense-equivalent, quantised-KV capacity ≥ 2×,
+/// and the prefix-cached prefill ≥ 2× over cold.
+fn bench_kv(quick: bool, gates: &mut Vec<String>) {
+    println!("\n== paged KV cache (tiny, BFP6 weights) ==");
+    let wfmt = presets::bfp_w(6);
+    let kvfmt = presets::bfp_w(6);
+    let cfg = ModelConfig::preset("tiny");
+    let model = Model::new(Params::init(&cfg, 3), QuantPlan::uniform(wfmt));
+    let reps = if quick { 2 } else { 3 };
+    let new_toks = if quick { 8 } else { 16 };
+    let mk_reqs = || -> Vec<Request> {
+        (0..8)
+            .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], new_toks))
+            .collect()
+    };
+    let run_tps = |kv: KvConfig| -> f64 {
+        let server_cfg = ServerConfig {
+            max_batch: 8,
+            kv,
+            ..ServerConfig::default()
+        };
+        let mut best = 0.0f64;
+        for _ in 0..reps {
+            let (_, m) = run_batched(&model, mk_reqs(), &server_cfg);
+            best = best.max(m.throughput_tps());
+        }
+        best
+    };
+    let dense_tps = run_tps(KvConfig {
+        page_size: cfg.max_seq,
+        prefix_cache_pages: 0,
+        ..KvConfig::default()
+    });
+    let paged_tps = run_tps(KvConfig::default());
+    let paged_vs_dense = paged_tps / dense_tps.max(1e-12);
+    println!(
+        "  decode: paged 16-row pages {paged_tps:.1} tok/s vs dense-equivalent \
+         {dense_tps:.1} tok/s ({paged_vs_dense:.2}x)"
+    );
+    if paged_vs_dense < 0.90 {
+        println!("  WARNING: paged decode below 0.90x of the dense-equivalent layout");
+        gates.push(format!(
+            "kv: paged decode {paged_vs_dense:.2}x < 0.90x of dense-equivalent"
+        ));
+    }
+    // capacity: 64 decoded rows, BFP6 pages vs f32 pages (both measured
+    // through the store's own accounting)
+    let rows = 64usize;
+    let mut qsess = BatchedDecodeSession::new(&model, &SessionConfig::new(1).kv_format(kvfmt));
+    let mut fsess = BatchedDecodeSession::new(&model, &SessionConfig::new(1));
+    for t in 0..rows {
+        let tok = (3 + t * 7) % cfg.vocab_size;
+        qsess.step(&[(0, tok)]);
+        fsess.step(&[(0, tok)]);
+    }
+    let q_bytes = qsess.kv_bytes();
+    let f_bytes = fsess.kv_bytes();
+    let capacity = f_bytes as f64 / q_bytes.max(1) as f64;
+    println!(
+        "  capacity: {rows} rows in {} KV = {q_bytes} B vs f32 {f_bytes} B \
+         ({capacity:.2}x more context per byte)",
+        kvfmt.name()
+    );
+    if capacity < 2.0 {
+        println!("  WARNING: quantised-KV capacity multiplier below the 2x bar");
+        gates.push(format!(
+            "kv: {} capacity {capacity:.2}x < 2.0x over dense f32",
+            kvfmt.name()
+        ));
+    }
+    // prefix cache: absorb a long prompt cold, then admit the same prompt
+    // warm (attach sealed pages, recompute only the uncovered tail)
+    let prompt_len = if quick { 64 } else { 96 };
+    let prompt: Vec<usize> = (0..prompt_len)
+        .map(|t| (3 + t * 7) % cfg.vocab_size)
+        .collect();
+    fn feed(sess: &mut BatchedDecodeSession<'_>, slot: usize, prompt: &[usize], from: usize) {
+        let mut fed = from;
+        while fed < prompt.len() {
+            let end = (fed + 8).min(prompt.len());
+            sess.step_chunked(&[(slot, &prompt[fed..end])], None);
+            fed = end;
+        }
+    }
+    let mut sess = BatchedDecodeSession::new(&model, &SessionConfig::new(2));
+    let mut cold_ms = f64::INFINITY;
+    for _ in 0..reps {
+        // cold never calls attach_prefix, so the warm cache can't help it
+        sess.reset_slot(0);
+        let t0 = std::time::Instant::now();
+        feed(&mut sess, 0, &prompt, 0);
+        cold_ms = cold_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let mut warm_ms = f64::INFINITY;
+    for _ in 0..reps {
+        sess.reset_slot(1);
+        let t0 = std::time::Instant::now();
+        let attached = sess.attach_prefix(1, &prompt);
+        feed(&mut sess, 1, &prompt, attached);
+        warm_ms = warm_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let prefix_speedup = cold_ms / warm_ms.max(1e-9);
+    let hit_rows = sess.kv_stats().prefix_hit_rows;
+    println!(
+        "  prefill ({prompt_len} rows): cold {cold_ms:.2} ms vs prefix-cached \
+         {warm_ms:.2} ms ({prefix_speedup:.2}x, {hit_rows} rows reused)"
+    );
+    if prefix_speedup < 2.0 {
+        println!("  WARNING: prefix-cached prefill below the 2x acceptance bar");
+        gates.push(format!(
+            "kv: prefix-cached prefill {prefix_speedup:.2}x < 2.0x over cold"
+        ));
+    }
+    let j = Json::obj(vec![
+        ("bench", Json::Str("kv_cache".into())),
+        ("model", Json::Str(cfg.name.clone())),
+        ("format", Json::Str(kvfmt.name())),
+        ("paged_tps", Json::Num(paged_tps)),
+        ("dense_tps", Json::Num(dense_tps)),
+        ("paged_vs_dense", Json::Num(paged_vs_dense)),
+        ("gate_paged_vs_dense_min", Json::Num(0.90)),
+        ("kv_bytes_quantised", Json::Num(q_bytes as f64)),
+        ("kv_bytes_dense_f32", Json::Num(f_bytes as f64)),
+        ("capacity_multiplier", Json::Num(capacity)),
+        ("gate_capacity_multiplier_min", Json::Num(2.0)),
+        ("prefill_cold_ms", Json::Num(cold_ms)),
+        ("prefill_warm_ms", Json::Num(warm_ms)),
+        ("prefix_speedup", Json::Num(prefix_speedup)),
+        ("gate_prefix_speedup_min", Json::Num(2.0)),
+        ("prefix_hit_rows", Json::Num(hit_rows as f64)),
+        ("quick", Json::Bool(quick)),
+    ]);
+    let path = "BENCH_kv.json";
+    std::fs::write(path, j.to_string() + "\n").expect("write BENCH_kv.json");
     println!("  wrote {path}");
 }

@@ -448,7 +448,6 @@ fn admit_request(sub: Submission) -> Admission {
 /// detached over an `Arc<Model>` ([`Engine::start`]) and on a scoped
 /// thread over `&Model` ([`super::server::run_batched`]).
 pub(crate) struct EngineCore<'m> {
-    model: &'m Model,
     cfg: ServerConfig,
     session: BatchedDecodeSession<'m>,
     slots: Vec<Option<Box<Active>>>,
@@ -474,13 +473,12 @@ impl<'m> EngineCore<'m> {
         // lifetime — measure it once, not once per step
         metrics.weight_memory = model.weight_memory();
         EngineCore {
-            session: BatchedDecodeSession::new(model, n),
+            session: BatchedDecodeSession::new(model, &cfg.session_config()),
             slots: (0..n).map(|_| None).collect(),
             queue: VecDeque::new(),
             metrics,
             draining: false,
             disconnected: false,
-            model,
             cfg,
             rx,
             shared,
@@ -631,9 +629,15 @@ impl<'m> EngineCore<'m> {
                 let wait_ms = sub.submitted.elapsed().as_secs_f64() * 1e3;
                 self.metrics.queue_wait.record(wait_ms);
                 match admit_request(*sub) {
-                    Admission::Run(seq) => {
+                    Admission::Run(mut seq) => {
                         announce(&seq);
                         self.session.reset_slot(slot);
+                        // prefix-cache lookup: map cached prefill pages for
+                        // the longest matching prompt prefix into the slot
+                        // and skip feeding those rows (bit-identical reuse;
+                        // at least the final prompt row always recomputes,
+                        // so admission still ends on a fresh logit row)
+                        seq.fed = self.session.attach_prefix(slot, &seq.req.prompt);
                         self.slots[slot] = Some(seq);
                     }
                     Admission::Done(seq, reason) => {
@@ -651,7 +655,7 @@ impl<'m> EngineCore<'m> {
     /// rows (intermediate prompt logits are discarded anyway). Returns
     /// false when nothing is in flight.
     fn step(&mut self) -> bool {
-        let cap = self.model.cfg().max_seq;
+        let cap = self.session.max_context();
         let chunk = self.cfg.prefill_chunk;
         let n_slots = self.slots.len();
         let mut batch: Vec<(usize, &[usize])> = Vec::with_capacity(n_slots);
@@ -752,7 +756,16 @@ impl<'m> EngineCore<'m> {
             self.metrics.queue_depth = q.len;
             self.metrics.queue_peak = q.peak;
         }
-        self.metrics.kv_bytes = self.session.kv_bytes();
+        let kv = self.session.kv_stats();
+        self.metrics.kv_bytes = kv.bytes();
+        self.metrics.kv_bytes_f32 = kv.bytes_f32;
+        self.metrics.kv_bytes_packed = kv.bytes_packed;
+        self.metrics.kv_cached_bytes = kv.cache_bytes;
+        self.metrics.kv_pages = kv.pages;
+        self.metrics.kv_pages_shared = kv.pages_shared;
+        self.metrics.prefix_lookups = kv.prefix_lookups;
+        self.metrics.prefix_hits = kv.prefix_hits;
+        self.metrics.prefix_hit_rows = kv.prefix_hit_rows;
         self.metrics.wall = t0.elapsed();
         *self.shared.metrics.lock().unwrap() = self.metrics.clone();
     }

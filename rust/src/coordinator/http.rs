@@ -382,6 +382,14 @@ pub fn metrics_json(router: &RouterHandle) -> Json {
                 ("queue_peak", Json::Num(m.queue_peak as f64)),
                 ("latency_ms", hist_json(&m.latency)),
                 ("queue_wait_ms", hist_json(&m.queue_wait)),
+                ("kv_bytes", Json::Num(m.kv_bytes as f64)),
+                ("kv_bytes_f32", Json::Num(m.kv_bytes_f32 as f64)),
+                ("kv_bytes_packed", Json::Num(m.kv_bytes_packed as f64)),
+                ("kv_cached_bytes", Json::Num(m.kv_cached_bytes as f64)),
+                ("kv_pages", Json::Num(m.kv_pages as f64)),
+                ("kv_pages_shared", Json::Num(m.kv_pages_shared as f64)),
+                ("prefix_hit_rate", Json::Num(m.prefix_hit_rate())),
+                ("prefix_hit_rows", Json::Num(m.prefix_hit_rows as f64)),
             ])
         })
         .collect();

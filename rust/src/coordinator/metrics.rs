@@ -178,9 +178,29 @@ pub struct Metrics {
     /// Time admitted requests spent in the admission queue before a slot
     /// took them, milliseconds (one sample per admitted request).
     pub queue_wait: LogHistogram,
-    /// Resident KV-cache bytes across all slots when this snapshot was
-    /// published (drops back to 0 once every sequence finishes).
+    /// Resident KV-cache bytes (all formats, shared pages counted once)
+    /// when this snapshot was published. Drops back to the prefix cache's
+    /// pinned footprint ([`Self::kv_cached_bytes`]) once every sequence
+    /// finishes — 0 with the cache empty or disabled.
     pub kv_bytes: usize,
+    /// Portion of [`Self::kv_bytes`] held as raw-f32 page rows.
+    pub kv_bytes_f32: usize,
+    /// Portion of [`Self::kv_bytes`] held bit-packed in sealed
+    /// block-format pages (counted at packed size).
+    pub kv_bytes_packed: usize,
+    /// Bytes pinned by the prefix cache (reachable from cached pages);
+    /// the slice of [`Self::kv_bytes`] that outlives the slots using it.
+    pub kv_cached_bytes: usize,
+    /// Live KV pages.
+    pub kv_pages: usize,
+    /// KV pages mapped into two or more slot tables (prefix sharing).
+    pub kv_pages_shared: usize,
+    /// Prefix-cache lookups at admission (one per multi-token prompt).
+    pub prefix_lookups: usize,
+    /// Lookups that attached at least one cached page.
+    pub prefix_hits: usize,
+    /// Prompt rows never re-fed thanks to attached prefixes.
+    pub prefix_hit_rows: usize,
 }
 
 impl Metrics {
@@ -236,6 +256,16 @@ impl Metrics {
         self.queue_wait.mean()
     }
 
+    /// Fraction of prefix-cache lookups that attached cached pages
+    /// (0 when the cache is disabled or no multi-token prompt arrived).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+
     /// generated tokens per wall-clock second
     pub fn throughput_tps(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -282,6 +312,19 @@ impl Metrics {
         }
         if self.kv_bytes > 0 {
             s.push_str(&format!(" kv={}B", self.kv_bytes));
+            if self.kv_bytes_packed > 0 {
+                s.push_str(&format!(" kv_packed={}B", self.kv_bytes_packed));
+            }
+            if self.kv_pages_shared > 0 {
+                s.push_str(&format!(" kv_shared_pages={}", self.kv_pages_shared));
+            }
+        }
+        if self.prefix_lookups > 0 {
+            s.push_str(&format!(
+                " prefix_hit_rate={:.2} prefix_rows={}",
+                self.prefix_hit_rate(),
+                self.prefix_hit_rows,
+            ));
         }
         if self.weight_memory.dense_f32_bytes > 0 {
             s.push_str(&format!(
@@ -406,6 +449,26 @@ mod tests {
         assert!(s.contains("qwait_mean=2.0ms"));
         assert!(s.contains("cancelled=3"));
         assert!(s.contains("kv=128B"));
+        // paged-KV fields appear only once they are non-zero
+        assert!(!s.contains("kv_packed"));
+        assert!(!s.contains("prefix_hit_rate"));
+        m.kv_bytes_packed = 32;
+        m.kv_pages_shared = 2;
+        m.prefix_lookups = 4;
+        m.prefix_hits = 3;
+        m.prefix_hit_rows = 21;
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("kv_packed=32B"));
+        assert!(s.contains("kv_shared_pages=2"));
+        assert!(s.contains("prefix_hit_rate=0.75"));
+        assert!(s.contains("prefix_rows=21"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_defaults_to_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 use super::engine::{channels, EngineCore, RequestHandle};
 use super::metrics::Metrics;
 use crate::model::kv_cache::{sample_top_k, DecodeSession};
+use crate::model::paged::{KvConfig, SessionConfig};
 use crate::model::Model;
 use crate::util::rng::Pcg32;
 use std::time::{Duration, Instant};
@@ -176,27 +177,41 @@ pub struct ServerConfig {
     /// and `try_submit` returns `QueueFull` — the engine's explicit
     /// backpressure signal.
     pub queue_depth: usize,
+    /// KV-cache configuration for the engine's slot pool: page size,
+    /// storage format (f32 or a block format), prefix-cache budget.
+    /// Exposed on the CLI as `--kv-page` / `--kv-format`.
+    pub kv: KvConfig,
 }
 
 impl ServerConfig {
     /// Build a validated config (panics on a zero field; see
-    /// [`Self::validate`]).
+    /// [`Self::validate`]). KV settings take the defaults (f32 pages of
+    /// 16 rows); override via the public `kv` field.
     pub fn new(max_batch: usize, prefill_chunk: usize, queue_depth: usize) -> ServerConfig {
         let cfg = ServerConfig {
             max_batch,
             prefill_chunk,
             queue_depth,
+            kv: KvConfig::default(),
         };
         cfg.validate();
         cfg
     }
 
     /// Assert the invariants the scheduler relies on: at least one slot,
-    /// at least one prompt row per prefill step, a non-zero queue bound.
+    /// at least one prompt row per prefill step, a non-zero queue bound,
+    /// and a well-formed KV config (non-zero page size, pageable format).
     pub fn validate(&self) {
         assert!(self.max_batch >= 1, "ServerConfig: max_batch must be >= 1");
         assert!(self.prefill_chunk >= 1, "ServerConfig: prefill_chunk must be >= 1");
         assert!(self.queue_depth >= 1, "ServerConfig: queue_depth must be >= 1");
+        self.kv.validate();
+    }
+
+    /// The [`SessionConfig`] the engine builds its slot pool from: one
+    /// slot per `max_batch` entry, this config's KV settings.
+    pub fn session_config(&self) -> SessionConfig {
+        SessionConfig::new(self.max_batch).kv(self.kv)
     }
 }
 
@@ -206,6 +221,7 @@ impl Default for ServerConfig {
             max_batch: 8,
             prefill_chunk: 8,
             queue_depth: 64,
+            kv: KvConfig::default(),
         }
     }
 }
@@ -217,14 +233,14 @@ impl Default for ServerConfig {
 pub fn serve_one(model: &Model, req: &Request) -> Response {
     let start = Instant::now();
     let p = &req.params;
-    let mut session = DecodeSession::new(model);
+    let mut session = DecodeSession::new(model, &SessionConfig::new(1));
     let mut rng = Pcg32::new(p.sampler_seed(req.id));
     let mut logits = Vec::new();
     for &t in &req.prompt {
         logits = session.step(t);
     }
     let mut out = Vec::with_capacity(p.max_new_tokens);
-    let cap = model.cfg().max_seq;
+    let cap = session.max_context();
     let mut finish = FinishReason::MaxTokens;
     for _ in 0..p.max_new_tokens {
         if session.pos >= cap {

@@ -3,7 +3,10 @@
 //! fixed-length sequences, feed each to the LM, normalise cross-entropy by
 //! sequence length).
 
+use crate::model::kv_cache::DecodeSession;
+use crate::model::paged::SessionConfig;
 use crate::model::transformer::{cross_entropy, Model};
+use crate::tensor::Tensor;
 
 #[derive(Clone, Debug)]
 pub struct PplResult {
@@ -27,6 +30,54 @@ pub fn perplexity(model: &Model, stream: &[usize], seq_len: usize, max_chunks: u
         let inputs = &chunk[..chunk.len() - 1];
         let targets = &chunk[1..];
         let logits = model.forward(inputs, None);
+        total_nats += cross_entropy(&logits, targets) * targets.len() as f64;
+        total_toks += targets.len();
+        chunks += 1;
+    }
+    let nats = if total_toks > 0 {
+        total_nats / total_toks as f64
+    } else {
+        f64::NAN
+    };
+    PplResult {
+        nats_per_tok: nats,
+        perplexity: nats.exp(),
+        tokens: total_toks,
+        chunks,
+    }
+}
+
+/// Decode-path perplexity: feeds each chunk token-by-token through a
+/// [`DecodeSession`] built from `cfg`, so the session's KV storage format
+/// applies to every cached key/value row. With the default f32 KV this
+/// reproduces [`perplexity`] (the decode path matches the parallel
+/// forward); with a block KV format (`cfg.kv.format` = BFP/BM/BL) it
+/// measures the accuracy cost of quantising the KV cache itself — the
+/// quantised-KV lane of the paper's Table 3 sweep.
+pub fn perplexity_decode(
+    model: &Model,
+    cfg: &SessionConfig,
+    stream: &[usize],
+    seq_len: usize,
+    max_chunks: usize,
+) -> PplResult {
+    assert!(seq_len >= 2);
+    let vocab = model.cfg().vocab_size;
+    let mut total_nats = 0.0f64;
+    let mut total_toks = 0usize;
+    let mut chunks = 0usize;
+    for chunk in stream.chunks(seq_len) {
+        if chunk.len() < 2 || chunks >= max_chunks {
+            break;
+        }
+        let inputs = &chunk[..chunk.len() - 1];
+        let targets = &chunk[1..];
+        let mut session = DecodeSession::new(model, cfg);
+        let mut data = Vec::with_capacity(inputs.len() * vocab);
+        for &t in inputs {
+            data.extend_from_slice(&session.step(t));
+        }
+        let logits = Tensor::new(&[inputs.len(), vocab], data);
         total_nats += cross_entropy(&logits, targets) * targets.len() as f64;
         total_toks += targets.len();
         chunks += 1;
@@ -153,6 +204,46 @@ mod tests {
         let b = perplexity_par(&m, &s, 64, 8, 4);
         assert!((a.nats_per_tok - b.nats_per_tok).abs() < 1e-9);
         assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn decode_path_matches_forward_perplexity() {
+        let v = Vocab::build();
+        let m = model();
+        let s = test_stream(&v, 300);
+        let a = perplexity(&m, &s, 48, 3);
+        let b = perplexity_decode(&m, &SessionConfig::new(1), &s, 48, 3);
+        assert!(
+            (a.nats_per_tok - b.nats_per_tok).abs() < 1e-3,
+            "forward {} vs decode {}",
+            a.nats_per_tok,
+            b.nats_per_tok
+        );
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.chunks, b.chunks);
+    }
+
+    #[test]
+    fn quantised_kv_ppl_within_documented_delta_of_f32_kv() {
+        // the quantised-KV accuracy lane: storing the KV cache in a block
+        // format must stay within a small, documented relative perplexity
+        // delta of the f32 KV baseline — 5% for BFP8, 20% for BFP6
+        use crate::quant::config::presets;
+        let v = Vocab::build();
+        let m = model();
+        let s = test_stream(&v, 300);
+        let base = perplexity_decode(&m, &SessionConfig::new(1), &s, 48, 3);
+        for (fmt, budget) in [(presets::bfp_w(8), 0.05), (presets::bfp_w(6), 0.20)] {
+            let q = perplexity_decode(&m, &SessionConfig::new(1).kv_format(fmt), &s, 48, 3);
+            let rel = (q.perplexity - base.perplexity).abs() / base.perplexity;
+            assert!(
+                rel < budget,
+                "{}: ppl {} vs f32-KV {} (rel {rel:.4} > {budget})",
+                fmt.name(),
+                q.perplexity,
+                base.perplexity
+            );
+        }
     }
 
     #[test]

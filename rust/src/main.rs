@@ -15,13 +15,16 @@
 //!                    request 0's tokens as they arrive; `--temperature`,
 //!                    `--top-k`, `--stop-token`, `--seed`, `--queue-depth`
 //!                    set the per-request GenerationParams / engine queue;
+//!                    `--kv-format <name>`/`--kv-page N` pick the paged
+//!                    KV cache's storage format and page size;
 //!                    `--listen ADDR` starts the HTTP/SSE front door
 //!                    instead, printing live p50/p99 latency and queue-wait
 //!                    snapshots until SIGTERM/SIGINT drains it)
 //!   serve-bench      open-loop Poisson traffic against the HTTP front
 //!                    door; writes BENCH_serve.json (`--quick` shrinks the
 //!                    trace for CI, `--check` makes the SLO bars fatal,
-//!                    `--trace-out`/`--trace-in` record/replay a trace)
+//!                    `--trace-out`/`--trace-in` record/replay a trace;
+//!                    `--kv-format`/`--kv-page` as for serve)
 //!   bench-report     render BENCH_*.json files as markdown tables (CI
 //!                    appends the output to $GITHUB_STEP_SUMMARY)
 //!   bench-snapshot   fail if committed BENCH_*.json snapshots drifted
@@ -42,6 +45,18 @@ use bbq::model::plan::QuantPlan;
 use bbq::model::Model;
 use bbq::quant::config::{presets, QFormat};
 use bbq::util::cli::Args;
+
+/// `--kv-format <name> --kv-page N` → the serving stack's [`KvConfig`]
+/// (defaults: f32 pages of 16 rows). Block formats (bfp/bm/bl) quantise
+/// sealed KV pages; per-tensor formats are rejected by `validate`.
+fn kv_config_from_args(args: &Args) -> bbq::model::KvConfig {
+    let mut kv = bbq::model::KvConfig::default();
+    if let Some(name) = args.get("kv-format") {
+        kv.format = QFormat::parse(name).unwrap_or_else(|| panic!("unknown KV format '{name}'"));
+    }
+    kv.page_size = args.usize_or("kv-page", kv.page_size);
+    kv
+}
 
 fn plan_from_args(args: &Args, n_layers: usize) -> QuantPlan {
     let fmt_name = args.get_or("format", "fp32");
@@ -270,6 +285,7 @@ fn cmd_serve(args: &Args) {
         max_batch: args.usize_or("max-batch", 8),
         prefill_chunk: args.usize_or("prefill-chunk", 8),
         queue_depth: args.usize_or("queue-depth", 64),
+        kv: kv_config_from_args(args),
     };
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
@@ -415,6 +431,7 @@ fn cmd_serve_bench(args: &Args) {
         // the zero-rejection SLO bar is structural: by default every
         // request in the trace can sit in the engine queue at once
         queue_depth: args.usize_or("queue-depth", trace.items.len().max(64)),
+        kv: kv_config_from_args(args),
     };
     let queue_depth = server_cfg.queue_depth;
     let router_cfg = RouterConfig {

@@ -2,42 +2,66 @@
 //! used by the coordinator. Numerically identical to the full-context
 //! forward (tested), but O(s) per new token instead of O(s²).
 //!
-//! Two sessions share the same math:
+//! Two sessions share the same math, both configured through
+//! [`SessionConfig`] (slots, KV page size, KV storage format, max
+//! context):
 //!
-//! * [`DecodeSession`] — one sequence, one token per step. The reference
-//!   path: every weight is decoded from its packed payload once per step.
-//! * [`BatchedDecodeSession`] — N sequences over a slot pool, each slot
-//!   contributing a *row-block* of one or more tokens per step (one for
-//!   decode, up to `prefill_chunk` for chunked prefill), all rows flowing
-//!   through a single fused packed GEMM per weight site per layer. Weights
-//!   are decoded once per layer per step **regardless of how many rows the
+//! * [`DecodeSession`] — one sequence, one token per step, KV held as
+//!   dense contiguous rows. The reference path: every weight is decoded
+//!   from its packed payload once per step, and when a KV storage format
+//!   is configured each K/V row is fake-quantised exactly as the paged
+//!   store would — so the dense session doubles as the bit-exact oracle
+//!   for quantised-KV paged attention.
+//! * [`BatchedDecodeSession`] — N sequences over a slot pool, KV held in
+//!   the paged store ([`crate::model::paged::PagedKv`]): fixed-size pages,
+//!   slot → page-table indirection, copy-on-write prefix sharing, and
+//!   optionally block-quantised sealed pages. Each slot contributes a
+//!   *row-block* of one or more tokens per step (one for decode, up to
+//!   `prefill_chunk` for chunked prefill), all rows flowing through a
+//!   single fused packed GEMM per weight site per layer. Weights are
+//!   decoded once per layer per step **regardless of how many rows the
 //!   step carries**, which is the amortisation the continuous-batching
-//!   coordinator exists to buy — for decode it is shared across sequences,
-//!   for chunked prefill across prompt *tokens* too. Every row of a batched
-//!   step is bit-identical to the sequential session (tested), because the
-//!   row-wise kernels accumulate in exactly the m == 1 order, activation
-//!   rows quantise independently ([`crate::quant::fake_quant_rows`]), and
-//!   attention is causal per slot over the chunk (row j of a chunk attends
-//!   keys 0..=p0+j only). Attention (④⑤) runs as one task per row on the
-//!   shared persistent worker pool ([`crate::runtime::pool`]) once the
-//!   step carries enough work, so it scales across cores — across slots
-//!   *and* across a single slot's chunk rows — instead of serialising on
-//!   the scheduler thread. Threading never changes the bits (every row is
-//!   computed by exactly the same code either way).
+//!   coordinator exists to buy — for decode it is shared across
+//!   sequences, for chunked prefill across prompt *tokens* too. Every row
+//!   of a batched step is bit-identical to the sequential session
+//!   (tested), because the row-wise kernels accumulate in exactly the
+//!   m == 1 order, activation rows quantise independently
+//!   ([`crate::quant::fake_quant_rows`]), attention is causal per slot
+//!   over the chunk (row j of a chunk attends keys 0..=p0+j only), and
+//!   the f32 page path gathers exactly the bytes the dense layout holds.
+//!   Attention (④⑤) runs as one task per row on the shared persistent
+//!   worker pool ([`crate::runtime::pool`]) once the step carries enough
+//!   work, so it scales across cores — across slots *and* across a single
+//!   slot's chunk rows — instead of serialising on the scheduler thread.
+//!   Threading never changes the bits (every row is computed by exactly
+//!   the same code either way).
 
 use super::attention::{attn_row_cached, AttnScratch, ATTN_PAR_MACS};
 use super::config::PosEncoding;
+use super::paged::{KvStats, PagedKv, SessionConfig};
 use super::rope::apply_rope;
 use super::transformer::Model;
-use crate::quant::{quant_act, quant_act_rows, GemmQuant};
+use crate::quant::{fake_quant_buffer, quant_act, quant_act_rows, GemmQuant, QFormat};
 use crate::tensor::matmul::{matmul_bt, matmul_bt_rowwise};
 use crate::tensor::Tensor;
 
-/// Cached keys/values for one layer: rows are positions, [t, d_model].
+/// Cached keys/values for one layer of the *dense* reference session:
+/// rows are positions, [t, d_model].
 #[derive(Clone, Debug, Default)]
 struct LayerCache {
     k: Vec<f32>,
     v: Vec<f32>,
+}
+
+/// Resolve a config's context cap against the model: 0 means "model
+/// max_seq", anything larger is clamped to it.
+fn resolve_max_context(cfg: &SessionConfig, model: &Model) -> usize {
+    let max_seq = model.cfg().max_seq;
+    if cfg.max_context == 0 {
+        max_seq
+    } else {
+        cfg.max_context.min(max_seq)
+    }
 }
 
 pub struct DecodeSession<'m> {
@@ -46,17 +70,31 @@ pub struct DecodeSession<'m> {
     /// Attention scratch reused across steps, layers and heads — steady
     /// decode allocates nothing here once the buffers are warm.
     scratch: AttnScratch,
+    /// KV storage format ([`SessionConfig::kv`]): rows are fake-quantised
+    /// to this on append, matching the paged store's write path. The dense
+    /// session ignores page size and prefix caching — it exists to be the
+    /// geometry-free reference.
+    kv_fmt: QFormat,
+    max_context: usize,
     pub pos: usize,
 }
 
 impl<'m> DecodeSession<'m> {
-    pub fn new(model: &'m Model) -> Self {
+    pub fn new(model: &'m Model, cfg: &SessionConfig) -> Self {
+        cfg.validate();
         DecodeSession {
             caches: vec![LayerCache::default(); model.cfg().n_layers],
             scratch: AttnScratch::new(),
+            kv_fmt: cfg.kv.format,
+            max_context: resolve_max_context(cfg, model),
             model,
             pos: 0,
         }
+    }
+
+    /// Context cap in tokens (config cap clamped to the model's max_seq).
+    pub fn max_context(&self) -> usize {
+        self.max_context
     }
 
     /// Feed one token, return logits `[vocab]`.
@@ -66,7 +104,8 @@ impl<'m> DecodeSession<'m> {
         let d = cfg.d_model;
         let h = cfg.n_heads;
         let hd = cfg.head_dim();
-        assert!(self.pos < cfg.max_seq, "context overflow");
+        let kv_fmt = self.kv_fmt;
+        assert!(self.pos < self.max_context, "context overflow");
         // embedding
         let mut x = Tensor::new(&[1, d], m.params.tok_emb.row(token).to_vec());
         if cfg.pos == PosEncoding::Learned {
@@ -91,9 +130,18 @@ impl<'m> DecodeSession<'m> {
             } else {
                 (q, k)
             };
+            // cache the K/V row, fake-quantised to the KV storage format
+            // (post-RoPE, per row with cols = d — exactly what the paged
+            // store's append does, so the two lanes agree bit for bit)
+            let mut krow = k.data;
+            let mut vrow = v.data;
+            if kv_fmt != QFormat::Fp32 {
+                fake_quant_buffer(&mut krow, d, kv_fmt);
+                fake_quant_buffer(&mut vrow, d, kv_fmt);
+            }
             let cache = &mut self.caches[li];
-            cache.k.extend_from_slice(&k.data);
-            cache.v.extend_from_slice(&v.data);
+            cache.k.extend_from_slice(&krow);
+            cache.v.extend_from_slice(&vrow);
             let t = self.pos + 1; // keys available
             let scale = 1.0 / (hd as f32).sqrt();
             let mut ctx = Tensor::zeros(&[1, d]);
@@ -130,63 +178,87 @@ impl<'m> DecodeSession<'m> {
     }
 }
 
-/// Continuous-batching decode state: per-slot KV caches over a shared slot
-/// pool. The coordinator admits a sequence into a free slot, steps every
-/// active slot together through [`Self::step`], and recycles the slot via
-/// [`Self::reset_slot`] when the sequence finishes.
+/// Per-slot gathered K/V context, reused across layers and steps.
+#[derive(Clone, Default)]
+struct KvView {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Continuous-batching decode state: a paged KV store shared by a slot
+/// pool. The coordinator admits a sequence into a free slot (optionally
+/// mapping cached prompt-prefix pages via [`Self::attach_prefix`]), steps
+/// every active slot together through [`Self::step`], and recycles the
+/// slot via [`Self::reset_slot`] — which releases its page references —
+/// when the sequence finishes.
 pub struct BatchedDecodeSession<'m> {
     model: &'m Model,
-    /// caches[slot][layer]
-    caches: Vec<Vec<LayerCache>>,
-    /// tokens consumed so far, per slot
-    pos: Vec<usize>,
+    /// The paged KV store: page tables, refcounts, prefix cache.
+    kv: PagedKv,
+    /// Per-batch-entry contiguous K/V gather buffers for the current
+    /// layer, grown on demand and reused across layers and steps.
+    views: Vec<KvView>,
     /// One attention scratch per step row, grown on demand and reused
     /// across layers and steps — steady-state decode re-warms nothing.
     scratches: Vec<AttnScratch>,
+    max_context: usize,
 }
 
 impl<'m> BatchedDecodeSession<'m> {
-    pub fn new(model: &'m Model, n_slots: usize) -> Self {
-        assert!(n_slots > 0, "need at least one slot");
+    pub fn new(model: &'m Model, cfg: &SessionConfig) -> Self {
+        cfg.validate();
         BatchedDecodeSession {
-            caches: vec![vec![LayerCache::default(); model.cfg().n_layers]; n_slots],
-            pos: vec![0; n_slots],
+            kv: PagedKv::new(cfg.slots, model.cfg().n_layers, model.cfg().d_model, &cfg.kv),
+            views: vec![KvView::default(); cfg.slots],
             scratches: Vec::new(),
+            max_context: resolve_max_context(cfg, model),
             model,
         }
     }
 
     pub fn n_slots(&self) -> usize {
-        self.pos.len()
+        self.kv.n_slots()
     }
 
     /// Tokens consumed so far by one slot.
     pub fn pos(&self, slot: usize) -> usize {
-        self.pos[slot]
+        self.kv.pos(slot)
     }
 
-    /// Clear a slot's KV cache and position so the next admitted sequence
-    /// can reuse it — the release path for finished *and* cancelled
-    /// sequences (the engine resets a cancelled slot the step it reaps it,
-    /// so abandoned KV rows never linger). Buffer capacity is kept for the
-    /// next occupant; only the rows are dropped.
+    /// Context cap in tokens (config cap clamped to the model's max_seq).
+    pub fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    /// Release a slot's page references and rewind it so the next admitted
+    /// sequence can reuse it — the release path for finished *and*
+    /// cancelled sequences (the engine resets a cancelled slot the step it
+    /// reaps it, so abandoned KV pages never linger). Pages survive only
+    /// while shared with other slots or pinned by the prefix cache.
     pub fn reset_slot(&mut self, slot: usize) {
-        for c in self.caches[slot].iter_mut() {
-            c.k.clear();
-            c.v.clear();
-        }
-        self.pos[slot] = 0;
+        self.kv.reset_slot(slot);
     }
 
-    /// Resident KV-cache bytes across every slot — the f32 key/value rows
-    /// actually stored right now (a serving-pressure gauge surfaced by the
-    /// engine's metrics; back to 0 once every slot is reset).
+    /// Map cached prefill pages for `prompt` into an empty slot; returns
+    /// the number of prompt rows covered, which the caller skips feeding
+    /// (the engine treats them as already-prefilled). Rows are reused bit
+    /// for bit — the pages hold exactly the K/V the slot would recompute.
+    pub fn attach_prefix(&mut self, slot: usize, prompt: &[usize]) -> usize {
+        self.kv.attach_prefix(slot, prompt)
+    }
+
+    /// Resident KV bytes right now: shared pages counted once, quantised
+    /// (sealed + bit-packed) pages at packed size — the serving-pressure
+    /// gauge surfaced by the engine's metrics. Back to the prefix cache's
+    /// pinned footprint once every slot is reset.
     pub fn kv_bytes(&self) -> usize {
-        self.caches
-            .iter()
-            .flat_map(|layers| layers.iter())
-            .map(|c| (c.k.len() + c.v.len()) * 4)
-            .sum()
+        self.kv.kv_bytes()
+    }
+
+    /// Full paged-KV accounting (bytes by format, page/sharing counts,
+    /// prefix-cache hit rates).
+    pub fn kv_stats(&self) -> KvStats {
+        self.kv.stats()
     }
 
     /// Feed one token per listed `(slot, token)` pair; returns each slot's
@@ -238,7 +310,11 @@ impl<'m> BatchedDecodeSession<'m> {
     /// absolute position, and attention is causal per slot over the chunk:
     /// row j sees keys `0..=p0+j` only, and its attention operands (the
     /// gathered `[t_j, hd]` key/value heads) are exactly the tensors the
-    /// sequential step would quantise — per-tensor formats included.
+    /// sequential step would quantise — per-tensor formats included. The
+    /// paged store preserves this: K/V rows are written (and under a KV
+    /// format, fake-quantised) once at append, page gathers reproduce the
+    /// dense layout value for value, and copy-on-write forks copy rows
+    /// verbatim, so page geometry and prefix sharing never touch the bits.
     pub fn step_chunked(
         &mut self,
         batch: &[(usize, &[usize])],
@@ -252,10 +328,10 @@ impl<'m> BatchedDecodeSession<'m> {
         let b = batch.len();
         assert!(b > 0, "empty batch step");
         for (i, &(slot, toks)) in batch.iter().enumerate() {
-            assert!(slot < self.pos.len(), "slot {slot} out of range");
+            assert!(slot < self.kv.n_slots(), "slot {slot} out of range");
             assert!(!toks.is_empty(), "empty row-block for slot {slot}");
             assert!(
-                self.pos[slot] + toks.len() <= cfg.max_seq,
+                self.kv.pos(slot) + toks.len() <= self.max_context,
                 "context overflow in slot {slot}"
             );
             // a duplicate would append interleaved KV rows and advance pos
@@ -266,19 +342,25 @@ impl<'m> BatchedDecodeSession<'m> {
                 "slot {slot} listed twice in one step"
             );
         }
+        // page bookkeeping once per step: copy-on-write-fork any shared or
+        // sealed tail page, extend page tables for the incoming rows, and
+        // record the chunk's token ids (they key the prefix cache)
+        for &(slot, toks) in batch {
+            self.kv.prepare_append(slot, toks);
+        }
         let r: usize = batch.iter().map(|&(_, toks)| toks.len()).sum();
         // per-row absolute positions (RoPE and learned embeddings both key
         // off these; within a chunk they advance token by token)
         let mut positions: Vec<usize> = Vec::with_capacity(r);
         for &(slot, toks) in batch {
-            let p0 = self.pos[slot];
+            let p0 = self.kv.pos(slot);
             positions.extend(p0..p0 + toks.len());
         }
         // embeddings
         let mut x = Tensor::zeros(&[r, d]);
         let mut row = 0usize;
         for &(slot, toks) in batch {
-            let p0 = self.pos[slot];
+            let p0 = self.kv.pos(slot);
             for (j, &tok) in toks.iter().enumerate() {
                 let xr = x.row_mut(row);
                 xr.copy_from_slice(m.params.tok_emb.row(tok));
@@ -317,15 +399,31 @@ impl<'m> BatchedDecodeSession<'m> {
             let scale = 1.0 / (hd as f32).sqrt();
             let q45 = (plan.site(li, 4), plan.site(li, 5));
             // ④⑤ per slot over its chunk rows. Append this step's K/V rows
-            // first; attention row j then reads keys 0..=p0+j only, so
+            // into the slot's pages first (fake-quantised to the KV format
+            // there); attention row j then reads keys 0..=p0+j only, so
             // causality holds within the chunk.
             let mut row0 = 0usize;
             for &(slot, toks) in batch {
                 let mi = toks.len();
-                let cache = &mut self.caches[slot][li];
-                cache.k.extend_from_slice(&k.data[row0 * d..(row0 + mi) * d]);
-                cache.v.extend_from_slice(&v.data[row0 * d..(row0 + mi) * d]);
+                self.kv.append_rows(
+                    slot,
+                    li,
+                    &k.data[row0 * d..(row0 + mi) * d],
+                    &v.data[row0 * d..(row0 + mi) * d],
+                );
                 row0 += mi;
+            }
+            // materialise each slot's context as one contiguous [t, d]
+            // view: slots living in a single resident f32 page read it in
+            // place (no copy — the dense layout, recovered); everyone else
+            // gathers their pages (decoding packed ones losslessly) into
+            // the slot's reusable view buffer
+            for (bi, &(slot, toks)) in batch.iter().enumerate() {
+                let upto = self.kv.pos(slot) + toks.len();
+                if self.kv.slot_slices(slot, li, upto).is_none() {
+                    let view = &mut self.views[bi];
+                    self.kv.gather_into(slot, li, upto, &mut view.k, &mut view.v);
+                }
             }
             // slot/row-parallel attention: one task per row (rows are
             // independent once the step's K/V rows are appended — row j
@@ -340,9 +438,13 @@ impl<'m> BatchedDecodeSession<'m> {
             let mut ctx_rest: &mut [f32] = ctx.data.as_mut_slice();
             let mut q_rest: &[f32] = &q.data;
             let mut scr_iter = self.scratches.iter_mut();
-            for &(slot, toks) in batch {
-                let p0 = self.pos[slot];
-                let cache = &self.caches[slot][li];
+            for (bi, &(slot, toks)) in batch.iter().enumerate() {
+                let p0 = self.kv.pos(slot);
+                let upto = p0 + toks.len();
+                let (ck, cv): (&[f32], &[f32]) = match self.kv.slot_slices(slot, li, upto) {
+                    Some(s) => s,
+                    None => (self.views[bi].k.as_slice(), self.views[bi].v.as_slice()),
+                };
                 for j in 0..toks.len() {
                     let (ctx_row, rest) = ctx_rest.split_at_mut(d);
                     ctx_rest = rest;
@@ -351,7 +453,8 @@ impl<'m> BatchedDecodeSession<'m> {
                     tasks.push(AttnTask {
                         ctx: ctx_row,
                         q: q_row,
-                        cache,
+                        k: ck,
+                        v: cv,
                         t: p0 + j + 1,
                         scr: scr_iter.next().expect("one scratch per row"),
                     });
@@ -380,8 +483,11 @@ impl<'m> BatchedDecodeSession<'m> {
             let mlp_out = pl.w2_t.matmul_bt_rowwise(&h_q).add_bias(&l.b2);
             x = x1.add(&mlp_out);
         }
+        // commit the appended rows: advance slot positions, seal pages
+        // that filled (bit-packing them under a block KV format) and
+        // register sealed pages in the prefix cache
         for &(slot, toks) in batch {
-            self.pos[slot] += toks.len();
+            self.kv.commit_append(slot, toks.len());
         }
         // tied-embedding LM head, row-order-preserving like everything else
         match needs_logits {
@@ -414,14 +520,16 @@ impl<'m> BatchedDecodeSession<'m> {
 }
 
 /// One row's attention work for one layer of a chunked step: the row's
-/// `[d]` roped query, the slot's (already-extended) KV cache, how many
-/// keys this row may see, the matching `&mut` slice of the ctx output,
-/// and the task's own reusable scratch. Rows of the same slot share the
-/// cache by `&` reference — attention only reads it.
+/// `[d]` roped query, the slot's contiguous `[t, d]` K/V context (a direct
+/// page slice on the single-page fast path, else the gathered view), how
+/// many keys this row may see, the matching `&mut` slice of the ctx
+/// output, and the task's own reusable scratch. Rows of the same slot
+/// share the context by `&` reference — attention only reads it.
 struct AttnTask<'a> {
     ctx: &'a mut [f32],
     q: &'a [f32],
-    cache: &'a LayerCache,
+    k: &'a [f32],
+    v: &'a [f32],
     /// keys visible to this row: its absolute position + 1
     t: usize,
     /// the session-resident scratch assigned to this row
@@ -444,8 +552,8 @@ fn attn_row(
     attn_row_cached(
         &mut *task.scr,
         task.q,
-        &task.cache.k,
-        &task.cache.v,
+        task.k,
+        task.v,
         task.t,
         d,
         h,
@@ -538,12 +646,16 @@ mod tests {
         Model::new(Params::init(&cfg, 42), plan)
     }
 
+    fn scfg(slots: usize) -> SessionConfig {
+        SessionConfig::new(slots)
+    }
+
     #[test]
     fn decode_matches_full_forward_fp32() {
         let m = model("nano", QuantPlan::fp32());
         let toks = [3usize, 9, 100, 42, 7];
         let full = m.forward(&toks, None);
-        let mut sess = DecodeSession::new(&m);
+        let mut sess = DecodeSession::new(&m, &scfg(1));
         for (i, &t) in toks.iter().enumerate() {
             let logits = sess.step(t);
             for j in (0..512).step_by(37) {
@@ -568,7 +680,7 @@ mod tests {
         let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
         let toks = [1usize, 2, 3, 4];
         let full = m.forward(&toks, None);
-        let mut sess = DecodeSession::new(&m);
+        let mut sess = DecodeSession::new(&m, &scfg(1));
         let mut last = Vec::new();
         for &t in &toks {
             last = sess.step(t);
@@ -588,7 +700,7 @@ mod tests {
         let m = model("rope-tiny", QuantPlan::fp32());
         let toks = [5usize, 6, 7];
         let full = m.forward(&toks, None);
-        let mut sess = DecodeSession::new(&m);
+        let mut sess = DecodeSession::new(&m, &scfg(1));
         let mut last = Vec::new();
         for &t in &toks {
             last = sess.step(t);
@@ -609,8 +721,9 @@ mod tests {
         ] {
             let m = model("nano", plan);
             let streams: [&[usize]; 3] = [&[3, 9, 100, 42], &[7, 7, 7, 7], &[250, 1, 30, 8]];
-            let mut batched = BatchedDecodeSession::new(&m, 3);
-            let mut seq: Vec<DecodeSession> = (0..3).map(|_| DecodeSession::new(&m)).collect();
+            let mut batched = BatchedDecodeSession::new(&m, &scfg(3));
+            let mut seq: Vec<DecodeSession> =
+                (0..3).map(|_| DecodeSession::new(&m, &scfg(1))).collect();
             for step in 0..4 {
                 let batch: Vec<(usize, usize)> =
                     (0..3).map(|s| (s, streams[s][step])).collect();
@@ -627,9 +740,9 @@ mod tests {
     fn batched_rope_per_slot_positions() {
         // slots at different positions must each get their own rotation
         let m = model("rope-tiny", QuantPlan::fp32());
-        let mut batched = BatchedDecodeSession::new(&m, 2);
-        let mut s0 = DecodeSession::new(&m);
-        let mut s1 = DecodeSession::new(&m);
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(2));
+        let mut s0 = DecodeSession::new(&m, &scfg(1));
+        let mut s1 = DecodeSession::new(&m, &scfg(1));
         // advance slot 0 by two tokens first, so positions diverge
         batched.step(&[(0, 5)]);
         s0.step(5);
@@ -649,8 +762,8 @@ mod tests {
         // masked rows return empty logits; unmasked rows are bit-identical
         // to the unmasked step
         let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
-        let mut a = BatchedDecodeSession::new(&m, 3);
-        let mut b = BatchedDecodeSession::new(&m, 3);
+        let mut a = BatchedDecodeSession::new(&m, &scfg(3));
+        let mut b = BatchedDecodeSession::new(&m, &scfg(3));
         let batch = [(0usize, 3usize), (1, 9), (2, 100)];
         let full = a.step(&batch);
         let masked = b.step_with_logit_mask(&batch, Some(&[true, false, true]));
@@ -664,14 +777,14 @@ mod tests {
     #[test]
     fn reset_slot_reuses_cleanly() {
         let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
-        let mut batched = BatchedDecodeSession::new(&m, 2);
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(2));
         batched.step(&[(0, 3), (1, 9)]);
         batched.step(&[(0, 4), (1, 10)]);
         // recycle slot 1 for a fresh sequence; slot 0 keeps its history
         batched.reset_slot(1);
         assert_eq!(batched.pos(1), 0);
-        let mut fresh = DecodeSession::new(&m);
-        let mut old = DecodeSession::new(&m);
+        let mut fresh = DecodeSession::new(&m, &scfg(1));
+        let mut old = DecodeSession::new(&m, &scfg(1));
         old.step(3);
         old.step(4);
         let got = batched.step(&[(0, 5), (1, 42)]);
@@ -690,8 +803,8 @@ mod tests {
         ] {
             let m = model("nano", plan);
             let prompt = [3usize, 9, 100, 42, 7, 250, 1];
-            let mut chunked = BatchedDecodeSession::new(&m, 1);
-            let mut seq = DecodeSession::new(&m);
+            let mut chunked = BatchedDecodeSession::new(&m, &scfg(1));
+            let mut seq = DecodeSession::new(&m, &scfg(1));
             let mut fed = 0usize;
             for chunk in [3usize, 4] {
                 let toks = &prompt[fed..fed + chunk];
@@ -710,9 +823,9 @@ mod tests {
     #[test]
     fn chunked_rope_uses_per_row_positions() {
         let m = model("rope-tiny", QuantPlan::fp32());
-        let mut chunked = BatchedDecodeSession::new(&m, 2);
-        let mut s0 = DecodeSession::new(&m);
-        let mut s1 = DecodeSession::new(&m);
+        let mut chunked = BatchedDecodeSession::new(&m, &scfg(2));
+        let mut s0 = DecodeSession::new(&m, &scfg(1));
+        let mut s1 = DecodeSession::new(&m, &scfg(1));
         // stagger slot 0 so the two slots' row positions differ in-step
         chunked.step_chunked(&[(0, &[5, 6])], None);
         s0.step(5);
@@ -736,9 +849,9 @@ mod tests {
     fn chunked_mixed_prefill_and_decode_rows() {
         // one slot decoding while another prefills a chunk, same fused step
         let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
-        let mut batched = BatchedDecodeSession::new(&m, 2);
-        let mut dec = DecodeSession::new(&m);
-        let mut pre = DecodeSession::new(&m);
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(2));
+        let mut dec = DecodeSession::new(&m, &scfg(1));
+        let mut pre = DecodeSession::new(&m, &scfg(1));
         batched.step_chunked(&[(0, &[3, 9, 100])], None);
         dec.step(3);
         dec.step(9);
@@ -757,8 +870,8 @@ mod tests {
         // masked rows return empty vectors; unmasked rows are bit-identical
         // to the unmasked step
         let m = model("nano", QuantPlan::uniform(presets::bfp_w(6)));
-        let mut a = BatchedDecodeSession::new(&m, 2);
-        let mut b = BatchedDecodeSession::new(&m, 2);
+        let mut a = BatchedDecodeSession::new(&m, &scfg(2));
+        let mut b = BatchedDecodeSession::new(&m, &scfg(2));
         let batch: [(usize, &[usize]); 2] = [(0, &[3, 9, 100]), (1, &[42, 7])];
         let full = a.step_chunked(&batch, None);
         let mask = [false, false, true, false, true]; // final row per slot
@@ -780,17 +893,29 @@ mod tests {
     #[should_panic(expected = "context overflow")]
     fn chunked_overflow_is_loud() {
         let m = model("nano", QuantPlan::fp32());
-        let mut batched = BatchedDecodeSession::new(&m, 1);
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(1));
         let long = vec![1usize; m.cfg().max_seq + 1];
         batched.step_chunked(&[(0, &long)], None);
     }
 
     #[test]
+    #[should_panic(expected = "context overflow")]
+    fn session_max_context_caps_below_model_max() {
+        let m = model("nano", QuantPlan::fp32());
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(1).max_context(4));
+        assert_eq!(batched.max_context(), 4);
+        batched.step_chunked(&[(0, &[1, 2, 3, 4, 5])], None);
+    }
+
+    #[test]
     fn kv_bytes_tracks_rows_and_resets() {
+        // unsealed f32 pages are counted at committed rows, so short
+        // contexts account exactly like the old dense layout — and
+        // releasing a slot refcount-frees its (unshared, uncached) pages
         let m = model("nano", QuantPlan::fp32());
         let d = m.cfg().d_model;
         let layers = m.cfg().n_layers;
-        let mut batched = BatchedDecodeSession::new(&m, 2);
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(2));
         assert_eq!(batched.kv_bytes(), 0);
         batched.step_chunked(&[(0, &[3, 9, 100]), (1, &[7])], None);
         // k + v rows of d floats, per layer, 4 bytes each; 3 + 1 tokens
@@ -799,6 +924,30 @@ mod tests {
         assert_eq!(batched.kv_bytes(), d * 2 * layers * 4);
         batched.reset_slot(1);
         assert_eq!(batched.kv_bytes(), 0);
+    }
+
+    #[test]
+    fn kv_bytes_counts_shared_pages_once_and_releases_refcounted() {
+        let m = model("nano", QuantPlan::fp32());
+        let mut s = BatchedDecodeSession::new(&m, &scfg(2).page_size(4));
+        let prompt: Vec<usize> = (3..11).collect(); // 8 tokens = 2 full pages
+        s.step_chunked(&[(0, &prompt)], None);
+        let solo = s.kv_bytes();
+        // second slot attaches the shared prefix: zero new bytes
+        let attached = s.attach_prefix(1, &prompt);
+        assert_eq!(attached, 7, "last prompt row is left to recompute");
+        assert_eq!(s.kv_bytes(), solo);
+        assert!(s.kv_stats().pages_shared > 0);
+        // recomputing the final row copy-on-write-forks the shared tail
+        let logits = s.step_chunked(&[(1, &[prompt[7]])], None);
+        assert_eq!(logits.len(), 1);
+        assert!(s.kv_bytes() > solo, "fork allocates a private tail page");
+        // resets release refcounted pages down to the prefix-cache pins
+        s.reset_slot(0);
+        s.reset_slot(1);
+        let st = s.kv_stats();
+        assert_eq!(st.bytes(), st.cache_bytes, "only cache-pinned pages remain");
+        assert!(st.prefix_hits >= 1);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 pub(crate) mod attention;
 pub mod config;
 pub mod kv_cache;
+pub mod paged;
 pub mod params;
 pub mod plan;
 pub mod rope;
@@ -12,6 +13,7 @@ pub mod transformer;
 
 pub use config::{ModelConfig, PosEncoding};
 pub use kv_cache::{sample_logits, BatchedDecodeSession, DecodeSession};
+pub use paged::{KvConfig, KvStats, PagedKv, SessionConfig};
 pub use params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
 pub use plan::{QuantPlan, SiteId, WeightStore, GEMM_NAMES};
 pub use transformer::{cross_entropy, ActStats, Model};

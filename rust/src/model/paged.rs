@@ -1,0 +1,999 @@
+//! Paged KV store with copy-on-write prefix sharing and block-quantised
+//! pages (ROADMAP: "Paged KV cache with prefix sharing + block-quantised
+//! KV").
+//!
+//! KV memory is carved into fixed-size pages of `page_size` token rows;
+//! one [`KvPage`] spans *all* layers (layer `l` of page `p` holds rows
+//! `p*page_size..(p+1)*page_size` of layer `l`'s K and V). Slots address
+//! their context through a page table, so requests with a common prompt
+//! prefix can map the same prefill pages: sealed pages are refcounted and
+//! registered in a chain-hash prefix cache, and a write into a shared or
+//! sealed page copy-on-write-forks it first.
+//!
+//! Pages carry a storage format ([`KvConfig::format`]):
+//!
+//! * `Fp32` — rows stay raw f32. This is the bit-exactness lane: gathering
+//!   pages back into a contiguous context buffer reproduces the dense
+//!   layout byte for byte, so paged attention is asserted logits-bit-
+//!   identical to the dense reference path.
+//! * a block format (BFP/BM/BL) — every K/V row is fake-quantised to the
+//!   format *at append time* (so stored values are independent of page
+//!   geometry, sharing, and sealing order), and a page is bit-packed via
+//!   [`qtensor::encode`] once it seals full. Packing already-quantised
+//!   rows is lossless because the block formats are exactly idempotent
+//!   (their `idempotent` unit tests assert tolerance 0.0) — which is also
+//!   why per-tensor fixed point, whose scale crosses rows, is rejected as
+//!   a KV format.
+
+use std::collections::HashMap;
+
+use crate::quant::qtensor::{self, QTensor};
+use crate::quant::{fake_quant_buffer, QFormat};
+use crate::tensor::Tensor;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a page's token ids, seeded with the parent chain's hash so
+/// equal hashes imply (modulo collisions, which [`PagedKv`] re-verifies by
+/// exact token comparison) equal full prefixes, not just equal pages.
+fn chain_hash(parent: u64, toks: &[usize]) -> u64 {
+    let mut h = parent;
+    for &t in toks {
+        h ^= t as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// KV storage configuration: page geometry, page format, and prefix-cache
+/// capacity. Shared by [`SessionConfig`] and the serving stack's
+/// `ServerConfig`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvConfig {
+    /// Token rows per page (every layer of a page covers the same rows).
+    pub page_size: usize,
+    /// Storage format for KV rows: `Fp32` keeps raw rows (bit-exactness
+    /// lane); a block format (BFP/BM/BL) fake-quantises rows on write and
+    /// bit-packs each page when it seals full.
+    pub format: QFormat,
+    /// Max sealed pages pinned by the prefix cache (0 disables sharing).
+    pub prefix_cache_pages: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            page_size: 16,
+            format: QFormat::Fp32,
+            prefix_cache_pages: 256,
+        }
+    }
+}
+
+impl KvConfig {
+    /// Panics on an invalid configuration (mirrors `ServerConfig::validate`).
+    pub fn validate(&self) {
+        assert!(self.page_size >= 1, "KvConfig: page_size must be >= 1");
+        assert!(
+            matches!(
+                self.format,
+                QFormat::Fp32 | QFormat::Bfp { .. } | QFormat::Bm { .. } | QFormat::Bl { .. }
+            ),
+            "KvConfig: kv format must be fp32 or a block format (bfp/bm/bl)"
+        );
+    }
+}
+
+/// Validated construction parameters for `DecodeSession` /
+/// `BatchedDecodeSession` — the one config type shared by the engine,
+/// `run_batched`, the bench, and tests.
+///
+/// ```ignore
+/// let cfg = SessionConfig::new(8)          // 8 decode slots
+///     .page_size(32)                       // 32 token rows per KV page
+///     .kv_format(presets::bfp_w(6));       // block-quantised KV pages
+/// let session = BatchedDecodeSession::new(&model, &cfg);
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionConfig {
+    /// Number of concurrent decode slots (batch lanes); must be >= 1.
+    pub slots: usize,
+    /// KV page/store configuration.
+    pub kv: KvConfig,
+    /// Context cap in tokens; 0 means "use the model's `max_seq`". Values
+    /// above `max_seq` are clamped to it at session construction.
+    pub max_context: usize,
+}
+
+impl SessionConfig {
+    pub fn new(slots: usize) -> Self {
+        let cfg = SessionConfig {
+            slots,
+            kv: KvConfig::default(),
+            max_context: 0,
+        };
+        cfg.validate();
+        cfg
+    }
+
+    pub fn page_size(mut self, n: usize) -> Self {
+        self.kv.page_size = n;
+        self.validate();
+        self
+    }
+
+    pub fn kv_format(mut self, fmt: QFormat) -> Self {
+        self.kv.format = fmt;
+        self.validate();
+        self
+    }
+
+    pub fn prefix_cache_pages(mut self, n: usize) -> Self {
+        self.kv.prefix_cache_pages = n;
+        self
+    }
+
+    pub fn max_context(mut self, n: usize) -> Self {
+        self.max_context = n;
+        self
+    }
+
+    pub fn kv(mut self, kv: KvConfig) -> Self {
+        self.kv = kv;
+        self.validate();
+        self
+    }
+
+    pub fn validate(&self) {
+        assert!(self.slots >= 1, "SessionConfig: slots must be >= 1");
+        self.kv.validate();
+    }
+}
+
+/// Point-in-time KV accounting. Shared pages are counted once; packed
+/// pages at packed size.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct KvStats {
+    /// Bytes held in raw-f32 page rows (committed rows only).
+    pub bytes_f32: usize,
+    /// Bytes held in bit-packed (sealed, block-format) pages.
+    pub bytes_packed: usize,
+    /// Bytes reachable from the prefix cache (the part of `bytes()` that
+    /// is pinned by caching rather than by live slots).
+    pub cache_bytes: usize,
+    /// Live pages.
+    pub pages: usize,
+    /// Pages mapped into two or more slot tables (true prefix sharing).
+    pub pages_shared: usize,
+    pub prefix_lookups: usize,
+    pub prefix_hits: usize,
+    /// Prompt rows skipped thanks to attached prefixes.
+    pub prefix_hit_rows: usize,
+}
+
+impl KvStats {
+    pub fn bytes(&self) -> usize {
+        self.bytes_f32 + self.bytes_packed
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.prefix_lookups == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / self.prefix_lookups as f64
+        }
+    }
+}
+
+/// Per-layer storage of one page.
+enum LayerPage {
+    /// Raw rows; buffers are allocated at full page capacity up front so
+    /// `append_rows` can write by position without reallocation.
+    F32 { k: Vec<f32>, v: Vec<f32> },
+    /// Sealed, bit-packed `[page_size, d]` tensors (block formats only).
+    Packed { k: QTensor, v: QTensor },
+}
+
+struct KvPage {
+    /// Outstanding references: one per slot table containing the page, one
+    /// per child page (chain link), one if held by the prefix cache.
+    refs: usize,
+    /// Committed token rows (== `page_size` once sealed).
+    len: usize,
+    /// Token ids covered by this page; drives prefix hashing/verification.
+    tokens: Vec<usize>,
+    /// Previous page of the chain; holds one ref on it so cached tails pin
+    /// their whole prefix.
+    parent: Option<usize>,
+    /// Chain hash (parent chain + this page's tokens); valid once sealed.
+    hash: u64,
+    sealed: bool,
+    cached: bool,
+    last_used: u64,
+    /// One entry per model layer.
+    layers: Vec<LayerPage>,
+}
+
+/// The paged KV store. Owns every page, the per-slot page tables, and the
+/// prefix cache; `BatchedDecodeSession` drives it with the
+/// `prepare_append` → per-layer `append_rows` → `commit_append` protocol
+/// and reads through `slot_slices` / `gather_into`.
+pub struct PagedKv {
+    page_size: usize,
+    fmt: QFormat,
+    n_layers: usize,
+    d: usize,
+    pages: Vec<KvPage>,
+    /// Indices of freed `pages` entries, available for reuse.
+    free: Vec<usize>,
+    tables: Vec<Vec<usize>>,
+    pos: Vec<usize>,
+    /// chain hash → sealed page indices (collision list).
+    cache: HashMap<u64, Vec<usize>>,
+    cache_cap: usize,
+    cache_len: usize,
+    /// Monotonic clock for LRU eviction.
+    tick: u64,
+    prefix_lookups: usize,
+    prefix_hits: usize,
+    prefix_hit_rows: usize,
+}
+
+impl PagedKv {
+    pub fn new(n_slots: usize, n_layers: usize, d: usize, kv: &KvConfig) -> Self {
+        kv.validate();
+        assert!(n_slots >= 1, "PagedKv: need at least one slot");
+        PagedKv {
+            page_size: kv.page_size,
+            fmt: kv.format,
+            n_layers,
+            d,
+            pages: Vec::new(),
+            free: Vec::new(),
+            tables: vec![Vec::new(); n_slots],
+            pos: vec![0; n_slots],
+            cache: HashMap::new(),
+            cache_cap: kv.prefix_cache_pages,
+            cache_len: 0,
+            tick: 0,
+            prefix_lookups: 0,
+            prefix_hits: 0,
+            prefix_hit_rows: 0,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.tables.len()
+    }
+
+    pub fn pos(&self, slot: usize) -> usize {
+        self.pos[slot]
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn format(&self) -> QFormat {
+        self.fmt
+    }
+
+    fn alloc_page(&mut self, parent: Option<usize>) -> usize {
+        if let Some(pi) = parent {
+            self.pages[pi].refs += 1;
+        }
+        self.tick += 1;
+        let layers = (0..self.n_layers)
+            .map(|_| LayerPage::F32 {
+                k: vec![0.0; self.page_size * self.d],
+                v: vec![0.0; self.page_size * self.d],
+            })
+            .collect();
+        let page = KvPage {
+            refs: 1,
+            len: 0,
+            tokens: Vec::with_capacity(self.page_size),
+            parent,
+            hash: 0,
+            sealed: false,
+            cached: false,
+            last_used: self.tick,
+            layers,
+        };
+        match self.free.pop() {
+            Some(idx) => {
+                self.pages[idx] = page;
+                idx
+            }
+            None => {
+                self.pages.push(page);
+                self.pages.len() - 1
+            }
+        }
+    }
+
+    /// Drop one reference; frees the page at zero and cascades up the
+    /// parent chain (a freed child releases its chain link).
+    fn decref(&mut self, idx: usize) {
+        let mut cur = Some(idx);
+        while let Some(i) = cur {
+            let p = &mut self.pages[i];
+            debug_assert!(p.refs > 0, "double release of page {i}");
+            p.refs -= 1;
+            if p.refs > 0 {
+                return;
+            }
+            debug_assert!(!p.cached, "cached page freed while still indexed");
+            cur = p.parent.take();
+            p.layers = Vec::new();
+            p.tokens = Vec::new();
+            p.len = 0;
+            p.sealed = false;
+            p.hash = 0;
+            self.free.push(i);
+        }
+    }
+
+    /// Release every page mapped by `slot` and rewind it to position 0.
+    /// Pages survive if shared with other slots or pinned by the cache.
+    pub fn reset_slot(&mut self, slot: usize) {
+        let table = std::mem::take(&mut self.tables[slot]);
+        for idx in table {
+            self.decref(idx);
+        }
+        self.pos[slot] = 0;
+    }
+
+    /// Make pages writable for the next `toks.len()` rows of `slot` and
+    /// record the token ids. Call once per step before the layer loop,
+    /// then `append_rows` for every layer, then one `commit_append`.
+    /// Copy-on-write happens here: a sealed or shared tail page is forked
+    /// before any row lands in it.
+    pub fn prepare_append(&mut self, slot: usize, toks: &[usize]) {
+        let p_sz = self.page_size;
+        let mut pos = self.pos[slot];
+        for &tok in toks {
+            let ti = pos / p_sz;
+            let row = pos % p_sz;
+            if ti == self.tables[slot].len() {
+                let parent = self.tables[slot].last().copied();
+                let fresh = self.alloc_page(parent);
+                self.tables[slot].push(fresh);
+            } else {
+                let idx = self.tables[slot][ti];
+                let pg = &self.pages[idx];
+                // `tokens.len()` (not `len`) tracks rows written so far in
+                // this chunk; `len` only catches up at commit.
+                if pg.sealed || pg.refs > 1 || pg.tokens.len() != row {
+                    self.fork_tail(slot, ti, row);
+                }
+            }
+            let idx = self.tables[slot][ti];
+            let pg = &mut self.pages[idx];
+            debug_assert_eq!(pg.tokens.len(), row);
+            pg.tokens.push(tok);
+            pos += 1;
+        }
+    }
+
+    /// Replace the tail page `tables[slot][ti]` with a private copy of its
+    /// first `keep` rows (the copy-on-write fork).
+    fn fork_tail(&mut self, slot: usize, ti: usize, keep: usize) {
+        let orig = self.tables[slot][ti];
+        let parent = self.pages[orig].parent;
+        let fresh = self.alloc_page(parent);
+        let d = self.d;
+        let mut kbuf = vec![0.0f32; keep * d];
+        let mut vbuf = vec![0.0f32; keep * d];
+        for li in 0..self.n_layers {
+            if keep > 0 {
+                self.read_rows(orig, li, keep, &mut kbuf, &mut vbuf);
+            }
+            if let LayerPage::F32 { k, v } = &mut self.pages[fresh].layers[li] {
+                k[..keep * d].copy_from_slice(&kbuf);
+                v[..keep * d].copy_from_slice(&vbuf);
+            }
+        }
+        let toks = self.pages[orig].tokens[..keep].to_vec();
+        let pg = &mut self.pages[fresh];
+        pg.len = keep;
+        pg.tokens = toks;
+        self.tables[slot][ti] = fresh;
+        self.decref(orig);
+    }
+
+    /// Decode the first `rows` rows of one layer of a page into `k_out` /
+    /// `v_out` (raw copy for f32 pages, lossless block decode for packed).
+    fn read_rows(
+        &self,
+        idx: usize,
+        layer: usize,
+        rows: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let d = self.d;
+        match &self.pages[idx].layers[layer] {
+            LayerPage::F32 { k, v } => {
+                k_out[..rows * d].copy_from_slice(&k[..rows * d]);
+                v_out[..rows * d].copy_from_slice(&v[..rows * d]);
+            }
+            LayerPage::Packed { k, v } => {
+                for r in 0..rows {
+                    k.decode_row_into(r, &mut k_out[r * d..(r + 1) * d]);
+                    v.decode_row_into(r, &mut v_out[r * d..(r + 1) * d]);
+                }
+            }
+        }
+    }
+
+    /// Write `m = k_rows.len()/d` K/V rows (post-RoPE) for one layer at the
+    /// slot's current position. Rows are fake-quantised to the page format
+    /// on write, so stored values are independent of page geometry,
+    /// sharing, and sealing time.
+    pub fn append_rows(&mut self, slot: usize, layer: usize, k_rows: &[f32], v_rows: &[f32]) {
+        let d = self.d;
+        let fmt = self.fmt;
+        debug_assert_eq!(k_rows.len(), v_rows.len());
+        debug_assert_eq!(k_rows.len() % d, 0);
+        let m = k_rows.len() / d;
+        let p_sz = self.page_size;
+        let base = self.pos[slot];
+        for r in 0..m {
+            let pos = base + r;
+            let idx = self.tables[slot][pos / p_sz];
+            let row = pos % p_sz;
+            match &mut self.pages[idx].layers[layer] {
+                LayerPage::F32 { k, v } => {
+                    let kd = &mut k[row * d..(row + 1) * d];
+                    let vd = &mut v[row * d..(row + 1) * d];
+                    kd.copy_from_slice(&k_rows[r * d..(r + 1) * d]);
+                    vd.copy_from_slice(&v_rows[r * d..(r + 1) * d]);
+                    if fmt != QFormat::Fp32 {
+                        fake_quant_buffer(kd, d, fmt);
+                        fake_quant_buffer(vd, d, fmt);
+                    }
+                }
+                LayerPage::Packed { .. } => unreachable!("append into sealed page"),
+            }
+        }
+    }
+
+    /// Commit `m` rows appended on every layer: bump page lens and the slot
+    /// position, then seal (hash, optionally bit-pack, and prefix-cache)
+    /// any page that became full.
+    pub fn commit_append(&mut self, slot: usize, m: usize) {
+        if m == 0 {
+            return;
+        }
+        let p_sz = self.page_size;
+        let start = self.pos[slot];
+        self.pos[slot] += m;
+        let end = self.pos[slot];
+        self.tick += 1;
+        let tick = self.tick;
+        for ti in start / p_sz..end.div_ceil(p_sz) {
+            let idx = self.tables[slot][ti];
+            let len = (end - ti * p_sz).min(p_sz);
+            {
+                let pg = &mut self.pages[idx];
+                pg.len = len;
+                pg.last_used = tick;
+                debug_assert_eq!(pg.len, pg.tokens.len());
+            }
+            if len == p_sz && !self.pages[idx].sealed {
+                self.seal(idx);
+            }
+        }
+    }
+
+    /// Seal a full page: compute its chain hash, bit-pack it under block
+    /// formats (lossless — rows were already fake-quantised at append and
+    /// the block formats are exactly idempotent), and register it in the
+    /// prefix cache.
+    fn seal(&mut self, idx: usize) {
+        let parent_hash = match self.pages[idx].parent {
+            Some(pi) => {
+                debug_assert!(self.pages[pi].sealed, "parent must seal before child");
+                self.pages[pi].hash
+            }
+            None => FNV_OFFSET,
+        };
+        let hash = chain_hash(parent_hash, &self.pages[idx].tokens);
+        let fmt = self.fmt;
+        let (p_sz, d) = (self.page_size, self.d);
+        let pg = &mut self.pages[idx];
+        pg.hash = hash;
+        pg.sealed = true;
+        if fmt != QFormat::Fp32 {
+            for li in 0..pg.layers.len() {
+                let old = std::mem::replace(
+                    &mut pg.layers[li],
+                    LayerPage::F32 {
+                        k: Vec::new(),
+                        v: Vec::new(),
+                    },
+                );
+                if let LayerPage::F32 { k, v } = old {
+                    pg.layers[li] = LayerPage::Packed {
+                        k: qtensor::encode(&Tensor::new(&[p_sz, d], k), fmt),
+                        v: qtensor::encode(&Tensor::new(&[p_sz, d], v), fmt),
+                    };
+                }
+            }
+        }
+        self.cache_insert(idx);
+    }
+
+    fn cache_insert(&mut self, idx: usize) {
+        if self.cache_cap == 0 {
+            return;
+        }
+        let hash = self.pages[idx].hash;
+        if let Some(cands) = self.cache.get(&hash) {
+            let cands = cands.clone();
+            for &c in &cands {
+                if self.chains_equal(c, idx) {
+                    return; // an identical chain is already cached
+                }
+            }
+        }
+        self.cache.entry(hash).or_default().push(idx);
+        self.pages[idx].cached = true;
+        self.pages[idx].refs += 1;
+        self.cache_len += 1;
+        while self.cache_len > self.cache_cap {
+            self.evict_lru();
+        }
+    }
+
+    /// Token-exact chain comparison (hash collisions must not alias).
+    fn chains_equal(&self, mut a: usize, mut b: usize) -> bool {
+        loop {
+            if a == b {
+                return true; // chains converge on a shared ancestor
+            }
+            if self.pages[a].tokens[..] != self.pages[b].tokens[..] {
+                return false;
+            }
+            match (self.pages[a].parent, self.pages[b].parent) {
+                (None, None) => return true,
+                (Some(pa), Some(pb)) => {
+                    a = pa;
+                    b = pb;
+                }
+                _ => return false,
+            }
+        }
+    }
+
+    fn evict_lru(&mut self) {
+        let mut best_idx = usize::MAX;
+        let mut best_tick = u64::MAX;
+        for (i, p) in self.pages.iter().enumerate() {
+            if p.cached && p.last_used < best_tick {
+                best_tick = p.last_used;
+                best_idx = i;
+            }
+        }
+        if best_idx == usize::MAX {
+            return;
+        }
+        let hash = self.pages[best_idx].hash;
+        if let Some(v) = self.cache.get_mut(&hash) {
+            v.retain(|&p| p != best_idx);
+            if v.is_empty() {
+                self.cache.remove(&hash);
+            }
+        }
+        self.pages[best_idx].cached = false;
+        self.cache_len -= 1;
+        self.decref(best_idx);
+    }
+
+    /// Attach shared prefill pages for `prompt` to an empty slot; returns
+    /// the number of prompt rows covered (the caller skips recomputing
+    /// them). At most `prompt.len() - 1` rows are covered so the final
+    /// prompt row is always recomputed (its logits drive the first sampled
+    /// token) — when the whole prompt is cached, that recompute
+    /// copy-on-write-forks the last shared page.
+    pub fn attach_prefix(&mut self, slot: usize, prompt: &[usize]) -> usize {
+        debug_assert!(self.tables[slot].is_empty() && self.pos[slot] == 0);
+        if self.cache_cap == 0 || prompt.len() < 2 {
+            return 0;
+        }
+        let p_sz = self.page_size;
+        let n_max = prompt.len() / p_sz;
+        if n_max == 0 {
+            return 0;
+        }
+        self.prefix_lookups += 1;
+        let mut hashes = Vec::with_capacity(n_max);
+        let mut h = FNV_OFFSET;
+        for n in 0..n_max {
+            h = chain_hash(h, &prompt[n * p_sz..(n + 1) * p_sz]);
+            hashes.push(h);
+        }
+        for n in (1..=n_max).rev() {
+            let Some(cands) = self.cache.get(&hashes[n - 1]) else {
+                continue;
+            };
+            let cands = cands.clone();
+            for &tail in &cands {
+                let Some(chain) = self.chain_matching(tail, &prompt[..n * p_sz]) else {
+                    continue;
+                };
+                self.tick += 1;
+                for &pg in &chain {
+                    self.pages[pg].refs += 1;
+                    self.pages[pg].last_used = self.tick;
+                }
+                self.tables[slot] = chain;
+                let rows = (n * p_sz).min(prompt.len() - 1);
+                self.pos[slot] = rows;
+                self.prefix_hits += 1;
+                self.prefix_hit_rows += rows;
+                return rows;
+            }
+        }
+        0
+    }
+
+    /// Walk `tail`'s parent chain; return the page indices in table order
+    /// iff the chain covers exactly `toks`.
+    fn chain_matching(&self, tail: usize, toks: &[usize]) -> Option<Vec<usize>> {
+        let p_sz = self.page_size;
+        debug_assert_eq!(toks.len() % p_sz, 0);
+        let n = toks.len() / p_sz;
+        let mut chain = vec![0usize; n];
+        let mut cur = Some(tail);
+        for i in (0..n).rev() {
+            let idx = cur?;
+            if self.pages[idx].tokens[..] != toks[i * p_sz..(i + 1) * p_sz] {
+                return None;
+            }
+            chain[i] = idx;
+            cur = self.pages[idx].parent;
+        }
+        if cur.is_some() {
+            return None; // candidate's prefix is longer than the prompt's
+        }
+        Some(chain)
+    }
+
+    /// Fast path: a slot whose context lives in a single resident f32 page
+    /// reads K/V in place with no gather copy (`page_size >= max context`
+    /// and no packing turns the store back into the dense layout).
+    pub fn slot_slices(&self, slot: usize, layer: usize, upto: usize) -> Option<(&[f32], &[f32])> {
+        let table = &self.tables[slot];
+        if table.len() != 1 {
+            return None;
+        }
+        match &self.pages[table[0]].layers[layer] {
+            LayerPage::F32 { k, v } => Some((&k[..upto * self.d], &v[..upto * self.d])),
+            LayerPage::Packed { .. } => None,
+        }
+    }
+
+    /// Gather the first `upto` rows of `slot` for `layer` into contiguous
+    /// `[upto, d]` buffers, decoding packed pages losslessly. `upto` may
+    /// run ahead of the committed position mid-step (rows written by
+    /// `append_rows` but not yet committed are readable).
+    pub fn gather_into(
+        &self,
+        slot: usize,
+        layer: usize,
+        upto: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let d = self.d;
+        k_out.resize(upto * d, 0.0);
+        v_out.resize(upto * d, 0.0);
+        let mut done = 0;
+        for &idx in &self.tables[slot] {
+            if done >= upto {
+                break;
+            }
+            let take = (upto - done).min(self.page_size);
+            match &self.pages[idx].layers[layer] {
+                LayerPage::F32 { k, v } => {
+                    k_out[done * d..(done + take) * d].copy_from_slice(&k[..take * d]);
+                    v_out[done * d..(done + take) * d].copy_from_slice(&v[..take * d]);
+                }
+                LayerPage::Packed { k, v } => {
+                    for r in 0..take {
+                        k.decode_row_into(r, &mut k_out[(done + r) * d..(done + r + 1) * d]);
+                        v.decode_row_into(r, &mut v_out[(done + r) * d..(done + r + 1) * d]);
+                    }
+                }
+            }
+            done += take;
+        }
+        debug_assert_eq!(done, upto);
+    }
+
+    /// Point-in-time accounting; shared pages counted once.
+    pub fn stats(&self) -> KvStats {
+        let mut s = KvStats {
+            prefix_lookups: self.prefix_lookups,
+            prefix_hits: self.prefix_hits,
+            prefix_hit_rows: self.prefix_hit_rows,
+            ..KvStats::default()
+        };
+        let mut table_refs = vec![0usize; self.pages.len()];
+        for t in &self.tables {
+            for &i in t {
+                table_refs[i] += 1;
+            }
+        }
+        for (i, p) in self.pages.iter().enumerate() {
+            if p.refs == 0 {
+                continue;
+            }
+            s.pages += 1;
+            if table_refs[i] >= 2 {
+                s.pages_shared += 1;
+            }
+            for l in &p.layers {
+                match l {
+                    LayerPage::F32 { .. } => s.bytes_f32 += p.len * self.d * 4 * 2,
+                    LayerPage::Packed { k, v } => {
+                        s.bytes_packed += k.packed_bytes() + v.packed_bytes()
+                    }
+                }
+            }
+        }
+        // Mark everything reachable from the cache through parent links.
+        let mut mark = vec![false; self.pages.len()];
+        for (i, p) in self.pages.iter().enumerate() {
+            if !p.cached {
+                continue;
+            }
+            let mut cur = Some(i);
+            while let Some(c) = cur {
+                if mark[c] {
+                    break;
+                }
+                mark[c] = true;
+                cur = self.pages[c].parent;
+            }
+        }
+        for (i, p) in self.pages.iter().enumerate() {
+            if !mark[i] {
+                continue;
+            }
+            for l in &p.layers {
+                match l {
+                    LayerPage::F32 { .. } => s.cache_bytes += p.len * self.d * 4 * 2,
+                    LayerPage::Packed { k, v } => {
+                        s.cache_bytes += k.packed_bytes() + v.packed_bytes()
+                    }
+                }
+            }
+        }
+        s
+    }
+
+    /// Total resident KV bytes (shared pages once, packed pages at packed
+    /// size).
+    pub fn kv_bytes(&self) -> usize {
+        self.stats().bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::presets;
+
+    #[test]
+    #[should_panic(expected = "slots must be >= 1")]
+    fn config_rejects_zero_slots() {
+        SessionConfig::new(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "page_size must be >= 1")]
+    fn config_rejects_zero_page() {
+        let _ = SessionConfig::new(1).page_size(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "block format")]
+    fn config_rejects_per_tensor_fixed_kv() {
+        // per-tensor fixed point is not exactly idempotent across rows, so
+        // pack-on-seal would be lossy — rejected at validation
+        let _ = SessionConfig::new(1).kv_format(presets::fixed8());
+    }
+
+    /// 1-layer store with d=2 and distinguishable row values.
+    fn tiny(kv: &KvConfig) -> PagedKv {
+        PagedKv::new(2, 1, 2, kv)
+    }
+
+    /// Append `toks` one step, writing rows whose value encodes (slot, pos).
+    fn push(kv: &mut PagedKv, slot: usize, toks: &[usize]) {
+        kv.prepare_append(slot, toks);
+        let base = kv.pos(slot);
+        let m = toks.len();
+        let mut k_rows = Vec::new();
+        let mut v_rows = Vec::new();
+        for r in 0..m {
+            let val = (slot * 1000 + base + r) as f32;
+            k_rows.extend_from_slice(&[val, val + 0.5]);
+            v_rows.extend_from_slice(&[-val, -val - 0.5]);
+        }
+        kv.append_rows(slot, 0, &k_rows, &v_rows);
+        kv.commit_append(slot, m);
+    }
+
+    fn rows_of(kv: &PagedKv, slot: usize, upto: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        kv.gather_into(slot, 0, upto, &mut k, &mut v);
+        (k, v)
+    }
+
+    #[test]
+    fn prefix_attach_shares_pages_and_counts_bytes_once() {
+        let cfg = KvConfig {
+            page_size: 2,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12, 13]); // two sealed pages
+        let solo = kv.kv_bytes();
+        assert_eq!(solo, 4 * 2 * 4 * 2); // 4 rows x d=2 x 4B x (k+v)
+
+        let got = kv.attach_prefix(1, &[10, 11, 12, 13]);
+        assert_eq!(got, 3, "full-prompt hit leaves the last row to recompute");
+        assert_eq!(kv.pos(1), 3);
+        // shared pages add no bytes
+        assert_eq!(kv.kv_bytes(), solo);
+        let s = kv.stats();
+        assert_eq!(s.pages_shared, 2);
+        assert_eq!(s.prefix_hits, 1);
+        assert_eq!(s.prefix_hit_rows, 3);
+
+        // mismatched prompt: no attach
+        kv.reset_slot(1);
+        assert_eq!(kv.attach_prefix(1, &[10, 11, 12, 99]), 2, "partial prefix");
+        kv.reset_slot(1);
+        assert_eq!(kv.attach_prefix(1, &[99, 11, 12, 13]), 0);
+    }
+
+    #[test]
+    fn cow_fork_leaves_sharer_untouched() {
+        let cfg = KvConfig {
+            page_size: 2,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12, 13]);
+        let (k0, v0) = rows_of(&kv, 0, 4);
+        assert_eq!(kv.attach_prefix(1, &[10, 11, 12, 13]), 3);
+        // recompute the final prompt row: forks the sealed tail page
+        push(&mut kv, 1, &[13]);
+        // divergence: slot 1 decodes different tokens
+        push(&mut kv, 1, &[40]);
+        let (k1, _v1) = rows_of(&kv, 1, 5);
+        // shared prefix rows (written by slot 0) are identical
+        assert_eq!(&k1[..3 * 2], &k0[..3 * 2]);
+        // row 3 was rewritten by slot 1 (value encodes slot 1000+3)
+        assert_eq!(k1[3 * 2], 1003.0);
+        // slot 0 is untouched by the fork
+        let (k0b, v0b) = rows_of(&kv, 0, 4);
+        assert_eq!(k0, k0b);
+        assert_eq!(v0, v0b);
+    }
+
+    #[test]
+    fn reset_releases_pages_down_to_cache_pins() {
+        let cfg = KvConfig {
+            page_size: 2,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12, 13]);
+        push(&mut kv, 1, &[20, 21, 22]); // second page unsealed
+        assert!(kv.kv_bytes() > 0);
+        kv.reset_slot(0);
+        kv.reset_slot(1);
+        let s = kv.stats();
+        // everything still resident is pinned by the prefix cache
+        assert_eq!(s.bytes(), s.cache_bytes);
+        // slot 0's two sealed pages + slot 1's first sealed page survive;
+        // slot 1's unsealed tail was freed
+        assert_eq!(s.pages, 3);
+        assert_eq!(kv.pos(0), 0);
+
+        // a fresh identical prompt re-attaches from the cache alone
+        assert_eq!(kv.attach_prefix(0, &[10, 11, 12, 13]), 3);
+    }
+
+    #[test]
+    fn cache_capacity_evicts_lru_without_freeing_shared_chains() {
+        let cfg = KvConfig {
+            page_size: 2,
+            prefix_cache_pages: 1,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12, 13]); // seals two pages, cache keeps 1
+        // the older page was evicted from the cache but survives as the
+        // cached tail's parent
+        let s = kv.stats();
+        assert_eq!(s.pages, 2);
+        kv.reset_slot(0);
+        // tail + its pinned parent both survive the reset
+        assert_eq!(kv.stats().pages, 2);
+        // and the full prefix still attaches via the cached tail
+        assert_eq!(kv.attach_prefix(0, &[10, 11, 12, 13]), 3);
+    }
+
+    #[test]
+    fn disabled_cache_frees_everything_on_reset() {
+        let cfg = KvConfig {
+            page_size: 2,
+            prefix_cache_pages: 0,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12, 13]);
+        assert_eq!(kv.attach_prefix(1, &[10, 11, 12, 13]), 0);
+        kv.reset_slot(0);
+        let s = kv.stats();
+        assert_eq!(s.pages, 0);
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn packed_pages_roundtrip_losslessly_and_shrink_bytes() {
+        let fmt = presets::bfp_w(6);
+        let cfg = KvConfig {
+            page_size: 4,
+            format: fmt,
+            ..KvConfig::default()
+        };
+        // d=32 so BFP blocks of 16 tile the rows
+        let mut kv = PagedKv::new(1, 1, 32, &cfg);
+        let mut rng = crate::util::rng::Pcg32::new(9);
+        let mut write = |kv: &mut PagedKv, toks: &[usize]| {
+            kv.prepare_append(0, toks);
+            let m = toks.len();
+            let mut k_rows = Vec::with_capacity(m * 32);
+            for _ in 0..m * 32 {
+                k_rows.push(rng.normal());
+            }
+            let v_rows = k_rows.clone();
+            kv.append_rows(0, 0, &k_rows, &v_rows);
+            kv.commit_append(0, m);
+        };
+        write(&mut kv, &[1, 2, 3]);
+        let (k_before, v_before) = {
+            let mut k = Vec::new();
+            let mut v = Vec::new();
+            kv.gather_into(0, 0, 3, &mut k, &mut v);
+            (k, v)
+        };
+        // fourth row seals + packs the page
+        write(&mut kv, &[4]);
+        let mut k_after = Vec::new();
+        let mut v_after = Vec::new();
+        kv.gather_into(0, 0, 3, &mut k_after, &mut v_after);
+        // packing already-quantised rows is bit-lossless
+        assert_eq!(k_before, k_after);
+        assert_eq!(v_before, v_after);
+        let s = kv.stats();
+        assert!(s.bytes_packed > 0);
+        // sealed page packs below its f32 footprint
+        assert!(
+            s.bytes_packed < 4 * 32 * 4 * 2,
+            "packed {} vs f32 {}",
+            s.bytes_packed,
+            4 * 32 * 4 * 2
+        );
+    }
+}

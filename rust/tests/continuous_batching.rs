@@ -12,8 +12,13 @@ use bbq::model::config::ModelConfig;
 use bbq::model::kv_cache::{BatchedDecodeSession, DecodeSession};
 use bbq::model::params::Params;
 use bbq::model::plan::QuantPlan;
-use bbq::model::Model;
+use bbq::model::{Model, SessionConfig};
 use bbq::quant::config::{presets, QFormat};
+
+/// Session config with `slots` slots and default KV settings (f32 pages).
+fn scfg(slots: usize) -> SessionConfig {
+    SessionConfig::new(slots)
+}
 
 /// Every preset the paper sweeps, plus the ZeroQuant-style per-row fixed
 /// point and plain fp32 pass-through.
@@ -79,8 +84,9 @@ fn batched_session_logits_bit_identical_all_formats() {
             &[1, 2, 3, 4, 5],
             &[77, 0, 511, 30, 8],
         ];
-        let mut batched = BatchedDecodeSession::new(&m, 4);
-        let mut seq: Vec<DecodeSession> = (0..4).map(|_| DecodeSession::new(&m)).collect();
+        let mut batched = BatchedDecodeSession::new(&m, &scfg(4));
+        let mut seq: Vec<DecodeSession> =
+            (0..4).map(|_| DecodeSession::new(&m, &scfg(1))).collect();
         for step in 0..5 {
             let batch: Vec<(usize, usize)> = (0..4).map(|s| (s, streams[s][step])).collect();
             let got = batched.step(&batch);
@@ -192,8 +198,8 @@ fn chunked_prefill_logits_bit_identical_all_formats() {
     for (name, fmt) in all_formats() {
         let m = nano(fmt);
         let prompt = [3usize, 9, 100, 42, 7, 250, 1, 30, 8];
-        let mut chunked = BatchedDecodeSession::new(&m, 1);
-        let mut seq = DecodeSession::new(&m);
+        let mut chunked = BatchedDecodeSession::new(&m, &scfg(1));
+        let mut seq = DecodeSession::new(&m, &scfg(1));
         let mut fed = 0usize;
         for chunk in [4usize, 3, 2] {
             let toks = &prompt[fed..fed + chunk];
@@ -276,7 +282,7 @@ fn reset_slot_mid_chunk_recycles_cleanly() {
     // abandon a sequence halfway through its chunked prefill; the slot
     // must serve a fresh sequence with no trace of the dropped rows
     let m = nano(presets::bfp_w(6));
-    let mut batched = BatchedDecodeSession::new(&m, 2);
+    let mut batched = BatchedDecodeSession::new(&m, &scfg(2));
     // slot 0: a real sequence we keep; slot 1: prefill 4 rows, then abort
     batched.step_chunked(&[(0, &[3, 9]), (1, &[7, 7, 8, 1])], None);
     assert_eq!(batched.pos(1), 4);
@@ -284,10 +290,10 @@ fn reset_slot_mid_chunk_recycles_cleanly() {
     batched.reset_slot(1);
     assert_eq!(batched.pos(1), 0);
     // slot 0 continues where it was; slot 1 restarts as a fresh sequence
-    let mut kept = DecodeSession::new(&m);
+    let mut kept = DecodeSession::new(&m, &scfg(1));
     kept.step(3);
     kept.step(9);
-    let mut fresh = DecodeSession::new(&m);
+    let mut fresh = DecodeSession::new(&m, &scfg(1));
     let got = batched.step_chunked(&[(0, &[100]), (1, &[42, 5, 11])], None);
     assert_eq!(got[0], kept.step(100));
     assert_eq!(got[1], fresh.step(42));

@@ -113,6 +113,11 @@ fn mid_decode_cancellation_recycles_slot() {
     let metrics = engine.shutdown();
     assert_eq!(metrics.cancelled, 1);
     assert_eq!(metrics.completed, 2);
+    // cancellation must not leak KV pages: once everything drains, the
+    // only resident bytes are the ones pinned by the prefix cache (the
+    // cancelled slot's pages were refcount-released the step it was
+    // reaped, sealed-and-cached prefill pages may legitimately remain)
+    assert_eq!(metrics.kv_bytes, metrics.kv_cached_bytes);
 }
 
 #[test]
@@ -310,8 +315,11 @@ fn engine_metrics_keep_occupancy_and_amortisation_invariants() {
     assert_eq!(metrics.queue_depth, 0);
     assert_eq!(metrics.queue_wait.count(), 12);
     assert_eq!(metrics.cancelled, 0);
-    // all KV rows are released once every sequence finishes
+    // all KV pages are released once every sequence finishes: these
+    // 3-token prompts never fill (and so never seal or cache) a page
     assert_eq!(metrics.kv_bytes, 0);
+    assert_eq!(metrics.kv_cached_bytes, 0);
+    assert_eq!(metrics.kv_pages, 0);
 }
 
 #[test]

@@ -7,7 +7,7 @@ use bbq::model::config::ModelConfig;
 use bbq::model::kv_cache::DecodeSession;
 use bbq::model::params::Params;
 use bbq::model::plan::{QuantPlan, WeightStore};
-use bbq::model::Model;
+use bbq::model::{Model, SessionConfig};
 use bbq::quant::config::{presets, QFormat};
 use bbq::quant::fake_quant;
 use bbq::quant::qmatmul::{qmatmul_packed, qmatmul_pret};
@@ -90,8 +90,8 @@ fn kv_decode_identical_across_weight_stores() {
         params,
         QuantPlan::uniform(fmt).with_store(WeightStore::DenseF32),
     );
-    let mut sp = DecodeSession::new(&packed);
-    let mut sd = DecodeSession::new(&dense);
+    let mut sp = DecodeSession::new(&packed, &SessionConfig::new(1));
+    let mut sd = DecodeSession::new(&dense, &SessionConfig::new(1));
     for &t in &toks {
         let lp = sp.step(t);
         let ld = sd.step(t);

@@ -1,0 +1,199 @@
+//! Paged-KV acceptance tests: with tiny pages (so every sequence spans
+//! multiple pages and the gather path is always live) and prefix sharing
+//! on, the paged f32 KV store must be logits-bit-identical to the dense
+//! KV reference ([`DecodeSession`]) for every preset quantisation format
+//! — sequential, batched, and chunked-prefill; copy-on-write divergence
+//! after a shared prefix must match unshared runs bit for bit; quantised
+//! (block-format) KV pages must match the dense quantised-KV reference
+//! exactly, because rows are fake-quantised at append and sealing only
+//! bit-packs already-quantised values (lossless by idempotence); and the
+//! engine must reuse cached prefill pages without changing a token.
+
+use bbq::coordinator::{run_batched, serve_one, Request, ServerConfig};
+use bbq::model::config::ModelConfig;
+use bbq::model::kv_cache::{BatchedDecodeSession, DecodeSession};
+use bbq::model::params::Params;
+use bbq::model::plan::QuantPlan;
+use bbq::model::{KvConfig, Model, SessionConfig};
+use bbq::quant::config::{presets, QFormat};
+
+/// Every preset the paper sweeps, plus the ZeroQuant-style per-row fixed
+/// point and plain fp32 pass-through.
+fn all_formats() -> Vec<(&'static str, QFormat)> {
+    let mut f = presets::table3_formats();
+    f.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+    f.push(("FixedRow W4", QFormat::FixedRow { w: 4 }));
+    f.push(("Fp32", QFormat::Fp32));
+    f
+}
+
+fn nano(fmt: QFormat) -> Model {
+    let cfg = ModelConfig::preset("nano");
+    Model::new(Params::init(&cfg, 42), QuantPlan::uniform(fmt))
+}
+
+#[test]
+fn paged_fp32_matches_full_forward() {
+    // the forward lane: tiny pages never change what attention computes
+    let m = nano(QFormat::Fp32);
+    let toks = [3usize, 9, 100, 42, 7];
+    let full = m.forward(&toks, None);
+    let mut s = BatchedDecodeSession::new(&m, &SessionConfig::new(1).page_size(2));
+    for (i, &t) in toks.iter().enumerate() {
+        let logits = s.step(&[(0, t)]);
+        for j in (0..512).step_by(37) {
+            assert!(
+                (logits[0][j] - full.row(i)[j]).abs() < 2e-4,
+                "pos {i} logit {j}: {} vs {}",
+                logits[0][j],
+                full.row(i)[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn paged_small_pages_bit_identical_to_dense_all_formats() {
+    // acceptance: paged f32 KV == dense KV, bit for bit, for every preset
+    // format — sequential/batched steps and chunked prefill, with pages
+    // so small (2 rows) that every slot crosses page boundaries
+    for (name, fmt) in all_formats() {
+        let m = nano(fmt);
+        let cfg = SessionConfig::new(3).page_size(2);
+        let streams: [&[usize]; 3] = [
+            &[3, 9, 100, 42, 7, 11],
+            &[7, 7, 7, 7, 7, 7],
+            &[250, 1, 30, 8, 77, 0],
+        ];
+        let mut batched = BatchedDecodeSession::new(&m, &cfg);
+        let mut seq: Vec<DecodeSession> = (0..3)
+            .map(|_| DecodeSession::new(&m, &SessionConfig::new(1)))
+            .collect();
+        for step in 0..6 {
+            let batch: Vec<(usize, usize)> = (0..3).map(|s| (s, streams[s][step])).collect();
+            let got = batched.step(&batch);
+            for s in 0..3 {
+                let want = seq[s].step(streams[s][step]);
+                assert_eq!(got[s], want, "{name}: slot {s} step {step}");
+            }
+        }
+        // chunked prefill straddling page boundaries, fresh pool
+        let mut chunked = BatchedDecodeSession::new(&m, &cfg);
+        let mut rseq = DecodeSession::new(&m, &SessionConfig::new(1));
+        let prompt = [3usize, 9, 100, 42, 7, 250, 1];
+        let mut fed = 0usize;
+        for chunk in [3usize, 4] {
+            let toks = &prompt[fed..fed + chunk];
+            let got = chunked.step_chunked(&[(0, toks)], None);
+            for (j, row) in got.iter().enumerate() {
+                let want = rseq.step(toks[j]);
+                assert_eq!(row, &want, "{name}: chunk row {j} at {fed}");
+            }
+            fed += chunk;
+        }
+    }
+}
+
+#[test]
+fn prefix_shared_decode_bit_identical_to_unshared_all_formats() {
+    // two slots attach the same cached prompt prefix, then diverge: every
+    // logit row must equal a fresh unshared dense session's, for every
+    // preset format — the COW-fork correctness bar
+    for (name, fmt) in all_formats() {
+        let m = nano(fmt);
+        let cfg = SessionConfig::new(2).page_size(4);
+        let mut s = BatchedDecodeSession::new(&m, &cfg);
+        let prompt: Vec<usize> = vec![3, 9, 100, 42, 7, 250, 1, 30]; // two full pages
+        // warm the prefix cache: slot 0 prefills (sealing + caching), then
+        // releases its slot references
+        s.step_chunked(&[(0, &prompt[..])], None);
+        s.reset_slot(0);
+        for slot in 0..2 {
+            let attached = s.attach_prefix(slot, &prompt);
+            assert_eq!(attached, 7, "{name}: pages cover all but the final prompt row");
+            let mut dense = DecodeSession::new(&m, &SessionConfig::new(1));
+            let mut want = Vec::new();
+            for &t in &prompt {
+                want = dense.step(t);
+            }
+            // recompute the final prompt row on top of the attached pages
+            // (this copy-on-write-forks the shared sealed tail page)
+            let got = s.step_chunked(&[(slot, &prompt[attached..])], None);
+            assert_eq!(got.last().unwrap(), &want, "{name}: slot {slot} final prompt row");
+            // diverge: each slot decodes a different continuation
+            let tok = 11 + slot * 7;
+            let got = s.step(&[(slot, tok)]);
+            assert_eq!(got[0], dense.step(tok), "{name}: slot {slot} diverged decode");
+        }
+        let st = s.kv_stats();
+        assert!(st.prefix_hits >= 2, "{name}: both slots must hit the cache");
+        assert!(st.pages_shared > 0, "{name}: the prefix pages must be shared");
+    }
+}
+
+#[test]
+fn quantised_kv_paged_bit_identical_to_dense_quantised_kv() {
+    // block-format KV pages: rows are fake-quantised at append in both
+    // lanes, and sealing bit-packs already-quantised rows losslessly —
+    // so the paged session still matches the dense reference exactly
+    for kvfmt in [presets::bfp_w(8), presets::bfp_w(6), presets::bm8(), presets::bl8()] {
+        let m = nano(QFormat::Fp32);
+        let cfg = SessionConfig::new(1).page_size(4).kv_format(kvfmt);
+        let mut paged = BatchedDecodeSession::new(&m, &cfg);
+        let mut dense = DecodeSession::new(&m, &cfg);
+        let toks = [3usize, 9, 100, 42, 7, 250, 1, 30, 8, 77];
+        for (i, &t) in toks.iter().enumerate() {
+            let got = paged.step(&[(0, t)]);
+            let want = dense.step(t);
+            assert_eq!(got[0], want, "{} step {i}", kvfmt.name());
+        }
+        // two pages sealed by now: quantised KV really is bit-packed
+        let st = paged.kv_stats();
+        let dense_bytes = toks.len() * m.cfg().d_model * 2 * 4 * m.cfg().n_layers;
+        assert!(st.bytes_packed > 0, "{}: sealed pages must pack", kvfmt.name());
+        assert!(
+            st.bytes_packed + st.bytes_f32 < dense_bytes,
+            "{}: packed KV must undercut dense f32 bytes",
+            kvfmt.name()
+        );
+    }
+}
+
+#[test]
+fn engine_prefix_sharing_parity_and_metrics() {
+    // identical prompts through the live engine: later requests attach the
+    // first request's sealed prefill pages — fewer prompt rows are re-fed,
+    // the KV metrics report the sharing, and not a single token changes
+    let m = nano(presets::bfp_w(6));
+    let prompt: Vec<usize> = (0..24).map(|i| 3 + (i * 7) % 200).collect();
+    let requests: Vec<Request> = (0..6)
+        .map(|i| Request::greedy(i as u64, prompt.clone(), 4))
+        .collect();
+    let cfg = ServerConfig {
+        max_batch: 2,
+        kv: KvConfig {
+            page_size: 4,
+            ..KvConfig::default()
+        },
+        ..ServerConfig::default()
+    };
+    let (resps, metrics) = run_batched(&m, requests.clone(), &cfg);
+    let want = serve_one(&m, &requests[0]);
+    for r in &resps {
+        assert_eq!(r.tokens, want.tokens, "request {}", r.id);
+        assert_eq!(r.finish, want.finish, "request {}", r.id);
+    }
+    // every multi-token prompt performed one lookup; later ones hit
+    assert_eq!(metrics.prefix_lookups, 6);
+    assert!(metrics.prefix_hits >= 1, "prefix cache never hit");
+    assert!(metrics.prefix_hit_rows > 0);
+    assert!(metrics.prefix_hit_rate() > 0.0);
+    // shared prefixes shrink the prefill the engine actually performs
+    assert!(
+        metrics.prefill_rows < 6 * prompt.len(),
+        "prefill rows {} not reduced by sharing",
+        metrics.prefill_rows
+    );
+    // after the drain only cache-pinned pages remain — nothing leaked
+    assert_eq!(metrics.kv_bytes, metrics.kv_cached_bytes);
+}
