@@ -18,14 +18,20 @@
 //! paged-KV section writes `BENCH_kv.json` (paged vs dense-equivalent
 //! decode, quantised-KV capacity multiplier, warm-vs-cold prefix-cached
 //! prefill) next to the manifest — CI uploads all four as bench
-//! artifacts. Under `--check` the acceptance bars (batch-8 ≥ 2×
+//! artifacts. The SIMD section measures the runtime-dispatched
+//! microkernels against the forced-scalar reference at the three call
+//! shapes (m == 1 decode GEMM, m ≥ 4 prefill panel GEMM, raw block
+//! decode) and threads the ratios into BENCH_decode.json and
+//! BENCH_forward.json. Under `--check` the acceptance bars (batch-8 ≥ 2×
 //! single-stream decode; chunk-8 ≥ 2× chunk-1 prefill; EngineHandle
 //! submission within 10% of run_batched; fused prefill GEMM ≥ 1.0× of
-//! transient dense decode; paged-f32 decode ≥ 0.90× dense-equivalent;
+//! transient dense decode; SIMD ≥ 1.0× scalar at every shape when a SIMD
+//! backend is active; paged-f32 decode ≥ 0.90× dense-equivalent;
 //! quantised-KV capacity ≥ 2×; prefix-cached prefill ≥ 2× cold) are hard
 //! failures instead of scrolled-past warnings.
 
 use bbq::coordinator::{run_batched, Engine, Metrics, Request, ServerConfig};
+use bbq::kernels::{self, Backend};
 use bbq::model::config::ModelConfig;
 use bbq::model::kv_cache::BatchedDecodeSession;
 use bbq::model::params::Params;
@@ -180,9 +186,10 @@ fn main() {
         });
     println!("{}", r.line());
 
-    bench_decode_engine(quick, &mut gates);
+    let simd = bench_simd(quick, &mut gates);
+    bench_decode_engine(quick, &mut gates, &simd);
     bench_prefill_engine(quick, &mut gates);
-    bench_forward_unified(quick, &mut gates);
+    bench_forward_unified(quick, &mut gates, &simd);
     bench_kv(quick, &mut gates);
 
     if !gates.is_empty() {
@@ -197,10 +204,161 @@ fn main() {
     }
 }
 
+/// Measured SIMD-vs-scalar ratios from [`bench_simd`], threaded into the
+/// BENCH_decode.json / BENCH_forward.json writers so the snapshots carry
+/// the microkernel story alongside the engine-level numbers.
+struct SimdBench {
+    isa: String,
+    simd_decode_gemm_mac_per_s: f64,
+    scalar_decode_gemm_mac_per_s: f64,
+    simd_vs_scalar_decode: f64,
+    simd_prefill_gemm_mac_per_s: f64,
+    scalar_prefill_gemm_mac_per_s: f64,
+    simd_vs_scalar_prefill: f64,
+    simd_block_decode_elem_per_s: f64,
+    scalar_block_decode_elem_per_s: f64,
+    simd_vs_scalar_block_decode: f64,
+}
+
+/// SIMD microkernels vs the scalar reference, at the three dispatched
+/// shapes: the m == 1 packed decode GEMM, the m ≥ 4 packed prefill panel
+/// GEMM, and raw block decode (dequantise every weight row). Both sides
+/// run in-process through [`kernels::with_isa`], so this measures exactly
+/// the dispatch the engine uses. Under `--check` the active backend must
+/// be ≥ 1.0× scalar on best-iteration times for every shape — SIMD that
+/// loses to the reference is a regression, not a curiosity. (On a host
+/// whose detected backend IS scalar the ratios are trivially 1.0× and the
+/// gate is skipped.)
+fn bench_simd(quick: bool, gates: &mut Vec<String>) -> SimdBench {
+    let active = kernels::active();
+    println!(
+        "\n== SIMD microkernels vs scalar reference (isa {}) ==",
+        active.name()
+    );
+    let fmt = presets::bfp_w(6);
+    let mut rng = Pcg32::new(13);
+    let budget = if quick { 30.0 } else { 400.0 };
+    let mut gate = |label: &str, ratio: f64| {
+        if active != Backend::Scalar && ratio < 1.0 {
+            println!("  WARNING: {} SIMD kernel slower than the scalar reference", label);
+            gates.push(format!(
+                "simd: {label} {} {ratio:.2}x < 1.00x of scalar",
+                active.name()
+            ));
+        }
+    };
+    // decode shape: [1, k] activations against a packed [n, k] weight
+    let (dk, dn) = (1024usize, 1024usize);
+    let a1 = Tensor::randn(&[1, dk], 1.0, &mut rng);
+    let w1 = encode(&Tensor::randn(&[dn, dk], 0.3, &mut rng), fmt);
+    let macs = (dk * dn) as f64;
+    let r_simd = kernels::with_isa(active, || {
+        Bench::new(&format!("simd_gemm/decode_{}_1x{dk}x{dn}", active.name()))
+            .items(macs)
+            .budget_ms(budget)
+            .run(|| {
+                black_box(qmatmul_packed(black_box(&a1), black_box(&w1), fmt));
+            })
+    });
+    println!("{}", r_simd.line());
+    let r_scalar = kernels::with_isa(Backend::Scalar, || {
+        Bench::new(&format!("simd_gemm/decode_scalar_1x{dk}x{dn}"))
+            .items(macs)
+            .budget_ms(budget)
+            .run(|| {
+                black_box(qmatmul_packed(black_box(&a1), black_box(&w1), fmt));
+            })
+    });
+    println!("{}", r_scalar.line());
+    let decode_ratio = r_scalar.min_ns / r_simd.min_ns.max(1e-9);
+    println!("  decode GEMM {} vs scalar: {decode_ratio:.2}x", active.name());
+    gate("decode GEMM", decode_ratio);
+    let (simd_decode, scalar_decode) = (
+        r_simd.throughput().unwrap_or(0.0),
+        r_scalar.throughput().unwrap_or(0.0),
+    );
+    // prefill shape: [64, k] panel GEMM against the packed weight
+    let (pm, pk, pn) = (64usize, 512usize, 512usize);
+    let ap = Tensor::randn(&[pm, pk], 1.0, &mut rng);
+    let wp = encode(&Tensor::randn(&[pn, pk], 0.3, &mut rng), fmt);
+    let pmacs = (pm * pk * pn) as f64;
+    let r_simd = kernels::with_isa(active, || {
+        Bench::new(&format!("simd_gemm/prefill_{}_{pm}x{pk}x{pn}", active.name()))
+            .items(pmacs)
+            .budget_ms(budget)
+            .run(|| {
+                black_box(matmul_packed_bt(black_box(&ap), black_box(&wp)));
+            })
+    });
+    println!("{}", r_simd.line());
+    let r_scalar = kernels::with_isa(Backend::Scalar, || {
+        Bench::new(&format!("simd_gemm/prefill_scalar_{pm}x{pk}x{pn}"))
+            .items(pmacs)
+            .budget_ms(budget)
+            .run(|| {
+                black_box(matmul_packed_bt(black_box(&ap), black_box(&wp)));
+            })
+    });
+    println!("{}", r_scalar.line());
+    let prefill_ratio = r_scalar.min_ns / r_simd.min_ns.max(1e-9);
+    println!(
+        "  prefill panel GEMM {} vs scalar: {prefill_ratio:.2}x",
+        active.name()
+    );
+    gate("prefill panel GEMM", prefill_ratio);
+    let (simd_prefill, scalar_prefill) = (
+        r_simd.throughput().unwrap_or(0.0),
+        r_scalar.throughput().unwrap_or(0.0),
+    );
+    // raw block decode: dequantise every packed weight row (the expand
+    // kernels with no GEMM arithmetic on top)
+    let mut row = vec![0f32; pk];
+    let elems = (pn * pk) as f64;
+    let r_simd = kernels::with_isa(active, || {
+        Bench::new(&format!("simd_decode/block_{}_{pn}x{pk}", active.name()))
+            .items(elems)
+            .budget_ms(budget)
+            .run(|| {
+                for j in 0..pn {
+                    wp.decode_row_into(j, &mut row);
+                }
+                black_box(&row);
+            })
+    });
+    println!("{}", r_simd.line());
+    let r_scalar = kernels::with_isa(Backend::Scalar, || {
+        Bench::new(&format!("simd_decode/block_scalar_{pn}x{pk}"))
+            .items(elems)
+            .budget_ms(budget)
+            .run(|| {
+                for j in 0..pn {
+                    wp.decode_row_into(j, &mut row);
+                }
+                black_box(&row);
+            })
+    });
+    println!("{}", r_scalar.line());
+    let block_ratio = r_scalar.min_ns / r_simd.min_ns.max(1e-9);
+    println!("  block decode {} vs scalar: {block_ratio:.2}x", active.name());
+    gate("block decode", block_ratio);
+    SimdBench {
+        isa: active.name().to_string(),
+        simd_decode_gemm_mac_per_s: simd_decode,
+        scalar_decode_gemm_mac_per_s: scalar_decode,
+        simd_vs_scalar_decode: decode_ratio,
+        simd_prefill_gemm_mac_per_s: simd_prefill,
+        scalar_prefill_gemm_mac_per_s: scalar_prefill,
+        simd_vs_scalar_prefill: prefill_ratio,
+        simd_block_decode_elem_per_s: r_simd.throughput().unwrap_or(0.0),
+        scalar_block_decode_elem_per_s: r_scalar.throughput().unwrap_or(0.0),
+        simd_vs_scalar_block_decode: block_ratio,
+    }
+}
+
 /// Continuous-batching decode engine: single-stream vs batch-8 tokens/sec
 /// under BFP6 (the fused packed GEMM decodes each weight once per layer per
 /// step, so batch-8 amortises the dequant 8×). Writes BENCH_decode.json.
-fn bench_decode_engine(quick: bool, gates: &mut Vec<String>) {
+fn bench_decode_engine(quick: bool, gates: &mut Vec<String>, simd: &SimdBench) {
     println!("\n== continuous-batching decode engine (tiny, BFP6, greedy) ==");
     let fmt = presets::bfp_w(6);
     let cfg = ModelConfig::preset("tiny");
@@ -306,6 +464,13 @@ fn bench_decode_engine(quick: bool, gates: &mut Vec<String>) {
         ("engine_vs_run_batched", Json::Num(engine_ratio)),
         ("resident_weight_bytes", Json::Num(wm.resident_bytes as f64)),
         ("dense_f32_weight_bytes", Json::Num(wm.dense_f32_bytes as f64)),
+        // SIMD-vs-scalar microkernel section (see bench_simd): the m == 1
+        // packed decode GEMM under the active ISA vs the forced scalar
+        // reference, best-iteration times
+        ("isa", Json::Str(simd.isa.clone())),
+        ("simd_decode_gemm_mac_per_s", Json::Num(simd.simd_decode_gemm_mac_per_s)),
+        ("scalar_decode_gemm_mac_per_s", Json::Num(simd.scalar_decode_gemm_mac_per_s)),
+        ("simd_vs_scalar_decode", Json::Num(simd.simd_vs_scalar_decode)),
         ("quick", Json::Bool(quick)),
     ]);
     let path = "BENCH_decode.json";
@@ -405,7 +570,7 @@ fn bench_prefill_engine(quick: bool, gates: &mut Vec<String>) {
 /// BENCH_forward.json; under `--check` the fused kernel must be at least
 /// 1.0× of the dense-decode reference (the refactor must not tax the
 /// experiment path).
-fn bench_forward_unified(quick: bool, gates: &mut Vec<String>) {
+fn bench_forward_unified(quick: bool, gates: &mut Vec<String>, simd: &SimdBench) {
     println!("\n== full-context forward: fused packed GEMM vs transient dense decode ==");
     let fmt = presets::bfp_w(6);
     let mut rng = Pcg32::new(11);
@@ -468,6 +633,16 @@ fn bench_forward_unified(quick: bool, gates: &mut Vec<String>) {
         ("model", Json::Str(cfg.name.clone())),
         ("seq", Json::Num(64.0)),
         ("forward_tps_packed", Json::Num(r_fwd.throughput().unwrap_or(0.0))),
+        // SIMD-vs-scalar microkernel section (see bench_simd): the m ≥ 4
+        // prefill panel GEMM and raw block decode under the active ISA vs
+        // the forced scalar reference, best-iteration times
+        ("isa", Json::Str(simd.isa.clone())),
+        ("simd_prefill_gemm_mac_per_s", Json::Num(simd.simd_prefill_gemm_mac_per_s)),
+        ("scalar_prefill_gemm_mac_per_s", Json::Num(simd.scalar_prefill_gemm_mac_per_s)),
+        ("simd_vs_scalar_prefill", Json::Num(simd.simd_vs_scalar_prefill)),
+        ("simd_block_decode_elem_per_s", Json::Num(simd.simd_block_decode_elem_per_s)),
+        ("scalar_block_decode_elem_per_s", Json::Num(simd.scalar_block_decode_elem_per_s)),
+        ("simd_vs_scalar_block_decode", Json::Num(simd.simd_vs_scalar_block_decode)),
         ("quick", Json::Bool(quick)),
     ]);
     let path = "BENCH_forward.json";

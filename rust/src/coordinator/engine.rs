@@ -472,6 +472,7 @@ impl<'m> EngineCore<'m> {
         // the prepared weight cache is immutable for the engine's whole
         // lifetime — measure it once, not once per step
         metrics.weight_memory = model.weight_memory();
+        metrics.isa = crate::kernels::active().name().to_string();
         EngineCore {
             session: BatchedDecodeSession::new(model, &cfg.session_config()),
             slots: (0..n).map(|_| None).collect(),

@@ -365,7 +365,8 @@ fn arr_u64(xs: &[u64]) -> Json {
 
 /// The `GET /v1/metrics` document: one entry per registered model with
 /// the engine's live counters and latency/queue-wait percentiles, plus
-/// the router's per-class admission counters.
+/// the router's per-class admission counters and the process-wide
+/// kernel ISA backend.
 pub fn metrics_json(router: &RouterHandle) -> Json {
     let models: Vec<Json> = router
         .entries()
@@ -390,11 +391,16 @@ pub fn metrics_json(router: &RouterHandle) -> Json {
                 ("kv_pages_shared", Json::Num(m.kv_pages_shared as f64)),
                 ("prefix_hit_rate", Json::Num(m.prefix_hit_rate())),
                 ("prefix_hit_rows", Json::Num(m.prefix_hit_rows as f64)),
+                ("isa", Json::Str(m.isa.clone())),
             ])
         })
         .collect();
     let stats = router.stats();
     Json::obj(vec![
+        (
+            "isa",
+            Json::Str(crate::kernels::active().name().to_string()),
+        ),
         ("models", Json::Arr(models)),
         (
             "router",

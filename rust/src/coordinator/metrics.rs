@@ -201,6 +201,10 @@ pub struct Metrics {
     pub prefix_hits: usize,
     /// Prompt rows never re-fed thanks to attached prefixes.
     pub prefix_hit_rows: usize,
+    /// Active [`crate::kernels`] ISA backend ("scalar", "avx2", "neon") the
+    /// engine's GEMMs dispatch to — set once at engine construction, empty
+    /// until then.
+    pub isa: String,
 }
 
 impl Metrics {
@@ -333,6 +337,9 @@ impl Metrics {
                 self.weight_memory.resident_bytes,
                 self.weight_memory.ratio(),
             ));
+        }
+        if !self.isa.is_empty() {
+            s.push_str(&format!(" isa={}", self.isa));
         }
         s
     }
@@ -469,6 +476,14 @@ mod tests {
     fn prefix_hit_rate_defaults_to_zero() {
         let m = Metrics::new();
         assert_eq!(m.prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn isa_reported_once_set() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("isa="));
+        m.isa = crate::kernels::active().name().to_string();
+        assert!(m.summary().contains(&format!("isa={}", m.isa)));
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! AVX2 backend: 8-wide f32 lanes, bit-identical to `scalar` by
+//! construction — plain `vmulps` + `vaddps` (never FMA, whose fused
+//! rounding changes bits), the scalar module's exact 8-lane reduction tree,
+//! and sign application via sign-bit XOR (exactly f32 negation).
+//!
+//! # Safety
+//!
+//! Every function here is `#[target_feature(enable = "avx2")]` and must only
+//! be called when the host supports AVX2; the `kernels` dispatch layer
+//! guarantees this (a backend is only activated when `supported()` holds).
+
+use core::arch::x86_64::*;
+use std::ops::Range;
+
+use super::scalar;
+
+/// Reduces an 8-lane accumulator with the scalar reference tree:
+/// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn reduce8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v); // [l0 l1 l2 l3]
+    let hi = _mm256_extractf128_ps::<1>(v); // [l4 l5 l6 l7]
+    let q = _mm_add_ps(lo, hi); // [q0 q1 q2 q3]
+    let r = _mm_add_ps(q, _mm_movehl_ps(q, q)); // [q0+q2, q1+q3, ..]
+    let s = _mm_add_ss(r, _mm_shuffle_ps::<0b01>(r, r));
+    _mm_cvtss_f32(s)
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 8;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let i = c * 8;
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+    }
+    let mut s = reduce8(acc);
+    for i in chunks * 8..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    let chunks = k / 8;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        let mut j = 0;
+        // 4-column panels share each A load; every column is still the
+        // exact `dot` order, so panel grouping never changes bits.
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let mut c0 = _mm256_setzero_ps();
+            let mut c1 = _mm256_setzero_ps();
+            let mut c2 = _mm256_setzero_ps();
+            let mut c3 = _mm256_setzero_ps();
+            for c in 0..chunks {
+                let off = c * 8;
+                let av = _mm256_loadu_ps(arow.as_ptr().add(off));
+                c0 = _mm256_add_ps(c0, _mm256_mul_ps(av, _mm256_loadu_ps(b0.as_ptr().add(off))));
+                c1 = _mm256_add_ps(c1, _mm256_mul_ps(av, _mm256_loadu_ps(b1.as_ptr().add(off))));
+                c2 = _mm256_add_ps(c2, _mm256_mul_ps(av, _mm256_loadu_ps(b2.as_ptr().add(off))));
+                c3 = _mm256_add_ps(c3, _mm256_mul_ps(av, _mm256_loadu_ps(b3.as_ptr().add(off))));
+            }
+            let mut s0 = reduce8(c0);
+            let mut s1 = reduce8(c1);
+            let mut s2 = reduce8(c2);
+            let mut s3 = reduce8(c3);
+            for t in chunks * 8..k {
+                let av = arow[t];
+                s0 += av * b0[t];
+                s1 += av * b1[t];
+                s2 += av * b2[t];
+                s3 += av * b3[t];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            orow[j] = dot(arow, &b[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    let jv = n / 8 * 8;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let a0s = arow[kk];
+            let a1s = arow[kk + 1];
+            let a2s = arow[kk + 2];
+            let a3s = arow[kk + 3];
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            let a0 = _mm256_set1_ps(a0s);
+            let a1 = _mm256_set1_ps(a1s);
+            let a2 = _mm256_set1_ps(a2s);
+            let a3 = _mm256_set1_ps(a3s);
+            let mut j = 0;
+            while j < jv {
+                // same association as scalar: ((a0*b0 + a1*b1) + a2*b2) + a3*b3
+                let mut s = _mm256_mul_ps(a0, _mm256_loadu_ps(b0.as_ptr().add(j)));
+                s = _mm256_add_ps(s, _mm256_mul_ps(a1, _mm256_loadu_ps(b1.as_ptr().add(j))));
+                s = _mm256_add_ps(s, _mm256_mul_ps(a2, _mm256_loadu_ps(b2.as_ptr().add(j))));
+                s = _mm256_add_ps(s, _mm256_mul_ps(a3, _mm256_loadu_ps(b3.as_ptr().add(j))));
+                let o = _mm256_add_ps(_mm256_loadu_ps(orow.as_ptr().add(j)), s);
+                _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
+                j += 8;
+            }
+            for j in jv..n {
+                orow[j] += a0s * b0[j] + a1s * b1[j] + a2s * b2[j] + a3s * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let avs = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let av = _mm256_set1_ps(avs);
+            let mut j = 0;
+            while j < jv {
+                let o = _mm256_add_ps(
+                    _mm256_loadu_ps(orow.as_ptr().add(j)),
+                    _mm256_mul_ps(av, _mm256_loadu_ps(brow.as_ptr().add(j))),
+                );
+                _mm256_storeu_ps(orow.as_mut_ptr().add(j), o);
+                j += 8;
+            }
+            for j in jv..n {
+                orow[j] += avs * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn expand_bfp(fields: &[u32], blk_scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(fields.len(), out.len());
+    let nv = fields.len() / 8 * 8;
+    let scale = _mm256_set1_ps(blk_scale);
+    let one = _mm256_set1_epi32(1);
+    let mut i = 0;
+    while i < nv {
+        let f = _mm256_loadu_si256(fields.as_ptr().add(i) as *const __m256i);
+        // mantissa < 2^31 always (a <= 32-bit field shifted right by one),
+        // so the signed convert matches scalar `u32 as f32` exactly.
+        let mm = _mm256_srli_epi32::<1>(f);
+        let v = _mm256_mul_ps(_mm256_cvtepi32_ps(mm), scale);
+        // negate by sign-bit XOR: identical to scalar `-v`, including -0.0
+        let sgn = _mm256_slli_epi32::<31>(_mm256_and_si256(f, one));
+        let r = _mm256_xor_ps(v, _mm256_castsi256_ps(sgn));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+        i += 8;
+    }
+    scalar::expand_bfp(&fields[nv..], blk_scale, &mut out[nv..]);
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn expand_fixed(fields: &[u32], w: u32, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(fields.len(), out.len());
+    let nv = fields.len() / 8 * 8;
+    let sv = _mm256_set1_ps(scale);
+    let shift = _mm_cvtsi32_si128(32 - w as i32);
+    let mut i = 0;
+    while i < nv {
+        let f = _mm256_loadu_si256(fields.as_ptr().add(i) as *const __m256i);
+        let c = _mm256_sra_epi32(_mm256_sll_epi32(f, shift), shift);
+        let v = _mm256_mul_ps(_mm256_cvtepi32_ps(c), sv);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), v);
+        i += 8;
+    }
+    scalar::expand_fixed(&fields[nv..], w, scale, &mut out[nv..]);
+}

@@ -1,0 +1,509 @@
+//! Runtime-dispatched SIMD microkernels for the two hot primitives behind
+//! every matmul in the crate: the GEMM inner loops (`gemm_bt_rows`,
+//! `gemm_rows`, [`dot`]) and block dequantisation field expansion
+//! (`expand_bfp`, `expand_fixed`, used by `QTensor::decode_row_into`).
+//!
+//! # Backends
+//!
+//! A [`Backend`] is selected once at startup by hardware feature detection —
+//! AVX2 on x86_64, NEON on aarch64 — with the scalar implementation kept as
+//! the always-available reference. The `BBQ_ISA` environment variable
+//! (`scalar`, `avx2`, `neon`) overrides detection; an unknown or
+//! unsupported-on-this-host value panics loudly rather than silently falling
+//! back, so CI lanes cannot rot. Tests force a backend in-process with
+//! [`with_isa`].
+//!
+//! # Bit-identity contract
+//!
+//! Every backend produces **bit-identical** f32 results, not merely close
+//! ones. This is what makes the crate's per-format exactness suites valid
+//! across ISAs, and it is achieved by construction:
+//!
+//! - No FMA anywhere: each term is one f32 multiply then one f32 add, in
+//!   every backend, because fused rounding changes bits.
+//! - [`dot`] (and therefore `gemm_bt_rows`, which computes one `dot` per
+//!   output element) uses a fixed lane-structured accumulation order: 8
+//!   independent lane accumulators over `k / 8` chunks, a fixed reduction
+//!   tree `(l0+l4) + (l2+l6)` / `(l1+l5) + (l3+l7)`, then a serial tail for
+//!   `k % 8`. The scalar reference implements exactly this order, so an
+//!   8-wide AVX2 accumulator (or a NEON register pair) reproduces it lane
+//!   for lane.
+//! - `gemm_rows` is elementwise across the output row (no cross-lane
+//!   reduction), so vectorising over columns is bit-exact by IEEE-754
+//!   determinism of per-lane mul/add.
+//! - The expand kernels negate via sign-bit XOR, which is exactly f32
+//!   negation (including `-0.0`), and convert integers with round-to-nearest
+//!   just like scalar `as f32`.
+//!
+//! Because all backends agree bitwise, the process-global test override in
+//! [`with_isa`] is safe even while unrelated threads (e.g. the worker pool)
+//! keep computing: they may observe the forced backend, but the numbers they
+//! produce do not change.
+
+pub(crate) mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// A kernel ISA backend. All variants exist on every platform (so CLI
+/// parsing and error messages are uniform); [`supported`] says whether the
+/// current host can actually run one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable reference implementation; always available, and the
+    /// bit-identity oracle the SIMD lanes are tested against.
+    Scalar,
+    /// 8-wide f32 via `std::arch::x86_64` AVX2 intrinsics.
+    Avx2,
+    /// 4-wide f32 (register pairs for the 8-lane dot) via
+    /// `std::arch::aarch64` NEON intrinsics.
+    Neon,
+}
+
+impl Backend {
+    /// Lower-case name as accepted by `BBQ_ISA` and reported in metrics.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+
+    /// Inverse of [`Backend::name`]; `None` for unknown strings.
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "scalar" => Some(Backend::Scalar),
+            "avx2" => Some(Backend::Avx2),
+            "neon" => Some(Backend::Neon),
+            _ => None,
+        }
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            Backend::Scalar => 0,
+            Backend::Avx2 => 1,
+            Backend::Neon => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Backend {
+        match v {
+            0 => Backend::Scalar,
+            1 => Backend::Avx2,
+            _ => Backend::Neon,
+        }
+    }
+}
+
+/// Whether this host can execute `b`. Scalar is always supported; the SIMD
+/// backends require both the matching architecture and the runtime CPU
+/// feature.
+pub fn supported(b: Backend) -> bool {
+    match b {
+        Backend::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => std::arch::is_aarch64_feature_detected!("neon"),
+        _ => false,
+    }
+}
+
+/// The best backend the hardware supports, ignoring `BBQ_ISA` and
+/// [`with_isa`] overrides. Used by observability surfaces that want to
+/// report "what the machine has" next to "what is active".
+pub fn detected() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Backend::Neon;
+        }
+    }
+    Backend::Scalar
+}
+
+/// Every backend the current host supports, scalar first. Bit-identity
+/// tests iterate this so they exercise whatever SIMD lane exists without
+/// failing on hardware that has none.
+pub fn supported_backends() -> Vec<Backend> {
+    [Backend::Scalar, Backend::Avx2, Backend::Neon]
+        .into_iter()
+        .filter(|&b| supported(b))
+        .collect()
+}
+
+fn startup() -> Backend {
+    match std::env::var("BBQ_ISA") {
+        Ok(v) if !v.trim().is_empty() => {
+            let v = v.trim();
+            let b = Backend::parse(v).unwrap_or_else(|| {
+                panic!("BBQ_ISA={v}: unknown ISA (expected scalar, avx2 or neon)")
+            });
+            assert!(
+                supported(b),
+                "BBQ_ISA={v}: ISA not supported on this host (detected {})",
+                detected().name()
+            );
+            b
+        }
+        _ => detected(),
+    }
+}
+
+static STARTUP: OnceLock<Backend> = OnceLock::new();
+
+/// `u8::MAX` = no override; otherwise `Backend::as_u8` of the forced lane.
+static FORCE: AtomicU8 = AtomicU8::new(u8::MAX);
+/// Serialises [`with_isa`] sections so concurrent forcing tests cannot
+/// interleave their overrides.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+/// The backend all kernel calls currently dispatch to: the [`with_isa`]
+/// override if one is active, else the startup selection (`BBQ_ISA` when
+/// set, hardware detection otherwise).
+pub fn active() -> Backend {
+    match FORCE.load(Ordering::Relaxed) {
+        u8::MAX => *STARTUP.get_or_init(startup),
+        v => Backend::from_u8(v),
+    }
+}
+
+/// Runs `f` with kernel dispatch forced to `b`, restoring the previous
+/// selection afterwards (also on panic).
+///
+/// The override is process-global — worker-pool threads doing the actual
+/// GEMM work must observe it too — and sections are serialised by an
+/// internal mutex, so concurrent tests queue rather than trample each
+/// other. Not reentrant: nesting `with_isa` inside `with_isa` deadlocks.
+///
+/// # Panics
+///
+/// Panics if `b` is not [`supported`] on this host.
+pub fn with_isa<R>(b: Backend, f: impl FnOnce() -> R) -> R {
+    assert!(
+        supported(b),
+        "with_isa({}): ISA not supported on this host (detected {})",
+        b.name(),
+        detected().name()
+    );
+    let _lock = FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Reset;
+    impl Drop for Reset {
+        fn drop(&mut self) {
+            FORCE.store(u8::MAX, Ordering::SeqCst);
+        }
+    }
+    FORCE.store(b.as_u8(), Ordering::SeqCst);
+    let _reset = Reset;
+    f()
+}
+
+/// Lane-structured dot product — the crate's single dot-product reduction
+/// order, shared bit-for-bit by every backend.
+///
+/// Semantics (the contract SIMD lanes must reproduce): 8 independent lane
+/// accumulators walk `len / 8` chunks in order (`lane[l] += x[8c+l] *
+/// y[8c+l]`, one multiply then one add per term, no FMA); lanes reduce
+/// through the fixed tree `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`; the
+/// `len % 8` tail is added serially.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot(x, y) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot(x, y) },
+        _ => scalar::dot(x, y),
+    }
+}
+
+/// B-transposed GEMM over a row range: `out[i - rows.start][j] =`
+/// [`dot`]`(a[i], b[j])` for `i in rows`, with `a: [?, k]` row-major,
+/// `b: [n, k]` row-major (i.e. Bᵀ), `out: [rows.len(), n]`. Every output
+/// element is one `dot`, so results are independent of how callers
+/// partition rows or columns across threads or panels.
+pub(crate) fn gemm_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::gemm_bt_rows(a, b, out, rows, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::gemm_bt_rows(a, b, out, rows, k, n) },
+        _ => scalar::gemm_bt_rows(a, b, out, rows, k, n),
+    }
+}
+
+/// Row-major GEMM over a row range of A (`a: [?, k]`, `b: [k, n]`,
+/// `out: [rows.len(), n]`, accumulating into `out`). The i–k–j broadcast
+/// order is elementwise across each output row — per column `j` the update
+/// order is `out[j] += ((a0*b0[j] + a1*b1[j]) + a2*b2[j]) + a3*b3[j]` for
+/// each unrolled group of four k-steps, then `out[j] += a*b[j]` for the
+/// remainder — so vector lanes across `j` are bit-exact by construction.
+pub(crate) fn gemm_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::gemm_rows(a, b, out, rows, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::gemm_rows(a, b, out, rows, k, n) },
+        _ => scalar::gemm_rows(a, b, out, rows, k, n),
+    }
+}
+
+/// Expands BFP-style fields into f32: each field packs `(mantissa << 1) |
+/// sign` (sign in the LSB, matching the bit-stream layout), and the output
+/// is `±(mantissa as f32 * blk_scale)` with the sign applied as a sign-bit
+/// XOR. `blk_scale` is the block's decoded shared-exponent scale.
+pub(crate) fn expand_bfp(fields: &[u32], blk_scale: f32, out: &mut [f32]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::expand_bfp(fields, blk_scale, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::expand_bfp(fields, blk_scale, out) },
+        _ => scalar::expand_bfp(fields, blk_scale, out),
+    }
+}
+
+/// Expands raw `w`-bit two's-complement fields into f32: sign-extend to
+/// i32, convert (round-to-nearest, same as `as f32`), multiply by `scale`.
+pub(crate) fn expand_fixed(fields: &[u32], w: u32, scale: f32, out: &mut [f32]) {
+    debug_assert!((1..=32).contains(&w));
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::expand_fixed(fields, w, scale, out) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::expand_fixed(fields, w, scale, out) },
+        _ => scalar::expand_fixed(fields, w, scale, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randv(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn backend_name_parse_roundtrip() {
+        for b in [Backend::Scalar, Backend::Avx2, Backend::Neon] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("avx512"), None);
+        assert_eq!(Backend::parse(""), None);
+    }
+
+    #[test]
+    fn active_backend_is_supported() {
+        assert!(supported(active()));
+        assert!(supported(detected()));
+        assert_eq!(supported_backends()[0], Backend::Scalar);
+    }
+
+    #[test]
+    fn with_isa_forces_and_restores() {
+        let ambient = active();
+        with_isa(Backend::Scalar, || {
+            assert_eq!(active(), Backend::Scalar);
+        });
+        assert_eq!(active(), ambient);
+        // restore also happens on panic
+        let r = std::panic::catch_unwind(|| {
+            with_isa(Backend::Scalar, || panic!("boom"));
+        });
+        assert!(r.is_err());
+        assert_eq!(active(), ambient);
+    }
+
+    #[test]
+    fn dot_exact_on_integers() {
+        // Integer-valued inputs are order-insensitive, so this pins the
+        // value itself rather than the reduction order.
+        let x: Vec<f32> = (1..=13).map(|i| i as f32).collect();
+        let y = vec![1.0f32; 13];
+        assert_eq!(dot(&x, &y), 91.0);
+        assert_eq!(dot(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dot_follows_documented_lane_order() {
+        // One full 8-chunk plus a 3-element tail, non-associative values:
+        // recompute the documented order by hand and demand exact equality.
+        let x: Vec<f32> = (0..11).map(|i| 0.1 + 0.37 * i as f32).collect();
+        let y: Vec<f32> = (0..11).map(|i| 1.9 - 0.21 * i as f32).collect();
+        let mut lane = [0.0f32; 8];
+        for l in 0..8 {
+            lane[l] += x[l] * y[l];
+        }
+        let (q0, q1, q2, q3) = (
+            lane[0] + lane[4],
+            lane[1] + lane[5],
+            lane[2] + lane[6],
+            lane[3] + lane[7],
+        );
+        let mut want = (q0 + q2) + (q1 + q3);
+        for i in 8..11 {
+            want += x[i] * y[i];
+        }
+        assert_eq!(scalar::dot(&x, &y), want);
+        assert_eq!(dot(&x, &y), want);
+    }
+
+    #[test]
+    fn dot_bitwise_identical_across_backends() {
+        let mut rng = Pcg32::new(7);
+        for len in [0, 1, 5, 7, 8, 9, 15, 16, 17, 31, 64, 67, 130] {
+            let x = randv(&mut rng, len);
+            let y = randv(&mut rng, len);
+            let want = with_isa(Backend::Scalar, || dot(&x, &y));
+            for b in supported_backends() {
+                let got = with_isa(b, || dot(&x, &y));
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "dot len={len} backend={}",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gemms_bitwise_identical_across_backends() {
+        let mut rng = Pcg32::new(11);
+        // ragged shapes: k and n straddle every lane width and panel size
+        for (m, k, n) in [(1, 7, 5), (2, 17, 9), (3, 33, 13), (5, 64, 31), (4, 70, 66)] {
+            let a = randv(&mut rng, m * k);
+            let bt = randv(&mut rng, n * k); // [n, k] for gemm_bt_rows
+            let bk = randv(&mut rng, k * n); // [k, n] for gemm_rows
+            let mut want_bt = vec![0.0f32; m * n];
+            let mut want_r = vec![0.0f32; m * n];
+            with_isa(Backend::Scalar, || {
+                gemm_bt_rows(&a, &bt, &mut want_bt, 0..m, k, n);
+                gemm_rows(&a, &bk, &mut want_r, 0..m, k, n);
+            });
+            for b in supported_backends() {
+                let mut got_bt = vec![0.0f32; m * n];
+                let mut got_r = vec![0.0f32; m * n];
+                with_isa(b, || {
+                    gemm_bt_rows(&a, &bt, &mut got_bt, 0..m, k, n);
+                    gemm_rows(&a, &bk, &mut got_r, 0..m, k, n);
+                });
+                for i in 0..m * n {
+                    assert_eq!(
+                        got_bt[i].to_bits(),
+                        want_bt[i].to_bits(),
+                        "gemm_bt_rows m={m} k={k} n={n} i={i} backend={}",
+                        b.name()
+                    );
+                    assert_eq!(
+                        got_r[i].to_bits(),
+                        want_r[i].to_bits(),
+                        "gemm_rows m={m} k={k} n={n} i={i} backend={}",
+                        b.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_bt_rows_is_partition_invariant() {
+        // dot-per-output semantics: any row/column partition yields the
+        // same bits, which is what lets threaded callers chunk freely.
+        let mut rng = Pcg32::new(23);
+        let (m, k, n) = (6, 19, 11);
+        let a = randv(&mut rng, m * k);
+        let bt = randv(&mut rng, n * k);
+        let mut whole = vec![0.0f32; m * n];
+        gemm_bt_rows(&a, &bt, &mut whole, 0..m, k, n);
+        let mut split = vec![0.0f32; m * n];
+        gemm_bt_rows(&a, &bt, &mut split[..2 * n], 0..2, k, n);
+        gemm_bt_rows(&a, &bt, &mut split[2 * n..], 2..m, k, n);
+        assert_eq!(
+            whole.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            split.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn expand_kernels_bitwise_identical_across_backends() {
+        let mut rng = Pcg32::new(31);
+        for len in [1, 3, 8, 15, 16, 21, 64] {
+            // bfp: (mantissa << 1) | sign fields with a 5-bit mantissa
+            let bfp: Vec<u32> = (0..len).map(|_| rng.next_u32() & 0x3f).collect();
+            // fixed: raw 6-bit two's-complement fields
+            let fixed: Vec<u32> = (0..len).map(|_| rng.next_u32() & 0x3f).collect();
+            let mut want_b = vec![0.0f32; len];
+            let mut want_f = vec![0.0f32; len];
+            with_isa(Backend::Scalar, || {
+                expand_bfp(&bfp, 0.125, &mut want_b);
+                expand_fixed(&fixed, 6, 0.25, &mut want_f);
+            });
+            for b in supported_backends() {
+                let mut got_b = vec![0.0f32; len];
+                let mut got_f = vec![0.0f32; len];
+                with_isa(b, || {
+                    expand_bfp(&bfp, 0.125, &mut got_b);
+                    expand_fixed(&fixed, 6, 0.25, &mut got_f);
+                });
+                for i in 0..len {
+                    assert_eq!(
+                        got_b[i].to_bits(),
+                        want_b[i].to_bits(),
+                        "expand_bfp len={len} i={i} backend={} field={:#x}",
+                        b.name(),
+                        bfp[i]
+                    );
+                    assert_eq!(
+                        got_f[i].to_bits(),
+                        want_f[i].to_bits(),
+                        "expand_fixed len={len} i={i} backend={} field={:#x}",
+                        b.name(),
+                        fixed[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn expand_bfp_keeps_negative_zero() {
+        // field 0b1 = mantissa 0, sign set -> scalar produces -0.0; SIMD
+        // sign-XOR must too (a naive "0 - v" style lane would give +0.0).
+        for b in supported_backends() {
+            let mut out = [0.0f32; 1];
+            with_isa(b, || expand_bfp(&[0b1], 0.5, &mut out));
+            assert_eq!(out[0].to_bits(), (-0.0f32).to_bits(), "{}", b.name());
+        }
+    }
+}

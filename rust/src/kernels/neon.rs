@@ -1,0 +1,219 @@
+//! NEON (aarch64) backend: 4-wide f32 lanes, using register *pairs* for the
+//! shared 8-lane dot accumulation order so results are bit-identical to
+//! `scalar`. Plain `fmul` + `fadd` throughout — never `vfmaq_f32`, whose
+//! fused rounding changes bits.
+//!
+//! # Safety
+//!
+//! Every function is `#[target_feature(enable = "neon")]` and must only be
+//! called when the host supports NEON; the `kernels` dispatch layer
+//! guarantees this (a backend is only activated when `supported()` holds).
+
+use core::arch::aarch64::*;
+use std::ops::Range;
+
+use super::scalar;
+
+/// Reduces an 8-lane accumulator held as two quad registers
+/// (`lo` = lanes 0..4, `hi` = lanes 4..8) with the scalar reference tree:
+/// `((l0+l4) + (l2+l6)) + ((l1+l5) + (l3+l7))`.
+#[inline]
+#[target_feature(enable = "neon")]
+unsafe fn reduce8(lo: float32x4_t, hi: float32x4_t) -> f32 {
+    let q = vaddq_f32(lo, hi); // [q0 q1 q2 q3]
+    let r = vadd_f32(vget_low_f32(q), vget_high_f32(q)); // [q0+q2, q1+q3]
+    vget_lane_f32::<0>(r) + vget_lane_f32::<1>(r)
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / 8;
+    let mut lo = vdupq_n_f32(0.0);
+    let mut hi = vdupq_n_f32(0.0);
+    for c in 0..chunks {
+        let i = c * 8;
+        lo = vaddq_f32(
+            lo,
+            vmulq_f32(vld1q_f32(x.as_ptr().add(i)), vld1q_f32(y.as_ptr().add(i))),
+        );
+        hi = vaddq_f32(
+            hi,
+            vmulq_f32(
+                vld1q_f32(x.as_ptr().add(i + 4)),
+                vld1q_f32(y.as_ptr().add(i + 4)),
+            ),
+        );
+    }
+    let mut s = reduce8(lo, hi);
+    for i in chunks * 8..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    let chunks = k / 8;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        let mut j = 0;
+        // 2-column panels (4 quad accumulators) share each A load; every
+        // column is still the exact `dot` order.
+        while j + 2 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let mut c0l = vdupq_n_f32(0.0);
+            let mut c0h = vdupq_n_f32(0.0);
+            let mut c1l = vdupq_n_f32(0.0);
+            let mut c1h = vdupq_n_f32(0.0);
+            for c in 0..chunks {
+                let off = c * 8;
+                let al = vld1q_f32(arow.as_ptr().add(off));
+                let ah = vld1q_f32(arow.as_ptr().add(off + 4));
+                c0l = vaddq_f32(c0l, vmulq_f32(al, vld1q_f32(b0.as_ptr().add(off))));
+                c0h = vaddq_f32(c0h, vmulq_f32(ah, vld1q_f32(b0.as_ptr().add(off + 4))));
+                c1l = vaddq_f32(c1l, vmulq_f32(al, vld1q_f32(b1.as_ptr().add(off))));
+                c1h = vaddq_f32(c1h, vmulq_f32(ah, vld1q_f32(b1.as_ptr().add(off + 4))));
+            }
+            let mut s0 = reduce8(c0l, c0h);
+            let mut s1 = reduce8(c1l, c1h);
+            for t in chunks * 8..k {
+                let av = arow[t];
+                s0 += av * b0[t];
+                s1 += av * b1[t];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            j += 2;
+        }
+        while j < n {
+            orow[j] = dot(arow, &b[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    let jv = n / 4 * 4;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let a0s = arow[kk];
+            let a1s = arow[kk + 1];
+            let a2s = arow[kk + 2];
+            let a3s = arow[kk + 3];
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            let a0 = vdupq_n_f32(a0s);
+            let a1 = vdupq_n_f32(a1s);
+            let a2 = vdupq_n_f32(a2s);
+            let a3 = vdupq_n_f32(a3s);
+            let mut j = 0;
+            while j < jv {
+                // same association as scalar: ((a0*b0 + a1*b1) + a2*b2) + a3*b3
+                let mut s = vmulq_f32(a0, vld1q_f32(b0.as_ptr().add(j)));
+                s = vaddq_f32(s, vmulq_f32(a1, vld1q_f32(b1.as_ptr().add(j))));
+                s = vaddq_f32(s, vmulq_f32(a2, vld1q_f32(b2.as_ptr().add(j))));
+                s = vaddq_f32(s, vmulq_f32(a3, vld1q_f32(b3.as_ptr().add(j))));
+                let o = vaddq_f32(vld1q_f32(orow.as_ptr().add(j)), s);
+                vst1q_f32(orow.as_mut_ptr().add(j), o);
+                j += 4;
+            }
+            for j in jv..n {
+                orow[j] += a0s * b0[j] + a1s * b1[j] + a2s * b2[j] + a3s * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let avs = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let av = vdupq_n_f32(avs);
+            let mut j = 0;
+            while j < jv {
+                let o = vaddq_f32(
+                    vld1q_f32(orow.as_ptr().add(j)),
+                    vmulq_f32(av, vld1q_f32(brow.as_ptr().add(j))),
+                );
+                vst1q_f32(orow.as_mut_ptr().add(j), o);
+                j += 4;
+            }
+            for j in jv..n {
+                orow[j] += avs * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn expand_bfp(fields: &[u32], blk_scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(fields.len(), out.len());
+    let nv = fields.len() / 4 * 4;
+    let scale = vdupq_n_f32(blk_scale);
+    let one = vdupq_n_u32(1);
+    let mut i = 0;
+    while i < nv {
+        let f = vld1q_u32(fields.as_ptr().add(i));
+        let mm = vshrq_n_u32::<1>(f);
+        let v = vmulq_f32(vcvtq_f32_u32(mm), scale);
+        // negate by sign-bit XOR: identical to scalar `-v`, including -0.0
+        let sgn = vshlq_n_u32::<31>(vandq_u32(f, one));
+        let r = vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), sgn));
+        vst1q_f32(out.as_mut_ptr().add(i), r);
+        i += 4;
+    }
+    scalar::expand_bfp(&fields[nv..], blk_scale, &mut out[nv..]);
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn expand_fixed(fields: &[u32], w: u32, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(fields.len(), out.len());
+    let nv = fields.len() / 4 * 4;
+    let sv = vdupq_n_f32(scale);
+    let sh = 32 - w as i32;
+    // SSHL: positive shift = left, negative = truncating arithmetic right
+    let lsh = vdupq_n_s32(sh);
+    let rsh = vdupq_n_s32(-sh);
+    let mut i = 0;
+    while i < nv {
+        let f = vreinterpretq_s32_u32(vld1q_u32(fields.as_ptr().add(i)));
+        let c = vshlq_s32(vshlq_s32(f, lsh), rsh);
+        let v = vmulq_f32(vcvtq_f32_s32(c), sv);
+        vst1q_f32(out.as_mut_ptr().add(i), v);
+        i += 4;
+    }
+    scalar::expand_fixed(&fields[nv..], w, scale, &mut out[nv..]);
+}

@@ -1,0 +1,120 @@
+//! Portable reference implementations of the kernel primitives.
+//!
+//! This is the bit-identity oracle: the SIMD backends (`avx2`, `neon`) must
+//! reproduce these results exactly, which is why `dot` is written in the
+//! lane-structured form a vector register computes naturally (8 independent
+//! accumulators, fixed reduction tree) rather than as a single serial chain.
+
+use std::ops::Range;
+
+/// Lane count of the shared dot-product accumulation order (one AVX2
+/// register, or a NEON register pair).
+pub(crate) const LANES: usize = 8;
+
+#[inline]
+fn reduce8(lane: &[f32; LANES]) -> f32 {
+    let q0 = lane[0] + lane[4];
+    let q1 = lane[1] + lane[5];
+    let q2 = lane[2] + lane[6];
+    let q3 = lane[3] + lane[7];
+    (q0 + q2) + (q1 + q3)
+}
+
+/// See `kernels::dot` for the contract this implementation defines.
+#[inline]
+pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let chunks = x.len() / LANES;
+    let mut lane = [0.0f32; LANES];
+    for c in 0..chunks {
+        let i = c * LANES;
+        for l in 0..LANES {
+            lane[l] += x[i + l] * y[i + l];
+        }
+    }
+    let mut s = reduce8(&lane);
+    for i in chunks * LANES..x.len() {
+        s += x[i] * y[i];
+    }
+    s
+}
+
+/// See `kernels::gemm_bt_rows`: one [`dot`] per output element.
+pub(crate) fn gemm_bt_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(arow, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// See `kernels::gemm_rows`: i-k-j broadcast order, k unrolled by 4, each
+/// output column updated elementwise (no cross-column reduction).
+pub(crate) fn gemm_rows(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: Range<usize>,
+    k: usize,
+    n: usize,
+) {
+    let row0 = rows.start;
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
+        let mut kk = 0;
+        while kk + 4 <= k {
+            let a0 = arow[kk];
+            let a1 = arow[kk + 1];
+            let a2 = arow[kk + 2];
+            let a3 = arow[kk + 3];
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
+            for j in 0..n {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        while kk < k {
+            let av = arow[kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+            kk += 1;
+        }
+    }
+}
+
+/// See `kernels::expand_bfp`: field = `(mantissa << 1) | sign`.
+#[inline]
+pub(crate) fn expand_bfp(fields: &[u32], blk_scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(fields.len(), out.len());
+    for (&f, x) in fields.iter().zip(out.iter_mut()) {
+        let v = (f >> 1) as f32 * blk_scale;
+        *x = if f & 1 == 1 { -v } else { v };
+    }
+}
+
+/// See `kernels::expand_fixed`: raw `w`-bit two's-complement fields.
+#[inline]
+pub(crate) fn expand_fixed(fields: &[u32], w: u32, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(fields.len(), out.len());
+    let shift = 32 - w;
+    for (&f, x) in fields.iter().zip(out.iter_mut()) {
+        let c = ((f << shift) as i32) >> shift;
+        *x = c as f32 * scale;
+    }
+}

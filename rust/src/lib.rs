@@ -10,6 +10,8 @@
 //! - [`model`] / [`data`] / [`train`]: the LLM substrate the formats are
 //!   evaluated on (Algorithm 2, WikiText-style LM eval, downstream tasks,
 //!   fine-tuning for Table 8).
+//! - [`kernels`]: runtime-dispatched SIMD microkernels (AVX2/NEON with a
+//!   scalar reference, all bit-identical) under every GEMM and block decode.
 //! - [`baselines`]: LLM.int8(), SmoothQuant(-c), GPTQ re-implementations.
 //! - [`search`]: the TPE mixed-precision search (§3.3, §4.4).
 //! - [`runtime`] / [`coordinator`]: PJRT execution of AOT-compiled JAX
@@ -41,6 +43,7 @@ pub mod coordinator;
 pub mod data;
 pub mod exp;
 pub mod density;
+pub mod kernels;
 pub mod model;
 pub mod profile;
 pub mod quant;

@@ -30,6 +30,8 @@
 //!   bench-snapshot   fail if committed BENCH_*.json snapshots drifted
 //!                    out of schema-sync with freshly produced ones
 //!   artifacts        list AOT artifacts visible to the runtime
+//!   isa              print detected/active/supported kernel ISA backends
+//!                    (BBQ_ISA=scalar|avx2|neon overrides detection)
 //!
 //! Common options: `--model <preset>` `--format <name>` `--seq N` `--threads N`
 
@@ -179,6 +181,19 @@ fn main() {
                 println!("{name}: kind={} fmt={} seq={}", m.kind, m.fmt, m.seq);
             }
         }
+        "isa" => {
+            use bbq::kernels;
+            let forced = std::env::var("BBQ_ISA")
+                .ok()
+                .filter(|v| !v.trim().is_empty())
+                .map(|v| format!(" (forced by BBQ_ISA={})", v.trim()))
+                .unwrap_or_default();
+            let supported = kernels::supported_backends();
+            let names: Vec<&str> = supported.iter().map(|b| b.name()).collect();
+            println!("detected:  {}", kernels::detected().name());
+            println!("active:    {}{forced}", kernels::active().name());
+            println!("supported: {}", names.join(" "));
+        }
         "" | "help" | "--help" => {
             println!("{HELP}");
         }
@@ -190,7 +205,7 @@ fn main() {
 }
 
 const HELP: &str = "bbq — block-based quantisation lab (EMNLP 2023 reproduction)
-usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|serve|serve-bench|bench-report|bench-snapshot|artifacts> [--opts]
+usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|serve|serve-bench|bench-report|bench-snapshot|artifacts|isa> [--opts]
 see rust/src/main.rs header for the option list";
 
 fn cmd_quantize(args: &Args) {
@@ -350,9 +365,10 @@ fn serve_listen(addr: &str, model: Model, name: &str, cfg: ServerConfig, args: &
         HttpServer::bind(addr, router.handle(), HttpConfig::default()).expect("bind listen address");
     shutdown_signal::install();
     println!(
-        "listening on http://{} (model {name}; POST /v1/generate, GET /v1/metrics, GET /healthz; \
-         SIGTERM/SIGINT drains)",
-        server.local_addr()
+        "listening on http://{} (model {name}; isa {}; POST /v1/generate, GET /v1/metrics, \
+         GET /healthz; SIGTERM/SIGINT drains)",
+        server.local_addr(),
+        bbq::kernels::active().name(),
     );
     let handle = engine.handle();
     let interval = Duration::from_millis(args.u64_or("metrics-interval-ms", 2000).max(100));

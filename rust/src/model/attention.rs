@@ -20,7 +20,7 @@
 //! which path (or thread) computes them.
 
 use crate::quant::{fake_quant_buffer, GemmQuant};
-use crate::tensor::matmul::{gemm_bt_rows, gemm_rows};
+use crate::kernels::{gemm_bt_rows, gemm_rows};
 use crate::tensor::Tensor;
 
 /// MAC threshold below which parallel attention stays on the caller's

@@ -25,6 +25,11 @@ pub enum PackedWeight {
 
 impl PackedWeight {
     /// `act_q [m,k] @ selfᵀ` — `act_q` is already activation-quantised.
+    ///
+    /// Shape regime: splits on m like the underlying dispatch — m ≥ 4 takes
+    /// the column-panel prefill kernel, m < 4 (m == 1 decode) the dot
+    /// kernel. Use [`Self::matmul_bt_rowwise`] when per-row bit-identity
+    /// across batch sizes is required instead.
     pub fn matmul_bt(&self, act_q: &Tensor) -> Tensor {
         match self {
             PackedWeight::Dense(t) => matmul_bt(act_q, t),
@@ -37,6 +42,8 @@ impl PackedWeight {
     /// once per call and every output row accumulating in the order the
     /// m == 1 decode path uses — so a batch-of-N step is bit-identical to N
     /// sequential single-row steps.
+    ///
+    /// Shape regime: row-wise batched decode, any m.
     pub fn matmul_bt_rowwise(&self, act_q: &Tensor) -> Tensor {
         match self {
             PackedWeight::Dense(t) => matmul_bt_rowwise(act_q, t),

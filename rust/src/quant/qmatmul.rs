@@ -11,7 +11,8 @@
 //!    block-row *inside* the GEMM, so resident weight memory is the packed
 //!    payload (~5× smaller for BFP6) instead of dequantised f32. Bit-exact
 //!    with path 1 because the streamed panels run through the very same
-//!    `gemm_bt_rows`/`dot` kernels.
+//!    [`crate::kernels`] GEMM primitives (`gemm_bt_rows`/`dot`), whatever
+//!    SIMD backend is active.
 //! 3. **Block-domain path** (`bfp_matmul_blocked`): the ASIC datapath of
 //!    Eq. 4 — integer mantissa multiply-accumulate within each block pair
 //!    plus a single shared-exponent add, no per-element shifting. Exact
@@ -21,9 +22,8 @@
 use super::block::block_ranges;
 use super::config::{GemmQuant, QFormat};
 use super::qtensor::QTensor;
-use crate::tensor::matmul::{
-    available_threads, dot, gemm_bt_rows, gemm_rows, matmul, matmul_bt, PAR_THRESHOLD,
-};
+use crate::kernels::{dot, gemm_bt_rows, gemm_rows};
+use crate::tensor::matmul::{available_threads, matmul, matmul_bt, PAR_THRESHOLD};
 use crate::tensor::Tensor;
 
 /// `act [m,k] @ weight [k,n]` with both operands fake-quantised.
@@ -50,16 +50,6 @@ pub fn qmatmul_pret(act: &Tensor, weight_t_quantised: &Tensor, act_fmt: QFormat)
     matmul_bt(&qa, weight_t_quantised)
 }
 
-/// Activation-side in-place variant to avoid the clone in the hot loop.
-pub fn qmatmul_pret_inplace(
-    act: &mut Tensor,
-    weight_t_quantised: &Tensor,
-    act_fmt: QFormat,
-) -> Tensor {
-    super::fake_quant_in_place(act, act_fmt);
-    matmul_bt(act, weight_t_quantised)
-}
-
 /// `act [m,k] @ packed weight [n,k]ᵀ` — the packed-weight serving path.
 /// The activation is fake-quantised as usual; the weight is dequantised
 /// block-row by block-row from its packed payload inside the GEMM.
@@ -67,12 +57,6 @@ pub fn qmatmul_pret_inplace(
 pub fn qmatmul_packed(act: &Tensor, weight: &QTensor, act_fmt: QFormat) -> Tensor {
     let qa = super::fake_quant(act, act_fmt);
     matmul_packed_bt(&qa, weight)
-}
-
-/// Activation-side in-place variant (mirrors [`qmatmul_pret_inplace`]).
-pub fn qmatmul_packed_inplace(act: &mut Tensor, weight: &QTensor, act_fmt: QFormat) -> Tensor {
-    super::fake_quant_in_place(act, act_fmt);
-    matmul_packed_bt(act, weight)
 }
 
 /// `a [m,k] @ dequant(qw) [n,k]ᵀ` with block dequantisation fused into the
@@ -84,8 +68,8 @@ pub fn qmatmul_packed_inplace(act: &mut Tensor, weight: &QTensor, act_fmt: QForm
 ///   [`matmul_packed_bt_rowwise`], whose 4-row dequant panels stream
 ///   through the same `gemm_bt_rows` kernel the dense path uses, so only
 ///   one small scratch panel is ever resident.
-/// * **prefill (m ≥ 4)** — compute-bound: delegates to
-///   [`matmul_packed_bt_bcast`], which streams column panels of the packed
+/// * **prefill (m ≥ 4)** — compute-bound: delegates to the internal
+///   `matmul_packed_bt_bcast`, which streams column panels of the packed
 ///   weight through the broadcast kernel — each weight row decoded exactly
 ///   once per call, into a bounded panel scratch, never into a transient
 ///   dense weight matrix.
@@ -118,7 +102,10 @@ const BCAST_JBLK: usize = 64;
 /// on the shared worker pool above the `PAR_THRESHOLD` MAC count;
 /// per-element accumulation order is independent of the column partition,
 /// so the thread count never changes the bits.
-pub fn matmul_packed_bt_bcast(a: &Tensor, qw: &QTensor) -> Tensor {
+///
+/// pub(crate): callers route through [`matmul_packed_bt`], the one public
+/// dispatch point — the regime split is policy, not API.
+pub(crate) fn matmul_packed_bt_bcast(a: &Tensor, qw: &QTensor) -> Tensor {
     let (m, k) = a.dims2();
     assert_eq!(qw.shape.len(), 2, "packed weight must be 2-D, got {:?}", qw.shape);
     let (n, k2) = (qw.shape[0], qw.shape[1]);
@@ -197,8 +184,9 @@ fn packed_bcast_columns(
 
 /// `out[i][j - j0] = dot(a_i, dequant(qw row j))` for `j ∈ [j0, j1)`,
 /// dequantising one 4-row panel at a time into a reusable scratch buffer.
-/// `j0` must be 4-aligned so the panel grouping matches `gemm_bt_rows`
-/// over the full column range (tail columns use the same `dot`).
+/// Every output element is one `kernels::dot` against a decoded weight row,
+/// so any column partition produces identical bits — callers may chunk
+/// `[j0, j1)` freely (panel grouping only batches the dequantisation).
 fn packed_bt_panel(
     a: &[f32],
     m: usize,
@@ -208,7 +196,6 @@ fn packed_bt_panel(
     j1: usize,
     out: &mut [f32],
 ) {
-    debug_assert_eq!(j0 % 4, 0);
     let w = j1 - j0;
     debug_assert_eq!(out.len(), m * w);
     let mut panel = vec![0.0f32; 4 * k];
@@ -252,13 +239,12 @@ pub fn matmul_packed_bt_rowwise(a: &Tensor, qw: &QTensor) -> Tensor {
     let mut out = vec![0.0f32; m * n];
     let threads = available_threads();
     if m * n * k >= PAR_THRESHOLD && threads > 1 && n >= 8 {
-        // column-partitioned like the m == 1 lane; 4-aligned chunk starts
-        // keep the panel grouping (and the bits) identical to one full-width
-        // call. Each thread fills a private [m, chunk] buffer that is
-        // stitched back afterwards — a row-major chunk of the output is not
-        // contiguous for m > 1.
+        // column-partitioned like the m == 1 lane; dot-per-output semantics
+        // make the bits independent of where the chunks split. Each thread
+        // fills a private [m, chunk] buffer that is stitched back afterwards
+        // — a row-major chunk of the output is not contiguous for m > 1.
         let nt = threads.min(n.div_ceil(4));
-        let per = n.div_ceil(nt).div_ceil(4) * 4;
+        let per = n.div_ceil(nt);
         let mut chunks: Vec<(usize, usize, Vec<f32>)> = Vec::new();
         let mut j0 = 0usize;
         while j0 < n {
@@ -507,19 +493,6 @@ mod tests {
         let packed = crate::quant::qtensor::encode(&w, fmt);
         let want = matmul_bt(&a, &crate::quant::qtensor::decode(&packed));
         let got = matmul_packed_bt_bcast(&a, &packed);
-        assert_eq!(want.data, got.data);
-    }
-
-    #[test]
-    fn packed_inplace_matches_packed() {
-        let mut rng = crate::util::rng::Pcg32::new(5);
-        let fmt = presets::bfp_w(6);
-        let a = Tensor::new(&[2, 33], llmish_values(&mut rng, 66, 1.0, 0.05));
-        let w = Tensor::new(&[7, 33], llmish_values(&mut rng, 231, 0.3, 0.0));
-        let packed = crate::quant::qtensor::encode(&w, fmt);
-        let want = qmatmul_packed(&a, &packed, fmt);
-        let mut a2 = a.clone();
-        let got = qmatmul_packed_inplace(&mut a2, &packed, fmt);
         assert_eq!(want.data, got.data);
     }
 

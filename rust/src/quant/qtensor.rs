@@ -8,6 +8,7 @@
 use super::block::{block_absmax, block_ranges, blocks_per_row};
 use super::config::QFormat;
 use super::minifloat::{exp2i, ilogb, round_dmf, round_minifloat};
+use crate::kernels;
 use crate::tensor::Tensor;
 
 /// Bit-level writer. Like [`BitReader::read`], `push` places a whole field
@@ -294,9 +295,36 @@ pub fn decode(q: &QTensor) -> Tensor {
     Tensor::new(&q.shape, out)
 }
 
+/// Staging chunk for SIMD field expansion: the bit-reader is inherently
+/// serial, so `expand_fields` pulls raw fields into a stack slab and hands
+/// each slab to a vectorised `kernels::expand_*` in one call.
+const FIELD_CHUNK: usize = 64;
+
+/// Read `out.len()` fields of `bits` bits each and expand them slab-wise.
+fn expand_fields(
+    r: &mut BitReader,
+    bits: u32,
+    out: &mut [f32],
+    mut expand: impl FnMut(&[u32], &mut [f32]),
+) {
+    let mut fields = [0u32; FIELD_CHUNK];
+    let mut i = 0;
+    while i < out.len() {
+        let len = (out.len() - i).min(FIELD_CHUNK);
+        for f in fields[..len].iter_mut() {
+            *f = r.read(bits);
+        }
+        expand(&fields[..len], &mut out[i..i + len]);
+        i += len;
+    }
+}
+
 /// Decode one packed row; `r` must be positioned at the row start. Shared
 /// by [`decode`] and [`QTensor::decode_row_into`] so the streamed and
-/// whole-tensor paths cannot diverge.
+/// whole-tensor paths cannot diverge. The Fixed/FixedRow/Bfp arms expand
+/// their packed fields through the dispatched [`crate::kernels`] expand
+/// primitives (bit-identical across backends); the branchy minifloat-family
+/// decode stays scalar.
 fn decode_row(r: &mut BitReader, fmt: QFormat, scale: f32, out: &mut [f32]) {
     let cols = out.len();
     match fmt {
@@ -306,22 +334,11 @@ fn decode_row(r: &mut BitReader, fmt: QFormat, scale: f32, out: &mut [f32]) {
             }
         }
         QFormat::Fixed { w } => {
-            for x in out.iter_mut() {
-                let raw = r.read(w);
-                // sign-extend
-                let shift = 32 - w;
-                let c = ((raw << shift) as i32) >> shift;
-                *x = c as f32 * scale;
-            }
+            expand_fields(r, w, out, |f, o| kernels::expand_fixed(f, w, scale, o));
         }
         QFormat::FixedRow { w } => {
             let s = f32::from_bits(r.read(32));
-            for x in out.iter_mut() {
-                let raw = r.read(w);
-                let shift = 32 - w;
-                let c = ((raw << shift) as i32) >> shift;
-                *x = c as f32 * s;
-            }
+            expand_fields(r, w, out, |f, o| kernels::expand_fixed(f, w, s, o));
         }
         QFormat::MiniFloat { e, m } | QFormat::Dmf { e, m } => {
             let bias = (1i32 << (e - 1)) - 1;
@@ -336,14 +353,15 @@ fn decode_row(r: &mut BitReader, fmt: QFormat, scale: f32, out: &mut [f32]) {
         QFormat::Bfp { e, m, n } => {
             let bias = (1i32 << (e - 1)) - 1;
             for (s0, e0) in block_ranges(cols, n as usize) {
+                // decode the block's shared exponent once ...
                 let sh_e = r.read(e) as i32 - bias;
                 let blk_scale = exp2i(sh_e - m as i32 + 1);
-                for x in out[s0..e0].iter_mut() {
-                    let s = r.read(1);
-                    let mm = r.read(m);
-                    let v = mm as f32 * blk_scale;
-                    *x = if s == 1 { -v } else { v };
-                }
+                // ... then vector-expand its mantissas: one combined
+                // (1 + m)-bit read per element (sign is pushed first, so it
+                // lands in the LSB) and a dispatched expand over the block
+                expand_fields(r, 1 + m, &mut out[s0..e0], |f, o| {
+                    kernels::expand_bfp(f, blk_scale, o)
+                });
             }
         }
         QFormat::Bm { e, m, b, n } => {

@@ -1,11 +1,20 @@
 //! Blocked GEMM — the f32 hot path under every quantised GEMM.
 //!
-//! `matmul(a, b)` computes `a @ b` for 2-D tensors with an i-k-j loop order
-//! (unit-stride inner loop over B's rows), 4-wide k unrolling and cache
-//! blocking. Multi-threaded for large problems via the shared persistent
-//! worker pool in [`crate::runtime::pool`] (no rayon in this environment).
+//! The inner loops live in [`crate::kernels`], which dispatches at runtime
+//! to the best SIMD backend (AVX2/NEON, scalar reference) — all backends
+//! bit-identical, so everything asserted about these entry points holds on
+//! every ISA. This module owns the shape policy: which kernel a given
+//! (m, k, n) routes to, and when the persistent worker pool
+//! ([`crate::runtime::pool`]) splits rows across threads.
+//!
+//! Public entry points and their shape regimes:
+//! - [`matmul`] — general `A @ B`, column-panel friendly (prefill).
+//! - [`matmul_bt`] — `A @ Bᵀ`, switching regime on m (prefill vs decode).
+//! - [`matmul_bt_rowwise`] — `A @ Bᵀ` with per-row order pinned to the
+//!   m == 1 decode path (row-wise batched decode).
 
 use super::Tensor;
+use crate::kernels::{gemm_bt_rows, gemm_rows};
 pub(crate) use crate::runtime::pool::available_threads;
 use crate::runtime::pool::par_rows;
 
@@ -13,6 +22,9 @@ use crate::runtime::pool::par_rows;
 pub(crate) const PAR_THRESHOLD: usize = 1 << 21;
 
 /// C = A @ B, A: [m,k], B: [k,n].
+///
+/// Shape regime: the column-panel prefill kernel — row-major broadcast
+/// accumulation over B rows, threaded across A rows for large problems.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (k2, n) = b.dims2();
@@ -31,11 +43,10 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
 
 /// C = A @ B^T, A: [m,k], B: [n,k] (used for QK^T and weight-transposed GEMMs).
 ///
-/// For multi-row A this transposes B once (O(nk)) and reuses the fast
-/// broadcast kernel — ~3× faster than dot-product accumulation, which is
-/// loop-carried-dependency bound (§Perf log in EXPERIMENTS.md). Single-row
-/// A (incremental decode) keeps the dot path: the transpose would not be
-/// amortised.
+/// Shape regime split: m ≥ 4 (column-panel prefill) transposes B once
+/// (O(nk)) and reuses the broadcast kernel, which amortises memory traffic
+/// across rows; m < 4 (decode, typically m == 1) keeps the dot-product
+/// path where the transpose would not be amortised.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (_, k2) = b.dims2();
@@ -47,11 +58,13 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
 }
 
 /// C = A @ B^T like [`matmul_bt`], but every output row accumulates in
-/// exactly the order the m == 1 path uses (the 1×4 panel kernel of
-/// `gemm_bt_rows`), for *any* m. The batched decode engine uses this so a
-/// batch-of-N decode step is bit-identical, row for row, to N sequential
-/// single-row steps — the broadcast kernel `matmul_bt` switches to at
-/// m ≥ 4 sums in a different order and would break that guarantee.
+/// exactly the order the m == 1 path uses (one [`crate::kernels::dot`] per
+/// output element), for *any* m.
+///
+/// Shape regime: row-wise batched decode. The batched decode engine uses
+/// this so a batch-of-N decode step is bit-identical, row for row, to N
+/// sequential single-row steps — the broadcast kernel `matmul_bt` switches
+/// to at m ≥ 4 sums in a different order and would break that guarantee.
 pub fn matmul_bt_rowwise(a: &Tensor, b: &Tensor) -> Tensor {
     let (m, k) = a.dims2();
     let (n, k2) = b.dims2();
@@ -67,112 +80,6 @@ pub fn matmul_bt_rowwise(a: &Tensor, b: &Tensor) -> Tensor {
         gemm_bt_rows(&a.data, &b.data, &mut out, 0..m, k, n);
     }
     Tensor::new(&[m, n], out)
-}
-
-/// Row-major inner GEMM over a row range. `out` addresses rows relative to
-/// `rows.start`, and must be zeroed by the caller (the kernel accumulates).
-/// pub(crate): the fused packed prefill GEMM in `quant::qmatmul` and the
-/// shared attention body in `model::attention` stream panels through this
-/// exact kernel so their summation order — and therefore their bits —
-/// match the dense broadcast path.
-pub(crate) fn gemm_rows(
-    a: &[f32],
-    b: &[f32],
-    out: &mut [f32],
-    rows: std::ops::Range<usize>,
-    k: usize,
-    n: usize,
-) {
-    let row0 = rows.start;
-    for i in rows {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
-        // k unrolled by 4: accumulate b rows scaled by a[i][k..k+4]
-        let mut kk = 0;
-        while kk + 4 <= k {
-            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
-            let b0 = &b[kk * n..(kk + 1) * n];
-            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
-            let b2 = &b[(kk + 2) * n..(kk + 3) * n];
-            let b3 = &b[(kk + 3) * n..(kk + 4) * n];
-            for j in 0..n {
-                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-            }
-            kk += 4;
-        }
-        while kk < k {
-            let av = arow[kk];
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-            kk += 1;
-        }
-    }
-}
-
-/// out[i][j] = dot(a_row_i, b_row_j); both rows contiguous.
-/// 1×4 panel micro-kernel: four B rows share each A load, which roughly
-/// triples throughput over a scalar dot loop (§Perf, EXPERIMENTS.md).
-/// pub(crate): the fused packed-weight GEMM in `quant::qmatmul` streams
-/// dequantised row panels through this exact kernel so its summation
-/// order — and therefore its bits — match the dense path.
-pub(crate) fn gemm_bt_rows(
-    a: &[f32],
-    b: &[f32],
-    out: &mut [f32],
-    rows: std::ops::Range<usize>,
-    k: usize,
-    n: usize,
-) {
-    let row0 = rows.start;
-    for i in rows {
-        let arow = &a[i * k..(i + 1) * k];
-        let orow = &mut out[(i - row0) * n..(i - row0 + 1) * n];
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &b[j * k..(j + 1) * k];
-            let b1 = &b[(j + 1) * k..(j + 2) * k];
-            let b2 = &b[(j + 2) * k..(j + 3) * k];
-            let b3 = &b[(j + 3) * k..(j + 4) * k];
-            let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-            for (idx, &av) in arow.iter().enumerate() {
-                s0 += av * b0[idx];
-                s1 += av * b1[idx];
-                s2 += av * b2[idx];
-                s3 += av * b3[idx];
-            }
-            orow[j] = s0;
-            orow[j + 1] = s1;
-            orow[j + 2] = s2;
-            orow[j + 3] = s3;
-            j += 4;
-        }
-        while j < n {
-            orow[j] = dot(arow, &b[j * k..(j + 1) * k]);
-            j += 1;
-        }
-    }
-}
-
-/// 4-accumulator dot product (auto-vectorises well).
-#[inline]
-pub fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let mut acc = [0.0f32; 4];
-    let chunks = x.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += x[i] * y[i];
-        acc[1] += x[i + 1] * y[i + 1];
-        acc[2] += x[i + 2] * y[i + 2];
-        acc[3] += x[i + 3] * y[i + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..x.len() {
-        s += x[i] * y[i];
-    }
-    s
 }
 
 /// Naive reference for testing the optimized paths.
@@ -264,10 +171,5 @@ mod tests {
             }
             Ok(())
         });
-    }
-
-    #[test]
-    fn dot_basic() {
-        assert_eq!(dot(&[1., 2., 3., 4., 5.], &[1., 1., 1., 1., 1.]), 15.0);
     }
 }

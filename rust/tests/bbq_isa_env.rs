@@ -1,0 +1,17 @@
+//! `BBQ_ISA` startup override. The env var is read exactly once, when the
+//! first kernels call initialises the dispatch, so this check lives in its
+//! own integration binary holding exactly one test — nothing else can
+//! touch [`bbq::kernels::active`] before the variable is set. (The CI
+//! build-test matrix also runs the whole suite under `BBQ_ISA=scalar`,
+//! which exercises the override across every test binary.)
+
+use bbq::kernels::{self, Backend};
+
+#[test]
+fn bbq_isa_env_forces_scalar_at_startup() {
+    std::env::set_var("BBQ_ISA", "scalar");
+    assert_eq!(kernels::active(), Backend::Scalar);
+    // detection reports the host's best backend regardless of the override
+    assert!(kernels::supported(kernels::detected()));
+    assert!(kernels::supported_backends().contains(&kernels::detected()));
+}

@@ -1,0 +1,145 @@
+//! SIMD bit-identity acceptance: every [`bbq::kernels`] backend the host
+//! supports must produce *bitwise* identical results to the scalar
+//! reference, for every preset quantisation format, at every dispatched
+//! call shape — the m == 1 decode GEMM, the row-wise batched GEMM, and
+//! the m ≥ 4 column-panel prefill GEMM — including ragged k/n tails and
+//! panels that straddle the 16-element quantisation blocks.
+//!
+//! Backends are forced both ways in-process through
+//! [`bbq::kernels::with_isa`] (scalar while a SIMD backend is detected,
+//! and vice versa); the threaded test proves worker-pool threads observe
+//! the forced backend too. On a scalar-only host every comparison
+//! degenerates to scalar-vs-scalar and still passes — the suite never
+//! goes weaker than the reference, it just loses the cross-ISA edge.
+
+use bbq::kernels::{self, Backend};
+use bbq::quant::config::{presets, QFormat};
+use bbq::quant::qmatmul::{matmul_packed_bt, matmul_packed_bt_rowwise, qmatmul_packed};
+use bbq::quant::qtensor::{decode, encode};
+use bbq::tensor::Tensor;
+use bbq::util::rng::Pcg32;
+
+/// Every format the paper's tables exercise, plus the per-row activation
+/// format and the f32 pass-through (32-bit fields through the same
+/// packed-decode path).
+fn formats() -> Vec<(String, QFormat)> {
+    let mut v: Vec<(String, QFormat)> = presets::table3_formats()
+        .into_iter()
+        .map(|(n, f)| (n.to_string(), f))
+        .collect();
+    v.push(("fixedrow8".into(), QFormat::FixedRow { w: 8 }));
+    v.push(("fp32".into(), QFormat::Fp32));
+    v
+}
+
+/// The non-scalar backends this host can run (empty on a scalar-only
+/// host, in which case each test body still runs once against scalar).
+fn simd_backends() -> Vec<Backend> {
+    kernels::supported_backends()
+        .into_iter()
+        .filter(|&b| b != Backend::Scalar)
+        .collect()
+}
+
+fn assert_bits_eq(got: &Tensor, want: &Tensor, ctx: &str) {
+    assert_eq!(got.shape, want.shape, "{ctx}: shape");
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{ctx}: element {i} diverges ({g:?} vs {w:?})"
+        );
+    }
+}
+
+/// The packed weight GEMM at all three dispatched shapes, for every
+/// preset format, with ragged k (straddling the 16-wide blocks) and
+/// ragged n (exercising the SIMD j/column tails).
+#[test]
+fn packed_gemm_bitwise_identical_across_backends_all_formats() {
+    // (m, k, n): m == 1 → decode dot path; m == 3 → row-wise batched;
+    // m == 8 → column-panel prefill. k = 21/33/37/48 straddle the 16-wide
+    // blocks; n = 5/17/19/33 leave j-tails for every SIMD width.
+    let shapes = [(1usize, 21usize, 5usize), (1, 37, 33), (3, 48, 17), (8, 33, 19)];
+    let mut rng = Pcg32::new(42);
+    for (name, fmt) in formats() {
+        for &(m, k, n) in &shapes {
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let w = encode(&Tensor::randn(&[n, k], 0.3, &mut rng), fmt);
+            let reference = kernels::with_isa(Backend::Scalar, || {
+                (matmul_packed_bt(&a, &w), matmul_packed_bt_rowwise(&a, &w))
+            });
+            for b in simd_backends() {
+                let got = kernels::with_isa(b, || {
+                    (matmul_packed_bt(&a, &w), matmul_packed_bt_rowwise(&a, &w))
+                });
+                let ctx = format!("{name} {m}x{k}x{n} {}", b.name());
+                assert_bits_eq(&got.0, &reference.0, &format!("{ctx} packed_bt"));
+                assert_bits_eq(&got.1, &reference.1, &format!("{ctx} rowwise"));
+            }
+        }
+    }
+}
+
+/// The full quantised-GEMM entry point (activations fake-quantised in the
+/// same format as the weights) stays bitwise stable across backends.
+#[test]
+fn qmatmul_packed_bitwise_identical_across_backends() {
+    let mut rng = Pcg32::new(43);
+    for (name, fmt) in formats() {
+        let a = Tensor::randn(&[2, 21], 1.0, &mut rng);
+        let w = encode(&Tensor::randn(&[9, 21], 0.3, &mut rng), fmt);
+        let reference = kernels::with_isa(Backend::Scalar, || qmatmul_packed(&a, &w, fmt));
+        for b in simd_backends() {
+            let got = kernels::with_isa(b, || qmatmul_packed(&a, &w, fmt));
+            assert_bits_eq(&got, &reference, &format!("qmatmul_packed {name} {}", b.name()));
+        }
+    }
+}
+
+/// Raw block decode (the expand microkernels with no GEMM on top):
+/// whole-tensor decode and single-row decode, block-straddling lengths.
+#[test]
+fn block_decode_bitwise_identical_across_backends() {
+    let mut rng = Pcg32::new(44);
+    for (name, fmt) in formats() {
+        // 53 = 3 full 16-wide blocks + a 5-element tail
+        let w = encode(&Tensor::randn(&[5, 53], 0.5, &mut rng), fmt);
+        let reference = kernels::with_isa(Backend::Scalar, || decode(&w));
+        for b in simd_backends() {
+            let got = kernels::with_isa(b, || decode(&w));
+            assert_bits_eq(&got, &reference, &format!("decode {name} {}", b.name()));
+            let mut row = vec![0f32; 53];
+            kernels::with_isa(b, || w.decode_row_into(2, &mut row));
+            for (i, (g, r)) in row.iter().zip(reference.row(2)).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    r.to_bits(),
+                    "decode_row_into {name} {} element {i}",
+                    b.name()
+                );
+            }
+        }
+    }
+}
+
+/// A shape big enough to cross the parallel threshold: the worker-pool
+/// threads must observe the forced backend (the force is process-global,
+/// not thread-local) and the row partition must not change a single bit.
+#[test]
+fn threaded_gemm_observes_forced_backend_bitwise() {
+    let fmt = presets::bfp_w(6);
+    let mut rng = Pcg32::new(45);
+    let a = Tensor::randn(&[8, 320], 1.0, &mut rng);
+    let w = encode(&Tensor::randn(&[1024, 320], 0.3, &mut rng), fmt);
+    let reference = kernels::with_isa(Backend::Scalar, || {
+        (matmul_packed_bt(&a, &w), matmul_packed_bt_rowwise(&a, &w))
+    });
+    for b in simd_backends() {
+        let got = kernels::with_isa(b, || {
+            (matmul_packed_bt(&a, &w), matmul_packed_bt_rowwise(&a, &w))
+        });
+        assert_bits_eq(&got.0, &reference.0, &format!("threaded packed_bt {}", b.name()));
+        assert_bits_eq(&got.1, &reference.1, &format!("threaded rowwise {}", b.name()));
+    }
+}
