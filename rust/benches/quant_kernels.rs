@@ -17,8 +17,10 @@
 //! pre-refactor transient dense decode, plus forward tok/s), and the
 //! paged-KV section writes `BENCH_kv.json` (paged vs dense-equivalent
 //! decode, quantised-KV capacity multiplier, warm-vs-cold prefix-cached
-//! prefill) next to the manifest — CI uploads all four as bench
-//! artifacts. The SIMD section measures the runtime-dispatched
+//! prefill), and the plan-pipeline section writes `BENCH_plan.json`
+//! (search → artifact → serve bit-identity, distinct bit-width count,
+//! BFP4-plus-outlier-overlay perplexity vs plain BFP4, packed density)
+//! next to the manifest — CI uploads all five as bench artifacts. The SIMD section measures the runtime-dispatched
 //! microkernels against the forced-scalar reference at the three call
 //! shapes (m == 1 decode GEMM, m ≥ 4 prefill panel GEMM, raw block
 //! decode) and threads the ratios into BENCH_decode.json and
@@ -27,7 +29,9 @@
 //! submission within 10% of run_batched; fused prefill GEMM ≥ 1.0× of
 //! transient dense decode; SIMD ≥ 1.0× scalar at every shape when a SIMD
 //! backend is active; paged-f32 decode ≥ 0.90× dense-equivalent;
-//! quantised-KV capacity ≥ 2×; prefix-cached prefill ≥ 2× cold) are hard
+//! quantised-KV capacity ≥ 2×; prefix-cached prefill ≥ 2× cold; searched
+//! plan mixes ≥ 3 bit-widths and reloads bit-identically; BFP4 + outlier
+//! overlay beats plain BFP4 perplexity at ≥ 4× density) are hard
 //! failures instead of scrolled-past warnings.
 
 use bbq::coordinator::{run_batched, Engine, Metrics, Request, ServerConfig};
@@ -191,6 +195,7 @@ fn main() {
     bench_prefill_engine(quick, &mut gates);
     bench_forward_unified(quick, &mut gates, &simd);
     bench_kv(quick, &mut gates);
+    bench_plan(quick, &mut gates);
 
     if !gates.is_empty() {
         println!("\nbench gates below their acceptance bars:");
@@ -792,5 +797,131 @@ fn bench_kv(quick: bool, gates: &mut Vec<String>) {
     ]);
     let path = "BENCH_kv.json";
     std::fs::write(path, j.to_string() + "\n").expect("write BENCH_kv.json");
+    println!("  wrote {path}");
+}
+
+/// Mixed-precision plan pipeline: (1) a CI-sized TPE search emits a plan
+/// artifact; reloading it must reproduce the in-memory plan's forward
+/// bit-for-bit and mix ≥ 3 distinct weight bit-widths; (2) on a trained
+/// nano model, uniform BFP4 plus a 0.5% dense-and-sparse f32 outlier
+/// overlay must beat plain BFP4 perplexity while the packed weights stay
+/// ≥ 4× denser than f32 (overlay side tables counted). Writes
+/// BENCH_plan.json; under `--check` all three bars are hard failures.
+fn bench_plan(quick: bool, gates: &mut Vec<String>) {
+    use bbq::coordinator::experiment::get_or_train;
+    use bbq::data::corpus::test_stream;
+    use bbq::data::lm_eval::perplexity;
+    use bbq::data::tasks::{evaluate, generate, Task};
+    use bbq::data::vocab::Vocab;
+    use bbq::model::plan_file;
+    use bbq::search::objective::Objective;
+    use bbq::search::runner::{run_search, SearchConfig};
+    use bbq::search::space::SearchSpace;
+
+    println!("\n== mixed-precision plan pipeline (nano) ==");
+    let cfg = ModelConfig::preset("nano");
+    let params = Params::init(&cfg, 3);
+    let vocab = Vocab::build();
+    let task = Task::Lambada;
+    let exs = generate(task, &vocab, 555, if quick { 8 } else { 16 });
+    let fp32_acc = evaluate(&Model::new(params.clone(), QuantPlan::fp32()), task, &exs, 2).accuracy;
+    let space = SearchSpace::bfp_bits(&cfg, &[3, 4, 5, 6, 8]);
+    let sc = SearchConfig {
+        trials: if quick { 4 } else { 10 },
+        seq: 32,
+        threads: 2,
+        seed: 7,
+        objective: Objective::software(0.02),
+        ..Default::default()
+    };
+    let res = run_search(&params, space, task, &exs, fp32_acc, &sc);
+    let frac = 0.005f32;
+    let plan = res
+        .best_plan()
+        .expect("search produced a best trial")
+        .with_outliers(frac);
+    let mut widths: Vec<u32> = plan.per_site.values().map(|q| q.weight.word_bits()).collect();
+    widths.sort_unstable();
+    widths.dedup();
+    println!(
+        "  search: {} trials, {} sites, weight bit-widths {widths:?}",
+        res.history.len(),
+        plan.per_site.len()
+    );
+    if widths.len() < 3 {
+        println!("  WARNING: searched plan mixes fewer than 3 distinct bit-widths");
+        gates.push(format!(
+            "plan: {} distinct weight bit-widths < 3 ({widths:?})",
+            widths.len()
+        ));
+    }
+    // artifact round-trip must not perturb serving: save, reload against
+    // the model config, compare forwards bit-for-bit
+    let path = std::env::temp_dir().join("bbq_bench_plan.bbqp");
+    plan_file::save(&plan, &cfg, &path, &["emitted by cargo bench".to_string()])
+        .expect("save plan artifact");
+    let from_file = Model::from_plan_file(params.clone(), &path).expect("reload plan artifact");
+    let n_sites = plan.per_site.len();
+    let in_memory = Model::new(params, plan);
+    let toks = [3usize, 100, 7, 250, 9];
+    let bit_identical = from_file.forward(&toks, None).data == in_memory.forward(&toks, None).data;
+    println!("  artifact: reloaded plan forward bit-identical = {bit_identical}");
+    if !bit_identical {
+        gates.push("plan: file-loaded plan forward diverged from in-memory plan".to_string());
+    }
+    std::fs::remove_file(&path).ok();
+
+    // overlay quality on a *trained* model: exact top-|w| side table +
+    // finer residual blocks must beat plain BFP4 perplexity
+    let trained = get_or_train("nano", 600, true);
+    let seq = 48;
+    let chunks = if quick { 4 } else { 8 };
+    let stream = test_stream(&vocab, seq * chunks + seq);
+    let plain = Model::new(trained.clone(), QuantPlan::uniform(presets::bfp_w(4)));
+    let overlay = Model::new(trained, QuantPlan::uniform(presets::bfp_w(4)).with_outliers(frac));
+    let ppl_plain = perplexity(&plain, &stream, seq, chunks).perplexity;
+    let ppl_overlay = perplexity(&overlay, &stream, seq, chunks).perplexity;
+    println!(
+        "  ppl (trained nano, {} tokens): bfp4 {ppl_plain:.3} vs bfp4 + {frac} overlay \
+         {ppl_overlay:.3}",
+        seq * chunks
+    );
+    if ppl_overlay >= ppl_plain || ppl_overlay.is_nan() {
+        println!("  WARNING: outlier overlay did not improve BFP4 perplexity");
+        gates.push(format!(
+            "plan: bfp4+overlay ppl {ppl_overlay:.3} not below plain bfp4 {ppl_plain:.3}"
+        ));
+    }
+    let wm = overlay.weight_memory();
+    let density = wm.ratio();
+    let (_, outlier_bytes) = overlay.weight_memory_by_format();
+    println!(
+        "  density: {density:.2}x vs f32 ({} of {} resident bytes are outlier side tables)",
+        outlier_bytes, wm.resident_bytes
+    );
+    if density < 4.0 {
+        println!("  WARNING: overlayed BFP4 density below the 4x acceptance bar");
+        gates.push(format!("plan: bfp4+overlay density {density:.2}x < 4.0x vs f32"));
+    }
+    let j = Json::obj(vec![
+        ("bench", Json::Str("plan".into())),
+        ("model", Json::Str(cfg.name.clone())),
+        ("trials", Json::Num(res.history.len() as f64)),
+        ("sites", Json::Num(n_sites as f64)),
+        ("distinct_weight_bitwidths", Json::Num(widths.len() as f64)),
+        ("gate_distinct_bitwidths_min", Json::Num(3.0)),
+        ("plan_forward_bit_identical", Json::Bool(bit_identical)),
+        ("outlier_fraction", Json::Num(frac as f64)),
+        ("ppl_bfp4", Json::Num(ppl_plain)),
+        ("ppl_bfp4_overlay", Json::Num(ppl_overlay)),
+        ("density_vs_f32", Json::Num(density)),
+        ("gate_density_min", Json::Num(4.0)),
+        ("outlier_bytes", Json::Num(outlier_bytes as f64)),
+        ("resident_weight_bytes", Json::Num(wm.resident_bytes as f64)),
+        ("dense_f32_weight_bytes", Json::Num(wm.dense_f32_bytes as f64)),
+        ("quick", Json::Bool(quick)),
+    ]);
+    let path = "BENCH_plan.json";
+    std::fs::write(path, j.to_string() + "\n").expect("write BENCH_plan.json");
     println!("  wrote {path}");
 }

@@ -472,6 +472,9 @@ impl<'m> EngineCore<'m> {
         // the prepared weight cache is immutable for the engine's whole
         // lifetime — measure it once, not once per step
         metrics.weight_memory = model.weight_memory();
+        let (by_format, outlier_bytes) = model.weight_memory_by_format();
+        metrics.weight_bytes_by_format = by_format;
+        metrics.outlier_bytes = outlier_bytes;
         metrics.isa = crate::kernels::active().name().to_string();
         EngineCore {
             session: BatchedDecodeSession::new(model, &cfg.session_config()),

@@ -391,6 +391,18 @@ pub fn metrics_json(router: &RouterHandle) -> Json {
                 ("kv_pages_shared", Json::Num(m.kv_pages_shared as f64)),
                 ("prefix_hit_rate", Json::Num(m.prefix_hit_rate())),
                 ("prefix_hit_rows", Json::Num(m.prefix_hit_rows as f64)),
+                ("weight_dense_f32_bytes", Json::Num(m.weight_memory.dense_f32_bytes as f64)),
+                ("weight_resident_bytes", Json::Num(m.weight_memory.resident_bytes as f64)),
+                (
+                    "weights_by_format",
+                    Json::Obj(
+                        m.weight_bytes_by_format
+                            .iter()
+                            .map(|(name, bytes)| (name.clone(), Json::Num(*bytes as f64)))
+                            .collect(),
+                    ),
+                ),
+                ("outlier_bytes", Json::Num(m.outlier_bytes as f64)),
                 ("isa", Json::Str(m.isa.clone())),
             ])
         })

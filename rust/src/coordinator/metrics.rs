@@ -205,6 +205,16 @@ pub struct Metrics {
     /// engine's GEMMs dispatch to — set once at engine construction, empty
     /// until then.
     pub isa: String,
+    /// Resident weight bytes by storage format name ("f32",
+    /// "bfp_e8m3n16", …), outlier side tables excluded — the per-format
+    /// breakdown of a mixed-precision plan's footprint. Sorted by name;
+    /// set once at engine construction.
+    pub weight_bytes_by_format: Vec<(String, usize)>,
+    /// Bytes held by dense-and-sparse outlier side tables (CSR f32
+    /// overlays on packed weights). Together with
+    /// [`Self::weight_bytes_by_format`] this sums to
+    /// `weight_memory.resident_bytes`.
+    pub outlier_bytes: usize,
 }
 
 impl Metrics {
@@ -338,6 +348,17 @@ impl Metrics {
                 self.weight_memory.ratio(),
             ));
         }
+        if self.weight_bytes_by_format.len() > 1 {
+            let parts: Vec<String> = self
+                .weight_bytes_by_format
+                .iter()
+                .map(|(name, bytes)| format!("{name}:{bytes}B"))
+                .collect();
+            s.push_str(&format!(" weights_by_format=[{}]", parts.join(" ")));
+        }
+        if self.outlier_bytes > 0 {
+            s.push_str(&format!(" outliers={}B", self.outlier_bytes));
+        }
         if !self.isa.is_empty() {
             s.push_str(&format!(" isa={}", self.isa));
         }
@@ -470,6 +491,26 @@ mod tests {
         assert!(s.contains("kv_shared_pages=2"));
         assert!(s.contains("prefix_hit_rate=0.75"));
         assert!(s.contains("prefix_rows=21"));
+    }
+
+    #[test]
+    fn weight_breakdown_reported_when_mixed() {
+        let mut m = Metrics::new();
+        assert!(!m.summary().contains("weights_by_format"));
+        assert!(!m.summary().contains("outliers="));
+        // a uniform (single-format) model stays quiet — the breakdown only
+        // earns summary space when a plan actually mixes formats
+        m.weight_bytes_by_format = vec![("bfp_e8m3n16".to_string(), 1000)];
+        assert!(!m.summary().contains("weights_by_format"));
+        m.weight_bytes_by_format = vec![
+            ("bfp_e8m3n16".to_string(), 1000),
+            ("bfp_e8m7n16".to_string(), 500),
+            ("f32".to_string(), 256),
+        ];
+        m.outlier_bytes = 96;
+        let s = m.summary();
+        assert!(s.contains("weights_by_format=[bfp_e8m3n16:1000B bfp_e8m7n16:500B f32:256B]"));
+        assert!(s.contains("outliers=96B"));
     }
 
     #[test]

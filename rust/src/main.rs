@@ -10,6 +10,10 @@
 //!   density          print memory/arithmetic density for every preset format
 //!   profile-variance Figure-1-style variance profile
 //!   search           mixed-precision TPE search
+//!   search-plan      TPE search that emits a deployable plan artifact
+//!                    (`--out plan.bbqp`; `--bits`, `--outliers`,
+//!                    `--quick` for CI-sized runs) — load it back with
+//!                    `--plan PATH` on serve/serve-bench/eval-ppl/eval-tasks
 //!   serve            batched-inference demo with latency/throughput metrics
 //!                    (`--stream` drives the live Engine API and prints
 //!                    request 0's tokens as they arrive; `--temperature`,
@@ -34,6 +38,8 @@
 //!                    (BBQ_ISA=scalar|avx2|neon overrides detection)
 //!
 //! Common options: `--model <preset>` `--format <name>` `--seq N` `--threads N`
+//! `--plan PATH` (deploy a plan artifact) `--outliers F` (dense-and-sparse
+//! overlay fraction on the uniform-format path)
 
 #![allow(clippy::needless_range_loop, clippy::collapsible_if)]
 
@@ -60,7 +66,17 @@ fn kv_config_from_args(args: &Args) -> bbq::model::KvConfig {
     kv
 }
 
-fn plan_from_args(args: &Args, n_layers: usize) -> QuantPlan {
+/// `--plan PATH` loads a deployable plan artifact (validated against the
+/// model's shape + fingerprint); otherwise `--format <name>` picks a
+/// uniform plan ("llm_int8"/"llm_int4" select the LLM.int8() baseline and
+/// `--six-of-eight` quantises six of the eight GEMMs). `--outliers F`
+/// adds a dense-and-sparse overlay (the top-F fraction of |w| kept
+/// exactly in an f32 side table) on the fake-quant path.
+fn plan_from_args(args: &Args, cfg: &bbq::model::ModelConfig) -> QuantPlan {
+    if let Some(path) = args.get("plan") {
+        return bbq::model::plan_file::load(std::path::Path::new(path), cfg)
+            .unwrap_or_else(|e| panic!("load plan '{path}': {e}"));
+    }
     let fmt_name = args.get_or("format", "fp32");
     match fmt_name.as_str() {
         "llm_int8" => QuantPlan::llm_int8(8),
@@ -68,12 +84,22 @@ fn plan_from_args(args: &Args, n_layers: usize) -> QuantPlan {
         name => {
             let fmt = QFormat::parse(name)
                 .unwrap_or_else(|| panic!("unknown format '{name}' (try bfp_e8m5n16)"));
-            if args.has_flag("six-of-eight") {
-                QuantPlan::six_of_eight(fmt, n_layers)
+            let plan = if args.has_flag("six-of-eight") {
+                QuantPlan::six_of_eight(fmt, cfg.n_layers)
             } else {
                 QuantPlan::uniform(fmt)
-            }
+            };
+            plan.with_outliers(args.f64_or("outliers", 0.0) as f32)
         }
+    }
+}
+
+/// What the quantisation column of a report line should say: the plan
+/// artifact path when one was loaded, the format name otherwise.
+fn quant_label(args: &Args) -> String {
+    match args.get("plan") {
+        Some(path) => format!("plan:{path}"),
+        None => args.get_or("format", "fp32"),
     }
 }
 
@@ -106,15 +132,16 @@ fn main() {
             let seq = args.usize_or("seq", 64);
             let chunks = args.usize_or("chunks", 8);
             let threads = args.usize_or("threads", 8);
-            let params = get_or_train(&preset, default_steps(&preset), true);
-            let plan = plan_from_args(&args, params.cfg.n_layers);
+            let steps = args.usize_or("steps", default_steps(&preset));
+            let params = get_or_train(&preset, steps, true);
+            let plan = plan_from_args(&args, &params.cfg);
             let model = Model::new(params, plan);
             let vocab = Vocab::build();
             let test = test_stream(&vocab, seq * chunks + seq);
             let r = perplexity_par(&model, &test, seq, chunks, threads);
             println!(
                 "model={preset} format={} ppl={:.3} ({} tokens, {} chunks)",
-                args.get_or("format", "fp32"),
+                quant_label(&args),
                 r.perplexity,
                 r.tokens,
                 r.chunks
@@ -125,7 +152,7 @@ fn main() {
             let n = args.usize_or("examples", 60);
             let threads = args.usize_or("threads", 8);
             let params = get_or_train(&preset, default_steps(&preset), true);
-            let plan = plan_from_args(&args, params.cfg.n_layers);
+            let plan = plan_from_args(&args, &params.cfg);
             let model = Model::new(params, plan);
             let vocab = Vocab::build();
             let mut mean = 0.0;
@@ -169,6 +196,7 @@ fn main() {
             );
         }
         "search" => cmd_search(&args),
+        "search-plan" => cmd_search_plan(&args),
         "serve" => cmd_serve(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "bench-report" => cmd_bench_report(&args),
@@ -205,7 +233,7 @@ fn main() {
 }
 
 const HELP: &str = "bbq — block-based quantisation lab (EMNLP 2023 reproduction)
-usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|serve|serve-bench|bench-report|bench-snapshot|artifacts|isa> [--opts]
+usage: bbq <exp|train|train-pjrt|eval-ppl|eval-tasks|quantize|density|profile-variance|search|search-plan|serve|serve-bench|bench-report|bench-snapshot|artifacts|isa> [--opts]
 see rust/src/main.rs header for the option list";
 
 fn cmd_quantize(args: &Args) {
@@ -273,11 +301,86 @@ fn cmd_search(args: &Args) {
     }
 }
 
+/// `bbq search-plan`: run the mixed-precision TPE search and emit the
+/// best assignment as a deployable plan artifact (`--out`, default
+/// plan.bbqp) that `serve --plan` / `eval-ppl --plan` load back.
+/// `--quick` shrinks training + trials for CI; `--outliers F` bakes a
+/// dense-and-sparse overlay fraction into the emitted plan; `--bits`
+/// picks the BFP word-length choices the search mixes over.
+fn cmd_search_plan(args: &Args) {
+    use bbq::search::objective::Objective;
+    use bbq::search::runner::{run_search, SearchConfig};
+    use bbq::search::space::SearchSpace;
+    let quick = args.has_flag("quick");
+    let preset = args.get_or("model", "micro");
+    let steps = args.usize_or("steps", if quick { 60 } else { default_steps(&preset) });
+    let params = get_or_train(&preset, steps, true);
+    let cfg = params.cfg.clone();
+    let vocab = Vocab::build();
+    let task = Task::parse(&args.get_or("task", "lambada")).expect("unknown task");
+    let n_examples = args.usize_or("examples", if quick { 12 } else { 40 });
+    let exs = generate(task, &vocab, 555, n_examples);
+    let threads = args.usize_or("threads", 8);
+    let fp32_acc = evaluate(
+        &Model::new(params.clone(), QuantPlan::fp32()),
+        task,
+        &exs,
+        threads,
+    )
+    .accuracy;
+    let bits: Vec<u32> = args
+        .get_or("bits", "3,4,5,6,8")
+        .split(',')
+        .map(|s| s.trim().parse().expect("--bits takes e.g. 3,4,6,8"))
+        .collect();
+    let space = SearchSpace::bfp_bits(&cfg, &bits);
+    let sc = SearchConfig {
+        trials: args.usize_or("trials", if quick { 8 } else { 40 }),
+        threads,
+        seed: args.u64_or("seed", 7),
+        objective: Objective::software(args.f64_or("alpha", 0.02)),
+        ..Default::default()
+    };
+    let res = run_search(&params, space, task, &exs, fp32_acc, &sc);
+    let best = res.best.as_ref().expect("search produced no trials");
+    let frac = args.f64_or("outliers", 0.005) as f32;
+    let plan = res
+        .best_plan()
+        .expect("search produced no trials")
+        .with_outliers(frac);
+    let out = args.get_or("out", "plan.bbqp");
+    let provenance = vec![
+        format!(
+            "emitted by `bbq search-plan` (model {preset}, task {}, {} trials, seed {})",
+            task.name(),
+            res.history.len(),
+            sc.seed,
+        ),
+        format!(
+            "best trial: acc {:.3} (fp32 {:.3}) mem {:.2}x obj {:.3}",
+            best.accuracy, fp32_acc, best.mem_density, best.objective,
+        ),
+    ];
+    bbq::model::plan_file::save(&plan, &cfg, std::path::Path::new(&out), &provenance)
+        .unwrap_or_else(|e| panic!("save plan '{out}': {e}"));
+    let mut widths: Vec<u32> = plan.per_site.values().map(|q| q.weight.word_bits()).collect();
+    widths.sort_unstable();
+    widths.dedup();
+    println!(
+        "wrote {out}: {} sites, weight bit-widths {widths:?}, outliers {frac}, \
+         acc {:.3} (fp32 {:.3}), mem {:.2}x",
+        plan.per_site.len(),
+        best.accuracy,
+        fp32_acc,
+        best.mem_density,
+    );
+}
+
 fn cmd_serve(args: &Args) {
     use std::io::Write;
     let preset = args.get_or("model", "tiny");
     let params = get_or_train(&preset, default_steps(&preset), true);
-    let plan = plan_from_args(args, params.cfg.n_layers);
+    let plan = plan_from_args(args, &params.cfg);
     let model = Model::new(params, plan);
     let vocab = Vocab::build();
     let n_req = args.usize_or("requests", 32);
@@ -420,11 +523,23 @@ fn cmd_serve_bench(args: &Args) {
     let quick = args.has_flag("quick");
     let check = args.has_flag("check");
     let preset = args.get_or("model", "tiny");
-    let fmt_name = args.get_or("format", "bfp_e8m5n16");
-    let fmt = QFormat::parse(&fmt_name).unwrap_or_else(|| panic!("unknown format '{fmt_name}'"));
     let mcfg = ModelConfig::preset(&preset);
+    let (plan, fmt_name) = match args.get("plan") {
+        Some(path) => {
+            let plan = bbq::model::plan_file::load(std::path::Path::new(path), &mcfg)
+                .unwrap_or_else(|e| panic!("load plan '{path}': {e}"));
+            (plan, format!("plan:{path}"))
+        }
+        None => {
+            let fmt_name = args.get_or("format", "bfp_e8m5n16");
+            let fmt = QFormat::parse(&fmt_name)
+                .unwrap_or_else(|| panic!("unknown format '{fmt_name}'"));
+            let plan = QuantPlan::uniform(fmt).with_outliers(args.f64_or("outliers", 0.0) as f32);
+            (plan, fmt.name())
+        }
+    };
     // untrained weights: the bench measures the serving stack, not the model
-    let model = std::sync::Arc::new(Model::new(Params::init(&mcfg, 3), QuantPlan::uniform(fmt)));
+    let model = std::sync::Arc::new(Model::new(Params::init(&mcfg, 3), plan));
     let trace = match args.get("trace-in") {
         Some(path) => Trace::load(path).unwrap_or_else(|e| panic!("{e}")),
         None => Trace::poisson(&TrafficConfig {
@@ -491,7 +606,7 @@ fn cmd_serve_bench(args: &Args) {
     if let Json::Obj(map) = &mut doc {
         map.insert("bench".to_string(), Json::Str("serve".to_string()));
         map.insert("model".to_string(), Json::Str(preset.clone()));
-        map.insert("format".to_string(), Json::Str(fmt.name()));
+        map.insert("format".to_string(), Json::Str(fmt_name.clone()));
         map.insert("quick".to_string(), Json::Bool(quick));
         map.insert("queue_depth".to_string(), Json::Num(queue_depth as f64));
         map.insert("queue_peak".to_string(), Json::Num(metrics.queue_peak as f64));

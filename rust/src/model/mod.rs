@@ -8,6 +8,7 @@ pub mod kv_cache;
 pub mod paged;
 pub mod params;
 pub mod plan;
+pub mod plan_file;
 pub mod rope;
 pub mod transformer;
 
@@ -15,5 +16,6 @@ pub use config::{ModelConfig, PosEncoding};
 pub use kv_cache::{sample_logits, BatchedDecodeSession, DecodeSession};
 pub use paged::{KvConfig, KvStats, PagedKv, SessionConfig};
 pub use params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
-pub use plan::{QuantPlan, SiteId, WeightStore, GEMM_NAMES};
+pub use plan::{PlanError, QuantPlan, SiteId, WeightStore, GEMM_NAMES};
+pub use plan_file::PlanFileError;
 pub use transformer::{cross_entropy, ActStats, Model};

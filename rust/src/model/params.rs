@@ -3,6 +3,7 @@
 //! the packed-weight serving cache ([`PackedLayerParams`]).
 
 use super::config::{ModelConfig, PosEncoding};
+use crate::quant::outlier::OutlierTable;
 use crate::quant::qmatmul::{matmul_packed_bt, matmul_packed_bt_rowwise};
 use crate::quant::qtensor::QTensor;
 use crate::tensor::matmul::{matmul_bt, matmul_bt_rowwise};
@@ -11,52 +12,107 @@ use crate::util::rng::Pcg32;
 use std::io::{Read, Write};
 use std::path::Path;
 
-/// One prepared (transposed, [out, in]) weight of the serving cache —
-/// either a dequantised f32 copy or the bit-packed payload itself. The two
-/// representations produce bit-identical GEMM results (tested); they only
-/// differ in resident bytes.
+/// Base storage of one prepared weight: a dequantised f32 copy or the
+/// bit-packed payload itself.
 #[derive(Clone, Debug)]
-pub enum PackedWeight {
+enum WeightStorage {
     /// Dense f32 (fp32 weights, non-FakeQuant modes, or `WeightStore::DenseF32`).
     Dense(Tensor),
     /// Bit-packed block layout, blocks along the contraction dim.
     Packed(QTensor),
 }
 
+/// One prepared (transposed, [out, in]) weight of the serving cache —
+/// either a dequantised f32 copy or the bit-packed payload itself, plus an
+/// optional dense-and-sparse outlier side table
+/// ([`crate::quant::outlier`]) applied as an exact f32 correction after
+/// the base GEMM. The two storages produce bit-identical GEMM results
+/// (tested); they only differ in resident bytes.
+#[derive(Clone, Debug)]
+pub struct PackedWeight {
+    store: WeightStorage,
+    outliers: Option<OutlierTable>,
+}
+
 impl PackedWeight {
+    /// Wrap a dense f32 prepared weight (no outlier overlay).
+    pub fn new_dense(t: Tensor) -> PackedWeight {
+        PackedWeight {
+            store: WeightStorage::Dense(t),
+            outliers: None,
+        }
+    }
+
+    /// Wrap a bit-packed prepared weight (no outlier overlay).
+    pub fn new_packed(q: QTensor) -> PackedWeight {
+        PackedWeight {
+            store: WeightStorage::Packed(q),
+            outliers: None,
+        }
+    }
+
+    /// Attach an outlier side table (builder style). An empty table is
+    /// dropped, so a 0% extraction is literally "no overlay".
+    pub fn with_outliers(mut self, t: OutlierTable) -> PackedWeight {
+        self.outliers = if t.nnz() == 0 { None } else { Some(t) };
+        self
+    }
+
+    /// The attached outlier side table, if any.
+    pub fn outliers(&self) -> Option<&OutlierTable> {
+        self.outliers.as_ref()
+    }
+
+    /// Bytes held by the outlier side table (0 without one).
+    pub fn outlier_bytes(&self) -> usize {
+        self.outliers.as_ref().map(|t| t.bytes()).unwrap_or(0)
+    }
+
     /// `act_q [m,k] @ selfᵀ` — `act_q` is already activation-quantised.
     ///
     /// Shape regime: splits on m like the underlying dispatch — m ≥ 4 takes
     /// the column-panel prefill kernel, m < 4 (m == 1 decode) the dot
     /// kernel. Use [`Self::matmul_bt_rowwise`] when per-row bit-identity
-    /// across batch sizes is required instead.
+    /// across batch sizes is required instead. Either way the outlier
+    /// correction (if any) is added after the base GEMM, in a fixed serial
+    /// order independent of the shape split.
     pub fn matmul_bt(&self, act_q: &Tensor) -> Tensor {
-        match self {
-            PackedWeight::Dense(t) => matmul_bt(act_q, t),
-            PackedWeight::Packed(q) => matmul_packed_bt(act_q, q),
+        let mut out = match &self.store {
+            WeightStorage::Dense(t) => matmul_bt(act_q, t),
+            WeightStorage::Packed(q) => matmul_packed_bt(act_q, q),
+        };
+        if let Some(t) = &self.outliers {
+            t.apply(act_q, &mut out);
         }
+        out
     }
 
     /// Batched-decode variant of [`Self::matmul_bt`]: one fused GEMM for
     /// the whole [m, k] activation batch, with the weight decoded exactly
     /// once per call and every output row accumulating in the order the
     /// m == 1 decode path uses — so a batch-of-N step is bit-identical to N
-    /// sequential single-row steps.
+    /// sequential single-row steps. The outlier correction is per-row
+    /// independent, so it preserves that property.
     ///
     /// Shape regime: row-wise batched decode, any m.
     pub fn matmul_bt_rowwise(&self, act_q: &Tensor) -> Tensor {
-        match self {
-            PackedWeight::Dense(t) => matmul_bt_rowwise(act_q, t),
-            PackedWeight::Packed(q) => matmul_packed_bt_rowwise(act_q, q),
+        let mut out = match &self.store {
+            WeightStorage::Dense(t) => matmul_bt_rowwise(act_q, t),
+            WeightStorage::Packed(q) => matmul_packed_bt_rowwise(act_q, q),
+        };
+        if let Some(t) = &self.outliers {
+            t.apply(act_q, &mut out);
         }
+        out
     }
 
     /// Dense view — only valid for weights prepared densely (e.g. the
-    /// LLM.int8() mode, which never packs). Panics on packed storage.
+    /// LLM.int8() mode, which never packs or extracts outliers). Panics on
+    /// packed storage.
     pub fn dense(&self) -> &Tensor {
-        match self {
-            PackedWeight::Dense(t) => t,
-            PackedWeight::Packed(q) => panic!(
+        match &self.store {
+            WeightStorage::Dense(t) => t,
+            WeightStorage::Packed(q) => panic!(
                 "dense view requested for packed weight {:?} — this GEMM mode must \
                  prepare weights with WeightStore::DenseF32",
                 q.shape
@@ -64,24 +120,38 @@ impl PackedWeight {
         }
     }
 
+    /// Elements of the prepared weight (outliers included — they are part
+    /// of the same logical tensor).
     pub fn numel(&self) -> usize {
-        match self {
-            PackedWeight::Dense(t) => t.numel(),
-            PackedWeight::Packed(q) => q.numel(),
+        match &self.store {
+            WeightStorage::Dense(t) => t.numel(),
+            WeightStorage::Packed(q) => q.numel(),
         }
     }
 
     /// Bytes actually resident for this weight (payload for packed, 4·numel
-    /// for dense — the unit the server's memory metrics report).
+    /// for dense, plus the outlier side table — the unit the server's
+    /// memory metrics report).
     pub fn resident_bytes(&self) -> usize {
-        match self {
-            PackedWeight::Dense(t) => t.numel() * 4,
-            PackedWeight::Packed(q) => q.packed_bytes(),
+        let base = match &self.store {
+            WeightStorage::Dense(t) => t.numel() * 4,
+            WeightStorage::Packed(q) => q.packed_bytes(),
+        };
+        base + self.outlier_bytes()
+    }
+
+    /// Storage-format label for per-format memory breakdowns: the packed
+    /// format's name, or `"f32"` for dense copies (fake-quantised or not —
+    /// what is *resident* is f32 either way).
+    pub fn store_format_name(&self) -> String {
+        match &self.store {
+            WeightStorage::Dense(_) => "f32".to_string(),
+            WeightStorage::Packed(q) => q.fmt.name(),
         }
     }
 
     pub fn is_packed(&self) -> bool {
-        matches!(self, PackedWeight::Packed(_))
+        matches!(self.store, WeightStorage::Packed(_))
     }
 }
 

@@ -5,8 +5,10 @@
 //! precision plans (§4.4, Fig. 3) assign per-tensor formats found by the
 //! TPE search.
 
+use super::config::ModelConfig;
 use crate::quant::config::{GemmQuant, QFormat};
 use std::collections::HashMap;
+use std::fmt;
 
 /// How GEMMs execute. `FakeQuant` is the paper's evaluation semantics;
 /// `LlmInt8` routes the six weight GEMMs through the runtime outlier
@@ -41,13 +43,100 @@ pub const GEMM_NAMES: [&str; 8] = [
     "q_proj", "k_proj", "v_proj", "qk_t", "att_v", "o_proj", "fc1", "fc2",
 ];
 
-#[derive(Clone, Debug)]
+/// Why a [`QuantPlan`] is unusable against a concrete [`ModelConfig`] —
+/// the typed rejection surface of [`QuantPlan::validate`], checked when a
+/// plan file is loaded or served (mirroring how
+/// [`super::paged::KvConfig::validate`] guards KV formats).
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// A per-site entry names a layer the model does not have.
+    LayerOutOfRange {
+        /// Offending layer index.
+        layer: usize,
+        /// Layers the model actually has.
+        n_layers: usize,
+    },
+    /// A per-site entry's GEMM index is outside ①..⑧.
+    BadGemmIndex {
+        /// Offending GEMM index.
+        gemm: u8,
+    },
+    /// A per-site plan leaves a whole layer uncovered — the signature of a
+    /// plan searched against a model with fewer layers.
+    MissingLayer {
+        /// First layer with no per-site entry.
+        layer: usize,
+    },
+    /// A per-tensor scaled format (fixed / fixedrow / minifloat / dmf) at
+    /// a KV-relevant site (④ QKᵀ or ⑤ A·V): those operands are the K/V
+    /// rows the paged KV cache stores, which admits only `fp32` and the
+    /// block formats (`bfp`/`bm`/`bl`) — the same set
+    /// [`super::paged::KvConfig::validate`] accepts.
+    KvIncompatibleFormat {
+        /// Layer of the offending site.
+        layer: usize,
+        /// GEMM index of the offending site (4 or 5).
+        gemm: u8,
+        /// The rejected format.
+        fmt: QFormat,
+    },
+    /// Outlier fraction outside `[0, 0.01)` — the overlay is defined as a
+    /// "< 1% of weights" side table; anything larger is a different
+    /// (dense) decomposition.
+    BadOutlierFraction {
+        /// The rejected fraction.
+        frac: f32,
+    },
+}
+
+impl fmt::Display for PlanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanError::LayerOutOfRange { layer, n_layers } => {
+                write!(f, "plan site names layer {layer}, model has {n_layers}")
+            }
+            PlanError::BadGemmIndex { gemm } => {
+                write!(f, "plan site names GEMM {gemm}, valid indices are 1..=8")
+            }
+            PlanError::MissingLayer { layer } => {
+                write!(f, "per-site plan covers no site of layer {layer}")
+            }
+            PlanError::KvIncompatibleFormat { layer, gemm, fmt } => write!(
+                f,
+                "per-tensor scaled format {} at KV-relevant site L{layer} gemm {gemm} \
+                 (paged KV admits only fp32 and block formats bfp/bm/bl)",
+                fmt.name()
+            ),
+            PlanError::BadOutlierFraction { frac } => {
+                write!(f, "outlier fraction {frac} outside [0, 0.01)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// True for formats the paged KV cache can store (and so the ④⑤
+/// activation-activation operands may use): fp32 and the block formats.
+fn kv_compatible(fmt: QFormat) -> bool {
+    matches!(
+        fmt,
+        QFormat::Fp32 | QFormat::Bfp { .. } | QFormat::Bm { .. } | QFormat::Bl { .. }
+    )
+}
+
+#[derive(Clone, Debug, PartialEq)]
 pub struct QuantPlan {
     pub default: GemmQuant,
     pub per_site: HashMap<SiteId, GemmQuant>,
     pub mode: GemmMode,
     /// Storage policy for the prepared weight cache.
     pub store: WeightStore,
+    /// Dense-and-sparse outlier overlay: the fraction (< 0.01) of
+    /// largest-|w| weights per site kept exactly in an f32 side table
+    /// ([`crate::quant::outlier`]) instead of the packed payload. 0 (the
+    /// default) disables the overlay. Ignored by non-FakeQuant modes.
+    pub outliers: f32,
 }
 
 impl QuantPlan {
@@ -57,6 +146,7 @@ impl QuantPlan {
             per_site: HashMap::new(),
             mode: GemmMode::FakeQuant,
             store: WeightStore::default(),
+            outliers: 0.0,
         }
     }
 
@@ -71,6 +161,7 @@ impl QuantPlan {
                 bits,
             },
             store: WeightStore::default(),
+            outliers: 0.0,
         }
     }
 
@@ -81,6 +172,7 @@ impl QuantPlan {
             per_site: HashMap::new(),
             mode: GemmMode::FakeQuant,
             store: WeightStore::default(),
+            outliers: 0.0,
         }
     }
 
@@ -91,6 +183,7 @@ impl QuantPlan {
             per_site: HashMap::new(),
             mode: GemmMode::FakeQuant,
             store: WeightStore::default(),
+            outliers: 0.0,
         }
     }
 
@@ -98,6 +191,63 @@ impl QuantPlan {
     pub fn with_store(mut self, store: WeightStore) -> Self {
         self.store = store;
         self
+    }
+
+    /// Enable the dense-and-sparse outlier overlay: keep the `frac`
+    /// (< 0.01) largest-|w| weights of every quantised site exactly, in an
+    /// f32 side table applied after the packed GEMM (builder style).
+    pub fn with_outliers(mut self, frac: f32) -> Self {
+        self.outliers = frac;
+        self
+    }
+
+    /// Check this plan against a concrete model shape — the guard the
+    /// plan-file loader and `serve --plan` run before building a weight
+    /// cache from foreign input. Deliberately *not* called by
+    /// `Model::new`: in-memory experiment plans (e.g. uniform `fixed8`
+    /// for Table 3's fake-quant rows) legitimately use formats a paged-KV
+    /// serving deployment must reject.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<(), PlanError> {
+        if !(0.0..0.01).contains(&self.outliers) {
+            return Err(PlanError::BadOutlierFraction {
+                frac: self.outliers,
+            });
+        }
+        // deterministic error choice: scan sites in (layer, gemm) order
+        let mut sites: Vec<SiteId> = self.per_site.keys().copied().collect();
+        sites.sort_unstable();
+        for &(layer, gemm) in &sites {
+            if gemm < 1 || gemm > 8 {
+                return Err(PlanError::BadGemmIndex { gemm });
+            }
+            if layer >= cfg.n_layers {
+                return Err(PlanError::LayerOutOfRange {
+                    layer,
+                    n_layers: cfg.n_layers,
+                });
+            }
+        }
+        // a per-site plan must cover every layer of the model it claims to
+        // describe (a uniform default-only plan trivially covers all)
+        if !self.per_site.is_empty() {
+            for layer in 0..cfg.n_layers {
+                if !(1..=8).any(|g| self.per_site.contains_key(&(layer, g))) {
+                    return Err(PlanError::MissingLayer { layer });
+                }
+            }
+        }
+        // ④⑤ operands are the K/V rows the paged KV cache stores
+        for layer in 0..cfg.n_layers {
+            for gemm in [4u8, 5u8] {
+                let q = self.site(layer, gemm);
+                for fmt in [q.weight, q.act] {
+                    if !kv_compatible(fmt) {
+                        return Err(PlanError::KvIncompatibleFormat { layer, gemm, fmt });
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Leave ④⑤ (the activation-activation GEMMs) in FP32 — the "6/8"
@@ -172,5 +322,112 @@ mod tests {
         p.set(1, 2, GemmQuant::uniform(presets::bfp_w(8)));
         assert_eq!(p.site(1, 2).act, presets::bfp_w(8));
         assert_eq!(p.site(0, 2).act, presets::bfp_w(4));
+    }
+
+    #[test]
+    fn validate_accepts_serveable_plans() {
+        let cfg = ModelConfig::preset("nano");
+        assert_eq!(QuantPlan::fp32().validate(&cfg), Ok(()));
+        assert_eq!(QuantPlan::uniform(presets::bfp_w(4)).validate(&cfg), Ok(()));
+        assert_eq!(
+            QuantPlan::uniform(presets::bfp_w(4))
+                .with_outliers(0.005)
+                .validate(&cfg),
+            Ok(())
+        );
+        // six-of-eight leaves ④⑤ fp32 → KV-compatible even under fixed8
+        assert_eq!(
+            QuantPlan::six_of_eight(presets::fixed8(), cfg.n_layers).validate(&cfg),
+            Ok(())
+        );
+    }
+
+    #[test]
+    fn validate_rejects_layer_out_of_range() {
+        let cfg = ModelConfig::preset("nano"); // 2 layers
+        let mut p = QuantPlan::uniform(presets::bfp_w(6));
+        for l in 0..4 {
+            p.set(l, 1, GemmQuant::uniform(presets::bfp_w(8)));
+        }
+        assert_eq!(
+            p.validate(&cfg),
+            Err(PlanError::LayerOutOfRange {
+                layer: 2,
+                n_layers: 2
+            })
+        );
+    }
+
+    #[test]
+    fn validate_rejects_uncovered_layers() {
+        // a per-site plan searched on a 1-layer model must not silently
+        // serve a 2-layer one with default-format tail layers
+        let cfg = ModelConfig::preset("nano"); // 2 layers
+        let mut p = QuantPlan::uniform(presets::bfp_w(6));
+        p.set(0, 1, GemmQuant::uniform(presets::bfp_w(8)));
+        assert_eq!(p.validate(&cfg), Err(PlanError::MissingLayer { layer: 1 }));
+    }
+
+    #[test]
+    fn validate_rejects_bad_gemm_index() {
+        let cfg = ModelConfig::preset("nano");
+        let mut p = QuantPlan::uniform(presets::bfp_w(6));
+        for l in 0..cfg.n_layers {
+            p.set(l, 9, GemmQuant::uniform(presets::bfp_w(8)));
+        }
+        assert_eq!(p.validate(&cfg), Err(PlanError::BadGemmIndex { gemm: 9 }));
+    }
+
+    #[test]
+    fn validate_rejects_per_tensor_formats_at_kv_sites() {
+        let cfg = ModelConfig::preset("nano");
+        // uniform fixed8 puts a per-tensor scale on ④⑤'s K/V operands —
+        // fine for fake-quant experiments, unserveable through paged KV
+        let p = QuantPlan::uniform(presets::fixed8());
+        assert_eq!(
+            p.validate(&cfg),
+            Err(PlanError::KvIncompatibleFormat {
+                layer: 0,
+                gemm: 4,
+                fmt: presets::fixed8()
+            })
+        );
+        // a block-format default with one minifloat override at ⑤
+        let mut p = QuantPlan::uniform(presets::bfp_w(6));
+        for l in 0..cfg.n_layers {
+            p.set(l, 1, GemmQuant::uniform(presets::bfp_w(6)));
+        }
+        p.set(1, 5, GemmQuant::uniform(presets::minifloat8()));
+        assert_eq!(
+            p.validate(&cfg),
+            Err(PlanError::KvIncompatibleFormat {
+                layer: 1,
+                gemm: 5,
+                fmt: presets::minifloat8()
+            })
+        );
+    }
+
+    #[test]
+    fn validate_rejects_outlier_fraction_out_of_bounds() {
+        let cfg = ModelConfig::preset("nano");
+        for bad in [-0.1f32, 0.01, 0.5] {
+            let p = QuantPlan::uniform(presets::bfp_w(4)).with_outliers(bad);
+            assert_eq!(
+                p.validate(&cfg),
+                Err(PlanError::BadOutlierFraction { frac: bad })
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 0.01)")]
+    fn validate_panics_when_unwrapped() {
+        let cfg = ModelConfig::preset("nano");
+        QuantPlan::uniform(presets::bfp_w(4))
+            .with_outliers(0.5)
+            .validate(&cfg)
+            .map_err(|e| e.to_string())
+            .unwrap();
     }
 }

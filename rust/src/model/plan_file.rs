@@ -1,0 +1,583 @@
+//! Versioned, human-diffable on-disk format for [`QuantPlan`] artifacts.
+//!
+//! A plan file is the deployable output of the mixed-precision TPE search
+//! (`bbq search-plan`): line-based text, one directive per line, `#`
+//! comments for provenance — so two plans diff cleanly in review and a
+//! corrupted or truncated file is rejected, not half-loaded.
+//!
+//! ```text
+//! bbqplan v1
+//! # emitted by `bbq search-plan` (model micro, task lambada, 40 trials)
+//! model name=micro layers=2 d_model=64 n_heads=2 d_ff=256 vocab=512 max_seq=256 pos=learned
+//! fingerprint 90b4b7a7e8f1c3d2
+//! mode fake_quant
+//! store packed
+//! outliers 0.005
+//! default w=bfp_e8m5n16 a=bfp_e8m5n16
+//! site L0.q_proj w=bfp_e8m3n16 a=bfp_e8m7n16
+//! ...
+//! end sites=32
+//! ```
+//!
+//! [`load`] re-parses the text, checks every shape field and the FNV-1a
+//! shape fingerprint against the [`ModelConfig`] it is being deployed
+//! onto, runs [`QuantPlan::validate`] (layer coverage, KV-compatible
+//! formats at ④⑤, outlier bound), and requires the `end sites=N` trailer
+//! to match the site count — so truncation anywhere is detected. Formats
+//! round-trip through [`QFormat::name`]/[`QFormat::parse`] and floats
+//! through Rust's shortest-round-trip `Display`, making save → load
+//! bit-exact (tested).
+
+use super::config::{ModelConfig, PosEncoding};
+use super::plan::{GemmMode, PlanError, QuantPlan, SiteId, WeightStore, GEMM_NAMES};
+use crate::quant::config::{GemmQuant, QFormat};
+use std::collections::HashMap;
+use std::fmt;
+use std::path::Path;
+
+/// First line of every plan file: magic + format version.
+pub const PLAN_HEADER: &str = "bbqplan v1";
+
+/// Why a plan file could not be loaded (or an invalid plan saved).
+#[derive(Debug)]
+pub enum PlanFileError {
+    /// Underlying filesystem error.
+    Io(std::io::Error),
+    /// The first line is not a `bbqplan` header at all.
+    BadMagic(String),
+    /// A `bbqplan` header with a version this build does not read.
+    UnsupportedVersion(u32),
+    /// The `end sites=N` trailer is missing or disagrees with the site
+    /// count — the file was cut short or lines were lost.
+    Truncated,
+    /// A directive line failed to parse (1-based line number + reason).
+    Parse {
+        /// 1-based line number of the offending line.
+        line: usize,
+        /// What went wrong.
+        msg: String,
+    },
+    /// A required directive never appeared.
+    Missing(&'static str),
+    /// A model-shape field in the file disagrees with the target config.
+    ShapeMismatch {
+        /// Which shape field disagrees.
+        field: &'static str,
+        /// The value recorded in the plan file.
+        plan: String,
+        /// The value of the config being deployed onto.
+        model: String,
+    },
+    /// Shape fields match but the recorded fingerprint does not — the
+    /// header was hand-edited or the file corrupted.
+    FingerprintMismatch {
+        /// Fingerprint recorded in the file.
+        plan: u64,
+        /// Fingerprint of the target config.
+        model: u64,
+    },
+    /// The plan parsed but fails [`QuantPlan::validate`] against the
+    /// target config.
+    Invalid(PlanError),
+}
+
+impl fmt::Display for PlanFileError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PlanFileError::Io(e) => write!(f, "plan file io: {e}"),
+            PlanFileError::BadMagic(got) => {
+                write!(f, "not a plan file (first line {got:?}, want {PLAN_HEADER:?})")
+            }
+            PlanFileError::UnsupportedVersion(v) => {
+                write!(f, "plan file version v{v} unsupported (this build reads v1)")
+            }
+            PlanFileError::Truncated => {
+                write!(f, "plan file truncated (missing or mismatched 'end sites=N' trailer)")
+            }
+            PlanFileError::Parse { line, msg } => write!(f, "plan file line {line}: {msg}"),
+            PlanFileError::Missing(what) => write!(f, "plan file missing '{what}' directive"),
+            PlanFileError::ShapeMismatch { field, plan, model } => write!(
+                f,
+                "plan was made for a different model shape: {field}={plan} in file, \
+                 {field}={model} in target config"
+            ),
+            PlanFileError::FingerprintMismatch { plan, model } => write!(
+                f,
+                "plan shape fingerprint {plan:016x} != target config {model:016x}"
+            ),
+            PlanFileError::Invalid(e) => write!(f, "plan invalid for target config: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for PlanFileError {}
+
+impl From<std::io::Error> for PlanFileError {
+    fn from(e: std::io::Error) -> Self {
+        PlanFileError::Io(e)
+    }
+}
+
+impl From<PlanError> for PlanFileError {
+    fn from(e: PlanError) -> Self {
+        PlanFileError::Invalid(e)
+    }
+}
+
+/// FNV-1a fingerprint of a model's *shape* (everything that determines
+/// which sites exist and how big their tensors are — the name is
+/// deliberately excluded so a plan searched on "micro" deploys onto any
+/// identically-shaped config).
+pub fn shape_fingerprint(cfg: &ModelConfig) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let s = canonical_shape(cfg);
+    let mut h = FNV_OFFSET;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn pos_name(pos: PosEncoding) -> &'static str {
+    match pos {
+        PosEncoding::Learned => "learned",
+        PosEncoding::Rope => "rope",
+    }
+}
+
+fn canonical_shape(cfg: &ModelConfig) -> String {
+    format!(
+        "layers={} d_model={} n_heads={} d_ff={} vocab={} max_seq={} pos={}",
+        cfg.n_layers,
+        cfg.d_model,
+        cfg.n_heads,
+        cfg.d_ff,
+        cfg.vocab_size,
+        cfg.max_seq,
+        pos_name(cfg.pos)
+    )
+}
+
+fn gemm_name(gemm: u8) -> &'static str {
+    GEMM_NAMES[(gemm - 1) as usize]
+}
+
+fn fmt_pair(q: GemmQuant) -> String {
+    format!("w={} a={}", q.weight.name(), q.act.name())
+}
+
+/// Render a validated plan as plan-file text (the body [`save`] writes).
+/// `provenance` lines become `#` comments under the header.
+pub fn to_text(plan: &QuantPlan, cfg: &ModelConfig, provenance: &[String]) -> String {
+    let mut out = String::new();
+    out.push_str(PLAN_HEADER);
+    out.push('\n');
+    for p in provenance {
+        for line in p.lines() {
+            out.push_str("# ");
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out.push_str(&format!("model name={} {}\n", cfg.name, canonical_shape(cfg)));
+    out.push_str(&format!("fingerprint {:016x}\n", shape_fingerprint(cfg)));
+    match plan.mode {
+        GemmMode::FakeQuant => out.push_str("mode fake_quant\n"),
+        GemmMode::LlmInt8 { threshold, bits } => {
+            out.push_str(&format!("mode llm_int8 threshold={threshold} bits={bits}\n"))
+        }
+    }
+    match plan.store {
+        WeightStore::PackedAuto => out.push_str("store packed\n"),
+        WeightStore::DenseF32 => out.push_str("store dense_f32\n"),
+    }
+    out.push_str(&format!("outliers {}\n", plan.outliers));
+    out.push_str(&format!("default {}\n", fmt_pair(plan.default)));
+    let mut sites: Vec<(&SiteId, &GemmQuant)> = plan.per_site.iter().collect();
+    sites.sort_by_key(|(site, _)| **site);
+    for (&(layer, gemm), &q) in &sites {
+        out.push_str(&format!("site L{layer}.{} {}\n", gemm_name(gemm), fmt_pair(q)));
+    }
+    out.push_str(&format!("end sites={}\n", sites.len()));
+    out
+}
+
+/// Parse plan-file text and validate it against `cfg` (shape fields,
+/// fingerprint, then [`QuantPlan::validate`]).
+pub fn from_text(text: &str, cfg: &ModelConfig) -> Result<QuantPlan, PlanFileError> {
+    let parse = |line: usize, msg: String| PlanFileError::Parse { line, msg };
+    let mut lines = text.lines().enumerate();
+    let (_, first) = lines.next().unwrap_or((0, ""));
+    if first.trim() != PLAN_HEADER {
+        return match first.trim().strip_prefix("bbqplan v") {
+            Some(v) => match v.trim().parse::<u32>() {
+                Ok(n) => Err(PlanFileError::UnsupportedVersion(n)),
+                Err(_) => Err(PlanFileError::BadMagic(first.trim().to_string())),
+            },
+            None => Err(PlanFileError::BadMagic(first.trim().to_string())),
+        };
+    }
+    let mut model_line: Option<(usize, String)> = None;
+    let mut fingerprint: Option<u64> = None;
+    let mut mode: Option<GemmMode> = None;
+    let mut store: Option<WeightStore> = None;
+    let mut outliers: Option<f32> = None;
+    let mut default: Option<GemmQuant> = None;
+    let mut per_site: HashMap<SiteId, GemmQuant> = HashMap::new();
+    let mut end_sites: Option<usize> = None;
+    for (i, raw) in lines {
+        let ln = i + 1; // 1-based
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if end_sites.is_some() {
+            return Err(parse(ln, "content after 'end' trailer".to_string()));
+        }
+        let (word, rest) = line.split_once(char::is_whitespace).unwrap_or((line, ""));
+        let rest = rest.trim();
+        match word {
+            "model" => {
+                if model_line.is_some() {
+                    return Err(parse(ln, "duplicate 'model' directive".to_string()));
+                }
+                model_line = Some((ln, rest.to_string()));
+            }
+            "fingerprint" => {
+                let v = u64::from_str_radix(rest, 16)
+                    .map_err(|e| parse(ln, format!("bad fingerprint {rest:?}: {e}")))?;
+                fingerprint = Some(v);
+            }
+            "mode" => {
+                let (m, margs) = rest.split_once(char::is_whitespace).unwrap_or((rest, ""));
+                mode = Some(match m {
+                    "fake_quant" => GemmMode::FakeQuant,
+                    "llm_int8" => {
+                        let kv = parse_kv(margs);
+                        let threshold = kv
+                            .get("threshold")
+                            .and_then(|v| v.parse::<f32>().ok())
+                            .ok_or_else(|| parse(ln, "llm_int8 needs threshold=".to_string()))?;
+                        let bits = kv
+                            .get("bits")
+                            .and_then(|v| v.parse::<u32>().ok())
+                            .ok_or_else(|| parse(ln, "llm_int8 needs bits=".to_string()))?;
+                        GemmMode::LlmInt8 { threshold, bits }
+                    }
+                    other => return Err(parse(ln, format!("unknown mode {other:?}"))),
+                });
+            }
+            "store" => {
+                store = Some(match rest {
+                    "packed" => WeightStore::PackedAuto,
+                    "dense_f32" => WeightStore::DenseF32,
+                    other => return Err(parse(ln, format!("unknown store {other:?}"))),
+                });
+            }
+            "outliers" => {
+                outliers = Some(
+                    rest.parse::<f32>()
+                        .map_err(|e| parse(ln, format!("bad outliers {rest:?}: {e}")))?,
+                );
+            }
+            "default" => {
+                default = Some(parse_formats(rest).map_err(|m| parse(ln, m))?);
+            }
+            "site" => {
+                let (name, fmts) = rest
+                    .split_once(char::is_whitespace)
+                    .ok_or_else(|| parse(ln, format!("bad site line {rest:?}")))?;
+                let site = parse_site(name).map_err(|m| parse(ln, m))?;
+                let q = parse_formats(fmts.trim()).map_err(|m| parse(ln, m))?;
+                if per_site.insert(site, q).is_some() {
+                    return Err(parse(ln, format!("duplicate site {name:?}")));
+                }
+            }
+            "end" => {
+                let kv = parse_kv(rest);
+                let n = kv
+                    .get("sites")
+                    .and_then(|v| v.parse::<usize>().ok())
+                    .ok_or(PlanFileError::Truncated)?;
+                end_sites = Some(n);
+            }
+            other => return Err(parse(ln, format!("unknown directive {other:?}"))),
+        }
+    }
+    // truncation: no trailer, or the trailer disagrees with what arrived
+    match end_sites {
+        Some(n) if n == per_site.len() => {}
+        _ => return Err(PlanFileError::Truncated),
+    }
+    let (model_ln, model_rest) = model_line.ok_or(PlanFileError::Missing("model"))?;
+    check_shape(model_ln, &model_rest, cfg)?;
+    let fp = fingerprint.ok_or(PlanFileError::Missing("fingerprint"))?;
+    let want = shape_fingerprint(cfg);
+    if fp != want {
+        return Err(PlanFileError::FingerprintMismatch {
+            plan: fp,
+            model: want,
+        });
+    }
+    let plan = QuantPlan {
+        default: default.ok_or(PlanFileError::Missing("default"))?,
+        per_site,
+        mode: mode.ok_or(PlanFileError::Missing("mode"))?,
+        store: store.ok_or(PlanFileError::Missing("store"))?,
+        outliers: outliers.ok_or(PlanFileError::Missing("outliers"))?,
+    };
+    plan.validate(cfg)?;
+    Ok(plan)
+}
+
+/// Save a plan as a deployable artifact, validating it against `cfg`
+/// first so an unserveable plan is never written. `provenance` lines are
+/// embedded as `#` comments.
+pub fn save(
+    plan: &QuantPlan,
+    cfg: &ModelConfig,
+    path: &Path,
+    provenance: &[String],
+) -> Result<(), PlanFileError> {
+    plan.validate(cfg)?;
+    if let Some(p) = path.parent() {
+        if !p.as_os_str().is_empty() {
+            std::fs::create_dir_all(p)?;
+        }
+    }
+    std::fs::write(path, to_text(plan, cfg, provenance))?;
+    Ok(())
+}
+
+/// Load a plan artifact and validate it against the config it is being
+/// deployed onto. See the module docs for everything this checks.
+pub fn load(path: &Path, cfg: &ModelConfig) -> Result<QuantPlan, PlanFileError> {
+    from_text(&std::fs::read_to_string(path)?, cfg)
+}
+
+/// `k=v` pairs of a directive tail (whitespace-separated).
+fn parse_kv(s: &str) -> HashMap<&str, &str> {
+    s.split_whitespace()
+        .filter_map(|tok| tok.split_once('='))
+        .collect()
+}
+
+/// `w=<fmt> a=<fmt>` → [`GemmQuant`].
+fn parse_formats(s: &str) -> Result<GemmQuant, String> {
+    let kv = parse_kv(s);
+    let get = |key: &str| -> Result<QFormat, String> {
+        let name = kv
+            .get(key)
+            .ok_or_else(|| format!("missing {key}= in {s:?}"))?;
+        QFormat::parse(name).ok_or_else(|| format!("unknown format {name:?}"))
+    };
+    Ok(GemmQuant {
+        weight: get("w")?,
+        act: get("a")?,
+    })
+}
+
+/// `L<layer>.<gemm_name>` → [`SiteId`].
+fn parse_site(name: &str) -> Result<SiteId, String> {
+    let body = name
+        .strip_prefix('L')
+        .ok_or_else(|| format!("site {name:?} must start with 'L'"))?;
+    let (layer, gname) = body
+        .split_once('.')
+        .ok_or_else(|| format!("site {name:?} must be L<layer>.<gemm>"))?;
+    let layer: usize = layer
+        .parse()
+        .map_err(|_| format!("bad layer in site {name:?}"))?;
+    let gemm = GEMM_NAMES
+        .iter()
+        .position(|&g| g == gname)
+        .ok_or_else(|| format!("unknown gemm {gname:?} in site {name:?}"))?;
+    Ok((layer, (gemm + 1) as u8))
+}
+
+/// Compare every shape field on the `model` line against the target
+/// config (name is informational only).
+fn check_shape(ln: usize, rest: &str, cfg: &ModelConfig) -> Result<(), PlanFileError> {
+    let kv = parse_kv(rest);
+    let want: [(&'static str, String); 7] = [
+        ("layers", cfg.n_layers.to_string()),
+        ("d_model", cfg.d_model.to_string()),
+        ("n_heads", cfg.n_heads.to_string()),
+        ("d_ff", cfg.d_ff.to_string()),
+        ("vocab", cfg.vocab_size.to_string()),
+        ("max_seq", cfg.max_seq.to_string()),
+        ("pos", pos_name(cfg.pos).to_string()),
+    ];
+    for (field, model_val) in want {
+        let plan_val = kv.get(field).ok_or(PlanFileError::Parse {
+            line: ln,
+            msg: format!("model line missing {field}="),
+        })?;
+        if *plan_val != model_val {
+            return Err(PlanFileError::ShapeMismatch {
+                field,
+                plan: plan_val.to_string(),
+                model: model_val,
+            });
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::config::presets;
+
+    fn mixed_plan(cfg: &ModelConfig) -> QuantPlan {
+        let mut plan = QuantPlan::uniform(presets::bfp_w(6)).with_outliers(0.005);
+        for l in 0..cfg.n_layers {
+            for g in 1..=8u8 {
+                let fmt = presets::bfp_w([4u32, 6, 8][(l + g as usize) % 3]);
+                plan.set(l, g, GemmQuant::uniform(fmt));
+            }
+        }
+        plan
+    }
+
+    #[test]
+    fn text_roundtrip_is_bit_exact() {
+        let cfg = ModelConfig::preset("nano");
+        let plan = mixed_plan(&cfg);
+        let text = to_text(&plan, &cfg, &["searched somewhere".to_string()]);
+        let back = from_text(&text, &cfg).unwrap();
+        assert_eq!(back, plan);
+        // and the rendering itself is stable (sorted sites)
+        assert_eq!(to_text(&back, &cfg, &["searched somewhere".to_string()]), text);
+    }
+
+    #[test]
+    fn llm_int8_mode_roundtrips() {
+        let cfg = ModelConfig::preset("nano");
+        let plan = QuantPlan::llm_int8(8).with_store(WeightStore::DenseF32);
+        let back = from_text(&to_text(&plan, &cfg, &[]), &cfg).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn fingerprint_tracks_shape_not_name() {
+        let mut a = ModelConfig::preset("nano");
+        let mut b = ModelConfig::preset("nano");
+        b.name = "renamed".to_string();
+        assert_eq!(shape_fingerprint(&a), shape_fingerprint(&b));
+        a.d_ff += 1;
+        assert_ne!(shape_fingerprint(&a), shape_fingerprint(&b));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let cfg = ModelConfig::preset("nano");
+        assert!(matches!(
+            from_text("not a plan\n", &cfg),
+            Err(PlanFileError::BadMagic(_))
+        ));
+        assert!(matches!(
+            from_text("bbqplan v9\nend sites=0\n", &cfg),
+            Err(PlanFileError::UnsupportedVersion(9))
+        ));
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let cfg = ModelConfig::preset("nano");
+        let text = to_text(&mixed_plan(&cfg), &cfg, &[]);
+        // drop the trailer line
+        let cut = text.rsplit_once("end ").unwrap().0;
+        assert!(matches!(
+            from_text(cut, &cfg),
+            Err(PlanFileError::Truncated)
+        ));
+        // drop a site line but keep the trailer: count disagrees
+        let missing: String = text
+            .lines()
+            .enumerate()
+            .filter(|(i, _)| *i != 8)
+            .map(|(_, l)| format!("{l}\n"))
+            .collect();
+        assert!(matches!(
+            from_text(&missing, &cfg),
+            Err(PlanFileError::Truncated)
+        ));
+    }
+
+    #[test]
+    fn rejects_garbage_lines_and_formats() {
+        let cfg = ModelConfig::preset("nano");
+        let text = to_text(&mixed_plan(&cfg), &cfg, &[]);
+        let garbled = text.replace("site L0.q_proj", "site L0.zz_proj");
+        assert!(matches!(
+            from_text(&garbled, &cfg),
+            Err(PlanFileError::Parse { .. })
+        ));
+        let garbled = text.replace("bfp_e8m5n16", "bfp_eXmYnZ");
+        assert!(matches!(
+            from_text(&garbled, &cfg),
+            Err(PlanFileError::Parse { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_wrong_shape_and_tampered_fingerprint() {
+        let nano = ModelConfig::preset("nano");
+        let micro = ModelConfig::preset("micro");
+        let text = to_text(&mixed_plan(&nano), &nano, &[]);
+        assert!(matches!(
+            from_text(&text, &micro),
+            Err(PlanFileError::ShapeMismatch { field: "d_model", .. })
+        ));
+        // same shape, hand-edited fingerprint line
+        let tampered = text.replace(
+            &format!("fingerprint {:016x}", shape_fingerprint(&nano)),
+            "fingerprint 00000000deadbeef",
+        );
+        assert!(matches!(
+            from_text(&tampered, &nano),
+            Err(PlanFileError::FingerprintMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_invalid_plans_on_save_and_load() {
+        let cfg = ModelConfig::preset("nano");
+        // per-tensor fixed8 at ④⑤ — validate refuses, so save refuses
+        let plan = QuantPlan::uniform(presets::fixed8());
+        let dir = std::env::temp_dir().join("bbq_test_planfile");
+        let path = dir.join("bad.bbqp");
+        assert!(matches!(
+            save(&plan, &cfg, &path, &[]),
+            Err(PlanFileError::Invalid(PlanError::KvIncompatibleFormat { .. }))
+        ));
+        // a file claiming a site beyond the model's layers fails load
+        let mut plan = mixed_plan(&cfg);
+        plan.set(7, 1, GemmQuant::uniform(presets::bfp_w(8)));
+        let text = to_text(&plan, &cfg, &[]);
+        assert!(matches!(
+            from_text(&text, &cfg),
+            Err(PlanFileError::Invalid(PlanError::LayerOutOfRange { .. }))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let cfg = ModelConfig::preset("nano");
+        let plan = mixed_plan(&cfg);
+        let dir = std::env::temp_dir().join("bbq_test_planfile_rt");
+        let path = dir.join("plan.bbqp");
+        save(&plan, &cfg, &path, &["prov line".to_string()]).unwrap();
+        let back = load(&path, &cfg).unwrap();
+        assert_eq!(back, plan);
+        assert!(matches!(
+            load(&dir.join("absent.bbqp"), &cfg),
+            Err(PlanFileError::Io(_))
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -76,25 +76,54 @@ pub struct Model {
 }
 
 /// Prepare one weight for serving: transpose to [out, in] so blocks run
-/// along the contraction dim, then either bit-pack it (the serving
-/// default for quantised fake-quant plans — resident memory becomes the
-/// packed payload) or keep a dequantised f32 copy. Both storages yield
-/// bit-identical GEMMs (tested in `tests/packed_serving.rs`).
-fn prep_weight(w: &Tensor, fmt: QFormat, mode: GemmMode, store: WeightStore) -> PackedWeight {
-    let wt = w.t();
+/// along the contraction dim, optionally pull the top-`outlier_frac`
+/// largest-|w| weights into an exact f32 side table
+/// ([`crate::quant::outlier`]), then either bit-pack the residual (the
+/// serving default for quantised fake-quant plans — resident memory
+/// becomes the packed payload) or keep a dequantised f32 copy of it. Both
+/// storages quantise the *same* outlier-zeroed residual and attach the
+/// same table, so they stay bit-identical (tested in
+/// `tests/packed_serving.rs` / `tests/plan_artifacts.rs`). The LLM.int8()
+/// mode does its own runtime decomposition on unmodified dense weights
+/// and never extracts.
+fn prep_weight(
+    w: &Tensor,
+    fmt: QFormat,
+    mode: GemmMode,
+    store: WeightStore,
+    outlier_frac: f32,
+) -> PackedWeight {
+    let mut wt = w.t();
     if fmt == QFormat::Fp32 {
-        return PackedWeight::Dense(wt);
+        return PackedWeight::new_dense(wt);
     }
-    match (store, mode) {
-        (WeightStore::PackedAuto, GemmMode::FakeQuant) => PackedWeight::Packed(encode(&wt, fmt)),
-        _ => PackedWeight::Dense(fake_quant(&wt, fmt)),
+    let overlay = if outlier_frac > 0.0 && matches!(mode, GemmMode::FakeQuant) {
+        Some(crate::quant::outlier::extract(&mut wt, outlier_frac))
+    } else {
+        None
+    };
+    let pw = match (store, mode) {
+        (WeightStore::PackedAuto, GemmMode::FakeQuant) => {
+            PackedWeight::new_packed(encode(&wt, fmt))
+        }
+        _ => PackedWeight::new_dense(fake_quant(&wt, fmt)),
+    };
+    match overlay {
+        Some(t) => pw.with_outliers(t),
+        None => pw,
     }
 }
 
 impl Model {
     fn prepare(params: &Params, plan: &QuantPlan) -> Vec<PackedLayerParams> {
         let p = |w: &Tensor, li: usize, g: u8| -> PackedWeight {
-            prep_weight(w, plan.site(li, g).weight, plan.mode, plan.store)
+            prep_weight(
+                w,
+                plan.site(li, g).weight,
+                plan.mode,
+                plan.store,
+                plan.outliers,
+            )
         };
         params
             .layers
@@ -142,6 +171,37 @@ impl Model {
             }
         }
         m
+    }
+
+    /// Build a model by loading and validating a plan-file artifact
+    /// ([`super::plan_file`]) against `params.cfg` — the deployment path:
+    /// `bbq search-plan` emits the file, `serve --plan` feeds it here.
+    pub fn from_plan_file(
+        params: Params,
+        path: &std::path::Path,
+    ) -> Result<Model, super::plan_file::PlanFileError> {
+        let plan = super::plan_file::load(path, &params.cfg)?;
+        Ok(Model::new(params, plan))
+    }
+
+    /// Per-storage-format resident-byte breakdown of the prepared weight
+    /// cache, plus the total bytes held in outlier side tables — the
+    /// observable memory story of a mixed plan (a single aggregate
+    /// [`WeightMemory`] can't show that L0 is 8-bit while L5 is 4-bit).
+    /// Keys are [`PackedWeight::store_format_name`] labels, sorted; the
+    /// per-format bytes exclude the side tables, so
+    /// `Σ per-format + outlier_bytes == weight_memory().resident_bytes`.
+    pub fn weight_memory_by_format(&self) -> (Vec<(String, usize)>, usize) {
+        let mut by: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+        let mut outlier_bytes = 0usize;
+        for pl in &self.prepared {
+            for w in pl.weights() {
+                *by.entry(w.store_format_name()).or_insert(0) +=
+                    w.resident_bytes() - w.outlier_bytes();
+                outlier_bytes += w.outlier_bytes();
+            }
+        }
+        (by.into_iter().collect(), outlier_bytes)
     }
 
     /// Re-plan without copying parameters (mixed-precision search loop).
@@ -493,6 +553,58 @@ mod tests {
             let b = dense.forward(&toks, None);
             assert_eq!(a.data, b.data, "{}", fmt.name());
         }
+    }
+
+    #[test]
+    fn outlier_overlay_is_bit_identical_across_stores() {
+        // the overlay extracts from the transposed weight BEFORE encoding,
+        // so packed and dense stores share the identical residual + table
+        let cfg = ModelConfig::preset("nano");
+        let params = Params::init(&cfg, 42);
+        let toks = [3usize, 100, 7, 250, 9, 12];
+        let plan = QuantPlan::uniform(presets::bfp_w(4)).with_outliers(0.005);
+        let packed = Model::new(params.clone(), plan.clone());
+        let dense = Model::new(params.clone(), plan.clone().with_store(WeightStore::DenseF32));
+        assert!(packed.prepared(0).wq_t.outliers().is_some());
+        assert!(dense.prepared(0).wq_t.outliers().is_some());
+        assert_eq!(
+            packed.prepared(0).wq_t.outliers(),
+            dense.prepared(0).wq_t.outliers()
+        );
+        let a = packed.forward(&toks, None);
+        let b = dense.forward(&toks, None);
+        assert_eq!(a.data, b.data);
+        // zero fraction attaches nothing and changes nothing
+        let plain = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(4)));
+        let zero = Model::new(
+            params.clone(),
+            QuantPlan::uniform(presets::bfp_w(4)).with_outliers(0.0),
+        );
+        assert!(zero.prepared(0).wq_t.outliers().is_none());
+        assert_eq!(
+            plain.forward(&toks, None).data,
+            zero.forward(&toks, None).data
+        );
+    }
+
+    #[test]
+    fn weight_memory_by_format_partitions_resident_bytes() {
+        let cfg = ModelConfig::preset("nano");
+        let params = Params::init(&cfg, 42);
+        let mut plan = QuantPlan::uniform(presets::bfp_w(4)).with_outliers(0.005);
+        for l in 0..cfg.n_layers {
+            plan.set(l, 7, crate::quant::config::GemmQuant::uniform(presets::bfp_w(8)));
+            plan.set(l, 6, crate::quant::config::GemmQuant::fp32());
+        }
+        let m = Model::new(params, plan);
+        let (by_format, outlier_bytes) = m.weight_memory_by_format();
+        let names: Vec<&str> = by_format.iter().map(|(n, _)| n.as_str()).collect();
+        assert!(names.contains(&"f32"), "{names:?}");
+        assert!(names.contains(&"bfp_e8m3n16"), "{names:?}");
+        assert!(names.contains(&"bfp_e8m7n16"), "{names:?}");
+        assert!(outlier_bytes > 0);
+        let total: usize = by_format.iter().map(|(_, b)| b).sum();
+        assert_eq!(total + outlier_bytes, m.weight_memory().resident_bytes);
     }
 
     #[test]

@@ -13,6 +13,7 @@ pub mod bm;
 pub mod config;
 pub mod fixed;
 pub mod minifloat;
+pub mod outlier;
 pub mod qmatmul;
 pub mod qtensor;
 

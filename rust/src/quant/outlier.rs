@@ -1,0 +1,246 @@
+//! Dense-and-sparse outlier decomposition (SqueezeLLM, arXiv:2306.07629).
+//!
+//! Block formats spend their shared exponent on the largest magnitude in
+//! each block, so a handful of outlier weights ruin the resolution of
+//! every value packed next to them. The fix: at pack time, pull the
+//! top-p (< 1%) largest-|w| weights out of the tensor *before* it is
+//! block-quantised — the packed payload stores them as exact zeros — and
+//! keep the originals in a CSR-style f32 side table. At GEMM time the
+//! table contributes `act @ outliersᵀ` as a sparse f32 correction added
+//! after the (packed or dense fake-quant) base GEMM. Outliers become
+//! exact, and the blocks they vacated gain a smaller shared exponent, so
+//! the remaining weights quantise finer too.
+//!
+//! [`OutlierTable::apply`] is deliberately scalar and serial: one fixed
+//! multiply-add order per output element, independent per activation row,
+//! touching no SIMD dispatch — so the correction is bit-identical across
+//! ISA backends (`BBQ_ISA`), thread counts, and batch sizes by
+//! construction, preserving the engine's exactness contract.
+
+use crate::tensor::Tensor;
+
+/// Sparse f32 outlier weights of one prepared `[out, in]` weight, in CSR
+/// layout over the output rows. Extracted by [`extract`]; applied as a
+/// post-GEMM correction by [`OutlierTable::apply`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OutlierTable {
+    /// Output rows of the `[out, in]` weight this table was extracted from.
+    pub n_rows: usize,
+    /// Input (contraction) columns of that weight.
+    pub n_cols: usize,
+    /// CSR row pointers, length `n_rows + 1`.
+    pub row_ptr: Vec<u32>,
+    /// Column index of each stored outlier, grouped by row, ascending.
+    pub col_idx: Vec<u32>,
+    /// Exact f32 value of each stored outlier.
+    pub values: Vec<f32>,
+}
+
+impl OutlierTable {
+    /// Stored outliers.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of the source tensor's elements held in the table.
+    pub fn frac(&self) -> f64 {
+        let numel = self.n_rows * self.n_cols;
+        if numel == 0 {
+            0.0
+        } else {
+            self.nnz() as f64 / numel as f64
+        }
+    }
+
+    /// Resident bytes of the side table (row pointers + column indices +
+    /// f32 values) — counted into the weight-memory metrics so the
+    /// density story stays honest.
+    pub fn bytes(&self) -> usize {
+        self.row_ptr.len() * 4 + self.col_idx.len() * 4 + self.values.len() * 4
+    }
+
+    /// Add the sparse correction `act @ selfᵀ` into `out` (shapes:
+    /// `act [m, n_cols]`, `out [m, n_rows]`).
+    ///
+    /// Plain f32 multiply-adds in CSR order, one accumulator per output
+    /// element, rows independent — bit-identical whatever ISA backend,
+    /// thread count, or batch size produced the base GEMM.
+    pub fn apply(&self, act: &Tensor, out: &mut Tensor) {
+        if self.values.is_empty() {
+            return;
+        }
+        let (m, k) = act.dims2();
+        let (mo, n) = out.dims2();
+        assert_eq!(m, mo, "outlier apply: row mismatch");
+        assert_eq!(k, self.n_cols, "outlier apply: contraction mismatch");
+        assert_eq!(n, self.n_rows, "outlier apply: output mismatch");
+        for i in 0..m {
+            let a = act.row(i);
+            let o = out.row_mut(i);
+            for r in 0..self.n_rows {
+                let (s, e) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+                if s == e {
+                    continue;
+                }
+                let mut acc = 0.0f32;
+                for t in s..e {
+                    acc += a[self.col_idx[t] as usize] * self.values[t];
+                }
+                o[r] += acc;
+            }
+        }
+    }
+}
+
+/// Pull the `ceil(frac · numel)` largest-|w| elements out of the `[rows,
+/// cols]` tensor `w`: zero them in place (so the subsequent block
+/// quantisation sees exact zeros and a smaller per-block range) and
+/// return them in a CSR table. Selection is deterministic — magnitude
+/// descending, linear index ascending on ties — so two extractions from
+/// the same tensor are identical.
+pub fn extract(w: &mut Tensor, frac: f32) -> OutlierTable {
+    let (rows, cols) = w.dims2();
+    let numel = rows * cols;
+    let k = ((numel as f64) * (frac.max(0.0) as f64)).ceil() as usize;
+    let k = k.min(numel);
+    let mut table = OutlierTable {
+        n_rows: rows,
+        n_cols: cols,
+        row_ptr: vec![0u32; rows + 1],
+        col_idx: Vec::with_capacity(k),
+        values: Vec::with_capacity(k),
+    };
+    if k == 0 {
+        return table;
+    }
+    let mut order: Vec<u32> = (0..numel as u32).collect();
+    order.sort_unstable_by(|&a, &b| {
+        let (xa, xb) = (w.data[a as usize].abs(), w.data[b as usize].abs());
+        xb.partial_cmp(&xa)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut sel = order[..k].to_vec();
+    sel.sort_unstable();
+    for &lin in &sel {
+        let (r, c) = (lin as usize / cols, lin as usize % cols);
+        table.row_ptr[r + 1] += 1;
+        table.col_idx.push(c as u32);
+        table.values.push(w.data[lin as usize]);
+        w.data[lin as usize] = 0.0;
+    }
+    for r in 0..rows {
+        table.row_ptr[r + 1] += table.row_ptr[r];
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::matmul::matmul_bt;
+    use crate::util::check::llmish_values;
+    use crate::util::rng::Pcg32;
+
+    fn llmish(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        Tensor::new(&[rows, cols], llmish_values(&mut rng, rows * cols, 1.0, 0.05))
+    }
+
+    #[test]
+    fn extract_takes_exactly_the_largest() {
+        let mut w = llmish(8, 32, 1);
+        let orig = w.clone();
+        let t = extract(&mut w, 0.05);
+        let k = (8.0 * 32.0 * 0.05f64).ceil() as usize;
+        assert_eq!(t.nnz(), k);
+        assert_eq!(t.row_ptr.len(), 9);
+        assert_eq!(*t.row_ptr.last().unwrap() as usize, k);
+        // every extracted value matches the original and was zeroed
+        let mut removed_min = f32::INFINITY;
+        for r in 0..8 {
+            for i in t.row_ptr[r] as usize..t.row_ptr[r + 1] as usize {
+                let c = t.col_idx[i] as usize;
+                assert_eq!(t.values[i], orig.row(r)[c]);
+                assert_eq!(w.row(r)[c], 0.0);
+                removed_min = removed_min.min(t.values[i].abs());
+            }
+        }
+        // nothing left behind is larger than the smallest extracted value
+        let remaining_max = w.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert!(remaining_max <= removed_min);
+        // base + table reconstructs the original exactly
+        let mut recon = w.clone();
+        for r in 0..8 {
+            for i in t.row_ptr[r] as usize..t.row_ptr[r + 1] as usize {
+                recon.row_mut(r)[t.col_idx[i] as usize] = t.values[i];
+            }
+        }
+        assert_eq!(recon.data, orig.data);
+    }
+
+    #[test]
+    fn extract_is_deterministic() {
+        let mut a = llmish(6, 48, 3);
+        let mut b = a.clone();
+        assert_eq!(extract(&mut a, 0.009), extract(&mut b, 0.009));
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn zero_fraction_is_empty_and_apply_is_identity() {
+        let mut w = llmish(4, 16, 5);
+        let orig = w.clone();
+        let t = extract(&mut w, 0.0);
+        assert_eq!(t.nnz(), 0);
+        assert_eq!(w.data, orig.data);
+        let act = llmish(3, 16, 6);
+        let mut out = llmish(3, 4, 7);
+        let before = out.clone();
+        t.apply(&act, &mut out);
+        assert_eq!(out.data, before.data);
+    }
+
+    #[test]
+    fn apply_matches_dense_outlier_matmul() {
+        let mut w = llmish(8, 32, 11);
+        let orig = w.clone();
+        let t = extract(&mut w, 0.02);
+        // the outlier-only dense matrix is the original minus the residual
+        let mut sparse = Tensor::zeros(&[8, 32]);
+        for i in 0..orig.numel() {
+            sparse.data[i] = orig.data[i] - w.data[i];
+        }
+        let act = llmish(5, 32, 12);
+        let mut out = Tensor::zeros(&[5, 8]);
+        t.apply(&act, &mut out);
+        let dense = matmul_bt(&act, &sparse);
+        for (a, b) in out.data.iter().zip(&dense.data) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn apply_is_batch_invariant() {
+        // row i of a batched apply must equal a single-row apply bit for bit
+        let mut w = llmish(8, 32, 21);
+        let t = extract(&mut w, 0.02);
+        let act = llmish(4, 32, 22);
+        let mut batched = Tensor::zeros(&[4, 8]);
+        t.apply(&act, &mut batched);
+        for i in 0..4 {
+            let one = Tensor::new(&[1, 32], act.row(i).to_vec());
+            let mut out = Tensor::zeros(&[1, 8]);
+            t.apply(&one, &mut out);
+            assert_eq!(out.data, batched.row(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut w = llmish(8, 32, 31);
+        let t = extract(&mut w, 0.02);
+        assert_eq!(t.bytes(), (8 + 1) * 4 + t.nnz() * 8);
+        assert!(t.frac() > 0.0 && t.frac() < 0.03);
+    }
+}

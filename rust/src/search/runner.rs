@@ -82,6 +82,14 @@ impl SearchResult {
             .collect()
     }
 
+    /// The best trial's assignment materialised as a deployable
+    /// [`QuantPlan`] (per-site formats populated for every GEMM site).
+    /// `None` when the search produced no trials. Pair with
+    /// [`crate::model::plan_file::save`] to emit a plan artifact.
+    pub fn best_plan(&self) -> Option<QuantPlan> {
+        self.best.as_ref().map(|t| self.space.plan_of(&t.assignment))
+    }
+
     /// Aggregate the profile per layer (mean over the layer's dims).
     pub fn layer_bit_profile(&self, n_layers: usize) -> Vec<f64> {
         let profile = self.bitwidth_profile();

@@ -1,0 +1,302 @@
+//! End-to-end tests for the deployable-plan subsystem: plan artifacts
+//! round-trip bit-exactly and corrupt files are rejected; a TPE-searched
+//! mixed-precision plan serves through the engine bit-identically to its
+//! in-memory twin; and the dense-and-sparse outlier overlay is exact,
+//! ISA/thread-invariant, and actually cheaper than it looks.
+
+use bbq::coordinator::{run_batched, Request, ServerConfig};
+use bbq::data::tasks::{evaluate, generate, Task};
+use bbq::data::vocab::Vocab;
+use bbq::kernels::{self, Backend};
+use bbq::model::config::ModelConfig;
+use bbq::model::params::Params;
+use bbq::model::plan::{PlanError, QuantPlan, WeightStore};
+use bbq::model::plan_file::{self, PlanFileError};
+use bbq::model::Model;
+use bbq::quant::config::{presets, GemmQuant, QFormat};
+use bbq::quant::outlier::extract;
+use bbq::quant::{fake_quant, qtensor};
+use bbq::runtime::pool;
+use bbq::search::objective::Objective;
+use bbq::search::runner::{run_search, SearchConfig, SearchResult};
+use bbq::search::space::SearchSpace;
+use bbq::tensor::Tensor;
+use bbq::util::check::llmish_values;
+use bbq::util::rng::Pcg32;
+
+fn nano_params() -> Params {
+    Params::init(&ModelConfig::preset("nano"), 42)
+}
+
+/// A deliberately mixed plan: three BFP widths cycling over every site.
+fn mixed_plan(cfg: &ModelConfig) -> QuantPlan {
+    let mut plan = QuantPlan::uniform(presets::bfp_w(6));
+    for l in 0..cfg.n_layers {
+        for g in 1..=8u8 {
+            let fmt = presets::bfp_w([4u32, 6, 8][(l + g as usize) % 3]);
+            plan.set(l, g, GemmQuant::uniform(fmt));
+        }
+    }
+    plan
+}
+
+#[test]
+fn plan_file_roundtrip_is_bit_exact() {
+    let cfg = ModelConfig::preset("nano");
+    let plan = mixed_plan(&cfg).with_outliers(0.005);
+    let dir = std::env::temp_dir().join("bbq_it_plan_rt");
+    let path = dir.join("mixed.bbqp");
+    plan_file::save(&plan, &cfg, &path, &["integration test".to_string()]).unwrap();
+    let back = plan_file::load(&path, &cfg).unwrap();
+    assert_eq!(back, plan);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_file_rejects_corruption_truncation_and_wrong_model() {
+    let nano = ModelConfig::preset("nano");
+    let micro = ModelConfig::preset("micro");
+    let text = plan_file::to_text(&mixed_plan(&nano), &nano, &[]);
+
+    // not a plan file at all
+    assert!(matches!(
+        plan_file::from_text("GIF89a", &nano),
+        Err(PlanFileError::BadMagic(_))
+    ));
+    // future version
+    assert!(matches!(
+        plan_file::from_text("bbqplan v2\n", &nano),
+        Err(PlanFileError::UnsupportedVersion(2))
+    ));
+    // truncated: cut the file anywhere before the trailer
+    let cut: String = text.lines().take(9).map(|l| format!("{l}\n")).collect();
+    assert!(matches!(
+        plan_file::from_text(&cut, &nano),
+        Err(PlanFileError::Truncated)
+    ));
+    // corrupted: a format name garbled in transit
+    let garbled = text.replace("bfp_e8m5n16", "bfp_oops");
+    assert!(matches!(
+        plan_file::from_text(&garbled, &nano),
+        Err(PlanFileError::Parse { .. })
+    ));
+    // deployed onto the wrong model shape
+    assert!(matches!(
+        plan_file::from_text(&text, &micro),
+        Err(PlanFileError::ShapeMismatch { .. })
+    ));
+    // hand-tampered fingerprint with shape fields left intact
+    let tampered = text.replace(
+        &format!("fingerprint {:016x}", plan_file::shape_fingerprint(&nano)),
+        "fingerprint 00000000deadbeef",
+    );
+    assert!(matches!(
+        plan_file::from_text(&tampered, &nano),
+        Err(PlanFileError::FingerprintMismatch { .. })
+    ));
+    // an unserveable plan is refused at save time, not at deploy time
+    let dir = std::env::temp_dir().join("bbq_it_plan_reject");
+    assert!(matches!(
+        plan_file::save(
+            &QuantPlan::uniform(presets::fixed8()),
+            &nano,
+            &dir.join("bad.bbqp"),
+            &[],
+        ),
+        Err(PlanFileError::Invalid(PlanError::KvIncompatibleFormat { .. }))
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn per_site_plan_matches_uniform_reference_for_every_format() {
+    // A plan that sets the SAME format at every site explicitly must be
+    // bit-identical to the uniform plan — per-site dispatch adds nothing.
+    let params = nano_params();
+    let cfg = params.cfg.clone();
+    let toks = [3usize, 100, 7, 250, 9, 12, 300, 41];
+    for (name, fmt) in presets::table3_formats() {
+        let mut per_site = QuantPlan::uniform(fmt);
+        for l in 0..cfg.n_layers {
+            for g in 1..=8u8 {
+                per_site.set(l, g, GemmQuant::uniform(fmt));
+            }
+        }
+        let a = Model::new(params.clone(), per_site).forward(&toks, None);
+        let b = Model::new(params.clone(), QuantPlan::uniform(fmt)).forward(&toks, None);
+        assert_eq!(a.data, b.data, "per-site vs uniform mismatch under {name}");
+    }
+}
+
+#[test]
+fn mixed_plan_identical_across_weight_stores() {
+    let params = nano_params();
+    let plan = mixed_plan(&params.cfg).with_outliers(0.005);
+    let toks = [5usize, 9, 200, 17, 63, 311];
+    let packed = Model::new(params.clone(), plan.clone().with_store(WeightStore::PackedAuto));
+    let dense = Model::new(params, plan.with_store(WeightStore::DenseF32));
+    assert_eq!(
+        packed.forward(&toks, None).data,
+        dense.forward(&toks, None).data,
+        "mixed plan + overlay diverged between packed and dense stores"
+    );
+}
+
+/// A tiny TPE search over BFP word lengths on nano-sized params — shared
+/// by the serving test below. Untrained weights: the tests exercise the
+/// pipeline's plumbing, not model quality.
+fn tiny_search(params: &Params) -> SearchResult {
+    let vocab = Vocab::build();
+    let task = Task::Lambada;
+    let exs = generate(task, &vocab, 555, 8);
+    let fp32_acc = evaluate(&Model::new(params.clone(), QuantPlan::fp32()), task, &exs, 2).accuracy;
+    let space = SearchSpace::bfp_bits(&params.cfg, &[3, 4, 5, 6, 8]);
+    let sc = SearchConfig {
+        trials: 10,
+        seq: 32,
+        threads: 2,
+        seed: 7,
+        objective: Objective::software(0.02),
+        ..Default::default()
+    };
+    run_search(params, space, task, &exs, fp32_acc, &sc)
+}
+
+#[test]
+fn searched_plan_file_serves_bit_identically_to_in_memory_plan() {
+    let params = nano_params();
+    let plan = tiny_search(&params)
+        .best_plan()
+        .expect("search produced a best trial")
+        .with_outliers(0.005);
+
+    // the emitted plan genuinely mixes precisions
+    let mut widths: Vec<u32> = plan.per_site.values().map(|q| q.weight.word_bits()).collect();
+    widths.sort_unstable();
+    widths.dedup();
+    assert!(
+        widths.len() >= 3,
+        "expected >=3 distinct weight bit-widths, got {widths:?}"
+    );
+
+    // search -> artifact -> serve: the file-loaded model is the in-memory one
+    let dir = std::env::temp_dir().join("bbq_it_plan_serve");
+    let path = dir.join("searched.bbqp");
+    plan_file::save(&plan, &params.cfg, &path, &[]).unwrap();
+    let from_file = Model::from_plan_file(params.clone(), &path).unwrap();
+    let in_memory = Model::new(params.clone(), plan);
+    let toks = [3usize, 100, 7, 250, 9];
+    assert_eq!(
+        from_file.forward(&toks, None).data,
+        in_memory.forward(&toks, None).data,
+        "file-loaded plan forward diverged from in-memory plan"
+    );
+    let reqs: Vec<Request> = (0..6)
+        .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], 5))
+        .collect();
+    let (rf, _) = run_batched(&from_file, reqs.clone(), &ServerConfig::default());
+    let (rm, _) = run_batched(&in_memory, reqs, &ServerConfig::default());
+    for (a, b) in rf.iter().zip(&rm) {
+        assert_eq!(a.tokens, b.tokens, "request {} tokens diverged", a.id);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zero_outlier_fraction_is_exactly_no_overlay() {
+    let params = nano_params();
+    let toks = [3usize, 100, 7, 250];
+    let with_zero = Model::new(
+        params.clone(),
+        QuantPlan::uniform(presets::bfp_w(4)).with_outliers(0.0),
+    );
+    let without = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)));
+    assert_eq!(
+        with_zero.forward(&toks, None).data,
+        without.forward(&toks, None).data
+    );
+}
+
+#[test]
+fn overlay_forward_bit_identical_across_isa_and_threads() {
+    let params = nano_params();
+    let model = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)).with_outliers(0.005));
+    let toks = [3usize, 100, 7, 250, 9, 12];
+    let scalar = kernels::with_isa(Backend::Scalar, || model.forward(&toks, None));
+    let active = model.forward(&toks, None);
+    assert_eq!(scalar.data, active.data, "overlay diverged between ISAs");
+    let t1 = pool::with_threads(1, || model.forward(&toks, None));
+    let t4 = pool::with_threads(4, || model.forward(&toks, None));
+    assert_eq!(t1.data, t4.data, "overlay diverged with thread count");
+}
+
+#[test]
+fn overlay_reduces_weight_reconstruction_error() {
+    // The density mechanism behind the ppl gate in BENCH_plan.json:
+    // pulling the top-|w| fraction out of the BFP blocks both stores those
+    // values exactly AND lowers the shared block exponents, so the
+    // residual quantises finer. Frobenius reconstruction error must drop.
+    let fmt = presets::bfp_w(4);
+    let mut rng = Pcg32::new(9);
+    let w = Tensor::new(&[48, 192], llmish_values(&mut rng, 48 * 192, 0.3, 0.02));
+    let plain = fake_quant(&w, fmt);
+    let err_plain: f64 = w
+        .data
+        .iter()
+        .zip(&plain.data)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    let mut residual = w.clone();
+    let table = extract(&mut residual, 0.005);
+    let packed = qtensor::decode(&qtensor::encode(&residual, fmt));
+    // reconstruct: packed residual + exact outliers
+    let mut recon = packed.data.clone();
+    for r in 0..table.n_rows {
+        for t in table.row_ptr[r] as usize..table.row_ptr[r + 1] as usize {
+            recon[r * table.n_cols + table.col_idx[t] as usize] += table.values[t];
+        }
+    }
+    let err_overlay: f64 = w
+        .data
+        .iter()
+        .zip(&recon)
+        .map(|(&a, &b)| ((a - b) as f64).powi(2))
+        .sum();
+    assert!(
+        err_overlay < err_plain,
+        "overlay error {err_overlay} not below plain {err_plain}"
+    );
+}
+
+#[test]
+fn overlay_keeps_packed_density_over_4x() {
+    let params = nano_params();
+    let model = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)).with_outliers(0.005));
+    let wm = model.weight_memory();
+    assert!(
+        wm.ratio() >= 4.0,
+        "bfp4 + 0.5% overlay density {:.2}x below 4x ({} / {} bytes)",
+        wm.ratio(),
+        wm.dense_f32_bytes,
+        wm.resident_bytes
+    );
+    let (by_format, outlier_bytes) = model.weight_memory_by_format();
+    assert!(outlier_bytes > 0, "overlay side tables should be resident");
+    let sum: usize = by_format.iter().map(|(_, b)| b).sum();
+    assert_eq!(sum + outlier_bytes, wm.resident_bytes);
+}
+
+#[test]
+fn kv_incompatible_plan_rejected_like_kv_config() {
+    // The typed per-site error mirrors KvConfig::validate: per-tensor
+    // scaled formats cannot serve the paged KV sites ④⑤.
+    let cfg = ModelConfig::preset("nano");
+    let mut plan = mixed_plan(&cfg);
+    plan.set(1, 5, GemmQuant::uniform(QFormat::Fixed { w: 8 }));
+    match plan.validate(&cfg) {
+        Err(PlanError::KvIncompatibleFormat { layer, gemm, .. }) => {
+            assert_eq!((layer, gemm), (1, 5));
+        }
+        other => panic!("expected KvIncompatibleFormat, got {other:?}"),
+    }
+}
