@@ -19,8 +19,11 @@
 //! decode, quantised-KV capacity multiplier, warm-vs-cold prefix-cached
 //! prefill), and the plan-pipeline section writes `BENCH_plan.json`
 //! (search → artifact → serve bit-identity, distinct bit-width count,
-//! BFP4-plus-outlier-overlay perplexity vs plain BFP4, packed density)
-//! next to the manifest — CI uploads all five as bench artifacts. The SIMD section measures the runtime-dispatched
+//! BFP4-plus-outlier-overlay perplexity vs plain BFP4, packed density),
+//! and the speculative section writes `BENCH_spec.json` (self-drafting
+//! BFP4-draft / BFP6-target decode vs plain decode tok/s, acceptance
+//! rate, accepted tokens per target step)
+//! next to the manifest — CI uploads all six as bench artifacts. The SIMD section measures the runtime-dispatched
 //! microkernels against the forced-scalar reference at the three call
 //! shapes (m == 1 decode GEMM, m ≥ 4 prefill panel GEMM, raw block
 //! decode) and threads the ratios into BENCH_decode.json and
@@ -31,10 +34,15 @@
 //! backend is active; paged-f32 decode ≥ 0.90× dense-equivalent;
 //! quantised-KV capacity ≥ 2×; prefix-cached prefill ≥ 2× cold; searched
 //! plan mixes ≥ 3 bit-widths and reloads bit-identically; BFP4 + outlier
-//! overlay beats plain BFP4 perplexity at ≥ 4× density) are hard
-//! failures instead of scrolled-past warnings.
+//! overlay beats plain BFP4 perplexity at ≥ 4× density; the speculative
+//! greedy stream is bit-identical to target-only decode and accepts ≥ 1.0
+//! draft tokens per target step) are hard failures instead of
+//! scrolled-past warnings.
 
-use bbq::coordinator::{run_batched, Engine, Metrics, Request, ServerConfig};
+use bbq::coordinator::experiment::get_or_train;
+use bbq::coordinator::{
+    run_batched, run_batched_with_draft, Engine, Metrics, Request, ServerConfig,
+};
 use bbq::kernels::{self, Backend};
 use bbq::model::config::ModelConfig;
 use bbq::model::kv_cache::BatchedDecodeSession;
@@ -196,6 +204,7 @@ fn main() {
     bench_forward_unified(quick, &mut gates, &simd);
     bench_kv(quick, &mut gates);
     bench_plan(quick, &mut gates);
+    bench_spec(quick, &mut gates);
 
     if !gates.is_empty() {
         println!("\nbench gates below their acceptance bars:");
@@ -453,6 +462,43 @@ fn bench_decode_engine(quick: bool, gates: &mut Vec<String>, simd: &SimdBench) {
             "engine: EngineHandle path {engine_ratio:.2}x < 0.90x of run_batched"
         ));
     }
+    // fused expand-into-GEMM vs the staged decode-then-dot path at the
+    // m == 1 decode shape: same packed weights, same reduce tree — the
+    // only difference is whether every block round-trips through an f32
+    // staging slab before the multiply
+    let (dk, dn) = (1024usize, 1024usize);
+    let mut drng = Pcg32::new(11);
+    let x: Vec<f32> = (0..dk).map(|_| drng.normal_with(0.0, 1.0)).collect();
+    let qw = encode(&Tensor::randn(&[dn, dk], 0.3, &mut drng), fmt);
+    assert!(qw.fused_dot_supported(), "BFP n=16 rows must take the fused path");
+    let dbudget = if quick { 30.0 } else { 300.0 };
+    let dmacs = (dk * dn) as f64;
+    let r_fused = Bench::new(&format!("decode_dot/fused_1x{dk}x{dn}"))
+        .items(dmacs)
+        .budget_ms(dbudget)
+        .run(|| {
+            let mut acc = 0.0f32;
+            for j in 0..dn {
+                acc += qw.dot_row(j, black_box(&x));
+            }
+            black_box(acc);
+        });
+    println!("{}", r_fused.line());
+    let mut slab = vec![0f32; dk];
+    let r_staged = Bench::new(&format!("decode_dot/staged_1x{dk}x{dn}"))
+        .items(dmacs)
+        .budget_ms(dbudget)
+        .run(|| {
+            let mut acc = 0.0f32;
+            for j in 0..dn {
+                qw.decode_row_into(j, &mut slab);
+                acc += kernels::dot(&slab, black_box(&x));
+            }
+            black_box(acc);
+        });
+    println!("{}", r_staged.line());
+    let fused_vs_staged = r_staged.min_ns / r_fused.min_ns.max(1e-9);
+    println!("  fused m=1 dot vs staged decode-then-dot: {fused_vs_staged:.2}x");
     let j = Json::obj(vec![
         ("bench", Json::Str("decode_engine".into())),
         ("model", Json::Str(cfg.name.clone())),
@@ -476,6 +522,11 @@ fn bench_decode_engine(quick: bool, gates: &mut Vec<String>, simd: &SimdBench) {
         ("simd_decode_gemm_mac_per_s", Json::Num(simd.simd_decode_gemm_mac_per_s)),
         ("scalar_decode_gemm_mac_per_s", Json::Num(simd.scalar_decode_gemm_mac_per_s)),
         ("simd_vs_scalar_decode", Json::Num(simd.simd_vs_scalar_decode)),
+        // fused expand-into-GEMM vs the staged decode-then-dot reference
+        // at the m == 1 decode shape (see above)
+        ("fused_dot_mac_per_s", Json::Num(r_fused.throughput().unwrap_or(0.0))),
+        ("staged_dot_mac_per_s", Json::Num(r_staged.throughput().unwrap_or(0.0))),
+        ("fused_vs_staged_decode_dot", Json::Num(fused_vs_staged)),
         ("quick", Json::Bool(quick)),
     ]);
     let path = "BENCH_decode.json";
@@ -923,5 +974,119 @@ fn bench_plan(quick: bool, gates: &mut Vec<String>) {
     ]);
     let path = "BENCH_plan.json";
     std::fs::write(path, j.to_string() + "\n").expect("write BENCH_plan.json");
+    println!("  wrote {path}");
+}
+
+/// Self-drafting speculative decoding: the same trained nano weights
+/// serve twice — a BFP4 draft proposes `spec_k` tokens per round from its
+/// own paged KV, the BFP6 target verifies all proposals plus one bonus
+/// row in a single chunked step. Trained weights matter here: the
+/// draft/target agreement rate (and so the whole win) is a property of a
+/// real model, not of noise. Writes BENCH_spec.json. Under `--check` two
+/// bars are hard failures: the speculative greedy stream must be
+/// bit-identical to target-only decode, and the target must accept at
+/// least 1.0 draft tokens per verify step on average (below that the
+/// chunked verify is pure overhead).
+fn bench_spec(quick: bool, gates: &mut Vec<String>) {
+    println!("\n== self-drafting speculative decode (nano, BFP6 target / BFP4 draft) ==");
+    let target_fmt = presets::bfp_w(6);
+    let draft_fmt = presets::bfp_w(4);
+    let params = get_or_train("nano", 600, true);
+    let target = Model::new(params.clone(), QuantPlan::uniform(target_fmt));
+    let draft = Model::new(params, QuantPlan::uniform(draft_fmt));
+    let new_toks = if quick { 12 } else { 24 };
+    let reps = if quick { 2 } else { 3 };
+    let n_req = 4usize;
+    let mk_reqs = || -> Vec<Request> {
+        (0..n_req)
+            .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], new_toks))
+            .collect()
+    };
+    let server_cfg = ServerConfig {
+        max_batch: n_req,
+        ..ServerConfig::default()
+    };
+    // plain target-only decode: the reference stream and the baseline
+    let mut plain_tps = 0.0f64;
+    let mut plain_resps = Vec::new();
+    for _ in 0..reps {
+        let (resps, m) = run_batched(&target, mk_reqs(), &server_cfg);
+        plain_tps = plain_tps.max(m.throughput_tps());
+        plain_resps = resps;
+    }
+    // speculative: draft proposes, target verifies in one chunked step
+    let mut spec_tps = 0.0f64;
+    let mut spec_resps = Vec::new();
+    let mut spec_metrics: Option<Metrics> = None;
+    for _ in 0..reps {
+        let (resps, m) = run_batched_with_draft(&target, &draft, mk_reqs(), &server_cfg);
+        if spec_metrics.is_none() || m.throughput_tps() > spec_tps {
+            spec_tps = m.throughput_tps();
+            spec_metrics = Some(m);
+        }
+        spec_resps = resps;
+    }
+    let m = spec_metrics.expect("at least one speculative rep ran");
+    let identical = plain_resps.len() == spec_resps.len()
+        && plain_resps
+            .iter()
+            .zip(&spec_resps)
+            .all(|(a, b)| a.tokens == b.tokens && a.finish == b.finish);
+    let accepted_per_step = if m.spec_rounds > 0 {
+        m.spec_accepted as f64 / m.spec_rounds as f64
+    } else {
+        0.0
+    };
+    let ratio = spec_tps / plain_tps.max(1e-12);
+    println!("  plain {plain_tps:.1} tok/s | speculative {spec_tps:.1} tok/s ({ratio:.2}x)");
+    println!(
+        "  rounds {} (fallback {}) | proposed {} accepted {} rejected {} | \
+         acceptance {:.2} | accepted/step {accepted_per_step:.2} | tokens/target-step {:.2}",
+        m.spec_rounds,
+        m.spec_fallback_steps,
+        m.spec_proposed,
+        m.spec_accepted,
+        m.spec_rejected,
+        m.spec_acceptance_rate(),
+        m.spec_tokens_per_target_step(),
+    );
+    if !identical {
+        println!("  WARNING: speculative stream diverged from target-only greedy decode");
+        gates.push("spec: speculative greedy stream not bit-identical to target-only decode".into());
+    }
+    if accepted_per_step < 1.0 {
+        println!("  WARNING: accepted tokens per target step below the 1.0 acceptance bar");
+        gates.push(format!(
+            "spec: accepted tokens per target step {accepted_per_step:.2} < 1.0"
+        ));
+    }
+    let j = Json::obj(vec![
+        ("bench", Json::Str("spec".into())),
+        ("model", Json::Str("nano".into())),
+        ("target_format", Json::Str(target_fmt.name())),
+        ("draft_format", Json::Str(draft_fmt.name())),
+        ("spec_k", Json::Num(server_cfg.spec_k as f64)),
+        ("new_tokens_per_request", Json::Num(new_toks as f64)),
+        ("requests", Json::Num(n_req as f64)),
+        ("plain_tps", Json::Num(plain_tps)),
+        ("spec_tps", Json::Num(spec_tps)),
+        ("spec_vs_plain", Json::Num(ratio)),
+        ("spec_rounds", Json::Num(m.spec_rounds as f64)),
+        ("spec_fallback_steps", Json::Num(m.spec_fallback_steps as f64)),
+        ("spec_proposed", Json::Num(m.spec_proposed as f64)),
+        ("spec_accepted", Json::Num(m.spec_accepted as f64)),
+        ("spec_rejected", Json::Num(m.spec_rejected as f64)),
+        ("acceptance_rate", Json::Num(m.spec_acceptance_rate())),
+        ("accepted_per_target_step", Json::Num(accepted_per_step)),
+        ("tokens_per_target_step", Json::Num(m.spec_tokens_per_target_step())),
+        ("bit_identical", Json::Bool(identical)),
+        (
+            "draft_resident_weight_bytes",
+            Json::Num(m.draft_weight_memory.resident_bytes as f64),
+        ),
+        ("quick", Json::Bool(quick)),
+    ]);
+    let path = "BENCH_spec.json";
+    std::fs::write(path, j.to_string() + "\n").expect("write BENCH_spec.json");
     println!("  wrote {path}");
 }

@@ -38,7 +38,7 @@
 use super::metrics::Metrics;
 use super::server::{FinishReason, Request, Response, ServerConfig};
 use crate::model::kv_cache::{sample_top_k, BatchedDecodeSession};
-use crate::model::Model;
+use crate::model::{KvStats, Model, SpecStats, SpeculativeSession};
 use crate::util::rng::Pcg32;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -333,6 +333,22 @@ impl Engine {
         Engine { handle, join }
     }
 
+    /// [`Self::start`] with self-drafting speculative decoding: greedy
+    /// requests decode through draft-propose / chunked-verify rounds
+    /// (`cfg.spec_k` proposals per round), bit-identical to target-only
+    /// greedy decode; temperature > 0 requests take the plain path
+    /// untouched. `draft` is typically the same weights under a lower-bit
+    /// plan (BFP4 drafting for a BFP6 target).
+    pub fn start_with_draft(model: Arc<Model>, draft: Arc<Model>, cfg: ServerConfig) -> Engine {
+        cfg.validate();
+        let (handle, rx, shared) = channels(&cfg);
+        let join = std::thread::Builder::new()
+            .name("bbq-engine".into())
+            .spawn(move || EngineCore::new_with_draft(&model, Some(&draft), cfg, rx, shared).run())
+            .expect("spawn engine scheduler thread");
+        Engine { handle, join }
+    }
+
     /// A new [`EngineHandle`] feeding this engine (clone freely; hand to
     /// other threads).
     pub fn handle(&self) -> EngineHandle {
@@ -444,12 +460,90 @@ fn admit_request(sub: Submission) -> Admission {
     Admission::Run(Box::new(seq))
 }
 
+/// The scheduler's execution backend: a plain batched session, or a
+/// draft + target [`SpeculativeSession`] pair when the engine was started
+/// with a draft model. Both expose the same slot-pool surface; only the
+/// speculative variant supports [`Self::round`].
+enum Exec<'m> {
+    Plain(BatchedDecodeSession<'m>),
+    Spec(SpeculativeSession<'m>),
+}
+
+impl<'m> Exec<'m> {
+    fn max_context(&self) -> usize {
+        match self {
+            Exec::Plain(s) => s.max_context(),
+            Exec::Spec(s) => s.max_context(),
+        }
+    }
+
+    fn pos(&self, slot: usize) -> usize {
+        match self {
+            Exec::Plain(s) => s.pos(slot),
+            Exec::Spec(s) => s.pos(slot),
+        }
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        match self {
+            Exec::Plain(s) => s.reset_slot(slot),
+            Exec::Spec(s) => s.reset_slot(slot),
+        }
+    }
+
+    fn attach_prefix(&mut self, slot: usize, prompt: &[usize]) -> usize {
+        match self {
+            Exec::Plain(s) => s.attach_prefix(slot, prompt),
+            Exec::Spec(s) => s.attach_prefix(slot, prompt),
+        }
+    }
+
+    fn kv_stats(&self) -> KvStats {
+        match self {
+            Exec::Plain(s) => s.kv_stats(),
+            Exec::Spec(s) => s.kv_stats(),
+        }
+    }
+
+    fn step_chunked(
+        &mut self,
+        batch: &[(usize, &[usize])],
+        needs_logits: Option<&[bool]>,
+    ) -> Vec<Vec<f32>> {
+        match self {
+            Exec::Plain(s) => s.step_chunked(batch, needs_logits),
+            Exec::Spec(s) => s.step_chunked(batch, needs_logits),
+        }
+    }
+
+    fn round(&mut self, slot: usize, next: usize, budget: usize) -> Vec<usize> {
+        match self {
+            Exec::Spec(s) => s.round(slot, next, budget),
+            Exec::Plain(_) => unreachable!("speculative round on a plain engine"),
+        }
+    }
+
+    fn spec_stats(&self) -> Option<SpecStats> {
+        match self {
+            Exec::Plain(_) => None,
+            Exec::Spec(s) => Some(s.spec_stats()),
+        }
+    }
+
+    fn draft_kv_bytes(&self) -> usize {
+        match self {
+            Exec::Plain(_) => 0,
+            Exec::Spec(s) => s.draft_kv_bytes(),
+        }
+    }
+}
+
 /// The scheduler loop body, generic over the model borrow so it runs both
 /// detached over an `Arc<Model>` ([`Engine::start`]) and on a scoped
 /// thread over `&Model` ([`super::server::run_batched`]).
 pub(crate) struct EngineCore<'m> {
     cfg: ServerConfig,
-    session: BatchedDecodeSession<'m>,
+    exec: Exec<'m>,
     slots: Vec<Option<Box<Active>>>,
     queue: VecDeque<Box<Submission>>,
     rx: Receiver<Msg>,
@@ -466,6 +560,16 @@ impl<'m> EngineCore<'m> {
         rx: Receiver<Msg>,
         shared: Arc<Shared>,
     ) -> EngineCore<'m> {
+        EngineCore::new_with_draft(model, None, cfg, rx, shared)
+    }
+
+    pub(crate) fn new_with_draft(
+        model: &'m Model,
+        draft: Option<&'m Model>,
+        cfg: ServerConfig,
+        rx: Receiver<Msg>,
+        shared: Arc<Shared>,
+    ) -> EngineCore<'m> {
         cfg.validate();
         let n = cfg.max_batch;
         let mut metrics = Metrics::new();
@@ -476,8 +580,15 @@ impl<'m> EngineCore<'m> {
         metrics.weight_bytes_by_format = by_format;
         metrics.outlier_bytes = outlier_bytes;
         metrics.isa = crate::kernels::active().name().to_string();
+        let exec = match draft {
+            None => Exec::Plain(BatchedDecodeSession::new(model, &cfg.session_config())),
+            Some(d) => {
+                metrics.draft_weight_memory = d.weight_memory();
+                Exec::Spec(SpeculativeSession::new(model, d, &cfg.session_config(), cfg.spec_k))
+            }
+        };
         EngineCore {
-            session: BatchedDecodeSession::new(model, &cfg.session_config()),
+            exec,
             slots: (0..n).map(|_| None).collect(),
             queue: VecDeque::new(),
             metrics,
@@ -612,7 +723,7 @@ impl<'m> EngineCore<'m> {
             };
             if hit {
                 let seq = self.slots[slot].take().unwrap();
-                self.session.reset_slot(slot);
+                self.exec.reset_slot(slot);
                 self.complete(*seq, FinishReason::Cancelled);
             }
         }
@@ -635,13 +746,13 @@ impl<'m> EngineCore<'m> {
                 match admit_request(*sub) {
                     Admission::Run(mut seq) => {
                         announce(&seq);
-                        self.session.reset_slot(slot);
+                        self.exec.reset_slot(slot);
                         // prefix-cache lookup: map cached prefill pages for
                         // the longest matching prompt prefix into the slot
                         // and skip feeding those rows (bit-identical reuse;
                         // at least the final prompt row always recomputes,
                         // so admission still ends on a fresh logit row)
-                        seq.fed = self.session.attach_prefix(slot, &seq.req.prompt);
+                        seq.fed = self.exec.attach_prefix(slot, &seq.req.prompt);
                         self.slots[slot] = Some(seq);
                     }
                     Admission::Done(seq, reason) => {
@@ -656,15 +767,20 @@ impl<'m> EngineCore<'m> {
     /// One fused step over every active slot: prefilling slots feed a
     /// chunk of up to `prefill_chunk` prompt rows, decoding slots one row;
     /// the logit mask keeps only each slot's final prompt row and decode
-    /// rows (intermediate prompt logits are discarded anyway). Returns
-    /// false when nothing is in flight.
+    /// rows (intermediate prompt logits are discarded anyway). On a
+    /// speculative engine, greedy decode-phase slots leave the fused batch
+    /// and run draft-propose / chunked-verify rounds instead (one round
+    /// per slot per step — the verify is itself a chunked multi-row
+    /// target step). Returns false when nothing is in flight.
     fn step(&mut self) -> bool {
-        let cap = self.session.max_context();
+        let cap = self.exec.max_context();
         let chunk = self.cfg.prefill_chunk;
         let n_slots = self.slots.len();
+        let speculative = matches!(self.exec, Exec::Spec(_));
         let mut batch: Vec<(usize, &[usize])> = Vec::with_capacity(n_slots);
         let mut needs_logits: Vec<bool> = Vec::with_capacity(n_slots);
         let mut meta: Vec<(usize, usize)> = Vec::with_capacity(n_slots); // (slot, rows fed)
+        let mut spec_slots: Vec<usize> = Vec::new();
         let mut prefill_rows = 0usize;
         for (s, a) in self.slots.iter().enumerate() {
             if let Some(a) = a {
@@ -675,6 +791,11 @@ impl<'m> EngineCore<'m> {
                     needs_logits.extend((a.fed..end).map(|j| j + 1 == plen));
                     meta.push((s, end - a.fed));
                     prefill_rows += end - a.fed;
+                } else if speculative && a.req.params.temperature <= 0.0 {
+                    // greedy decode on the speculative engine: rounds run
+                    // after the fused batch (acceptance is only defined
+                    // for argmax decoding; sampled requests stay below)
+                    spec_slots.push(s);
                 } else {
                     batch.push((s, std::slice::from_ref(&a.next_input)));
                     needs_logits.push(true);
@@ -682,70 +803,124 @@ impl<'m> EngineCore<'m> {
                 }
             }
         }
-        if batch.is_empty() {
+        if batch.is_empty() && spec_slots.is_empty() {
             return false;
         }
-        let logits = self.session.step_chunked(&batch, Some(&needs_logits));
-        drop(batch); // release the borrow of the slots' prompts
-        self.metrics.engine_steps += 1;
-        self.metrics.slot_steps += meta.len();
-        if prefill_rows > 0 {
-            self.metrics.prefill_steps += 1;
-            self.metrics.prefill_rows += prefill_rows;
-        }
-        let mut row0 = 0usize;
-        for &(slot, rows) in &meta {
-            let last = row0 + rows - 1; // the slot's final row this step
-            row0 += rows;
-            let seq = self.slots[slot].as_mut().unwrap();
-            let was_prefill = seq.fed < seq.req.prompt.len();
-            seq.fed += rows;
-            if was_prefill {
-                if seq.fed < seq.req.prompt.len() {
-                    continue; // still prefilling: every row was masked
-                }
-            } else {
-                self.metrics.decode_rows += 1;
+        if !batch.is_empty() {
+            let logits = self.exec.step_chunked(&batch, Some(&needs_logits));
+            drop(batch); // release the borrow of the slots' prompts
+            self.metrics.engine_steps += 1;
+            self.metrics.slot_steps += meta.len();
+            if prefill_rows > 0 {
+                self.metrics.prefill_steps += 1;
+                self.metrics.prefill_rows += prefill_rows;
             }
-            // `last` is the final prompt row (prefill just completed) or
-            // the decode row: its logits belong to the newest token
-            let max_new = seq.req.params.max_new_tokens;
-            let more = seq.out.len() < max_new && self.session.pos(slot) < cap;
-            let finished: Option<FinishReason> = if more {
-                let next = sample_top_k(
-                    &logits[last],
-                    seq.req.params.temperature,
-                    seq.req.params.top_k,
-                    &mut seq.rng,
-                );
-                seq.out.push(next);
-                let listener = seq.events.send(TokenEvent::Token(next));
-                if seq.req.params.stop_tokens.contains(&next) {
-                    Some(FinishReason::StopToken)
-                } else if seq.out.len() >= max_new {
-                    // the final sampled token needs no further forward pass
-                    Some(FinishReason::MaxTokens)
-                } else if listener.is_err() {
-                    // the RequestHandle was dropped without cancel():
-                    // nobody can observe further tokens, so free the slot
-                    // exactly like a cancellation
-                    Some(FinishReason::Cancelled)
+            let mut row0 = 0usize;
+            for &(slot, rows) in &meta {
+                let last = row0 + rows - 1; // the slot's final row this step
+                row0 += rows;
+                let seq = self.slots[slot].as_mut().unwrap();
+                let was_prefill = seq.fed < seq.req.prompt.len();
+                seq.fed += rows;
+                if was_prefill {
+                    if seq.fed < seq.req.prompt.len() {
+                        continue; // still prefilling: every row was masked
+                    }
                 } else {
-                    seq.next_input = next;
-                    None
+                    self.metrics.decode_rows += 1;
                 }
-            } else if seq.out.len() < max_new {
-                Some(FinishReason::ContextFull)
-            } else {
-                Some(FinishReason::MaxTokens)
-            };
-            if let Some(reason) = finished {
-                let seq = self.slots[slot].take().unwrap();
-                self.session.reset_slot(slot); // release the KV rows now
-                self.complete(*seq, reason);
+                // `last` is the final prompt row (prefill just completed) or
+                // the decode row: its logits belong to the newest token
+                let max_new = seq.req.params.max_new_tokens;
+                let more = seq.out.len() < max_new && self.exec.pos(slot) < cap;
+                let finished: Option<FinishReason> = if more {
+                    let next = sample_top_k(
+                        &logits[last],
+                        seq.req.params.temperature,
+                        seq.req.params.top_k,
+                        &mut seq.rng,
+                    );
+                    seq.out.push(next);
+                    let listener = seq.events.send(TokenEvent::Token(next));
+                    if seq.req.params.stop_tokens.contains(&next) {
+                        Some(FinishReason::StopToken)
+                    } else if seq.out.len() >= max_new {
+                        // the final sampled token needs no further forward pass
+                        Some(FinishReason::MaxTokens)
+                    } else if listener.is_err() {
+                        // the RequestHandle was dropped without cancel():
+                        // nobody can observe further tokens, so free the slot
+                        // exactly like a cancellation
+                        Some(FinishReason::Cancelled)
+                    } else {
+                        seq.next_input = next;
+                        None
+                    }
+                } else if seq.out.len() < max_new {
+                    Some(FinishReason::ContextFull)
+                } else {
+                    Some(FinishReason::MaxTokens)
+                };
+                if let Some(reason) = finished {
+                    let seq = self.slots[slot].take().unwrap();
+                    self.exec.reset_slot(slot); // release the KV rows now
+                    self.complete(*seq, reason);
+                }
             }
+        }
+        for &slot in &spec_slots {
+            self.spec_step_slot(slot, cap);
         }
         true
+    }
+
+    /// One speculative round for a greedy decode-phase slot, consuming
+    /// every emitted token exactly as the plain path consumes its one
+    /// sample per step — same stop-token / max-tokens / dropped-listener
+    /// checks in the same order, so the observable stream (and
+    /// [`FinishReason`]) is bit-identical to the plain engine's.
+    fn spec_step_slot(&mut self, slot: usize, cap: usize) {
+        let (next, max_new, out_len) = {
+            let seq = self.slots[slot].as_ref().expect("spec slot is active");
+            (seq.next_input, seq.req.params.max_new_tokens, seq.out.len())
+        };
+        let finished: Option<FinishReason> = if out_len < max_new && self.exec.pos(slot) < cap {
+            let emitted = self.exec.round(slot, next, max_new - out_len);
+            self.metrics.engine_steps += 1;
+            self.metrics.slot_steps += 1;
+            // committed target decode rows == emitted tokens (the accepted
+            // prefix plus the round's correction/bonus row)
+            self.metrics.decode_rows += emitted.len();
+            let seq = self.slots[slot].as_mut().expect("spec slot is active");
+            let mut reason = None;
+            for &tok in &emitted {
+                seq.out.push(tok);
+                let listener = seq.events.send(TokenEvent::Token(tok));
+                if seq.req.params.stop_tokens.contains(&tok) {
+                    reason = Some(FinishReason::StopToken);
+                    break;
+                }
+                if seq.out.len() >= max_new {
+                    reason = Some(FinishReason::MaxTokens);
+                    break;
+                }
+                if listener.is_err() {
+                    reason = Some(FinishReason::Cancelled);
+                    break;
+                }
+                seq.next_input = tok;
+            }
+            reason
+        } else if out_len < max_new {
+            Some(FinishReason::ContextFull)
+        } else {
+            Some(FinishReason::MaxTokens)
+        };
+        if let Some(reason) = finished {
+            let seq = self.slots[slot].take().unwrap();
+            self.exec.reset_slot(slot); // release both stores' KV rows now
+            self.complete(*seq, reason);
+        }
     }
 
     /// Refresh the shared metrics snapshot so `EngineHandle::metrics`
@@ -760,7 +935,7 @@ impl<'m> EngineCore<'m> {
             self.metrics.queue_depth = q.len;
             self.metrics.queue_peak = q.peak;
         }
-        let kv = self.session.kv_stats();
+        let kv = self.exec.kv_stats();
         self.metrics.kv_bytes = kv.bytes();
         self.metrics.kv_bytes_f32 = kv.bytes_f32;
         self.metrics.kv_bytes_packed = kv.bytes_packed;
@@ -770,6 +945,14 @@ impl<'m> EngineCore<'m> {
         self.metrics.prefix_lookups = kv.prefix_lookups;
         self.metrics.prefix_hits = kv.prefix_hits;
         self.metrics.prefix_hit_rows = kv.prefix_hit_rows;
+        if let Some(spec) = self.exec.spec_stats() {
+            self.metrics.spec_rounds = spec.rounds;
+            self.metrics.spec_proposed = spec.proposed;
+            self.metrics.spec_accepted = spec.accepted;
+            self.metrics.spec_rejected = spec.rejected;
+            self.metrics.spec_fallback_steps = spec.fallback_steps;
+            self.metrics.draft_kv_bytes = self.exec.draft_kv_bytes();
+        }
         self.metrics.wall = t0.elapsed();
         *self.shared.metrics.lock().unwrap() = self.metrics.clone();
     }

@@ -403,6 +403,14 @@ pub fn metrics_json(router: &RouterHandle) -> Json {
                     ),
                 ),
                 ("outlier_bytes", Json::Num(m.outlier_bytes as f64)),
+                ("spec_rounds", Json::Num(m.spec_rounds as f64)),
+                ("spec_accept_rate", Json::Num(m.spec_acceptance_rate())),
+                ("spec_tok_per_step", Json::Num(m.spec_tokens_per_target_step())),
+                ("draft_kv_bytes", Json::Num(m.draft_kv_bytes as f64)),
+                (
+                    "draft_weight_resident_bytes",
+                    Json::Num(m.draft_weight_memory.resident_bytes as f64),
+                ),
                 ("isa", Json::Str(m.isa.clone())),
             ])
         })

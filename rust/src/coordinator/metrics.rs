@@ -215,6 +215,24 @@ pub struct Metrics {
     /// [`Self::weight_bytes_by_format`] this sums to
     /// `weight_memory.resident_bytes`.
     pub outlier_bytes: usize,
+    /// Speculative verify rounds executed (one chunked multi-row target
+    /// step each). 0 on an engine started without a draft model.
+    pub spec_rounds: u64,
+    /// Draft tokens proposed across all speculative rounds.
+    pub spec_proposed: u64,
+    /// Proposals the target's greedy verify accepted.
+    pub spec_accepted: u64,
+    /// Proposals rejected (the round emitted the target's correction).
+    pub spec_rejected: u64,
+    /// Budget/context-starved rounds that fell back to a plain
+    /// single-row target step (no proposals).
+    pub spec_fallback_steps: u64,
+    /// Resident KV bytes of the draft model's own paged store
+    /// (speculation overhead — kept out of [`Self::kv_bytes`], which is
+    /// serving state).
+    pub draft_kv_bytes: usize,
+    /// Resident weight bytes of the draft model (zero without one).
+    pub draft_weight_memory: WeightMemory,
 }
 
 impl Metrics {
@@ -280,6 +298,27 @@ impl Metrics {
         }
     }
 
+    /// Fraction of speculative proposals the target accepted (0 before
+    /// any round, or on an engine without a draft).
+    pub fn spec_acceptance_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            0.0
+        } else {
+            self.spec_accepted as f64 / self.spec_proposed as f64
+        }
+    }
+
+    /// Tokens emitted per speculative verify step — `(accepted + rounds)
+    /// / rounds`, the multi-token-per-target-step win (plain fallback
+    /// steps excluded; 0 without any round).
+    pub fn spec_tokens_per_target_step(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            0.0
+        } else {
+            (self.spec_accepted + self.spec_rounds) as f64 / self.spec_rounds as f64
+        }
+    }
+
     /// generated tokens per wall-clock second
     pub fn throughput_tps(&self) -> f64 {
         let secs = self.wall.as_secs_f64();
@@ -339,6 +378,23 @@ impl Metrics {
                 self.prefix_hit_rate(),
                 self.prefix_hit_rows,
             ));
+        }
+        if self.spec_rounds > 0 || self.spec_fallback_steps > 0 {
+            s.push_str(&format!(
+                " spec_rounds={} spec_accept_rate={:.2} spec_tok_per_step={:.2}",
+                self.spec_rounds,
+                self.spec_acceptance_rate(),
+                self.spec_tokens_per_target_step(),
+            ));
+            if self.draft_kv_bytes > 0 {
+                s.push_str(&format!(" draft_kv={}B", self.draft_kv_bytes));
+            }
+            if self.draft_weight_memory.resident_bytes > 0 {
+                s.push_str(&format!(
+                    " draft_resident={}B",
+                    self.draft_weight_memory.resident_bytes
+                ));
+            }
         }
         if self.weight_memory.dense_f32_bytes > 0 {
             s.push_str(&format!(
@@ -511,6 +567,27 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("weights_by_format=[bfp_e8m3n16:1000B bfp_e8m7n16:500B f32:256B]"));
         assert!(s.contains("outliers=96B"));
+    }
+
+    #[test]
+    fn speculative_counters_and_summary() {
+        let mut m = Metrics::new();
+        assert_eq!(m.spec_acceptance_rate(), 0.0);
+        assert_eq!(m.spec_tokens_per_target_step(), 0.0);
+        assert!(!m.summary().contains("spec_rounds"));
+        m.spec_rounds = 10;
+        m.spec_proposed = 40;
+        m.spec_accepted = 30;
+        m.spec_rejected = 10;
+        m.draft_kv_bytes = 64;
+        assert!((m.spec_acceptance_rate() - 0.75).abs() < 1e-12);
+        // 30 accepted + 10 correction/bonus tokens over 10 verify steps
+        assert!((m.spec_tokens_per_target_step() - 4.0).abs() < 1e-12);
+        let s = m.summary();
+        assert!(s.contains("spec_rounds=10"));
+        assert!(s.contains("spec_accept_rate=0.75"));
+        assert!(s.contains("spec_tok_per_step=4.00"));
+        assert!(s.contains("draft_kv=64B"));
     }
 
     #[test]

@@ -21,8 +21,8 @@ pub use router::{
     Ticket,
 };
 pub use server::{
-    run_batched, serve_one, FinishReason, GenerationParams, Request, Response, ServerConfig,
-    ENGINE_SEED,
+    run_batched, run_batched_with_draft, serve_one, FinishReason, GenerationParams, Request,
+    Response, ServerConfig, ENGINE_SEED,
 };
 pub use traffic::{
     http_exchange, run_trace, serve_trace, HttpOutcome, OpenLoopReport, SseRecord, Trace,

@@ -181,6 +181,11 @@ pub struct ServerConfig {
     /// storage format (f32 or a block format), prefix-cache budget.
     /// Exposed on the CLI as `--kv-page` / `--kv-format`.
     pub kv: KvConfig,
+    /// Maximum draft proposals per speculative round (`--spec-k`). Only
+    /// consulted when the engine is started with a draft model
+    /// ([`super::engine::Engine::start_with_draft`] /
+    /// [`run_batched_with_draft`]); the plain engine ignores it.
+    pub spec_k: usize,
 }
 
 impl ServerConfig {
@@ -192,7 +197,7 @@ impl ServerConfig {
             max_batch,
             prefill_chunk,
             queue_depth,
-            kv: KvConfig::default(),
+            ..ServerConfig::default()
         };
         cfg.validate();
         cfg
@@ -200,11 +205,13 @@ impl ServerConfig {
 
     /// Assert the invariants the scheduler relies on: at least one slot,
     /// at least one prompt row per prefill step, a non-zero queue bound,
-    /// and a well-formed KV config (non-zero page size, pageable format).
+    /// at least one speculative proposal per round, and a well-formed KV
+    /// config (non-zero page size, pageable format).
     pub fn validate(&self) {
         assert!(self.max_batch >= 1, "ServerConfig: max_batch must be >= 1");
         assert!(self.prefill_chunk >= 1, "ServerConfig: prefill_chunk must be >= 1");
         assert!(self.queue_depth >= 1, "ServerConfig: queue_depth must be >= 1");
+        assert!(self.spec_k >= 1, "ServerConfig: spec_k must be >= 1");
         self.kv.validate();
     }
 
@@ -222,6 +229,7 @@ impl Default for ServerConfig {
             prefill_chunk: 8,
             queue_depth: 64,
             kv: KvConfig::default(),
+            spec_k: 4,
         }
     }
 }
@@ -282,6 +290,29 @@ pub fn run_batched(
     requests: Vec<Request>,
     cfg: &ServerConfig,
 ) -> (Vec<Response>, Metrics) {
+    run_batched_inner(model, None, requests, cfg)
+}
+
+/// [`run_batched`] with self-drafting speculative decoding: greedy
+/// requests decode through draft-propose / chunked-verify rounds
+/// (`cfg.spec_k` proposals per round) and still emit exactly the tokens
+/// target-only greedy decode would (tested in tests/speculative.rs);
+/// temperature > 0 requests take the plain path untouched.
+pub fn run_batched_with_draft(
+    model: &Model,
+    draft: &Model,
+    requests: Vec<Request>,
+    cfg: &ServerConfig,
+) -> (Vec<Response>, Metrics) {
+    run_batched_inner(model, Some(draft), requests, cfg)
+}
+
+fn run_batched_inner(
+    model: &Model,
+    draft: Option<&Model>,
+    requests: Vec<Request>,
+    cfg: &ServerConfig,
+) -> (Vec<Response>, Metrics) {
     cfg.validate();
     let mut engine_cfg = cfg.clone();
     engine_cfg.queue_depth = cfg.queue_depth.max(requests.len()).max(1);
@@ -292,7 +323,7 @@ pub fn run_batched(
         .collect();
     let core_shared = shared.clone();
     let mut responses: Vec<Response> = std::thread::scope(|s| {
-        s.spawn(move || EngineCore::new(model, engine_cfg, rx, core_shared).run());
+        s.spawn(move || EngineCore::new_with_draft(model, draft, engine_cfg, rx, core_shared).run());
         let out: Vec<Response> = pending.into_iter().map(|h| h.wait()).collect();
         // every RequestHandle is consumed and this drops the last sender,
         // so the scheduler drains, publishes final metrics, and exits

@@ -367,6 +367,14 @@ pub struct OpenLoopReport {
     pub token_gap_ms: LogHistogram,
     /// Dispatch-to-done whole-request latency, ms.
     pub request_ms: LogHistogram,
+    /// TTFT split by priority class, indexed by [`Priority::index`] —
+    /// the per-class SLO bars gate interactive p99 separately from batch
+    /// p99, because the aggregate hides exactly the inversion the
+    /// weighted scheduler exists to prevent.
+    pub class_ttft_ms: [LogHistogram; Priority::COUNT],
+    /// Inter-token gap split by priority class, indexed by
+    /// [`Priority::index`].
+    pub class_token_gap_ms: [LogHistogram; Priority::COUNT],
     /// Wall-clock time of the whole run.
     pub wall: Duration,
 }
@@ -397,6 +405,24 @@ impl OpenLoopReport {
             ("ttft_ms", hist_json(&self.ttft_ms)),
             ("token_gap_ms", hist_json(&self.token_gap_ms)),
             ("request_ms", hist_json(&self.request_ms)),
+            (
+                "classes",
+                Json::Obj(
+                    Priority::ALL
+                        .iter()
+                        .map(|&p| {
+                            let i = p.index();
+                            (
+                                p.as_str().to_string(),
+                                Json::obj(vec![
+                                    ("ttft_ms", hist_json(&self.class_ttft_ms[i])),
+                                    ("token_gap_ms", hist_json(&self.class_token_gap_ms[i])),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
             ("wall_s", Json::Num(self.wall.as_secs_f64())),
         ])
     }
@@ -411,6 +437,8 @@ struct Acc {
     ttft_ms: LogHistogram,
     token_gap_ms: LogHistogram,
     request_ms: LogHistogram,
+    class_ttft_ms: [LogHistogram; Priority::COUNT],
+    class_token_gap_ms: [LogHistogram; Priority::COUNT],
 }
 
 /// How long a client waits on a silent socket before counting the
@@ -447,14 +475,17 @@ pub fn run_trace(addr: SocketAddr, trace: &Trace) -> OpenLoopReport {
                         return;
                     }
                     a.completed += 1;
+                    let class = item.priority.index();
                     let tokens: Vec<&SseRecord> =
                         o.events.iter().filter(|r| r.event == "token").collect();
                     a.generated_tokens += tokens.len();
                     if let Some(first) = tokens.first() {
                         a.ttft_ms.record(first.at_ms);
+                        a.class_ttft_ms[class].record(first.at_ms);
                     }
                     for pair in tokens.windows(2) {
                         a.token_gap_ms.record(pair[1].at_ms - pair[0].at_ms);
+                        a.class_token_gap_ms[class].record(pair[1].at_ms - pair[0].at_ms);
                     }
                     if let Some(done) = o.events.iter().find(|r| r.event == "done") {
                         a.request_ms.record(done.at_ms);
@@ -480,6 +511,8 @@ pub fn run_trace(addr: SocketAddr, trace: &Trace) -> OpenLoopReport {
                 ttft_ms: a.ttft_ms.clone(),
                 token_gap_ms: a.token_gap_ms.clone(),
                 request_ms: a.request_ms.clone(),
+                class_ttft_ms: a.class_ttft_ms.clone(),
+                class_token_gap_ms: a.class_token_gap_ms.clone(),
             }
         });
     let span_s = trace.items.last().map(|it| it.at_ms / 1e3).unwrap_or(0.0);
@@ -501,6 +534,8 @@ pub fn run_trace(addr: SocketAddr, trace: &Trace) -> OpenLoopReport {
         ttft_ms: acc.ttft_ms,
         token_gap_ms: acc.token_gap_ms,
         request_ms: acc.request_ms,
+        class_ttft_ms: acc.class_ttft_ms,
+        class_token_gap_ms: acc.class_token_gap_ms,
         wall,
     }
 }
@@ -643,10 +678,19 @@ mod tests {
             "ttft_ms",
             "token_gap_ms",
             "request_ms",
+            "classes",
             "wall_s",
         ] {
             assert!(doc.get(key).is_some(), "missing {key}");
         }
         assert_eq!(doc.get("ttft_ms").unwrap().get("count").unwrap().as_f64(), Some(6.0));
+        // per-class splits cover every completed request exactly once
+        let classes = doc.get("classes").unwrap();
+        let mut class_ttft = 0.0;
+        for p in Priority::ALL {
+            let h = classes.get(p.as_str()).expect("every class serialises");
+            class_ttft += h.get("ttft_ms").unwrap().get("count").unwrap().as_f64().unwrap();
+        }
+        assert_eq!(class_ttft, 6.0, "class TTFT counts must sum to the aggregate");
     }
 }

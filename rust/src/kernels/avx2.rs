@@ -50,6 +50,26 @@ pub(crate) unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
 /// # Safety
 /// Caller must ensure the host supports AVX2.
 #[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_acc(x: &[f32], y: &[f32], lane: &mut [f32; 8]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len() % 8, 0);
+    // resume the 8-lane accumulator from `lane`: per lane the update is
+    // `lane[l] = (lane[l] + p0) + p1 + ...`, the same left-association the
+    // scalar `lane[l] += x*y` loop produces
+    let mut acc = _mm256_loadu_ps(lane.as_ptr());
+    let mut i = 0;
+    while i < x.len() {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(xv, yv));
+        i += 8;
+    }
+    _mm256_storeu_ps(lane.as_mut_ptr(), acc);
+}
+
+/// # Safety
+/// Caller must ensure the host supports AVX2.
+#[target_feature(enable = "avx2")]
 pub(crate) unsafe fn gemm_bt_rows(
     a: &[f32],
     b: &[f32],

@@ -232,6 +232,36 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     }
 }
 
+/// Lane count of the shared dot accumulation order (re-exported from the
+/// scalar reference for callers that stream into [`dot_acc`]).
+pub(crate) use scalar::LANES;
+
+/// The shared 8-lane reduction tree of [`dot`], for callers that finish a
+/// [`dot_acc`] accumulator themselves. Scalar arithmetic — identical on
+/// every backend by construction.
+#[inline]
+pub(crate) fn reduce8(lane: &[f32; LANES]) -> f32 {
+    scalar::reduce8(lane)
+}
+
+/// Streaming form of [`dot`]'s lane-accumulation phase: `lane[l] +=
+/// x[i] * y[i]` for `i ≡ l (mod 8)`, in increasing-`i` order. Both slices
+/// must have equal length, a multiple of 8. Feeding consecutive
+/// lane-aligned chunks of a conceptual longer vector and then finishing
+/// with [`reduce8`] plus a serial tail reproduces [`dot`] on that vector
+/// bit for bit — this is what lets the fused packed-weight dot consume
+/// decoded fields slab by slab without a full-row staging buffer.
+#[inline]
+pub(crate) fn dot_acc(x: &[f32], y: &[f32], lane: &mut [f32; LANES]) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 => unsafe { avx2::dot_acc(x, y, lane) },
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon => unsafe { neon::dot_acc(x, y, lane) },
+        _ => scalar::dot_acc(x, y, lane),
+    }
+}
+
 /// B-transposed GEMM over a row range: `out[i - rows.start][j] =`
 /// [`dot`]`(a[i], b[j])` for `i in rows`, with `a: [?, k]` row-major,
 /// `b: [n, k]` row-major (i.e. Bᵀ), `out: [rows.len(), n]`. Every output
@@ -391,6 +421,39 @@ mod tests {
                     got.to_bits(),
                     want.to_bits(),
                     "dot len={len} backend={}",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dot_acc_streams_to_dot_bits() {
+        // consuming lane-aligned chunks then reducing + serial tail must
+        // equal one `dot` call over the concatenation, on every backend
+        let mut rng = Pcg32::new(13);
+        for len in [8, 16, 21, 37, 64, 70, 130] {
+            let x = randv(&mut rng, len);
+            let y = randv(&mut rng, len);
+            let want = with_isa(Backend::Scalar, || dot(&x, &y));
+            let ne = len / 8 * 8;
+            for b in supported_backends() {
+                let got = with_isa(b, || {
+                    let mut lane = [0.0f32; LANES];
+                    // split the lane-eligible region into two aligned chunks
+                    let mid = ne / 2 / 8 * 8;
+                    dot_acc(&x[..mid], &y[..mid], &mut lane);
+                    dot_acc(&x[mid..ne], &y[mid..ne], &mut lane);
+                    let mut s = reduce8(&lane);
+                    for i in ne..len {
+                        s += x[i] * y[i];
+                    }
+                    s
+                });
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "dot_acc len={len} backend={}",
                     b.name()
                 );
             }

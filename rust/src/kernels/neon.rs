@@ -57,6 +57,35 @@ pub(crate) unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
 /// # Safety
 /// Caller must ensure the host supports NEON.
 #[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_acc(x: &[f32], y: &[f32], lane: &mut [f32; 8]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len() % 8, 0);
+    // resume the 8-lane accumulator (register pair) from `lane`; per lane
+    // the update order matches the scalar `lane[l] += x*y` loop exactly
+    let mut lo = vld1q_f32(lane.as_ptr());
+    let mut hi = vld1q_f32(lane.as_ptr().add(4));
+    let mut i = 0;
+    while i < x.len() {
+        lo = vaddq_f32(
+            lo,
+            vmulq_f32(vld1q_f32(x.as_ptr().add(i)), vld1q_f32(y.as_ptr().add(i))),
+        );
+        hi = vaddq_f32(
+            hi,
+            vmulq_f32(
+                vld1q_f32(x.as_ptr().add(i + 4)),
+                vld1q_f32(y.as_ptr().add(i + 4)),
+            ),
+        );
+        i += 8;
+    }
+    vst1q_f32(lane.as_mut_ptr(), lo);
+    vst1q_f32(lane.as_mut_ptr().add(4), hi);
+}
+
+/// # Safety
+/// Caller must ensure the host supports NEON.
+#[target_feature(enable = "neon")]
 pub(crate) unsafe fn gemm_bt_rows(
     a: &[f32],
     b: &[f32],

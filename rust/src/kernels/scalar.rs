@@ -11,8 +11,12 @@ use std::ops::Range;
 /// register, or a NEON register pair).
 pub(crate) const LANES: usize = 8;
 
+/// The shared 8-lane reduction tree: `((l0+l4) + (l2+l6)) + ((l1+l5) +
+/// (l3+l7))`. Scalar arithmetic — every backend reduces through this exact
+/// association, which is why it lives here and is reused directly by the
+/// streaming fused-dot path.
 #[inline]
-fn reduce8(lane: &[f32; LANES]) -> f32 {
+pub(crate) fn reduce8(lane: &[f32; LANES]) -> f32 {
     let q0 = lane[0] + lane[4];
     let q1 = lane[1] + lane[5];
     let q2 = lane[2] + lane[6];
@@ -37,6 +41,24 @@ pub(crate) fn dot(x: &[f32], y: &[f32]) -> f32 {
         s += x[i] * y[i];
     }
     s
+}
+
+/// See `kernels::dot_acc`: the lane-accumulation phase of [`dot`] in
+/// streaming form. Both slice lengths must be equal and a multiple of
+/// [`LANES`]; `lane[l]` receives `x[i] * y[i]` for every `i ≡ l (mod 8)`,
+/// in increasing-`i` order — exactly the per-lane term sequence of [`dot`],
+/// so feeding consecutive lane-aligned chunks and finishing with
+/// [`reduce8`] plus a serial tail reproduces `dot` bit for bit.
+#[inline]
+pub(crate) fn dot_acc(x: &[f32], y: &[f32], lane: &mut [f32; LANES]) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len() % LANES, 0);
+    for c in 0..x.len() / LANES {
+        let i = c * LANES;
+        for l in 0..LANES {
+            lane[l] += x[i + l] * y[i + l];
+        }
+    }
 }
 
 /// See `kernels::gemm_bt_rows`: one [`dot`] per output element.

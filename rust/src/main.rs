@@ -21,6 +21,12 @@
 //!                    set the per-request GenerationParams / engine queue;
 //!                    `--kv-format <name>`/`--kv-page N` pick the paged
 //!                    KV cache's storage format and page size;
+//!                    `--draft-plan PATH` or `--draft-format <name>` turn
+//!                    on self-drafting speculative decoding — the same
+//!                    weights under a second, cheaper plan propose up to
+//!                    `--spec-k N` tokens per round and the target model
+//!                    verifies them in one chunked step, bit-identical to
+//!                    target-only greedy decode;
 //!                    `--listen ADDR` starts the HTTP/SSE front door
 //!                    instead, printing live p50/p99 latency and queue-wait
 //!                    snapshots until SIGTERM/SIGINT drains it)
@@ -28,7 +34,10 @@
 //!                    door; writes BENCH_serve.json (`--quick` shrinks the
 //!                    trace for CI, `--check` makes the SLO bars fatal,
 //!                    `--trace-out`/`--trace-in` record/replay a trace;
-//!                    `--kv-format`/`--kv-page` as for serve)
+//!                    `--kv-format`/`--kv-page` as for serve; TTFT p99 is
+//!                    also gated per priority class:
+//!                    `--slo-interactive-ttft-p99-ms`,
+//!                    `--slo-batch-ttft-p99-ms`)
 //!   bench-report     render BENCH_*.json files as markdown tables (CI
 //!                    appends the output to $GITHUB_STEP_SUMMARY)
 //!   bench-snapshot   fail if committed BENCH_*.json snapshots drifted
@@ -44,7 +53,9 @@
 #![allow(clippy::needless_range_loop, clippy::collapsible_if)]
 
 use bbq::coordinator::experiment::{default_steps, get_or_train};
-use bbq::coordinator::{run_batched, Engine, GenerationParams, Request, ServerConfig, TokenEvent};
+use bbq::coordinator::{
+    run_batched, run_batched_with_draft, Engine, GenerationParams, Request, ServerConfig, TokenEvent,
+};
 use bbq::data::corpus::test_stream;
 use bbq::data::lm_eval::perplexity_par;
 use bbq::data::tasks::{evaluate, generate, Task};
@@ -92,6 +103,23 @@ fn plan_from_args(args: &Args, cfg: &bbq::model::ModelConfig) -> QuantPlan {
             plan.with_outliers(args.f64_or("outliers", 0.0) as f32)
         }
     }
+}
+
+/// `--draft-plan PATH` / `--draft-format <name>` select the quantisation
+/// plan for the self-drafting speculative draft — the *same* trained
+/// weights under a second, cheaper plan (typically BFP4). `None` when
+/// neither flag is given: serving then runs target-only.
+fn draft_plan_from_args(args: &Args, cfg: &bbq::model::ModelConfig) -> Option<QuantPlan> {
+    if let Some(path) = args.get("draft-plan") {
+        return Some(
+            bbq::model::plan_file::load(std::path::Path::new(path), cfg)
+                .unwrap_or_else(|e| panic!("load draft plan '{path}': {e}")),
+        );
+    }
+    let name = args.get("draft-format")?;
+    let fmt = QFormat::parse(name)
+        .unwrap_or_else(|| panic!("unknown draft format '{name}' (try bfp_e8m3n16)"));
+    Some(QuantPlan::uniform(fmt))
 }
 
 /// What the quantisation column of a report line should say: the plan
@@ -381,6 +409,9 @@ fn cmd_serve(args: &Args) {
     let preset = args.get_or("model", "tiny");
     let params = get_or_train(&preset, default_steps(&preset), true);
     let plan = plan_from_args(args, &params.cfg);
+    // self-drafting: the draft shares the target's trained weights, only
+    // the quantisation plan differs
+    let draft = draft_plan_from_args(args, &params.cfg).map(|dp| Model::new(params.clone(), dp));
     let model = Model::new(params, plan);
     let vocab = Vocab::build();
     let n_req = args.usize_or("requests", 32);
@@ -404,16 +435,21 @@ fn cmd_serve(args: &Args) {
         prefill_chunk: args.usize_or("prefill-chunk", 8),
         queue_depth: args.usize_or("queue-depth", 64),
         kv: kv_config_from_args(args),
+        spec_k: args.usize_or("spec-k", 4),
     };
     if let Some(listen) = args.get("listen") {
         let listen = listen.to_string();
-        serve_listen(&listen, model, &preset, cfg, args);
+        serve_listen(&listen, model, draft, &preset, cfg, args);
         return;
     }
     if args.has_flag("stream") {
         // live-engine demo: submit through an EngineHandle and stream
         // request 0's tokens as the scheduler produces them
-        let engine = Engine::start(std::sync::Arc::new(model), cfg);
+        let model = std::sync::Arc::new(model);
+        let engine = match draft {
+            Some(d) => Engine::start_with_draft(model, std::sync::Arc::new(d), cfg),
+            None => Engine::start(model, cfg),
+        };
         let handles: Vec<_> = reqs
             .into_iter()
             .map(|r| engine.submit(r).expect("engine accepts while open"))
@@ -441,7 +477,10 @@ fn cmd_serve(args: &Args) {
         let metrics = engine.shutdown();
         println!("{}", metrics.summary());
     } else {
-        let (resps, metrics) = run_batched(&model, reqs, &cfg);
+        let (resps, metrics) = match &draft {
+            Some(d) => run_batched_with_draft(&model, d, reqs, &cfg),
+            None => run_batched(&model, reqs, &cfg),
+        };
         println!("{}", metrics.summary());
         if let Some(r) = resps.first() {
             println!("sample completion: {}", vocab.decode(&r.tokens));
@@ -455,13 +494,23 @@ fn cmd_serve(args: &Args) {
 /// metrics between requests. On a signal the stack drains gracefully in
 /// order: HTTP server (stop accepting), router (dispatch everything
 /// accepted), engine (finish queued + in-flight requests).
-fn serve_listen(addr: &str, model: Model, name: &str, cfg: ServerConfig, args: &Args) {
+fn serve_listen(
+    addr: &str,
+    model: Model,
+    draft: Option<Model>,
+    name: &str,
+    cfg: ServerConfig,
+    args: &Args,
+) {
     use bbq::coordinator::{
         shutdown_signal, HttpConfig, HttpServer, ModelEntry, Router, RouterConfig,
     };
     use std::time::{Duration, Instant};
     let model = std::sync::Arc::new(model);
-    let engine = Engine::start(model.clone(), cfg);
+    let engine = match draft {
+        Some(d) => Engine::start_with_draft(model.clone(), std::sync::Arc::new(d), cfg),
+        None => Engine::start(model.clone(), cfg),
+    };
     let entry = ModelEntry::for_model(name, engine.handle(), &model);
     let router = Router::new(vec![entry], RouterConfig::default());
     let server =
@@ -515,7 +564,7 @@ fn serve_listen(addr: &str, model: Model, name: &str, cfg: ServerConfig, args: &
 /// rejected, every request completed, TTFT p99 and inter-token-gap p99
 /// under their bars) are hard failures.
 fn cmd_serve_bench(args: &Args) {
-    use bbq::coordinator::{serve_trace, HttpConfig, RouterConfig, Trace, TrafficConfig};
+    use bbq::coordinator::{serve_trace, HttpConfig, Priority, RouterConfig, Trace, TrafficConfig};
     use bbq::model::config::ModelConfig;
     use bbq::model::params::Params;
     use bbq::util::json::Json;
@@ -563,6 +612,7 @@ fn cmd_serve_bench(args: &Args) {
         // request in the trace can sit in the engine queue at once
         queue_depth: args.usize_or("queue-depth", trace.items.len().max(64)),
         kv: kv_config_from_args(args),
+        spec_k: args.usize_or("spec-k", 4),
     };
     let queue_depth = server_cfg.queue_depth;
     let router_cfg = RouterConfig {
@@ -579,6 +629,14 @@ fn cmd_serve_bench(args: &Args) {
 
     let slo_ttft = args.f64_or("slo-ttft-p99-ms", 2500.0);
     let slo_gap = args.f64_or("slo-token-p99-ms", 500.0);
+    // per-class TTFT bars: interactive is held to a tighter bar than the
+    // aggregate, batch to a looser one — the aggregate alone would let a
+    // scheduler starve interactive traffic behind batch and still pass
+    let slo_class_ttft = [
+        args.f64_or("slo-interactive-ttft-p99-ms", 2000.0),
+        args.f64_or("slo-standard-ttft-p99-ms", slo_ttft),
+        args.f64_or("slo-batch-ttft-p99-ms", 5000.0),
+    ];
     let ttft_p99 = report.ttft_ms.percentile(99.0);
     let gap_p99 = report.token_gap_ms.percentile(99.0);
     let mut failures: Vec<String> = Vec::new();
@@ -599,6 +657,20 @@ fn cmd_serve_bench(args: &Args) {
     }
     if gap_p99 > slo_gap {
         failures.push(format!("token gap p99 {gap_p99:.1} ms > {slo_gap:.0} ms bar"));
+    }
+    for p in Priority::ALL {
+        let h = &report.class_ttft_ms[p.index()];
+        if h.count() == 0 {
+            continue; // the trace carried no traffic in this class
+        }
+        let p99 = h.percentile(99.0);
+        if p99 > slo_class_ttft[p.index()] {
+            failures.push(format!(
+                "{} TTFT p99 {p99:.1} ms > {:.0} ms bar",
+                p.as_str(),
+                slo_class_ttft[p.index()],
+            ));
+        }
     }
     let pass = failures.is_empty();
 
@@ -623,6 +695,17 @@ fn cmd_serve_bench(args: &Args) {
             Json::obj(vec![
                 ("ttft_p99_ms_bar", Json::Num(slo_ttft)),
                 ("token_gap_p99_ms_bar", Json::Num(slo_gap)),
+                (
+                    "class_ttft_p99_ms_bars",
+                    Json::Obj(
+                        Priority::ALL
+                            .iter()
+                            .map(|&p| {
+                                (p.as_str().to_string(), Json::Num(slo_class_ttft[p.index()]))
+                            })
+                            .collect(),
+                    ),
+                ),
                 ("pass", Json::Bool(pass)),
             ]),
         );
@@ -651,6 +734,18 @@ fn cmd_serve_bench(args: &Args) {
         report.request_ms.percentile(99.0),
         metrics.queue_peak,
     );
+    let class_line: Vec<String> = Priority::ALL
+        .iter()
+        .map(|&p| {
+            let h = &report.class_ttft_ms[p.index()];
+            if h.count() == 0 {
+                format!("{} -", p.as_str())
+            } else {
+                format!("{} {:.1} ms (n={})", p.as_str(), h.percentile(99.0), h.count())
+            }
+        })
+        .collect();
+    println!("  TTFT p99 by class: {}", class_line.join(" | "));
     println!("  wrote {out}");
     if pass {
         println!("  all serve SLO bars met");

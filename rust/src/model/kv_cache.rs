@@ -201,6 +201,9 @@ pub struct BatchedDecodeSession<'m> {
     /// One attention scratch per step row, grown on demand and reused
     /// across layers and steps — steady-state decode re-warms nothing.
     scratches: Vec<AttnScratch>,
+    /// Slots whose next chunked step leaves its rows uncommitted (the
+    /// speculative verify handshake — see [`Self::defer_commit`]).
+    deferred: Vec<bool>,
     max_context: usize,
 }
 
@@ -211,6 +214,7 @@ impl<'m> BatchedDecodeSession<'m> {
             kv: PagedKv::new(cfg.slots, model.cfg().n_layers, model.cfg().d_model, &cfg.kv),
             views: vec![KvView::default(); cfg.slots],
             scratches: Vec::new(),
+            deferred: vec![false; cfg.slots],
             max_context: resolve_max_context(cfg, model),
             model,
         }
@@ -259,6 +263,36 @@ impl<'m> BatchedDecodeSession<'m> {
     /// prefix-cache hit rates).
     pub fn kv_stats(&self) -> KvStats {
         self.kv.stats()
+    }
+
+    /// Roll a slot back to `new_pos` *committed* rows — the speculative
+    /// draft's rejection path (its wrong proposals were committed as real
+    /// decode steps). Sealed / shared pages are never mutated: whole tail
+    /// pages are popped and refcount-released, a partial tail is trimmed in
+    /// place only when private and unsealed, else copy-on-write forked.
+    pub fn truncate(&mut self, slot: usize, new_pos: usize) {
+        self.kv.truncate(slot, new_pos);
+    }
+
+    /// Arm the speculative verify handshake for `slot`: its next
+    /// [`Self::step_chunked`] computes logits as usual but leaves the
+    /// appended rows *uncommitted* — positions do not advance, no page can
+    /// seal, nothing enters the prefix cache. The caller must follow up
+    /// with [`Self::commit_partial`] before the slot is stepped again.
+    pub fn defer_commit(&mut self, slot: usize) {
+        self.deferred[slot] = true;
+    }
+
+    /// Resolve a deferred step: keep the first `keep` uncommitted rows
+    /// (the accepted prefix), discard the rest, then commit — advancing
+    /// the position by `keep` and sealing/caching exactly as if only those
+    /// rows had ever been fed. Rejected rows can never have sealed a page
+    /// (they were uncommitted), so the post-commit store is bit-identical
+    /// to a never-speculated session's (tested in `tests/speculative.rs`).
+    pub fn commit_partial(&mut self, slot: usize, keep: usize) {
+        self.deferred[slot] = false;
+        self.kv.rollback_prepared(slot, keep);
+        self.kv.commit_append(slot, keep);
     }
 
     /// Feed one token per listed `(slot, token)` pair; returns each slot's
@@ -485,9 +519,13 @@ impl<'m> BatchedDecodeSession<'m> {
         }
         // commit the appended rows: advance slot positions, seal pages
         // that filled (bit-packing them under a block KV format) and
-        // register sealed pages in the prefix cache
+        // register sealed pages in the prefix cache. Slots armed via
+        // `defer_commit` skip this — the speculative caller commits the
+        // accepted prefix itself through `commit_partial`.
         for &(slot, toks) in batch {
-            self.kv.commit_append(slot, toks.len());
+            if !self.deferred[slot] {
+                self.kv.commit_append(slot, toks.len());
+            }
         }
         // tied-embedding LM head, row-order-preserving like everything else
         match needs_logits {

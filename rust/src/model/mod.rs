@@ -10,6 +10,7 @@ pub mod params;
 pub mod plan;
 pub mod plan_file;
 pub mod rope;
+pub mod speculative;
 pub mod transformer;
 
 pub use config::{ModelConfig, PosEncoding};
@@ -18,4 +19,5 @@ pub use paged::{KvConfig, KvStats, PagedKv, SessionConfig};
 pub use params::{PackedLayerParams, PackedWeight, Params, WeightMemory};
 pub use plan::{PlanError, QuantPlan, SiteId, WeightStore, GEMM_NAMES};
 pub use plan_file::PlanFileError;
+pub use speculative::{SpecStats, SpeculativeSession};
 pub use transformer::{cross_entropy, ActStats, Model};

@@ -488,6 +488,81 @@ impl PagedKv {
         }
     }
 
+    /// Roll `slot` back to `new_pos` *committed* rows — the speculative
+    /// rejection path for a draft session, whose proposals are committed
+    /// like real decode steps. Whole rejected pages are released from the
+    /// page table (sealed ones survive while pinned by the prefix cache or
+    /// shared with another slot); a partially-rejected tail page is trimmed
+    /// in place when private and unsealed, else copy-on-write-forked down
+    /// to the surviving rows — a sealed or shared page is never mutated.
+    pub fn truncate(&mut self, slot: usize, new_pos: usize) {
+        let pos = self.pos[slot];
+        assert!(
+            new_pos <= pos,
+            "truncate(slot {slot}): new_pos {new_pos} beyond committed {pos}"
+        );
+        if new_pos == pos {
+            return;
+        }
+        let p_sz = self.page_size;
+        let keep_pages = new_pos.div_ceil(p_sz);
+        while self.tables[slot].len() > keep_pages {
+            let idx = self.tables[slot].pop().unwrap();
+            self.decref(idx);
+        }
+        let rem = new_pos % p_sz;
+        if rem != 0 {
+            let ti = keep_pages - 1;
+            let idx = self.tables[slot][ti];
+            let pg = &self.pages[idx];
+            if pg.len > rem || pg.tokens.len() > rem {
+                if pg.sealed || pg.refs > 1 {
+                    self.fork_tail(slot, ti, rem);
+                } else {
+                    let pg = &mut self.pages[idx];
+                    pg.len = rem;
+                    pg.tokens.truncate(rem);
+                }
+            }
+        }
+        self.pos[slot] = new_pos;
+    }
+
+    /// Discard rows written through `prepare_append`/`append_rows` but
+    /// never committed, keeping only the first `keep` of them — the
+    /// speculative verify path: the target feeds all proposed rows through
+    /// one chunked step, then commits just the accepted prefix and drops
+    /// the rest here *before* [`PagedKv::commit_append`]. Uncommitted rows
+    /// can never have sealed a page (sealing requires a full page of
+    /// committed rows), so the pages dropped or trimmed here are private
+    /// scratch — shared prefixes and the prefix cache cannot observe a
+    /// speculated token, which is what makes post-rejection state
+    /// indistinguishable from a session that never speculated.
+    pub fn rollback_prepared(&mut self, slot: usize, keep: usize) {
+        let p_sz = self.page_size;
+        let end = self.pos[slot] + keep;
+        let keep_pages = end.div_ceil(p_sz);
+        while self.tables[slot].len() > keep_pages {
+            let idx = self.tables[slot].pop().unwrap();
+            debug_assert!(
+                !self.pages[idx].sealed && self.pages[idx].refs == 1,
+                "uncommitted page {idx} sealed or shared"
+            );
+            self.decref(idx);
+        }
+        if let Some(&idx) = self.tables[slot].last() {
+            let last_rows = end - (self.tables[slot].len() - 1) * p_sz;
+            let pg = &mut self.pages[idx];
+            if pg.tokens.len() > last_rows {
+                debug_assert!(
+                    !pg.sealed && pg.refs == 1,
+                    "uncommitted tail page {idx} sealed or shared"
+                );
+                pg.tokens.truncate(last_rows);
+            }
+        }
+    }
+
     /// Seal a full page: compute its chain hash, bit-pack it under block
     /// formats (lossless — rows were already fake-quantised at append and
     /// the block formats are exactly idempotent), and register it in the
@@ -947,6 +1022,80 @@ mod tests {
         let s = kv.stats();
         assert_eq!(s.pages, 0);
         assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn truncate_rolls_back_committed_rows_without_touching_sealed_pages() {
+        let cfg = KvConfig {
+            page_size: 2,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12]);
+        let (k3, v3) = rows_of(&kv, 0, 3);
+        // speculate two committed rows: seals [12, 13], opens a tail page
+        push(&mut kv, 0, &[13, 14]);
+        kv.truncate(0, 3);
+        assert_eq!(kv.pos(0), 3);
+        let (k, v) = rows_of(&kv, 0, 3);
+        assert_eq!(k, k3);
+        assert_eq!(v, v3);
+        // the sealed page survives in the cache (it was never mutated) and
+        // decode continues cleanly past the rollback point
+        push(&mut kv, 0, &[99]);
+        assert_eq!(kv.pos(0), 4);
+        let (k4, _) = rows_of(&kv, 0, 4);
+        assert_eq!(&k4[..6], &k3[..]);
+        assert_eq!(k4[6], 3.0, "row 3 rewritten after rollback");
+    }
+
+    #[test]
+    fn truncate_to_zero_equals_reset() {
+        let cfg = KvConfig {
+            page_size: 2,
+            prefix_cache_pages: 0,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12]);
+        kv.truncate(0, 0);
+        assert_eq!(kv.pos(0), 0);
+        assert_eq!(kv.stats().pages, 0);
+        assert_eq!(kv.kv_bytes(), 0);
+    }
+
+    #[test]
+    fn rollback_prepared_matches_never_speculated_twin() {
+        let cfg = KvConfig {
+            page_size: 2,
+            ..KvConfig::default()
+        };
+        let mut kv = tiny(&cfg);
+        let mut twin = tiny(&cfg);
+        push(&mut kv, 0, &[10, 11, 12]);
+        push(&mut twin, 0, &[10, 11, 12]);
+        // speculative verify on kv: 3 rows prepared + written, 1 accepted
+        kv.prepare_append(0, &[13, 14, 15]);
+        kv.append_rows(0, 0, &[1.0; 6], &[2.0; 6]);
+        kv.rollback_prepared(0, 1);
+        kv.commit_append(0, 1);
+        // twin only ever sees the accepted row
+        twin.prepare_append(0, &[13]);
+        twin.append_rows(0, 0, &[1.0, 1.0], &[2.0, 2.0]);
+        twin.commit_append(0, 1);
+        assert_eq!(kv.pos(0), twin.pos(0));
+        assert_eq!(kv.stats(), twin.stats());
+        let (k_a, v_a) = rows_of(&kv, 0, 4);
+        let (k_b, v_b) = rows_of(&twin, 0, 4);
+        assert_eq!(k_a, k_b);
+        assert_eq!(v_a, v_b);
+        // continued decode stays in lockstep (page tables, cache, bytes)
+        push(&mut kv, 0, &[16, 17]);
+        push(&mut twin, 0, &[16, 17]);
+        assert_eq!(kv.stats(), twin.stats());
+        let (k_a, _) = rows_of(&kv, 0, 6);
+        let (k_b, _) = rows_of(&twin, 0, 6);
+        assert_eq!(k_a, k_b);
     }
 
     #[test]

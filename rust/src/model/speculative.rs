@@ -1,0 +1,410 @@
+//! Self-drafting speculative decoding on the shared paged runtime: a
+//! low-bit draft model (same family — typically the same weights
+//! re-quantised to BFP4) autoregressively proposes up to `k` tokens per
+//! round from its own paged KV, and the serving (target) model verifies
+//! all `k + 1` rows in **one** chunked multi-row step — the same row-block
+//! machinery chunked prefill uses, so the whole verify pays a single
+//! weight-dequant pass per layer. That is exactly where the win lives in
+//! this codebase: per-step cost is dominated by packed-weight decode,
+//! which is amortised across every row a step carries.
+//!
+//! Greedy acceptance keeps the emitted stream **bit-identical to
+//! target-only greedy decode**: row `j` of the verify step carries the
+//! logits the target would produce sequentially after consuming the same
+//! prefix (the chunked-step bit-identity contract of
+//! [`BatchedDecodeSession::step_chunked`]), and acceptance reuses the
+//! engine's own argmax ([`sample_logits`] at temperature 0, last maximal
+//! index on ties). A proposal is accepted only when it *equals* that
+//! argmax, so by induction every emitted token is the token target-only
+//! decode would have emitted (tested in tests/speculative.rs per preset
+//! format, thread count and `BBQ_ISA`). Temperature > 0 requests are out
+//! of scope — the engine routes them through the plain path.
+//!
+//! Rollback never touches sealed or shared pages:
+//!
+//! * the target appends all `k + 1` verify rows *uncommitted*
+//!   ([`BatchedDecodeSession::defer_commit`]) and then commits only the
+//!   accepted prefix ([`BatchedDecodeSession::commit_partial`]) — a
+//!   rejected row never advances the position, never seals a page and
+//!   never enters the prefix cache, so the post-round store is
+//!   bit-identical to a never-speculated session's;
+//! * the draft commits its proposals as real decode steps and rolls back
+//!   a rejected tail with [`BatchedDecodeSession::truncate`], which pops
+//!   whole tail pages by refcount and copy-on-write-forks a partial tail
+//!   only when it is sealed or shared.
+
+use super::kv_cache::{sample_logits, BatchedDecodeSession};
+use super::paged::{KvStats, SessionConfig};
+use super::transformer::Model;
+
+/// Speculative-decoding counters, aggregated across slots and rounds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpecStats {
+    /// Verify rounds executed (one chunked multi-row target step each).
+    pub rounds: u64,
+    /// Draft tokens proposed across all rounds.
+    pub proposed: u64,
+    /// Proposals accepted (target argmax agreed).
+    pub accepted: u64,
+    /// Proposals rejected (target argmax disagreed; the round emitted the
+    /// target's correction instead).
+    pub rejected: u64,
+    /// Budget- or context-starved rounds that fell back to a plain
+    /// single-row target step (no proposals, not counted in
+    /// [`Self::rounds`]).
+    pub fallback_steps: u64,
+}
+
+impl SpecStats {
+    /// Fraction of proposals the target accepted (0 before any round).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposed == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+
+    /// Tokens emitted per verify step: every round emits its accepted
+    /// prefix plus one target token (correction or bonus), so this is
+    /// `(accepted + rounds) / rounds` — the speed-up lever speculative
+    /// decoding exists for (1.0 means no proposal ever survived; plain
+    /// fallback steps are excluded).
+    pub fn tokens_per_target_step(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            (self.accepted + self.rounds) as f64 / self.rounds as f64
+        }
+    }
+}
+
+/// The exact argmax the serving sampler uses at temperature 0 (last
+/// maximal index on ties, token 0 on empty logits) — acceptance must
+/// match it decision for decision or the bit-identity contract breaks.
+fn greedy(logits: &[f32]) -> usize {
+    sample_logits(logits, 0.0, &mut crate::util::rng::Pcg32::new(0))
+}
+
+/// A draft + target session pair sharing slot numbering: the engine's
+/// speculative execution backend. Prompt rows flow into the target
+/// normally (recorded per slot so the draft can catch up lazily); decode
+/// happens in [`Self::round`]s.
+pub struct SpeculativeSession<'m> {
+    target: BatchedDecodeSession<'m>,
+    draft: BatchedDecodeSession<'m>,
+    /// Max proposals per round (`--spec-k`).
+    k: usize,
+    /// Per-slot tokens already fed to the target but not yet to the draft:
+    /// prompt chunks, plain-path decode rows, and on a fully accepted
+    /// round the last proposal (the draft never consumed it). The draft
+    /// absorbs the backlog as the first rows of its next propose chunk.
+    pending: Vec<Vec<usize>>,
+    stats: SpecStats,
+    max_context: usize,
+}
+
+impl<'m> SpeculativeSession<'m> {
+    /// Build the pair over one [`SessionConfig`] (both stores get the same
+    /// slot count, page geometry and KV format; the draft keeps its own
+    /// pages — target KV is computed with target weights and would be
+    /// wrong for the draft, so nothing is shared between the two).
+    pub fn new(target: &'m Model, draft: &'m Model, cfg: &SessionConfig, k: usize) -> Self {
+        assert!(k >= 1, "speculative k must be >= 1");
+        assert_eq!(
+            target.cfg().vocab_size,
+            draft.cfg().vocab_size,
+            "draft/target vocabulary mismatch"
+        );
+        let target = BatchedDecodeSession::new(target, cfg);
+        let draft = BatchedDecodeSession::new(draft, cfg);
+        let max_context = target.max_context().min(draft.max_context());
+        let pending = vec![Vec::new(); target.n_slots()];
+        SpeculativeSession {
+            target,
+            draft,
+            k,
+            pending,
+            stats: SpecStats::default(),
+            max_context,
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.target.n_slots()
+    }
+
+    /// Tokens consumed so far by one slot (target side — the serving
+    /// position; the draft trails by the slot's pending backlog).
+    pub fn pos(&self, slot: usize) -> usize {
+        self.target.pos(slot)
+    }
+
+    /// Context cap: the tighter of the two sessions' caps, so a round can
+    /// always feed the draft as far as the target.
+    pub fn max_context(&self) -> usize {
+        self.max_context
+    }
+
+    pub fn reset_slot(&mut self, slot: usize) {
+        self.target.reset_slot(slot);
+        self.draft.reset_slot(slot);
+        self.pending[slot].clear();
+    }
+
+    /// Prefix-cache lookup on the *target* store (the serving KV). The
+    /// covered rows still enter the draft's backlog — the draft has no use
+    /// for target pages and recomputes them with its own weights.
+    pub fn attach_prefix(&mut self, slot: usize, prompt: &[usize]) -> usize {
+        let covered = self.target.attach_prefix(slot, prompt);
+        self.pending[slot].extend_from_slice(&prompt[..covered]);
+        covered
+    }
+
+    /// Serving-side (target) resident KV bytes.
+    pub fn kv_bytes(&self) -> usize {
+        self.target.kv_bytes()
+    }
+
+    /// Draft-side resident KV bytes (reported separately in metrics — the
+    /// draft store is speculation overhead, not serving state).
+    pub fn draft_kv_bytes(&self) -> usize {
+        self.draft.kv_bytes()
+    }
+
+    /// Serving-side (target) paged-KV accounting.
+    pub fn kv_stats(&self) -> KvStats {
+        self.target.kv_stats()
+    }
+
+    pub fn spec_stats(&self) -> SpecStats {
+        self.stats
+    }
+
+    /// Feed row-blocks through the *target* (prefill chunks and
+    /// temperature-sampled decode rows — everything that does not
+    /// speculate). Same contract as [`BatchedDecodeSession::step_chunked`];
+    /// the tokens join each slot's draft backlog.
+    pub fn step_chunked(
+        &mut self,
+        batch: &[(usize, &[usize])],
+        needs_logits: Option<&[bool]>,
+    ) -> Vec<Vec<f32>> {
+        for &(slot, toks) in batch {
+            self.pending[slot].extend_from_slice(toks);
+        }
+        self.target.step_chunked(batch, needs_logits)
+    }
+
+    /// One speculative round for a greedy decode-phase slot: draft
+    /// proposes, target verifies in one chunked step, the accepted prefix
+    /// commits. `next` is the slot's pending input token (the last emitted
+    /// token); `budget` bounds how many tokens may still be emitted
+    /// (`max_new_tokens` remainder). Returns the emitted tokens — at least
+    /// one, at most `min(k, budget - 1) + 1` — which are exactly the next
+    /// tokens target-only greedy decode would emit from the same state.
+    pub fn round(&mut self, slot: usize, next: usize, budget: usize) -> Vec<usize> {
+        assert!(budget >= 1, "round called with no token budget");
+        let t_pos = self.target.pos(slot);
+        assert!(t_pos < self.max_context, "context overflow in speculative round");
+        // room - 1: the verify step feeds `next` plus k_r proposals, and
+        // the draft runs one position ahead of its last proposal
+        let k_r = self.k.min(budget - 1).min(self.max_context - t_pos - 1);
+        if k_r == 0 {
+            // no room to speculate (last budgeted token, or the context is
+            // nearly full): plain greedy target step, draft catches up on
+            // a later round
+            let logits = self.target.step(&[(slot, next)]);
+            self.pending[slot].push(next);
+            self.stats.fallback_steps += 1;
+            return vec![greedy(&logits[0])];
+        }
+        // ── phase 1: draft catch-up + autoregressive proposals ──────────
+        // The backlog and `next` go in as one chunk (logits wanted on the
+        // last row only), then each proposal feeds back one row at a time.
+        let mut catchup = std::mem::take(&mut self.pending[slot]);
+        catchup.push(next);
+        let mut mask = vec![false; catchup.len()];
+        *mask.last_mut().expect("catchup holds at least `next`") = true;
+        let d_logits = self.draft.step_chunked(&[(slot, &catchup)], Some(&mask));
+        let mut proposals = Vec::with_capacity(k_r);
+        proposals.push(greedy(d_logits.last().expect("one row per catchup token")));
+        for i in 1..k_r {
+            let d_logits = self.draft.step(&[(slot, proposals[i - 1])]);
+            proposals.push(greedy(&d_logits[0]));
+        }
+        // ── phase 2: one chunked verify step over [next, proposals…] ────
+        // Deferred commit: the rows stay uncommitted until acceptance is
+        // known, so a rejected row can never seal a page or advance pos.
+        let mut rows = Vec::with_capacity(k_r + 1);
+        rows.push(next);
+        rows.extend_from_slice(&proposals);
+        self.target.defer_commit(slot);
+        let t_logits = self.target.step_chunked(&[(slot, &rows)], None);
+        // ── phase 3: greedy acceptance ──────────────────────────────────
+        // Row j's logits are the target's next-token distribution after
+        // [.., next, proposals[..j]]; its argmax is the true next token
+        // whenever every earlier proposal matched. First mismatch emits
+        // the target's correction; a clean sweep emits the bonus token
+        // from the last verify row.
+        let mut emitted = Vec::with_capacity(k_r + 1);
+        let mut accepted = 0usize;
+        for j in 0..k_r {
+            let g = greedy(&t_logits[j]);
+            emitted.push(g);
+            if g != proposals[j] {
+                break;
+            }
+            accepted += 1;
+        }
+        if accepted == k_r {
+            emitted.push(greedy(&t_logits[k_r]));
+        }
+        // ── phase 4: commit the accepted prefix, roll back the rest ─────
+        self.target.commit_partial(slot, 1 + accepted);
+        if accepted == k_r {
+            // every draft row was a true token; the last proposal was
+            // never fed to the draft, so it becomes backlog
+            self.pending[slot].push(proposals[k_r - 1]);
+        } else {
+            // the draft consumed proposals[..k_r - 1]; of those, only the
+            // first `accepted` are true tokens — drop the wrong tail
+            let keep = self.draft.pos(slot) - (k_r - 1 - accepted);
+            self.draft.truncate(slot, keep);
+        }
+        self.stats.rounds += 1;
+        self.stats.proposed += k_r as u64;
+        self.stats.accepted += accepted as u64;
+        self.stats.rejected += (k_r - accepted) as u64;
+        emitted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelConfig;
+    use crate::model::params::Params;
+    use crate::model::plan::QuantPlan;
+    use crate::quant::config::presets;
+
+    fn pair() -> (Model, Model) {
+        let cfg = ModelConfig::preset("nano");
+        let params = Params::init(&cfg, 42);
+        let target = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(6)));
+        let draft = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)));
+        (target, draft)
+    }
+
+    /// Target-only greedy decode through a plain batched session — the
+    /// stream the speculative path must reproduce bit for bit.
+    fn reference_stream(target: &Model, prompt: &[usize], n: usize) -> Vec<usize> {
+        let mut sess = BatchedDecodeSession::new(target, &SessionConfig::new(1));
+        let mut logits = sess.step_chunked(&[(0, prompt)], None);
+        let mut out = Vec::with_capacity(n);
+        let mut next = greedy(logits.last().unwrap());
+        out.push(next);
+        while out.len() < n {
+            logits = sess.step(&[(0, next)]);
+            next = greedy(&logits[0]);
+            out.push(next);
+        }
+        out
+    }
+
+    #[test]
+    fn speculative_stream_matches_target_only_greedy() {
+        let (target, draft) = pair();
+        let prompt = [3usize, 9, 100, 42, 7];
+        let n = 24;
+        let want = reference_stream(&target, &prompt, n);
+        for k in [1usize, 2, 4, 7] {
+            let mut spec = SpeculativeSession::new(&target, &draft, &SessionConfig::new(1), k);
+            let mut mask = vec![false; prompt.len()];
+            *mask.last_mut().unwrap() = true;
+            let logits = spec.step_chunked(&[(0, &prompt)], Some(&mask));
+            let mut out = vec![greedy(logits.last().unwrap())];
+            while out.len() < n {
+                let next = *out.last().unwrap();
+                let emitted = spec.round(0, next, n - out.len());
+                assert!(!emitted.is_empty());
+                out.extend_from_slice(&emitted);
+            }
+            assert_eq!(out, want, "k={k}");
+            assert_eq!(out.len(), n, "k={k}: budget respected exactly");
+            let st = spec.spec_stats();
+            assert!(st.rounds > 0, "k={k}");
+            assert_eq!(st.proposed, st.accepted + st.rejected, "k={k}");
+            // self-drafting from the same weights: proposals mostly land
+            assert!(
+                st.tokens_per_target_step() >= 1.0,
+                "k={k}: {:?}",
+                st
+            );
+        }
+    }
+
+    #[test]
+    fn fallback_step_on_exhausted_budget() {
+        let (target, draft) = pair();
+        let mut spec = SpeculativeSession::new(&target, &draft, &SessionConfig::new(1), 4);
+        let logits = spec.step_chunked(&[(0, &[3, 9])], None);
+        let next = greedy(&logits[1]);
+        // budget 1 → no room for proposals: exactly one token, no round
+        let emitted = spec.round(0, next, 1);
+        assert_eq!(emitted.len(), 1);
+        let st = spec.spec_stats();
+        assert_eq!(st.rounds, 0);
+        assert_eq!(st.fallback_steps, 1);
+        assert_eq!(emitted[0], reference_stream(&target, &[3, 9], 2)[1]);
+    }
+
+    #[test]
+    fn round_respects_context_cap() {
+        let (target, draft) = pair();
+        let cfg = SessionConfig::new(1).max_context(8);
+        let mut spec = SpeculativeSession::new(&target, &draft, &cfg, 4);
+        assert_eq!(spec.max_context(), 8);
+        let prompt = [3usize, 9, 100, 42, 7];
+        let logits = spec.step_chunked(&[(0, &prompt)], None);
+        let mut next = greedy(logits.last().unwrap());
+        let mut out = vec![next];
+        // 3 rows of room: rounds clamp k_r so target pos never passes 8
+        while spec.pos(0) < spec.max_context() {
+            let toks = spec.round(0, next, 64);
+            out.extend_from_slice(&toks);
+            next = *toks.last().unwrap();
+        }
+        assert_eq!(spec.pos(0), 8);
+        // emitted tokens still match target-only greedy at the cap edge
+        // (the reference session has no cap, so it can verify past it)
+        assert_eq!(out, reference_stream(&target, &prompt, out.len()));
+    }
+
+    #[test]
+    fn rejected_rounds_leave_target_store_pristine() {
+        // a draft from *different* weights rejects often; after every
+        // round the target store must equal a never-speculated twin's
+        let cfg = ModelConfig::preset("nano");
+        let target = Model::new(Params::init(&cfg, 42), QuantPlan::uniform(presets::bfp_w(6)));
+        let draft = Model::new(Params::init(&cfg, 7), QuantPlan::uniform(presets::bfp_w(4)));
+        let scfg = SessionConfig::new(1).page_size(4);
+        let mut spec = SpeculativeSession::new(&target, &draft, &scfg, 3);
+        let mut twin = BatchedDecodeSession::new(&target, &scfg);
+        let prompt = [3usize, 9, 100];
+        let logits = spec.step_chunked(&[(0, &prompt)], None);
+        twin.step_chunked(&[(0, &prompt)], None);
+        let mut next = greedy(logits.last().unwrap());
+        for _ in 0..6 {
+            let emitted = spec.round(0, next, 8);
+            for &t in &emitted {
+                twin.step(&[(0, next)]);
+                next = t;
+            }
+            assert_eq!(spec.pos(0), twin.pos(0));
+            assert_eq!(spec.kv_stats(), twin.kv_stats(), "target store diverged");
+        }
+        let st = spec.spec_stats();
+        assert!(st.rejected > 0, "divergent draft should reject: {st:?}");
+    }
+}

@@ -198,6 +198,16 @@ fn packed_bt_panel(
 ) {
     let w = j1 - j0;
     debug_assert_eq!(out.len(), m * w);
+    if m == 1 && qw.fused_dot_supported() {
+        // the memory-bound single-token shape: stream decoded field slabs
+        // straight into the lane accumulator (QTensor::dot_row), skipping
+        // the staged row buffer entirely. Bit-identical to decode + dot,
+        // so partition invariance (and the threaded lane above) still hold.
+        for j in j0..j1 {
+            out[j - j0] = qw.dot_row(j, &a[..k]);
+        }
+        return;
+    }
     let mut panel = vec![0.0f32; 4 * k];
     let mut tmp = vec![0.0f32; m * 4];
     let mut j = j0;

@@ -153,6 +153,143 @@ impl QTensor {
         };
         decode_row(&mut r, self.fmt, self.scale, out);
     }
+
+    /// Whether [`QTensor::dot_row`] supports this tensor. The fused dot
+    /// needs every field chunk to start on a lane-aligned column index:
+    /// Fixed/FixedRow stream in 64-wide slabs from column 0, and Bfp block
+    /// starts are multiples of the block size, so those qualify whenever
+    /// the block size is a multiple of the lane count. The branchy
+    /// minifloat-family decodes stay on the staged path.
+    pub fn fused_dot_supported(&self) -> bool {
+        match self.fmt {
+            QFormat::Fixed { .. } | QFormat::FixedRow { .. } => true,
+            QFormat::Bfp { n, .. } => n as usize % kernels::LANES == 0,
+            _ => false,
+        }
+    }
+
+    /// Fused expand-into-dot for the m == 1 decode shape: `dot(x, row)`
+    /// computed straight from the packed payload, streaming each ≤64-field
+    /// expanded slab into the shared lane accumulator instead of staging
+    /// the whole decoded row. Bit-identical to
+    /// `kernels::dot(x, decoded_row)` by construction — same dispatched
+    /// expand kernels, same lane order, same reduction tree, same serial
+    /// tail (see [`FusedDot`]).
+    ///
+    /// # Panics
+    ///
+    /// Debug-asserts [`QTensor::fused_dot_supported`]; callers gate on it.
+    pub fn dot_row(&self, row: usize, x: &[f32]) -> f32 {
+        debug_assert!(self.fused_dot_supported());
+        debug_assert!(row < self.rows());
+        debug_assert_eq!(x.len(), self.cols());
+        let mut r = BitReader {
+            buf: &self.payload,
+            bitpos: row * self.row_bits(),
+        };
+        let mut acc = FusedDot::new(x);
+        match self.fmt {
+            QFormat::Fixed { w } => {
+                let scale = self.scale;
+                fused_fields(&mut r, w, 0, x.len(), &mut acc, |f, o| {
+                    kernels::expand_fixed(f, w, scale, o)
+                });
+            }
+            QFormat::FixedRow { w } => {
+                let s = f32::from_bits(r.read(32));
+                fused_fields(&mut r, w, 0, x.len(), &mut acc, |f, o| {
+                    kernels::expand_fixed(f, w, s, o)
+                });
+            }
+            QFormat::Bfp { e, m, n } => {
+                let bias = (1i32 << (e - 1)) - 1;
+                for (s0, e0) in block_ranges(x.len(), n as usize) {
+                    let sh_e = r.read(e) as i32 - bias;
+                    let blk_scale = exp2i(sh_e - m as i32 + 1);
+                    fused_fields(&mut r, 1 + m, s0, e0, &mut acc, |f, o| {
+                        kernels::expand_bfp(f, blk_scale, o)
+                    });
+                }
+            }
+            _ => unreachable!("gated by fused_dot_supported"),
+        }
+        acc.finish()
+    }
+}
+
+/// Streaming lane accumulator reproducing [`crate::kernels::dot`]'s exact
+/// reduction order over a row that is decoded chunk by chunk: every chunk
+/// start is lane-aligned, so its lane-eligible prefix goes through the
+/// dispatched `dot_acc` (the same per-lane term sequence `dot` produces),
+/// and the final `cols % 8` elements are buffered and folded serially
+/// after the [`crate::kernels::reduce8`] tree — exactly `dot`'s tail.
+struct FusedDot<'a> {
+    x: &'a [f32],
+    lane: [f32; kernels::LANES],
+    /// Decoded values at column indices ≥ `lanes_end` (at most 7).
+    tail: [f32; kernels::LANES - 1],
+    tail_len: usize,
+    /// `cols / 8 * 8` — the boundary between lane and serial accumulation.
+    lanes_end: usize,
+}
+
+impl<'a> FusedDot<'a> {
+    fn new(x: &'a [f32]) -> Self {
+        FusedDot {
+            x,
+            lane: [0.0; kernels::LANES],
+            tail: [0.0; kernels::LANES - 1],
+            tail_len: 0,
+            lanes_end: x.len() / kernels::LANES * kernels::LANES,
+        }
+    }
+
+    /// Consume decoded values for columns `[i0, i0 + vals.len())`; `i0`
+    /// must be a multiple of the lane count (the caller's chunking
+    /// guarantees it), which makes the lane-eligible prefix length a
+    /// multiple of the lane count too.
+    fn consume(&mut self, i0: usize, vals: &[f32]) {
+        debug_assert_eq!(i0 % kernels::LANES, 0);
+        let ne = self.lanes_end.saturating_sub(i0).min(vals.len());
+        debug_assert_eq!(ne % kernels::LANES, 0);
+        kernels::dot_acc(&self.x[i0..i0 + ne], &vals[..ne], &mut self.lane);
+        for &v in &vals[ne..] {
+            self.tail[self.tail_len] = v;
+            self.tail_len += 1;
+        }
+    }
+
+    fn finish(&self) -> f32 {
+        let mut s = kernels::reduce8(&self.lane);
+        for t in 0..self.tail_len {
+            s += self.x[self.lanes_end + t] * self.tail[t];
+        }
+        s
+    }
+}
+
+/// Like [`expand_fields`], but hands each expanded slab to the fused dot
+/// accumulator for columns `[start, end)` instead of a dense row buffer.
+fn fused_fields(
+    r: &mut BitReader,
+    bits: u32,
+    start: usize,
+    end: usize,
+    acc: &mut FusedDot,
+    mut expand: impl FnMut(&[u32], &mut [f32]),
+) {
+    let mut fields = [0u32; FIELD_CHUNK];
+    let mut vals = [0.0f32; FIELD_CHUNK];
+    let mut i = start;
+    while i < end {
+        let len = (end - i).min(FIELD_CHUNK);
+        for f in fields[..len].iter_mut() {
+            *f = r.read(bits);
+        }
+        expand(&fields[..len], &mut vals[..len]);
+        acc.consume(i, &vals[..len]);
+        i += len;
+    }
 }
 
 /// Encode (quantise + pack). Blocks run along the last dim.
@@ -483,6 +620,36 @@ mod tests {
                 for row in (0..rows).rev() {
                     q.decode_row_into(row, &mut buf);
                     close_slice(&buf, full.row(row), 0.0, name)?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn fused_dot_row_matches_staged_bits() {
+        // dot_row must equal decode_row_into + kernels::dot bit for bit,
+        // including ragged tail blocks and cols % 8 serial tails
+        let mut formats = presets::table3_formats();
+        formats.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+        for (name, fmt) in formats {
+            check(&format!("fused dot {name}"), 20, |rng| {
+                let cols = 5 + rng.below(80);
+                let rows = 1 + rng.below(4);
+                let t = Tensor::new(&[rows, cols], llmish_values(rng, rows * cols, 1.0, 0.05));
+                let q = encode(&t, fmt);
+                if !q.fused_dot_supported() {
+                    return Ok(());
+                }
+                let x = llmish_values(rng, cols, 1.0, 0.02);
+                let mut buf = vec![0.0f32; cols];
+                for row in 0..rows {
+                    q.decode_row_into(row, &mut buf);
+                    let want = crate::kernels::dot(&x, &buf);
+                    let got = q.dot_row(row, &x);
+                    if want.to_bits() != got.to_bits() {
+                        return Err(format!("{name} row {row}: {want} vs {got}"));
+                    }
                 }
                 Ok(())
             });

@@ -16,6 +16,7 @@ use bbq::kernels::{self, Backend};
 use bbq::quant::config::{presets, QFormat};
 use bbq::quant::qmatmul::{matmul_packed_bt, matmul_packed_bt_rowwise, qmatmul_packed};
 use bbq::quant::qtensor::{decode, encode};
+use bbq::tensor::matmul::matmul_bt;
 use bbq::tensor::Tensor;
 use bbq::util::rng::Pcg32;
 
@@ -93,6 +94,33 @@ fn qmatmul_packed_bitwise_identical_across_backends() {
         for b in simd_backends() {
             let got = kernels::with_isa(b, || qmatmul_packed(&a, &w, fmt));
             assert_bits_eq(&got, &reference, &format!("qmatmul_packed {name} {}", b.name()));
+        }
+    }
+}
+
+/// The fused expand-into-dot m == 1 decode path (no staging slab for
+/// Fixed/FixedRow/Bfp) must equal the dense reference — decode the whole
+/// weight, then the plain f32 GEMM — bit for bit, per format, per backend.
+/// Formats the fused path does not claim fall back to the staged path and
+/// must satisfy the same identity.
+#[test]
+fn fused_m1_dot_matches_dense_reference_bitwise() {
+    // k straddles the 16-wide blocks and leaves 8-lane serial tails
+    // (21 % 8 = 5, 70 % 8 = 6); k = 64 is the fully lane-aligned case.
+    let shapes = [(21usize, 7usize), (37, 13), (64, 9), (70, 5)];
+    let mut rng = Pcg32::new(46);
+    for (name, fmt) in formats() {
+        for &(k, n) in &shapes {
+            let a = Tensor::randn(&[1, k], 1.0, &mut rng);
+            let w = encode(&Tensor::randn(&[n, k], 0.3, &mut rng), fmt);
+            let dense = matmul_bt(&a, &decode(&w));
+            for b in kernels::supported_backends() {
+                let got = kernels::with_isa(b, || matmul_packed_bt(&a, &w));
+                let want = kernels::with_isa(b, || matmul_bt(&a, &decode(&w)));
+                let ctx = format!("fused m1 {name} k={k} n={n} {}", b.name());
+                assert_bits_eq(&got, &want, &ctx);
+                assert_bits_eq(&got, &dense, &format!("{ctx} vs ambient dense"));
+            }
         }
     }
 }

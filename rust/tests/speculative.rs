@@ -1,0 +1,226 @@
+//! End-to-end tests for self-drafting speculative decoding: the BFP4
+//! draft proposes, the target verifies all proposals in one chunked
+//! multi-row step, and the emitted greedy stream must be bit-identical
+//! to target-only greedy decode — per weight format, per KV page format,
+//! per kernel ISA, and under mixed greedy/sampled workloads. The CI
+//! matrix re-runs this binary under `BBQ_THREADS={1,4}` and
+//! `BBQ_ISA=scalar`, so thread-count and forced-scalar coverage come for
+//! free. Also covered: the rollback invariants — after rejected rounds
+//! the target's paged store (positions, byte accounting, page counts)
+//! must equal a never-speculated twin session's, for raw-f32 and
+//! block-quantised KV pages alike.
+
+use bbq::coordinator::{
+    run_batched, run_batched_with_draft, serve_one, FinishReason, GenerationParams, Request,
+    ServerConfig,
+};
+use bbq::kernels::{self, Backend};
+use bbq::model::config::ModelConfig;
+use bbq::model::kv_cache::{sample_logits, BatchedDecodeSession};
+use bbq::model::params::Params;
+use bbq::model::plan::QuantPlan;
+use bbq::model::{Model, SessionConfig, SpeculativeSession};
+use bbq::quant::config::{presets, QFormat};
+use bbq::util::rng::Pcg32;
+
+/// Every preset the paper sweeps, plus the ZeroQuant-style per-row fixed
+/// point (same sweep the packed-serving tests use).
+fn all_formats() -> Vec<(&'static str, QFormat)> {
+    let mut f = presets::table3_formats();
+    f.push(("FixedRow W8", QFormat::FixedRow { w: 8 }));
+    f
+}
+
+fn greedy_reqs(n: usize, max_new: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request::greedy(i as u64, vec![3 + i % 5, 10, 42], max_new))
+        .collect()
+}
+
+fn spec_cfg(spec_k: usize) -> ServerConfig {
+    ServerConfig {
+        spec_k,
+        ..ServerConfig::default()
+    }
+}
+
+/// The serving argmax (temperature 0: last maximal index on ties).
+fn greedy(logits: &[f32]) -> usize {
+    sample_logits(logits, 0.0, &mut Pcg32::new(0))
+}
+
+#[test]
+fn spec_stream_bit_identical_across_weight_formats() {
+    let params = Params::init(&ModelConfig::preset("nano"), 42);
+    for (name, fmt) in all_formats() {
+        let target = Model::new(params.clone(), QuantPlan::uniform(fmt));
+        let draft = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(4)));
+        let reqs = greedy_reqs(4, 10);
+        let (plain, _) = run_batched(&target, reqs.clone(), &ServerConfig::default());
+        let (spec, m) = run_batched_with_draft(&target, &draft, reqs.clone(), &spec_cfg(4));
+        for (a, b) in plain.iter().zip(&spec) {
+            assert_eq!(a.tokens, b.tokens, "{name}: request {} diverged", a.id);
+            assert_eq!(a.finish, b.finish, "{name}: request {} finish", a.id);
+        }
+        assert!(m.spec_rounds > 0, "{name}: engine never speculated");
+        assert_eq!(
+            m.spec_proposed,
+            m.spec_accepted + m.spec_rejected,
+            "{name}: counter bookkeeping"
+        );
+        assert!(
+            m.draft_weight_memory.resident_bytes > 0,
+            "{name}: draft weights must be reported"
+        );
+        // the single-request reference path agrees too
+        let r = serve_one(&target, &reqs[0]);
+        assert_eq!(r.tokens, spec[0].tokens, "{name}: serve_one disagrees");
+    }
+}
+
+#[test]
+fn spec_stream_identical_across_isa_backends() {
+    let params = Params::init(&ModelConfig::preset("nano"), 1);
+    let target = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(6)));
+    let draft = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)));
+    let reqs = greedy_reqs(3, 8);
+    let run = || run_batched_with_draft(&target, &draft, reqs.clone(), &spec_cfg(3)).0;
+    let active = run();
+    let scalar = kernels::with_isa(Backend::Scalar, run);
+    for (a, b) in active.iter().zip(&scalar) {
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {}: speculative stream differs between {} and scalar",
+            a.id,
+            kernels::active().name()
+        );
+    }
+}
+
+#[test]
+fn rejected_rounds_leave_target_store_pristine_all_kv_formats() {
+    // a draft built from *different* weights rejects constantly; after
+    // every round the target's paged store must be indistinguishable from
+    // a session that never speculated at all
+    let cfg = ModelConfig::preset("nano");
+    let target = Model::new(Params::init(&cfg, 42), QuantPlan::uniform(presets::bfp_w(6)));
+    let draft = Model::new(Params::init(&cfg, 7), QuantPlan::uniform(presets::bfp_w(4)));
+    for (name, kv_fmt) in [
+        ("f32", QFormat::Fp32),
+        ("bfp6", presets::bfp_w(6)),
+        ("bm8", presets::bm8()),
+        ("bl8", presets::bl8()),
+    ] {
+        // page_size 4 so rounds regularly straddle page boundaries and
+        // sealing (and, for block formats, page packing) actually happens
+        let scfg = SessionConfig::new(1).page_size(4).kv_format(kv_fmt);
+        let mut spec = SpeculativeSession::new(&target, &draft, &scfg, 3);
+        let mut twin = BatchedDecodeSession::new(&target, &scfg);
+        let prompt = [3usize, 9, 100];
+        let logits = spec.step_chunked(&[(0, &prompt)], None);
+        twin.step_chunked(&[(0, &prompt)], None);
+        let mut next = greedy(logits.last().unwrap());
+        for round in 0..8 {
+            let emitted = spec.round(0, next, 16);
+            for &t in &emitted {
+                twin.step(&[(0, next)]);
+                next = t;
+            }
+            assert_eq!(spec.pos(0), twin.pos(0), "{name}: round {round} pos");
+            assert_eq!(
+                spec.kv_bytes(),
+                twin.kv_bytes(),
+                "{name}: round {round} kv bytes diverged"
+            );
+            assert_eq!(
+                spec.kv_stats(),
+                twin.kv_stats(),
+                "{name}: round {round} paged accounting diverged"
+            );
+        }
+        let st = spec.spec_stats();
+        assert!(st.rejected > 0, "{name}: divergent draft should reject: {st:?}");
+        // decode continues in lockstep after all the rollbacks
+        let l_spec = spec.step_chunked(&[(0, &[next][..])], None);
+        let l_twin = twin.step(&[(0, next)]);
+        assert_eq!(l_spec[0], l_twin[0], "{name}: post-rollback logits diverged");
+    }
+}
+
+#[test]
+fn mixed_greedy_and_sampled_workload_matches_plain_engine() {
+    // sampled slots take the plain fused batch path inside the
+    // speculative engine; both populations must reproduce the plain
+    // engine's streams exactly
+    let params = Params::init(&ModelConfig::preset("nano"), 42);
+    let target = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(6)));
+    let draft = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)));
+    let mut reqs = greedy_reqs(3, 8);
+    for i in 3..6usize {
+        reqs.push(Request {
+            id: i as u64,
+            prompt: vec![3 + i % 5, 10, 42],
+            params: GenerationParams {
+                max_new_tokens: 8,
+                temperature: 0.8,
+                top_k: 8,
+                ..GenerationParams::default()
+            },
+        });
+    }
+    let (plain, _) = run_batched(&target, reqs.clone(), &ServerConfig::default());
+    let (spec, m) = run_batched_with_draft(&target, &draft, reqs, &spec_cfg(4));
+    for (a, b) in plain.iter().zip(&spec) {
+        assert_eq!(a.tokens, b.tokens, "request {} diverged", a.id);
+        assert_eq!(a.finish, b.finish, "request {} finish", a.id);
+    }
+    assert!(m.spec_rounds > 0, "greedy slots must speculate");
+}
+
+#[test]
+fn stop_token_mid_round_matches_plain_finish() {
+    // a verify round can overshoot a stop token (the chunked step emits
+    // several tokens at once); the engine must truncate the surplus so
+    // the response matches the plain engine's token-at-a-time stop
+    let params = Params::init(&ModelConfig::preset("nano"), 42);
+    let target = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(6)));
+    let draft = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)));
+    let probe = Request::greedy(0, vec![3, 10, 42], 12);
+    let (full, _) = run_batched(&target, vec![probe], &ServerConfig::default());
+    let stream = &full[0].tokens;
+    assert!(stream.len() >= 4, "probe stream too short to stop mid-round");
+    let stop = stream[2];
+    let mk = |id| Request {
+        id,
+        prompt: vec![3, 10, 42],
+        params: GenerationParams {
+            max_new_tokens: 12,
+            stop_tokens: vec![stop],
+            ..GenerationParams::default()
+        },
+    };
+    let (plain, _) = run_batched(&target, vec![mk(0)], &ServerConfig::default());
+    let (spec, _) = run_batched_with_draft(&target, &draft, vec![mk(0)], &spec_cfg(4));
+    assert_eq!(plain[0].tokens, spec[0].tokens);
+    assert_eq!(plain[0].finish, spec[0].finish);
+    assert_eq!(plain[0].finish, FinishReason::StopToken);
+}
+
+#[test]
+fn max_tokens_never_overshoots_under_speculation() {
+    // every budget must be honoured exactly even when a round could have
+    // emitted more — k_r clamps to the remaining budget
+    let params = Params::init(&ModelConfig::preset("nano"), 42);
+    let target = Model::new(params.clone(), QuantPlan::uniform(presets::bfp_w(6)));
+    let draft = Model::new(params, QuantPlan::uniform(presets::bfp_w(4)));
+    for max_new in [1usize, 2, 5, 9] {
+        let reqs = greedy_reqs(2, max_new);
+        let (plain, _) = run_batched(&target, reqs.clone(), &ServerConfig::default());
+        let (spec, _) = run_batched_with_draft(&target, &draft, reqs, &spec_cfg(4));
+        for (a, b) in plain.iter().zip(&spec) {
+            assert_eq!(a.tokens, b.tokens, "max_new={max_new} request {}", a.id);
+            assert_eq!(a.finish, b.finish, "max_new={max_new}");
+            assert!(b.tokens.len() <= max_new, "max_new={max_new}: overshoot");
+        }
+    }
+}
